@@ -1,0 +1,41 @@
+//! Explore TCDM bank-conflict behaviour across layouts and
+//! configurations — the §III-B diagnosis tool, and the demonstration
+//! that the grouped (superbank-confined) layout plus hyperbank double
+//! buffering is what makes the memory subsystem conflict-free.
+
+use zerostall::cluster::ConfigId;
+use zerostall::coordinator::workload::Problem;
+use zerostall::kernels::{run_matmul_layout, test_matrices, LayoutKind};
+
+fn main() -> anyhow::Result<()> {
+    let p = Problem { m: 64, n: 64, k: 64 }; // multi-pass: DMA active
+    let (a, b) = test_matrices(p.m, p.n, p.k, 42);
+    for (lname, layout) in [
+        ("grouped (paper)", LayoutKind::Grouped),
+        ("linear", LayoutKind::Linear { pad_words: 0 }),
+        ("linear+pad", LayoutKind::Linear { pad_words: 1 }),
+    ] {
+        println!("=== layout: {lname}  ({p}) ===");
+        for id in ConfigId::all() {
+            let r =
+                run_matmul_layout(id, p.m, p.n, p.k, &a, &b, layout)?;
+            println!(
+                "{:<10} util={:>5.1}%  ssr_conflicts={:<7} \
+                 lost-to-DMA={:<6} ssr_empty_stalls={:<7} wfifo={:<5}",
+                id.name(),
+                r.utilization() * 100.0,
+                r.perf.ssr_conflicts,
+                r.perf.tcdm_conflicts_dma,
+                r.perf.stall_ssr_empty,
+                r.perf.stall_wfifo,
+            );
+        }
+        println!();
+    }
+    println!(
+        "note: with the grouped layout the Dobu configurations report\n\
+         zero DMA-induced conflicts — the zero-conflict memory\n\
+         subsystem of §III-B."
+    );
+    Ok(())
+}

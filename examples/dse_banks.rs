@@ -1,0 +1,62 @@
+//! Design-space exploration: sweep the banking/interconnect/layout
+//! space and report the area-vs-performance Pareto frontier the paper
+//! navigates when it picks Zonl48Db.
+
+use zerostall::cluster::ConfigId;
+use zerostall::coordinator::experiments::run_point;
+use zerostall::coordinator::workload::Problem;
+use zerostall::kernels::LayoutKind;
+use zerostall::model::area;
+use zerostall::util::stats::median;
+
+fn main() -> anyhow::Result<()> {
+    let sizes = [
+        Problem { m: 32, n: 32, k: 32 },
+        Problem { m: 64, n: 64, k: 64 },
+        Problem { m: 128, n: 128, k: 128 },
+        Problem { m: 16, n: 120, k: 24 },
+        Problem { m: 96, n: 48, k: 112 },
+    ];
+    println!(
+        "{:<10} {:<11} {:>9} {:>10} {:>10}",
+        "config", "layout", "area MGE", "med util", "med eff"
+    );
+    let mut points: Vec<(String, f64, f64)> = Vec::new();
+    for id in ConfigId::all() {
+        for (lname, layout) in [
+            ("grouped", LayoutKind::Grouped),
+            ("linear", LayoutKind::Linear { pad_words: 0 }),
+        ] {
+            let mut utils = Vec::new();
+            let mut effs = Vec::new();
+            for &p in &sizes {
+                let r = run_point(id, p, layout)?;
+                utils.push(r.utilization);
+                effs.push(r.gflops_per_w);
+            }
+            let a = area(id).total_mge();
+            let mu = median(&utils);
+            let me = median(&effs);
+            points.push((format!("{}:{}", id.name(), lname), a, mu));
+            println!(
+                "{:<10} {:<11} {:>9.2} {:>9.1}% {:>10.2}",
+                id.name(),
+                lname,
+                a,
+                mu * 100.0,
+                me,
+            );
+        }
+    }
+    // Pareto: not dominated in (smaller area, higher util).
+    println!("\nPareto frontier (area vs median utilization):");
+    for (name, a, u) in &points {
+        let dominated = points.iter().any(|(n2, a2, u2)| {
+            n2 != name && a2 <= a && u2 >= u && (a2 < a || u2 > u)
+        });
+        if !dominated {
+            println!("  {name}: {a:.2} MGE, {:.1}% util", u * 100.0);
+        }
+    }
+    Ok(())
+}

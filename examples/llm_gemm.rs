@@ -1,0 +1,57 @@
+//! End-to-end driver on a realistic workload: the GEMM trace of one
+//! small transformer layer (the workloads the paper's introduction
+//! motivates), batched token processing on the optimized cluster.
+//!
+//! For every projection of the layer we simulate the full
+//! load-compute-store pipeline on both the baseline and the paper's
+//! zonl48db configuration and report per-layer latency, utilization,
+//! energy, and the resulting end-to-end tokens/s of the layer.
+
+use zerostall::cluster::ConfigId;
+use zerostall::coordinator::workload::llm_problems;
+use zerostall::kernels::{host_ref, run_matmul, test_matrices};
+use zerostall::model::energy;
+
+fn main() -> anyhow::Result<()> {
+    println!("transformer-layer GEMM trace (batch = M tokens)\n");
+    for id in [ConfigId::Base32Fc, ConfigId::Zonl48Db] {
+        println!("=== {} ===", id.name());
+        let mut total_cycles = 0u64;
+        let mut total_uj = 0.0f64;
+        let mut batch_tokens = 0usize;
+        for (name, p) in llm_problems() {
+            let (a, b) = test_matrices(p.m, p.n, p.k, 2026);
+            let r = run_matmul(id, p.m, p.n, p.k, &a, &b)?;
+            // verify numerics on every layer
+            let want = host_ref(p.m, p.n, p.k, &a, &b);
+            let ok = r
+                .c
+                .iter()
+                .zip(&want)
+                .all(|(g, w)| (g - w).abs() <= 1e-9 * w.abs().max(1.0));
+            anyhow::ensure!(ok, "numerics mismatch on {name}");
+            let e = energy(id, &r.perf);
+            println!(
+                "  {:<9} {:>12}  {:>8} cyc  util {:>5.1}%  {:>6.2} \
+                 DPGflop/s  {:>7.2} uJ",
+                name,
+                p.to_string(),
+                r.cycles,
+                r.utilization() * 100.0,
+                e.gflops,
+                e.energy_uj,
+            );
+            total_cycles += r.cycles;
+            total_uj += e.energy_uj;
+            batch_tokens = p.m;
+        }
+        let tokens_per_s =
+            batch_tokens as f64 / (total_cycles as f64 * 1e-9);
+        println!(
+            "  layer total: {total_cycles} cycles, {total_uj:.1} uJ, \
+             {:.1} ktok/s at 1 GHz\n",
+            tokens_per_s / 1e3,
+        );
+    }
+    Ok(())
+}

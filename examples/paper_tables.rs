@@ -1,0 +1,22 @@
+//! Regenerate every table and figure of the paper in one run
+//! (a quick-look version of the CLI's fig5/table1/table2/fig4 with a
+//! reduced sample count; use `zerostall fig5 --samples 50` for the
+//! full evaluation).
+
+use zerostall::coordinator::{experiments, report};
+
+fn main() -> anyhow::Result<()> {
+    println!("{}", report::render_table1(&experiments::table1()));
+    println!("{}", report::render_table2(&experiments::table2()?));
+    println!("{}", report::render_fig4());
+
+    eprintln!("running a 16-sample Fig. 5 sweep...");
+    let rows = experiments::fig5(16, 42, 0)?;
+    let summary = experiments::fig5_summary(&rows);
+    println!("{}", report::render_fig5(&summary));
+    println!(
+        "{}",
+        report::render_headline(&experiments::headline(&rows))
+    );
+    Ok(())
+}

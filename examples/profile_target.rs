@@ -1,0 +1,16 @@
+//! perf-pass driver: many 64^3 sims back to back.
+use zerostall::cluster::ConfigId;
+use zerostall::coordinator::{experiments::run_point, workload::Problem};
+use zerostall::kernels::LayoutKind;
+fn main() {
+    let p = Problem { m: 64, n: 64, k: 64 };
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(20);
+    let mut cycles = 0u64;
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        let r = run_point(ConfigId::Zonl48Db, p, LayoutKind::Grouped).unwrap();
+        cycles += r.cycles;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{} sims, {:.2} Msim-cycles/s", n, cycles as f64 / dt / 1e6);
+}

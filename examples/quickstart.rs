@@ -1,0 +1,26 @@
+//! Quickstart: run one DP matmul on the optimized cluster and print the
+//! paper's headline metrics.
+use zerostall::cluster::ConfigId;
+use zerostall::kernels::{host_ref, run_matmul, test_matrices};
+
+fn main() -> anyhow::Result<()> {
+    let (m, n, k) = (32, 32, 32);
+    let (a, b) = test_matrices(m, n, k, 42);
+    println!("simulating {m}x{n}x{k} DP GEMM on all configurations\n");
+    for id in ConfigId::all() {
+        let r = run_matmul(id, m, n, k, &a, &b)?;
+        let want = host_ref(m, n, k, &a, &b);
+        let ok = r.c.iter().zip(&want).all(|(g, w)| (g - w).abs() < 1e-9);
+        println!(
+            "{:<10} cycles={:<7} util={:>5.1}%  perf={:.2} DPGflop/s  \
+             conflicts={:<6} numerics={}",
+            id.name(),
+            r.cycles,
+            r.utilization() * 100.0,
+            r.gflops(),
+            r.perf.tcdm_conflicts,
+            if ok { "OK" } else { "MISMATCH" },
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,109 @@
+"""AOT: lower the L2 model to HLO *text* artifacts for the rust runtime.
+
+HLO text — NOT ``lowered.compile()`` / serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (what the published ``xla`` 0.1.6 crate links)
+rejects (``proto.id() <= INT_MAX``).  The HLO text parser reassigns ids,
+so text round-trips cleanly.  See /opt/xla-example/README.md.
+
+Artifacts (all f64, the paper's DP evaluation precision):
+
+  matmul_acc_32.hlo.txt  — (C, A, B) 32x32x32 accumulate tile; the rust
+                           golden runner composes it (with zero padding)
+                           for every M,N,K in the paper's {8..128} grid.
+  matmul_acc_8.hlo.txt   — 8x8x8 variant for small-problem fast paths.
+  matmul_32.hlo.txt      — plain 32^3 C = A @ B used by the quickstart.
+  matmul_128.hlo.txt     — 128^3 full-size Pallas-tiled matmul: proves
+                           the L1 kernel + L2 grid lower into one module.
+
+Run once via ``make artifacts``; never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+jax.config.update("jax_enable_x64", True)
+
+F64 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.float64)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_specs():
+    """(name, jitted fn, example args) for every artifact."""
+    return [
+        (
+            "matmul_acc_32",
+            model.matmul_acc_step,
+            (F64((32, 32)), F64((32, 32)), F64((32, 32))),
+        ),
+        (
+            "matmul_acc_8",
+            model.matmul_acc_step,
+            (F64((8, 8)), F64((8, 8)), F64((8, 8))),
+        ),
+        (
+            "matmul_32",
+            jax.jit(lambda a, b: model.cluster_matmul(a, b)),
+            (F64((32, 32)), F64((32, 32))),
+        ),
+        (
+            "matmul_128",
+            jax.jit(lambda a, b: model.cluster_matmul(a, b)),
+            (F64((128, 128)), F64((128, 128))),
+        ),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__)))), "artifacts"))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, fn, example_args in artifact_specs():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256_16": digest,
+            "args": [list(a.shape) for a in example_args],
+            "dtype": "f64",
+        }
+        print(f"wrote {path} ({len(text)} chars, sha {digest})")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

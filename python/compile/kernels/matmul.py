@@ -1,0 +1,131 @@
+"""L1 — Pallas matmul tile kernels (the cluster's compute hot-spot).
+
+The paper's hot-spot is the double-buffered, SSR-fed, FREP-driven matmul
+inner loop running on the 8 Snitch cores of a cluster (Fig. 1b).  On the
+TPU-style Pallas abstraction this maps as follows (DESIGN.md
+§Hardware-Adaptation):
+
+  * TCDM tile residency        -> BlockSpec-sized VMEM blocks per grid step
+  * DMA double buffering       -> the pipelined Pallas grid over K tiles
+                                  (the index_map expresses the HBM<->VMEM
+                                  schedule the DM core performs in HW)
+  * FREP/SSR fmadd inner loop  -> jnp.dot on (bm, bk) x (bk, bn) tiles,
+                                  accumulated in the output ref across the
+                                  K grid dimension
+  * bank-conflict-free layout  -> tile dims kept multiples of 8 to match
+                                  the paper's {8..128} problem grid
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode is the correctness
+path and real-TPU performance is *estimated* analytically (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The paper evaluates double-precision GEMM; enable x64 once at import.
+jax.config.update("jax_enable_x64", True)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """Grid-step body: accumulate one (bm, bk) x (bk, bn) product.
+
+    Runs with grid (M/bm, N/bn, K/bk); the K axis is the innermost grid
+    dimension, and the output block index_map ignores it, so ``o_ref`` is
+    revisited across K steps and carries the partial sum — the software
+    analog of the FREP accumulation registers c0..c7 in Fig. 1b.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 32, bn: int = 32,
+           bk: int = 32) -> jax.Array:
+    """Tiled Pallas matmul ``C = A @ B``.
+
+    Shapes must be divisible by the tile sizes; the driver (model.py /
+    the rust golden runner) pads to tile multiples exactly like the
+    cluster's tiling pads the L1 blocks.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{n},{k}) not divisible by tile ({bm},{bn},{bk})")
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def _matmul_acc_kernel(c_ref, a_ref, b_ref, o_ref):
+    """Single-tile accumulate step ``O = C + A @ B``.
+
+    This is the unit the rust golden runner composes: it mirrors one
+    cluster double-buffer iteration (compute a C tile given resident A/B
+    blocks, accumulating over the K block loop in the caller).
+    """
+    o_ref[...] = c_ref[...] + jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype)
+
+
+@jax.jit
+def matmul_acc_tile(c: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """``C + A @ B`` over a single resident tile (no grid)."""
+    m, k = a.shape
+    _, n = b.shape
+    return pl.pallas_call(
+        _matmul_acc_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,
+    )(c, a, b)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int,
+                         dtype_bytes: int = 8) -> int:
+    """Analytic VMEM footprint of one grid step (double-buffered inputs).
+
+    Pallas pipelines the next (A, B) blocks while computing the current
+    one — the same double buffering the paper implements with the DMA —
+    so input blocks count twice; the accumulator/output block counts once.
+    """
+    a_blk = bm * bk * dtype_bytes
+    b_blk = bk * bn * dtype_bytes
+    o_blk = bm * bn * dtype_bytes
+    return 2 * (a_blk + b_blk) + o_blk
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int,
+                             mxu: int = 128) -> float:
+    """Estimated MXU utilization for a (bm, bn, bk) tile on a 128x128 MXU.
+
+    Fraction of each systolic pass doing useful work — the TPU analog of
+    the paper's FPU-utilization metric.
+    """
+    def eff(d: int) -> float:
+        full, rem = divmod(d, mxu)
+        passes = full + (1 if rem else 0)
+        return d / (passes * mxu)
+
+    return eff(bm) * eff(bn) * eff(bk)

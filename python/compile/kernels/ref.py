@@ -1,0 +1,59 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every oracle is written in the most obvious jnp form (no Pallas, no
+tiling tricks) so that a disagreement always indicts the kernel, never
+the reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """``C = A @ B`` — the oracle for kernels.matmul."""
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def matmul_acc_ref(c: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """``C + A @ B`` — the oracle for kernels.matmul_acc_tile."""
+    return c + jnp.dot(a, b, preferred_element_type=c.dtype)
+
+
+def blocked_matmul_ref(a: jax.Array, b: jax.Array, bm: int, bn: int,
+                       bk: int) -> jax.Array:
+    """Blocked matmul in plain python loops over jnp slices (unjitted).
+
+    Mirrors the cluster's L1 tiling order (C-stationary, K innermost) so
+    its FP association order matches what the simulated cluster computes;
+    used by tests that require matching association.
+    """
+    m, k = a.shape
+    _, n = b.shape
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    c = jnp.zeros((m, n), dtype=a.dtype)
+    for i in range(0, m, bm):
+        for j in range(0, n, bn):
+            acc = jnp.zeros((bm, bn), dtype=a.dtype)
+            for kk in range(0, k, bk):
+                acc = acc + a[i:i + bm, kk:kk + bk] @ b[kk:kk + bk, j:j + bn]
+            c = c.at[i:i + bm, j:j + bn].set(acc)
+    return c
+
+
+def cluster_sharded_ref(a: jax.Array, b: jax.Array,
+                        n_cores: int = 8) -> jax.Array:
+    """Row-sharded matmul: core ``i`` computes rows ``i::n_cores``.
+
+    This is the work split the cluster kernel codegen uses (each Snitch
+    core takes an interleaved row slice of the C tile).
+    """
+    m, _ = a.shape
+    c = jnp.zeros((m, b.shape[1]), dtype=a.dtype)
+    for core in range(n_cores):
+        rows = jnp.arange(core, m, n_cores)
+        c = c.at[rows].set(a[rows] @ b)
+    return c

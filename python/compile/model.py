@@ -1,0 +1,64 @@
+"""L2 — the JAX compute graph of the cluster's matmul workload.
+
+The paper's "model" is a double-buffered, L1-tiled GEMM distributed over
+8 compute cores.  This module expresses exactly that dataflow in JAX,
+calling the L1 Pallas kernel for the per-tile compute, so that one
+lowering captures both layers in a single HLO module:
+
+  cluster_matmul   — full C = A @ B, L1-tiled (grid over tiles, K
+                     innermost) — the end-to-end golden model.
+  matmul_acc_step  — one double-buffer iteration C += A_blk @ B_blk —
+                     the unit the rust runtime composes for arbitrary
+                     problem sizes (padding to tile multiples).
+  sharded_cluster_matmul — the 8-way row-interleaved split the kernel
+                     codegen uses; numerically identical to
+                     cluster_matmul, exercised by tests.
+
+Build-time only: lowered once by aot.py, never imported at runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul as kernels
+
+jax.config.update("jax_enable_x64", True)
+
+N_CORES = 8
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def cluster_matmul(a: jax.Array, b: jax.Array, *, bm: int = 32,
+                   bn: int = 32, bk: int = 32) -> jax.Array:
+    """Full L1-tiled matmul via the Pallas kernel (C-stationary)."""
+    return kernels.matmul(a, b, bm=bm, bn=bn, bk=bk)
+
+
+@jax.jit
+def matmul_acc_step(c: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """One double-buffer iteration: ``C + A @ B`` on resident tiles."""
+    return kernels.matmul_acc_tile(c, a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def sharded_cluster_matmul(a: jax.Array, b: jax.Array, *, bm: int = 32,
+                           bn: int = 32, bk: int = 32) -> jax.Array:
+    """Row-interleaved 8-core split of cluster_matmul.
+
+    Core ``i`` computes C rows ``i::8`` — the same static work split the
+    rust kernel codegen assigns to the 8 Snitch cores.  Reassembled with
+    a scatter; numerically equal to cluster_matmul (same K order).
+    """
+    m, _ = a.shape
+    c = jnp.zeros((m, b.shape[1]), dtype=a.dtype)
+    # vmap over the core index would force dynamic gather shapes; the
+    # loop is unrolled at trace time (N_CORES is static).
+    for core in range(N_CORES):
+        rows = jnp.arange(core, m, N_CORES)
+        part = jnp.dot(a[rows], b, preferred_element_type=a.dtype)
+        c = c.at[rows].set(part)
+    return c

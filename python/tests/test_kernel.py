@@ -1,0 +1,116 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+The CORE correctness signal of the python side: hypothesis sweeps the
+kernel's shape/tile/dtype space and asserts allclose against ref.py.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import matmul as kernels
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+# interpret-mode pallas is slow; keep example counts deliberate.
+COMMON = dict(deadline=None, max_examples=20,
+              suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+# ---------------------------------------------------------------- basic --
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_matmul_32cube(dtype):
+    a = _rand((32, 32), dtype, 0)
+    b = _rand((32, 32), dtype, 1)
+    got = kernels.matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5 if dtype == jnp.float32
+                               else 1e-12)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_matmul_acc_tile(dtype):
+    c = _rand((16, 24), dtype, 2)
+    a = _rand((16, 8), dtype, 3)
+    b = _rand((8, 24), dtype, 4)
+    got = kernels.matmul_acc_tile(c, a, b)
+    want = ref.matmul_acc_ref(c, a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5 if dtype == jnp.float32
+                               else 1e-12)
+
+
+def test_matmul_rejects_untiled_shapes():
+    a = jnp.zeros((30, 32))
+    b = jnp.zeros((32, 32))
+    with pytest.raises(AssertionError):
+        kernels.matmul(a, b)
+
+
+def test_matmul_rejects_mismatched_inner():
+    with pytest.raises(AssertionError):
+        kernels.matmul(jnp.zeros((32, 32)), jnp.zeros((64, 32)))
+
+
+# ----------------------------------------------------------- hypothesis --
+
+DIMS = st.sampled_from([8, 16, 24, 32, 48, 64])
+TILE = st.sampled_from([8, 16, 32])
+
+
+@hypothesis.settings(**COMMON)
+@hypothesis.given(m=DIMS, n=DIMS, k=DIMS, bm=TILE, bn=TILE, bk=TILE,
+                  seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_f64(m, n, k, bm, bn, bk, seed):
+    hypothesis.assume(m % bm == 0 and n % bn == 0 and k % bk == 0)
+    a = _rand((m, k), jnp.float64, seed)
+    b = _rand((k, n), jnp.float64, seed + 1)
+    got = kernels.matmul(a, b, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+@hypothesis.settings(**COMMON)
+@hypothesis.given(m=DIMS, n=DIMS, k=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_f32(m, n, k, seed):
+    a = _rand((m, k), jnp.float32, seed)
+    b = _rand((k, n), jnp.float32, seed + 1)
+    got = kernels.matmul(a, b, bm=8, bn=8, bk=8)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@hypothesis.settings(**COMMON)
+@hypothesis.given(m=TILE, n=TILE, k=TILE, seed=st.integers(0, 2**31 - 1))
+def test_acc_tile_matches_ref(m, n, k, seed):
+    c = _rand((m, n), jnp.float64, seed)
+    a = _rand((m, k), jnp.float64, seed + 1)
+    b = _rand((k, n), jnp.float64, seed + 2)
+    got = kernels.matmul_acc_tile(c, a, b)
+    want = ref.matmul_acc_ref(c, a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+# ------------------------------------------------- analytic estimators --
+
+def test_vmem_footprint_formula():
+    # 32^3 f64 tiles: 2*(8K+8K)+8K = 40 KiB
+    assert kernels.vmem_footprint_bytes(32, 32, 32) == 40 * 1024
+    # must fit a 16 MiB VMEM for the default tiling
+    assert kernels.vmem_footprint_bytes(32, 32, 32) < 16 * 2**20
+
+
+def test_mxu_utilization_estimate():
+    assert kernels.mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert kernels.mxu_utilization_estimate(64, 128, 128) == 0.5
+    u = kernels.mxu_utilization_estimate(32, 32, 32)
+    assert 0 < u < 1

@@ -1,0 +1,90 @@
+"""L2 correctness: model graph shapes, sharding equivalence, AOT lowering."""
+
+import os
+import sys
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+COMMON = dict(deadline=None, max_examples=15,
+              suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _rand(shape, seed, dtype=jnp.float64):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+def test_cluster_matmul_matches_blocked_ref():
+    a = _rand((64, 96), 0)
+    b = _rand((96, 32), 1)
+    got = model.cluster_matmul(a, b, bm=32, bn=32, bk=32)
+    want = ref.blocked_matmul_ref(a, b, 32, 32, 32)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_sharded_equals_unsharded():
+    a = _rand((64, 64), 2)
+    b = _rand((64, 64), 3)
+    got = model.sharded_cluster_matmul(a, b)
+    want = model.cluster_matmul(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_sharded_matches_cluster_sharded_ref():
+    a = _rand((32, 32), 4)
+    b = _rand((32, 32), 5)
+    got = model.sharded_cluster_matmul(a, b)
+    want = ref.cluster_sharded_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+@hypothesis.settings(**COMMON)
+@hypothesis.given(mt=st.integers(1, 3), nt=st.integers(1, 3),
+                  kt=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_cluster_matmul_tile_grid(mt, nt, kt, seed):
+    a = _rand((32 * mt, 32 * kt), seed)
+    b = _rand((32 * kt, 32 * nt), seed + 1)
+    got = model.cluster_matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+def test_acc_step_composition_matches_full():
+    """Composing acc steps over K blocks == full matmul (the rust golden
+    runner's composition scheme)."""
+    a = _rand((32, 96), 6)
+    b = _rand((96, 32), 7)
+    c = jnp.zeros((32, 32), dtype=jnp.float64)
+    for kk in range(0, 96, 32):
+        c = model.matmul_acc_step(c, a[:, kk:kk + 32], b[kk:kk + 32, :])
+    np.testing.assert_allclose(c, ref.matmul_ref(a, b), rtol=1e-12)
+
+
+# ------------------------------------------------------------------ AOT --
+
+def test_aot_lowering_produces_hlo_text():
+    specs = aot.artifact_specs()
+    assert {n for n, _, _ in specs} == {
+        "matmul_acc_32", "matmul_acc_8", "matmul_32", "matmul_128"}
+    name, fn, args = specs[0]
+    lowered = jax.jit(fn).lower(*args)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f64" in text
+
+
+def test_aot_text_is_deterministic():
+    _, fn, args = aot.artifact_specs()[0]
+    t1 = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    t2 = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert t1 == t2

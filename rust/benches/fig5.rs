@@ -1,0 +1,41 @@
+//! Bench: Fig. 5 regenerator — end-to-end simulation throughput per
+//! configuration on the 32^3 kernel, plus the metrics each box plot
+//! reports. `cargo bench --bench fig5`.
+
+use zerostall::cluster::ConfigId;
+use zerostall::coordinator::experiments::run_point;
+use zerostall::coordinator::workload::Problem;
+use zerostall::kernels::LayoutKind;
+use zerostall::util::bench::Bencher;
+
+fn main() {
+    println!("== fig5 bench: one 32^3 GEMM simulation per iteration ==");
+    let b = Bencher::default();
+    let p = Problem { m: 32, n: 32, k: 32 };
+    for id in ConfigId::all() {
+        let sample = b.run(&format!("fig5/sim/{}", id.name()), || {
+            run_point(id, p, LayoutKind::Grouped).unwrap()
+        });
+        let point = run_point(id, p, LayoutKind::Grouped).unwrap();
+        let cycles_per_s =
+            point.cycles as f64 / sample.median.as_secs_f64();
+        println!(
+            "    -> util {:.1}%, {:.2} Msim-cycles/s, {:.1} mW model",
+            point.utilization * 100.0,
+            cycles_per_s / 1e6,
+            point.power_mw
+        );
+    }
+    // A bigger, multi-pass case (DMA overlap active).
+    let p2 = Problem { m: 128, n: 128, k: 128 };
+    let s = b.run("fig5/sim/zonl48db/128cube", || {
+        run_point(ConfigId::Zonl48Db, p2, LayoutKind::Grouped).unwrap()
+    });
+    let point = run_point(ConfigId::Zonl48Db, p2, LayoutKind::Grouped)
+        .unwrap();
+    println!(
+        "    -> util {:.1}%, {:.2} Msim-cycles/s",
+        point.utilization * 100.0,
+        point.cycles as f64 / s.median.as_secs_f64() / 1e6
+    );
+}

@@ -1,0 +1,83 @@
+//! Bench: interconnect arbitration (E7) — per-cycle throughput of the
+//! fully-connected vs Dobu arbiters under realistic and adversarial
+//! request mixes; this is the simulator's hottest function.
+
+use zerostall::mem::{
+    DmaBeat, Interconnect, PortRequest, Tcdm, Topology, TCDM_BASE,
+};
+use zerostall::util::bench::Bencher;
+use zerostall::util::rng::Rng;
+
+fn requests(n: usize, banks: usize, seed: u64) -> Vec<PortRequest> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| PortRequest {
+            port: i as u16,
+            addr: TCDM_BASE + (rng.below(banks as u64 * 16) as u32) * 8,
+            write: i % 4 == 3,
+            data: 0x3FF0_0000_0000_0000,
+        })
+        .collect()
+}
+
+fn bench_topology(b: &Bencher, name: &str, topo: Topology, bytes: usize) {
+    let mut tcdm = Tcdm::new(topo, bytes);
+    let mut x = Interconnect::new(topo.total_banks(), 36);
+    let reqs = requests(24, topo.total_banks(), 1);
+    let beat = DmaBeat {
+        addr: TCDM_BASE + 512,
+        n_words: 8,
+        write: true,
+        data: [7; 8],
+    };
+    let mut grants = vec![false; reqs.len()];
+    let mut data = vec![0u64; reqs.len()];
+    let s = b.run(&format!("interconnect/{name}/24req+dma"), || {
+        grants.fill(false);
+        x.arbitrate(&mut tcdm, &reqs, &mut grants, &mut data, Some(&beat))
+            .dma_granted
+    });
+    println!(
+        "    -> {:.1} M arbitration-cycles/s",
+        s.throughput(1.0) / 1e6
+    );
+}
+
+fn main() {
+    println!("== interconnect bench: arbitration cycles per second ==");
+    let b = Bencher::default();
+    bench_topology(&b, "fc32", Topology::Fc { banks: 32 }, 128 * 1024);
+    bench_topology(&b, "fc64", Topology::Fc { banks: 64 }, 128 * 1024);
+    bench_topology(
+        &b,
+        "dobu48",
+        Topology::Dobu { banks_per_hyper: 24 },
+        96 * 1024,
+    );
+    bench_topology(
+        &b,
+        "dobu64",
+        Topology::Dobu { banks_per_hyper: 32 },
+        128 * 1024,
+    );
+
+    // Adversarial: all requests to one bank (worst-case rr scan).
+    let topo = Topology::Fc { banks: 32 };
+    let mut tcdm = Tcdm::new(topo, 128 * 1024);
+    let mut x = Interconnect::new(32, 36);
+    let reqs: Vec<PortRequest> = (0..24)
+        .map(|i| PortRequest {
+            port: i as u16,
+            addr: TCDM_BASE,
+            write: false,
+            data: 0,
+        })
+        .collect();
+    let mut grants = vec![false; reqs.len()];
+    let mut data = vec![0u64; reqs.len()];
+    b.run("interconnect/fc32/adversarial_same_bank", || {
+        grants.fill(false);
+        x.arbitrate(&mut tcdm, &reqs, &mut grants, &mut data, None);
+        grants.iter().filter(|&&g| g).count()
+    });
+}

@@ -1,0 +1,94 @@
+//! Bench: FREP sequencer issue throughput (E6) — the zero-overhead
+//! loop-nest engine must sustain one instruction per cycle; this bench
+//! measures the *simulator's* issue rate on the matmul nest shape and
+//! on adversarial nests (shared start/end instructions).
+
+use zerostall::core::sequencer::{
+    run_sequencer, NestItem, SeqConfig, Sequencer,
+};
+use zerostall::util::bench::Bencher;
+
+fn matmul_nest(k: u32, outer: u32) -> Vec<NestItem> {
+    let mut v = vec![NestItem::Loop { n_inst: 24, n_iter: outer }];
+    for i in 0..8 {
+        v.push(NestItem::Op(i));
+    }
+    v.push(NestItem::Loop { n_inst: 8, n_iter: k - 2 });
+    for i in 8..16 {
+        v.push(NestItem::Op(i));
+    }
+    for i in 16..24 {
+        v.push(NestItem::Op(i));
+    }
+    v
+}
+
+fn shared_edges_nest() -> Vec<NestItem> {
+    // outer{ inner{ inner2{ a b } } c } — three loops sharing starts.
+    vec![
+        NestItem::Loop { n_inst: 3, n_iter: 8 },
+        NestItem::Loop { n_inst: 2, n_iter: 8 },
+        NestItem::Loop { n_inst: 2, n_iter: 8 },
+        NestItem::Op(1),
+        NestItem::Op(2),
+        NestItem::Op(3),
+    ]
+}
+
+fn main() {
+    println!("== sequencer bench: issued instructions per second ==");
+    let b = Bencher::default();
+
+    let items = matmul_nest(32, 16);
+    let s = b.run("sequencer/matmul_nest_32x16", || {
+        let mut seq = Sequencer::new(SeqConfig::zonl());
+        run_sequencer(&mut seq, &items)
+    });
+    let (trace, cycles) = {
+        let mut seq = Sequencer::new(SeqConfig::zonl());
+        run_sequencer(&mut seq, &items)
+    };
+    println!(
+        "    -> {} instrs in {} cycles ({:.4} instr/cycle), {:.1} M \
+         instr/s simulated",
+        trace.len(),
+        cycles,
+        trace.len() as f64 / cycles as f64,
+        s.throughput(trace.len() as f64) / 1e6
+    );
+
+    let adv = shared_edges_nest();
+    let s2 = b.run("sequencer/shared_start_end", || {
+        let mut seq = Sequencer::new(SeqConfig::zonl());
+        run_sequencer(&mut seq, &adv)
+    });
+    let (t2, c2) = {
+        let mut seq = Sequencer::new(SeqConfig::zonl());
+        run_sequencer(&mut seq, &adv)
+    };
+    println!(
+        "    -> {} instrs / {} cycles = {:.4} instr/cycle; {:.1} M/s",
+        t2.len(),
+        c2,
+        t2.len() as f64 / c2 as f64,
+        s2.throughput(t2.len() as f64) / 1e6
+    );
+
+    // Baseline comparison: blocking sequencer on sequential loops.
+    let s3 = b.run("sequencer/baseline_blocking", || {
+        let mut seq = Sequencer::new(SeqConfig::baseline());
+        let items = vec![
+            NestItem::Loop { n_inst: 8, n_iter: 30 },
+            NestItem::Op(1),
+            NestItem::Op(2),
+            NestItem::Op(3),
+            NestItem::Op(4),
+            NestItem::Op(5),
+            NestItem::Op(6),
+            NestItem::Op(7),
+            NestItem::Op(8),
+        ];
+        run_sequencer(&mut seq, &items)
+    });
+    let _ = s3;
+}

@@ -1,0 +1,16 @@
+//! Bench: Table I regenerator — evaluates the area model for all
+//! configurations and prints the table (model evaluation is cheap;
+//! the bench guards against regressions in the modeling path).
+
+use zerostall::coordinator::{experiments, report};
+use zerostall::util::bench::Bencher;
+
+fn main() {
+    println!("== table1 bench ==");
+    let b = Bencher::quick();
+    b.run("table1/area_model_all_configs", || {
+        experiments::table1()
+    });
+    println!();
+    println!("{}", report::render_table1(&experiments::table1()));
+}

@@ -1,0 +1,18 @@
+//! Bench: Table II regenerator — the full SoA comparison (two
+//! end-to-end 32^3 simulations + the OpenGeMM comparator model).
+
+use zerostall::coordinator::{experiments, report};
+use zerostall::util::bench::Bencher;
+
+fn main() {
+    println!("== table2 bench: full SoA comparison per iteration ==");
+    let b = Bencher::default();
+    b.run("table2/ours_vs_snitch_vs_opengemm", || {
+        experiments::table2().unwrap()
+    });
+    println!();
+    println!(
+        "{}",
+        report::render_table2(&experiments::table2().unwrap())
+    );
+}

@@ -1,0 +1,146 @@
+//! The five cluster configurations evaluated in the paper (Table I).
+
+use crate::core::{CoreConfig, SeqConfig};
+use crate::core::fpu::FpuConfig;
+use crate::mem::Topology;
+
+/// Named configuration id — the rows of Table I / boxes of Fig. 5.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ConfigId {
+    /// Baseline: 128 KiB, 32 banks, fully-connected, plain FREP.
+    Base32Fc,
+    /// + zero-overhead loop nests.
+    Zonl32Fc,
+    /// + 64 banks, still fully-connected (area/energy hungry).
+    Zonl64Fc,
+    /// 64 banks behind the Dobu interconnect (2x32).
+    Zonl64Db,
+    /// The paper's pick: 96 KiB, 48 banks, Dobu (2x24).
+    Zonl48Db,
+}
+
+impl ConfigId {
+    pub fn all() -> [ConfigId; 5] {
+        [
+            ConfigId::Base32Fc,
+            ConfigId::Zonl32Fc,
+            ConfigId::Zonl64Fc,
+            ConfigId::Zonl64Db,
+            ConfigId::Zonl48Db,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConfigId::Base32Fc => "base32fc",
+            ConfigId::Zonl32Fc => "zonl32fc",
+            ConfigId::Zonl64Fc => "zonl64fc",
+            ConfigId::Zonl64Db => "zonl64db",
+            ConfigId::Zonl48Db => "zonl48db",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ConfigId> {
+        ConfigId::all().into_iter().find(|c| c.name() == s)
+    }
+
+    pub fn cluster_config(&self) -> ClusterConfig {
+        let (topology, tcdm_bytes, zonl) = match self {
+            ConfigId::Base32Fc => {
+                (Topology::Fc { banks: 32 }, 128 * 1024, false)
+            }
+            ConfigId::Zonl32Fc => {
+                (Topology::Fc { banks: 32 }, 128 * 1024, true)
+            }
+            ConfigId::Zonl64Fc => {
+                (Topology::Fc { banks: 64 }, 128 * 1024, true)
+            }
+            ConfigId::Zonl64Db => {
+                (Topology::Dobu { banks_per_hyper: 32 }, 128 * 1024, true)
+            }
+            ConfigId::Zonl48Db => {
+                (Topology::Dobu { banks_per_hyper: 24 }, 96 * 1024, true)
+            }
+        };
+        ClusterConfig {
+            id: *self,
+            n_compute: 8,
+            topology,
+            tcdm_bytes,
+            zonl,
+            core: if zonl {
+                CoreConfig::zonl()
+            } else {
+                CoreConfig::baseline()
+            },
+            dma_queue: 4,
+            main_mem_bytes: 2 << 20,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    pub id: ConfigId,
+    /// Compute cores (the DM core is additional).
+    pub n_compute: usize,
+    pub topology: Topology,
+    pub tcdm_bytes: usize,
+    /// Zero-overhead loop nests available?
+    pub zonl: bool,
+    pub core: CoreConfig,
+    pub dma_queue: usize,
+    pub main_mem_bytes: usize,
+}
+
+impl ClusterConfig {
+    /// Total request ports on the core side of the interconnect:
+    /// (3 SSR + 1 LSU) per compute core + 1 LSU for the DM core.
+    pub fn n_ports(&self) -> usize {
+        self.n_compute * 4 + 4
+    }
+
+    /// Custom core parameters (used by ablation studies).
+    pub fn with_core(mut self, seq: SeqConfig, fpu: FpuConfig) -> Self {
+        self.core.seq = seq;
+        self.core.fpu = fpu;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_configs_match_table1() {
+        assert_eq!(ConfigId::all().len(), 5);
+        let base = ConfigId::Base32Fc.cluster_config();
+        assert_eq!(base.topology.total_banks(), 32);
+        assert_eq!(base.tcdm_bytes, 128 * 1024);
+        assert!(!base.zonl);
+        let z48 = ConfigId::Zonl48Db.cluster_config();
+        assert_eq!(z48.topology.total_banks(), 48);
+        assert_eq!(z48.tcdm_bytes, 96 * 1024);
+        assert_eq!(z48.topology.hyperbanks(), 2);
+        assert!(z48.zonl);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for id in ConfigId::all() {
+            assert_eq!(ConfigId::from_name(id.name()), Some(id));
+        }
+        assert_eq!(ConfigId::from_name("nope"), None);
+    }
+
+    #[test]
+    fn zonl_cores_get_nested_sequencer() {
+        let z = ConfigId::Zonl64Db.cluster_config();
+        assert!(z.core.seq.max_nest_depth > 1);
+        assert!(!z.core.seq.block_offload_during_loop);
+        let b = ConfigId::Base32Fc.cluster_config();
+        assert_eq!(b.core.seq.max_nest_depth, 1);
+        assert!(b.core.seq.block_offload_during_loop);
+    }
+}

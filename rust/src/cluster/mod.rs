@@ -1,0 +1,441 @@
+//! Cluster composition and the cycle-stepped simulation loop.
+//!
+//! One `Cluster` owns 8 compute Snitch cores + 1 DM core (with the DMA
+//! engine), the multi-banked TCDM behind its interconnect, and main
+//! memory.  `step()` advances the whole machine one cycle in four
+//! phases:
+//!
+//! 1. FP subsystems tick (writebacks, sequencer → FPU issue) — uses
+//!    the FIFO state left by the previous cycle's memory phase, giving
+//!    the 1-cycle TCDM load-use latency.
+//! 2. Barrier release, then frontends execute one instruction each.
+//! 3. Request collection: SSR streamers, LSUs, and the DMA beat.
+//! 4. Interconnect arbitration + commit: grants move data, losers
+//!    retry next cycle (counted as conflicts).
+
+pub mod config;
+pub mod perf;
+
+pub use config::{ClusterConfig, ConfigId};
+pub use perf::ClusterPerf;
+
+use crate::core::snitch::CoreRequest;
+use crate::core::Core;
+use crate::dma::Dma;
+use crate::isa::Program;
+use crate::mem::{
+    Interconnect, MainMemory, PortRequest, Tcdm,
+};
+use crate::ssr::SsrMode;
+
+/// Which unit of a core issued a request (for grant routing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Owner {
+    Ssr { core: u8, stream: u8 },
+    Lsu { core: u8 },
+}
+
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    /// `cores[0..n_compute]` are compute cores; the last is the DM core.
+    pub cores: Vec<Core>,
+    pub tcdm: Tcdm,
+    pub mem: MainMemory,
+    pub xbar: Interconnect,
+    pub dma: Dma,
+    pub cycle: u64,
+    pub barriers_completed: u64,
+    /// Cycle of the first barrier release (compute-window start).
+    pub first_barrier_cycle: u64,
+    /// Cycle of the most recent barrier release (compute-window end).
+    pub last_barrier_cycle: u64,
+    // reusable per-cycle scratch
+    reqs: Vec<PortRequest>,
+    owners: Vec<Owner>,
+    grants: Vec<bool>,
+    rdata: Vec<u64>,
+}
+
+impl Cluster {
+    /// Build a cluster; `programs` holds one program per compute core
+    /// plus the DM core's program last (n_compute + 1 total).
+    pub fn new(cfg: ClusterConfig, programs: Vec<Program>) -> Self {
+        assert_eq!(
+            programs.len(),
+            cfg.n_compute + 1,
+            "need one program per compute core plus the DM core"
+        );
+        let cores = programs
+            .into_iter()
+            .enumerate()
+            .map(|(id, p)| Core::new(id, cfg.core, p))
+            .collect();
+        let cap = cfg.n_ports();
+        Self {
+            cores,
+            tcdm: Tcdm::new(cfg.topology, cfg.tcdm_bytes),
+            mem: MainMemory::new(cfg.main_mem_bytes),
+            xbar: Interconnect::new(cfg.topology.total_banks(), cfg.n_ports()),
+            dma: Dma::new(cfg.dma_queue),
+            cycle: 0,
+            barriers_completed: 0,
+            first_barrier_cycle: 0,
+            last_barrier_cycle: 0,
+            reqs: Vec::with_capacity(cap),
+            owners: Vec::with_capacity(cap),
+            grants: vec![false; cap],
+            rdata: vec![0u64; cap],
+            cfg,
+        }
+    }
+
+    pub fn dm_core_id(&self) -> usize {
+        self.cfg.n_compute
+    }
+
+    pub fn all_halted(&self) -> bool {
+        self.cores.iter().all(|c| c.halted())
+    }
+
+    /// Advance one cycle.
+    pub fn step(&mut self) {
+        let now = self.cycle;
+
+        // ---- phase 1: FP subsystems --------------------------------
+        for c in self.cores.iter_mut() {
+            if !c.halted() {
+                c.fp_tick(now);
+            }
+        }
+
+        // ---- phase 2a: barrier release ------------------------------
+        let all_at_barrier = self
+            .cores
+            .iter()
+            .all(|c| c.halted() || c.at_barrier());
+        if all_at_barrier && !self.all_halted() {
+            for c in self.cores.iter_mut() {
+                if c.at_barrier() {
+                    c.barrier_release();
+                }
+            }
+            self.barriers_completed += 1;
+            if self.barriers_completed == 1 {
+                self.first_barrier_cycle = now;
+            }
+            self.last_barrier_cycle = now;
+        }
+
+        // ---- phase 2b: frontends ------------------------------------
+        let dma_ready = self.dma.can_push();
+        let dma_inflight = self.dma.in_flight();
+        for c in self.cores.iter_mut() {
+            if c.try_dmstat(dma_inflight) {
+                continue;
+            }
+            match c.frontend_tick(now, dma_ready) {
+                CoreRequest::None => {}
+                CoreRequest::DmaPush(desc) => {
+                    let ok = self.dma.push(desc);
+                    debug_assert!(ok, "frontend checked dma_ready");
+                }
+            }
+        }
+
+        // ---- phase 3: request collection ----------------------------
+        self.reqs.clear();
+        self.owners.clear();
+        for (ci, c) in self.cores.iter().enumerate() {
+            let base_port = (ci * 4) as u16;
+            for s in 0..3u8 {
+                let str_ = &c.ssrs[s as usize];
+                match str_.mode {
+                    // Read prefetch is gated on the SSR-enable CSR:
+                    // kernels arm stream bases in the shadow of the
+                    // previous pass / prologue DMA, and the generator
+                    // must not fetch until the buffers are valid.
+                    SsrMode::Read if c.ssr_enable => {
+                        if let Some(addr) = str_.read_request() {
+                            self.reqs.push(PortRequest {
+                                port: base_port + s as u16,
+                                addr,
+                                write: false,
+                                data: 0,
+                            });
+                            self.owners.push(Owner::Ssr {
+                                core: ci as u8,
+                                stream: s,
+                            });
+                        }
+                    }
+                    SsrMode::Write => {
+                        if let Some((addr, v)) = str_.write_request() {
+                            self.reqs.push(PortRequest {
+                                port: base_port + s as u16,
+                                addr,
+                                write: true,
+                                data: v.to_bits(),
+                            });
+                            self.owners.push(Owner::Ssr {
+                                core: ci as u8,
+                                stream: s,
+                            });
+                        }
+                    }
+                    SsrMode::Read | SsrMode::Idle => {}
+                }
+            }
+            if let Some((addr, write, data)) = c.lsu_request() {
+                debug_assert!(
+                    self.tcdm.contains(addr),
+                    "LSU outside TCDM unsupported: {addr:#x}"
+                );
+                self.reqs.push(PortRequest {
+                    port: base_port + 3,
+                    addr,
+                    write,
+                    data,
+                });
+                self.owners.push(Owner::Lsu { core: ci as u8 });
+            }
+        }
+
+        let beat = self.dma.next_beat(&self.mem);
+        if self.dma.busy() {
+            self.dma.busy_cycles += 1;
+        }
+
+        // ---- phase 4: arbitration + commit --------------------------
+        let n = self.reqs.len();
+        self.grants[..n].fill(false);
+        let outcome = self.xbar.arbitrate(
+            &mut self.tcdm,
+            &self.reqs[..n],
+            &mut self.grants[..n],
+            &mut self.rdata[..n],
+            beat.as_ref(),
+        );
+        if let Some(b) = &beat {
+            if outcome.dma_granted {
+                self.dma.beat_granted(b, &outcome.dma_read, &mut self.mem);
+            } else {
+                self.dma.beat_denied();
+            }
+        }
+        for i in 0..n {
+            let owner = self.owners[i];
+            match owner {
+                Owner::Ssr { core, stream } => {
+                    let s = &mut self.cores[core as usize].ssrs
+                        [stream as usize];
+                    s.total_requests += 1;
+                    if self.grants[i] {
+                        if self.reqs[i].write {
+                            s.write_granted();
+                        } else {
+                            s.read_granted(f64::from_bits(self.rdata[i]));
+                        }
+                    } else {
+                        s.conflicts += 1;
+                    }
+                }
+                Owner::Lsu { core } => {
+                    if self.grants[i] {
+                        self.cores[core as usize]
+                            .lsu_granted(self.rdata[i]);
+                    }
+                }
+            }
+        }
+
+        self.cycle += 1;
+    }
+
+    /// Run to completion (all cores halted). Returns total cycles.
+    pub fn run(&mut self, max_cycles: u64) -> anyhow::Result<u64> {
+        while !self.all_halted() {
+            self.step();
+            if self.cycle >= max_cycles {
+                anyhow::bail!(
+                    "cluster exceeded {max_cycles} cycles (deadlock?); \
+                     pcs={:?}",
+                    self.cores.iter().map(|c| c.halted()).collect::<Vec<_>>()
+                );
+            }
+        }
+        Ok(self.cycle)
+    }
+
+    /// Aggregate performance summary.
+    pub fn perf(&self) -> ClusterPerf {
+        ClusterPerf::collect(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::Asm;
+    use crate::isa::{reg, Instr, SsrField};
+    use crate::mem::{MAIN_MEM_BASE, TCDM_BASE};
+
+    fn empty_prog() -> Program {
+        let mut a = Asm::new();
+        a.push(Instr::Ecall);
+        a.assemble()
+    }
+
+    fn barrier_then_halt() -> Program {
+        let mut a = Asm::new();
+        a.push(Instr::Barrier);
+        a.push(Instr::Ecall);
+        a.assemble()
+    }
+
+    #[test]
+    fn trivial_programs_halt() {
+        let cfg = ConfigId::Base32Fc.cluster_config();
+        let progs = (0..9).map(|_| empty_prog()).collect();
+        let mut cl = Cluster::new(cfg, progs);
+        let cycles = cl.run(1000).unwrap();
+        assert!(cycles <= 3, "halt within a couple of cycles: {cycles}");
+    }
+
+    #[test]
+    fn barrier_synchronizes_all_cores() {
+        let cfg = ConfigId::Base32Fc.cluster_config();
+        // Core 0 spins before its barrier; everyone else waits.
+        let mut slow = Asm::new();
+        slow.li(reg::T0, 50);
+        let top = slow.label();
+        slow.bind(top);
+        slow.push(Instr::Addi { rd: reg::T0, rs1: reg::T0, imm: -1 });
+        slow.bne(reg::T0, 0, top);
+        slow.push(Instr::Barrier);
+        slow.push(Instr::Ecall);
+        let mut progs = vec![slow.assemble()];
+        for _ in 1..9 {
+            progs.push(barrier_then_halt());
+        }
+        let mut cl = Cluster::new(cfg, progs);
+        let cycles = cl.run(10_000).unwrap();
+        assert!(cycles > 100, "must wait for the slow core: {cycles}");
+        assert_eq!(cl.barriers_completed, 1);
+    }
+
+    #[test]
+    fn dma_roundtrip_through_dm_core() {
+        let cfg = ConfigId::Base32Fc.cluster_config();
+        // DM core: copy 64 words in, then out to a second region, wait,
+        // halt. Compute cores: just halt.
+        let mut dm = Asm::new();
+        dm.li(reg::A0, MAIN_MEM_BASE);
+        dm.push(Instr::Dmsrc { rs1: reg::A0 });
+        dm.li(reg::A1, TCDM_BASE);
+        dm.push(Instr::Dmdst { rs1: reg::A1 });
+        dm.li(reg::A2, 64 * 8);
+        dm.push(Instr::Dmcpy { rd: reg::T0, rs1: reg::A2 });
+        // poll until idle
+        let poll1 = dm.label();
+        dm.bind(poll1);
+        dm.push(Instr::Dmstat { rd: reg::T1 });
+        dm.bne(reg::T1, 0, poll1);
+        // copy back out
+        dm.push(Instr::Dmsrc { rs1: reg::A1 });
+        dm.li(reg::A3, MAIN_MEM_BASE + 0x10000);
+        dm.push(Instr::Dmdst { rs1: reg::A3 });
+        dm.push(Instr::Dmcpy { rd: reg::T0, rs1: reg::A2 });
+        let poll2 = dm.label();
+        dm.bind(poll2);
+        dm.push(Instr::Dmstat { rd: reg::T1 });
+        dm.bne(reg::T1, 0, poll2);
+        dm.push(Instr::Ecall);
+
+        let mut progs: Vec<Program> = (0..8).map(|_| empty_prog()).collect();
+        progs.push(dm.assemble());
+        let mut cl = Cluster::new(cfg, progs);
+        let xs: Vec<f64> = (0..64).map(|i| (i * 3) as f64).collect();
+        cl.mem.write_slice_f64(MAIN_MEM_BASE, &xs);
+        cl.run(100_000).unwrap();
+        assert_eq!(cl.mem.read_vec_f64(MAIN_MEM_BASE + 0x10000, 64), xs);
+        assert_eq!(cl.dma.bytes_moved, 2 * 64 * 8);
+    }
+
+    #[test]
+    fn ssr_stream_feeds_fpu() {
+        // Compute core 0: stream 4 values from TCDM through ft0 and
+        // ft1, fmadd-accumulate into fa0, fsd the result.
+        let cfg = ConfigId::Zonl48Db.cluster_config();
+        let mut a = Asm::new();
+        // ssr0: read 4 elems at TCDM_BASE stride 8
+        a.li(reg::T0, 3);
+        a.push(Instr::SsrCfgW {
+            value: reg::T0,
+            ssr: 0,
+            field: SsrField::Bound(0),
+        });
+        a.li(reg::T0, 8);
+        a.push(Instr::SsrCfgW {
+            value: reg::T0,
+            ssr: 0,
+            field: SsrField::Stride(0),
+        });
+        a.li(reg::T0, TCDM_BASE);
+        a.push(Instr::SsrCfgW {
+            value: reg::T0,
+            ssr: 0,
+            field: SsrField::ReadBase(0),
+        });
+        // ssr1: read 4 elems at TCDM_BASE + 0x100
+        a.li(reg::T0, 3);
+        a.push(Instr::SsrCfgW {
+            value: reg::T0,
+            ssr: 1,
+            field: SsrField::Bound(0),
+        });
+        a.li(reg::T0, 8);
+        a.push(Instr::SsrCfgW {
+            value: reg::T0,
+            ssr: 1,
+            field: SsrField::Stride(0),
+        });
+        a.li(reg::T0, TCDM_BASE + 0x100);
+        a.push(Instr::SsrCfgW {
+            value: reg::T0,
+            ssr: 1,
+            field: SsrField::ReadBase(0),
+        });
+        // zero fa0, enable ssr, 4x fmadd, disable, store
+        a.li(reg::T1, 0);
+        a.push(Instr::FcvtDW { frd: reg::FA0, rs1: reg::T1 });
+        a.push(Instr::Csrrsi { csr: crate::isa::csr::SSR_ENABLE, imm: 1 });
+        for _ in 0..4 {
+            a.push(Instr::FmaddD {
+                frd: reg::FA0,
+                frs1: reg::FT0,
+                frs2: reg::FT1,
+                frs3: reg::FA0,
+            });
+        }
+        a.push(Instr::Csrrci { csr: crate::isa::csr::SSR_ENABLE, imm: 1 });
+        a.li(reg::T2, TCDM_BASE + 0x200);
+        a.push(Instr::Fsd { frs2: reg::FA0, rs1: reg::T2, imm: 0 });
+        a.push(Instr::Ecall);
+
+        let mut progs = vec![a.assemble()];
+        for _ in 1..9 {
+            progs.push(empty_prog());
+        }
+        let mut cl = Cluster::new(cfg, progs);
+        for i in 0..4u32 {
+            cl.tcdm
+                .write_f64(TCDM_BASE + i * 8, (i + 1) as f64);
+            cl.tcdm
+                .write_f64(TCDM_BASE + 0x100 + i * 8, 10.0);
+        }
+        cl.run(10_000).unwrap();
+        // sum (i+1)*10 = 100
+        assert_eq!(cl.tcdm.read_f64(TCDM_BASE + 0x200), 100.0);
+        assert_eq!(cl.cores[0].perf.fpu_ops, 4, "4 fmadds through the FPU");
+    }
+}

@@ -1,0 +1,138 @@
+//! Aggregated cluster performance counters — the raw material for the
+//! utilization metric (Fig. 5) and the event-based energy model.
+
+use super::Cluster;
+
+/// Snapshot of everything the experiments and the power model need.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterPerf {
+    pub cycles: u64,
+    /// Compute-window length: first barrier release (phase-0 tiles
+    /// ready) to last barrier release (final compute pass done). The
+    /// paper's FPU-utilization methodology measures the kernel region,
+    /// not the cold prologue load / epilogue store.
+    pub window_cycles: u64,
+    /// Per-compute-core FPU op counts.
+    pub fpu_ops_per_core: Vec<u64>,
+    pub fpu_ops_total: u64,
+    /// Mean FPU utilization over the compute cores.
+    pub utilization: f64,
+    // stall taxonomy (summed over compute cores)
+    pub stall_ssr_empty: u64,
+    pub stall_wfifo: u64,
+    pub stall_raw: u64,
+    pub stall_fpu_full: u64,
+    pub fpu_idle_no_instr: u64,
+    pub offload_stalls: u64,
+    pub branch_bubbles: u64,
+    pub barrier_cycles: u64,
+    pub lsu_stalls: u64,
+    // activity events (energy model inputs)
+    pub int_instrs: u64,
+    pub icache_fetches: u64,
+    pub rb_replays: u64,
+    pub csr_instrs: u64,
+    pub tcdm_core_accesses: u64,
+    pub tcdm_conflicts: u64,
+    pub tcdm_conflicts_dma: u64,
+    pub ssr_requests: u64,
+    pub ssr_conflicts: u64,
+    pub dma_beats: u64,
+    pub dma_bytes: u64,
+    pub dma_busy_cycles: u64,
+    pub dma_stall_cycles: u64,
+    pub barriers_completed: u64,
+}
+
+impl ClusterPerf {
+    pub fn collect(cl: &Cluster) -> Self {
+        let n = cl.cfg.n_compute;
+        let compute = &cl.cores[..n];
+        let cycles = cl.cycle;
+        let fpu_ops_per_core: Vec<u64> =
+            compute.iter().map(|c| c.perf.fpu_ops).collect();
+        let fpu_ops_total: u64 = fpu_ops_per_core.iter().sum();
+        // All FP work happens between the first and last barrier
+        // (prologue = DMA fill, epilogue = DMA drain, both FP-free).
+        let window_cycles = if cl.barriers_completed >= 2 {
+            cl.last_barrier_cycle - cl.first_barrier_cycle
+        } else {
+            cycles
+        };
+        let utilization = if window_cycles == 0 {
+            0.0
+        } else {
+            fpu_ops_total as f64 / (window_cycles as f64 * n as f64)
+        };
+        let sum = |f: fn(&crate::core::CorePerf) -> u64| -> u64 {
+            compute.iter().map(|c| f(&c.perf)).sum()
+        };
+        Self {
+            cycles,
+            window_cycles,
+            fpu_ops_per_core,
+            fpu_ops_total,
+            utilization,
+            stall_ssr_empty: sum(|p| p.stall_ssr_empty),
+            stall_wfifo: sum(|p| p.stall_wfifo),
+            stall_raw: sum(|p| p.stall_raw),
+            stall_fpu_full: sum(|p| p.stall_fpu_full),
+            fpu_idle_no_instr: sum(|p| p.fpu_idle_no_instr),
+            offload_stalls: sum(|p| p.offload_stalls),
+            branch_bubbles: sum(|p| p.branch_bubbles),
+            barrier_cycles: sum(|p| p.barrier_cycles),
+            lsu_stalls: sum(|p| p.lsu_stalls),
+            int_instrs: sum(|p| p.int_instrs)
+                + cl.cores[n].perf.int_instrs,
+            icache_fetches: sum(|p| p.icache_fetches)
+                + cl.cores[n].perf.icache_fetches,
+            rb_replays: sum(|p| p.rb_replays),
+            csr_instrs: sum(|p| p.csr_instrs),
+            tcdm_core_accesses: cl.xbar.stats.core_grants,
+            tcdm_conflicts: cl.xbar.stats.core_conflicts,
+            tcdm_conflicts_dma: cl.xbar.stats.core_conflicts_dma,
+            ssr_requests: cl
+                .cores
+                .iter()
+                .flat_map(|c| c.ssrs.iter())
+                .map(|s| s.total_requests)
+                .sum(),
+            ssr_conflicts: cl
+                .cores
+                .iter()
+                .flat_map(|c| c.ssrs.iter())
+                .map(|s| s.conflicts)
+                .sum(),
+            dma_beats: cl.dma.beats,
+            dma_bytes: cl.dma.bytes_moved,
+            dma_busy_cycles: cl.dma.busy_cycles,
+            dma_stall_cycles: cl.dma.stall_cycles,
+            barriers_completed: cl.barriers_completed,
+        }
+    }
+
+    /// Fraction of cycles lost to TCDM conflicts (approximate: each
+    /// conflict delays one stream element by one cycle).
+    pub fn conflict_rate(&self) -> f64 {
+        if self.ssr_requests == 0 {
+            0.0
+        } else {
+            self.ssr_conflicts as f64 / self.ssr_requests as f64
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "cycles={} util={:.1}% fpu_ops={} conflicts={} ({:.2}% of SSR \
+             reqs) dma_beats={} barriers={}",
+            self.cycles,
+            self.utilization * 100.0,
+            self.fpu_ops_total,
+            self.tcdm_conflicts,
+            self.conflict_rate() * 100.0,
+            self.dma_beats,
+            self.barriers_completed,
+        )
+    }
+}

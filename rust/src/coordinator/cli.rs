@@ -1,0 +1,285 @@
+//! Hand-rolled CLI (clap is unavailable offline).
+//!
+//! Subcommands:
+//!   run       — one GEMM on one configuration, print metrics
+//!   fig5      — the random-size sweep (box plots + CSV + headline)
+//!   table1    — area model rows
+//!   table2    — SoA comparison rows
+//!   fig4      — congestion proxy
+//!   ablation  — layout ablation
+//!   validate  — simulator vs PJRT golden model (needs artifacts/)
+//!   seqdemo   — FREP sequencer demo trace
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::cluster::ConfigId;
+use crate::coordinator::{experiments, report, runner, workload};
+use crate::kernels::{self, LayoutKind};
+use crate::runtime;
+
+pub fn usage() -> &'static str {
+    "zerostall — cycle-accurate RISC-V cluster co-design framework\n\
+     \n\
+     USAGE: zerostall <command> [--key value]...\n\
+     \n\
+     COMMANDS:\n\
+     \x20 run       --config <name> --m <M> --n <N> --k <K> \
+     [--layout grouped|linear|linear-pad]\n\
+     \x20 fig5      [--samples 50] [--seed 42] [--threads N] \
+     [--out results]\n\
+     \x20 table1    [--out results]\n\
+     \x20 table2    [--out results]\n\
+     \x20 fig4      [--out results]\n\
+     \x20 ablation  [--m 32 --n 32 --k 32] [--out results]\n\
+     \x20 validate  [--artifacts artifacts] [--sizes 32,64] \
+     [--config zonl48db]\n\
+     \x20 configs   (list configurations)\n\
+     \n\
+     CONFIGS: base32fc zonl32fc zonl64fc zonl64db zonl48db\n"
+}
+
+/// Parse `--key value` pairs after the subcommand.
+pub fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let k = &args[i];
+        anyhow::ensure!(
+            k.starts_with("--"),
+            "expected --flag, got `{k}`"
+        );
+        anyhow::ensure!(
+            i + 1 < args.len(),
+            "flag {k} needs a value"
+        );
+        map.insert(k[2..].to_string(), args[i + 1].clone());
+        i += 2;
+    }
+    Ok(map)
+}
+
+fn flag<T: std::str::FromStr>(
+    m: &HashMap<String, String>,
+    key: &str,
+    default: T,
+) -> anyhow::Result<T> {
+    match m.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad value for --{key}: {v}")),
+    }
+}
+
+fn layout_of(s: &str) -> anyhow::Result<LayoutKind> {
+    Ok(match s {
+        "grouped" => LayoutKind::Grouped,
+        "linear" => LayoutKind::Linear { pad_words: 0 },
+        "linear-pad" => LayoutKind::Linear { pad_words: 1 },
+        other => anyhow::bail!("unknown layout `{other}`"),
+    })
+}
+
+pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
+    let Some(cmd) = args.first() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    let out_dir =
+        PathBuf::from(flags.get("out").cloned().unwrap_or_else(|| {
+            "results".to_string()
+        }));
+
+    match cmd.as_str() {
+        "configs" => {
+            for id in ConfigId::all() {
+                let c = id.cluster_config();
+                println!(
+                    "{:<10} banks={:<3} tcdm={:>3}KiB zonl={} topo={:?}",
+                    id.name(),
+                    c.topology.total_banks(),
+                    c.tcdm_bytes / 1024,
+                    c.zonl,
+                    c.topology,
+                );
+            }
+        }
+        "run" => {
+            let name = flags
+                .get("config")
+                .cloned()
+                .unwrap_or_else(|| "zonl48db".into());
+            let id = ConfigId::from_name(&name)
+                .ok_or_else(|| anyhow::anyhow!("unknown config {name}"))?;
+            let m = flag(&flags, "m", 32usize)?;
+            let n = flag(&flags, "n", 32usize)?;
+            let k = flag(&flags, "k", 32usize)?;
+            let layout = layout_of(
+                flags.get("layout").map(|s| s.as_str()).unwrap_or("grouped"),
+            )?;
+            let p = workload::Problem { m, n, k };
+            let row = experiments::run_point(id, p, layout)?;
+            println!(
+                "{} {} layout={:?}\n  cycles={} window={} util={:.2}% \
+                 perf={:.2} DPGflop/s power={:.1} mW eff={:.2} \
+                 DPGflop/s/W conflicts={}",
+                id.name(),
+                p,
+                layout,
+                row.cycles,
+                row.window_cycles,
+                row.utilization * 100.0,
+                row.gflops,
+                row.power_mw,
+                row.gflops_per_w,
+                row.conflicts,
+            );
+        }
+        "fig5" => {
+            let samples = flag(&flags, "samples", 50usize)?;
+            let seed = flag(&flags, "seed", 42u64)?;
+            let threads =
+                flag(&flags, "threads", runner::default_threads())?;
+            eprintln!(
+                "fig5: {samples} sizes x 5 configs on {threads} threads..."
+            );
+            let rows = experiments::fig5(samples, seed, threads)?;
+            let summary = experiments::fig5_summary(&rows);
+            let head = experiments::headline(&rows);
+            let doc = format!(
+                "{}\n{}",
+                report::render_fig5(&summary),
+                report::render_headline(&head)
+            );
+            println!("{doc}");
+            report::save(&out_dir, "fig5.md", &doc)?;
+            report::fig5_csv(&rows).write(&out_dir.join("fig5.csv"))?;
+            eprintln!("wrote {}/fig5.{{md,csv}}", out_dir.display());
+        }
+        "table1" => {
+            let rows = experiments::table1();
+            let doc = report::render_table1(&rows);
+            println!("{doc}");
+            report::save(&out_dir, "table1.md", &doc)?;
+            report::table1_csv(&rows)
+                .write(&out_dir.join("table1.csv"))?;
+        }
+        "table2" => {
+            let rows = experiments::table2()?;
+            let doc = report::render_table2(&rows);
+            println!("{doc}");
+            report::save(&out_dir, "table2.md", &doc)?;
+            report::table2_csv(&rows)
+                .write(&out_dir.join("table2.csv"))?;
+        }
+        "fig4" => {
+            let doc = report::render_fig4();
+            println!("{doc}");
+            report::save(&out_dir, "fig4.md", &doc)?;
+        }
+        "ablation" => {
+            let m = flag(&flags, "m", 32usize)?;
+            let n = flag(&flags, "n", 32usize)?;
+            let k = flag(&flags, "k", 32usize)?;
+            let rows = experiments::layout_ablation(
+                workload::Problem { m, n, k },
+            )?;
+            let doc = report::render_ablation(&rows);
+            println!("{doc}");
+            report::save(&out_dir, "ablation.md", &doc)?;
+        }
+        "validate" => {
+            let dir = flags
+                .get("artifacts")
+                .map(PathBuf::from)
+                .unwrap_or_else(runtime::Runtime::default_dir);
+            let name = flags
+                .get("config")
+                .cloned()
+                .unwrap_or_else(|| "zonl48db".into());
+            let id = ConfigId::from_name(&name)
+                .ok_or_else(|| anyhow::anyhow!("unknown config {name}"))?;
+            let sizes: Vec<usize> = flags
+                .get("sizes")
+                .map(|s| s.as_str())
+                .unwrap_or("16,32,40")
+                .split(',')
+                .map(|x| x.trim().parse())
+                .collect::<Result<_, _>>()
+                .map_err(|e| anyhow::anyhow!("bad --sizes: {e}"))?;
+            let rt = runtime::Runtime::new(&dir)?;
+            for s in sizes {
+                let (a, b) = kernels::test_matrices(s, s, s, 99);
+                let sim = kernels::run_matmul(id, s, s, s, &a, &b)?;
+                let gold = runtime::golden_matmul(&rt, s, s, s, &a, &b)?;
+                let err = runtime::max_rel_error(&sim.c, &gold);
+                let ok = err < 1e-9;
+                println!(
+                    "{name} {s}x{s}x{s}: max rel err vs PJRT golden = \
+                     {err:.2e} {}",
+                    if ok { "OK" } else { "FAIL" }
+                );
+                anyhow::ensure!(ok, "golden mismatch at {s}^3");
+            }
+            println!("golden validation passed");
+        }
+        "help" | "--help" | "-h" => println!("{}", usage()),
+        other => {
+            anyhow::bail!("unknown command `{other}`\n\n{}", usage())
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_flags_pairs() {
+        let f = parse_flags(&[
+            "--m".into(),
+            "32".into(),
+            "--config".into(),
+            "zonl48db".into(),
+        ])
+        .unwrap();
+        assert_eq!(f.get("m").unwrap(), "32");
+        assert_eq!(f.get("config").unwrap(), "zonl48db");
+    }
+
+    #[test]
+    fn parse_flags_rejects_dangling() {
+        assert!(parse_flags(&["--m".into()]).is_err());
+        assert!(parse_flags(&["m".into(), "32".into()]).is_err());
+    }
+
+    #[test]
+    fn layout_parsing() {
+        assert_eq!(layout_of("grouped").unwrap(), LayoutKind::Grouped);
+        assert!(layout_of("bogus").is_err());
+    }
+
+    #[test]
+    fn run_command_executes() {
+        main_with_args(vec![
+            "run".into(),
+            "--config".into(),
+            "zonl48db".into(),
+            "--m".into(),
+            "16".into(),
+            "--n".into(),
+            "16".into(),
+            "--k".into(),
+            "16".into(),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(main_with_args(vec!["bogus".into()]).is_err());
+    }
+}

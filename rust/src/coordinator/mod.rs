@@ -1,0 +1,8 @@
+//! Experiment orchestration: workload sampling, the multi-threaded
+//! sweep runner, report rendering, and the CLI.
+
+pub mod cli;
+pub mod experiments;
+pub mod report;
+pub mod runner;
+pub mod workload;

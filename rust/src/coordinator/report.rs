@@ -1,0 +1,293 @@
+//! Report rendering: the paper's tables/figures as markdown + CSV, and
+//! ASCII box plots for Fig. 5.
+
+use std::path::Path;
+
+use crate::cluster::ConfigId;
+use crate::model::congestion;
+use crate::util::csv::{f, Csv};
+use crate::util::stats::BoxStats;
+
+use super::experiments::{
+    AblationRow, Fig5Row, Fig5Summary, Headline, Table2Row,
+};
+use crate::model::area::AreaBreakdown;
+
+// ------------------------------------------------------------- Table I --
+
+pub fn render_table1(rows: &[AreaBreakdown]) -> String {
+    let base = rows
+        .iter()
+        .find(|r| r.id == ConfigId::Base32Fc)
+        .expect("base config present");
+    let mut out = String::new();
+    out.push_str(
+        "## Table I — area [MGE] and routing [mm] per configuration\n\n",
+    );
+    out.push_str(
+        "| Configuration | Cell area | Macro area | Wire length | Total \
+         area | Δ total |\n|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        let d_wire =
+            (r.wire_mm - base.wire_mm) / base.wire_mm * 100.0;
+        let d_tot = (r.total_mge() - base.total_mge())
+            / base.total_mge()
+            * 100.0;
+        out.push_str(&format!(
+            "| {} | {} | {} | {} ({:+.1}%) | {} | {:+.1}% |\n",
+            r.id.name(),
+            f(r.cell_mge, 2),
+            f(r.macro_mge, 2),
+            f(r.wire_mm, 1),
+            d_wire,
+            f(r.total_mge(), 2),
+            d_tot,
+        ));
+    }
+    out
+}
+
+pub fn table1_csv(rows: &[AreaBreakdown]) -> Csv {
+    let mut c = Csv::new(vec![
+        "config", "cell_mge", "macro_mge", "wire_mm", "total_mge",
+    ]);
+    for r in rows {
+        c.row(vec![
+            r.id.name().to_string(),
+            f(r.cell_mge, 3),
+            f(r.macro_mge, 3),
+            f(r.wire_mm, 2),
+            f(r.total_mge(), 3),
+        ]);
+    }
+    c
+}
+
+// ------------------------------------------------------------- Fig. 5 --
+
+/// ASCII box plot of one metric across configurations.
+pub fn render_boxes(
+    title: &str,
+    items: &[(&str, BoxStats)],
+    unit: &str,
+) -> String {
+    let lo = items.iter().map(|(_, s)| s.min).fold(f64::MAX, f64::min);
+    let hi = items.iter().map(|(_, s)| s.max).fold(f64::MIN, f64::max);
+    let span = (hi - lo).max(1e-9);
+    let width = 56usize;
+    let pos =
+        |x: f64| (((x - lo) / span) * (width - 1) as f64).round() as usize;
+    let mut out = format!("{title} [{unit}]  ({lo:.3} .. {hi:.3})\n");
+    for (name, s) in items {
+        let mut line = vec![b' '; width];
+        let (q1, q3) = (pos(s.q1), pos(s.q3));
+        let med = pos(s.median);
+        let (mn, mx) = (pos(s.min), pos(s.max));
+        for c in line.iter_mut().take(q3.max(q1) + 1).skip(q1.min(q3)) {
+            *c = b'=';
+        }
+        for c in line.iter_mut().take(q1).skip(mn) {
+            *c = b'-';
+        }
+        for c in line.iter_mut().take(mx + 1).skip(q3 + 1) {
+            *c = b'-';
+        }
+        line[med] = b'|';
+        out.push_str(&format!(
+            "{:<10} {}  med {}\n",
+            name,
+            String::from_utf8(line).unwrap(),
+            f(s.median, 3)
+        ));
+    }
+    out
+}
+
+pub fn render_fig5(summary: &[Fig5Summary]) -> String {
+    let mut out = String::new();
+    out.push_str("## Fig. 5 — distributions over the random-size sweep\n\n");
+    let utils: Vec<(&str, BoxStats)> = summary
+        .iter()
+        .map(|s| (s.config.name(), s.utilization))
+        .collect();
+    out.push_str(&render_boxes("FPU utilization", &utils, "frac"));
+    out.push('\n');
+    let pw: Vec<(&str, BoxStats)> = summary
+        .iter()
+        .map(|s| (s.config.name(), s.power_mw))
+        .collect();
+    out.push_str(&render_boxes("Average power", &pw, "mW"));
+    out.push('\n');
+    let eff: Vec<(&str, BoxStats)> = summary
+        .iter()
+        .map(|s| (s.config.name(), s.gflops_per_w))
+        .collect();
+    out.push_str(&render_boxes("Energy efficiency", &eff, "DPGflop/s/W"));
+    out
+}
+
+pub fn fig5_csv(rows: &[Fig5Row]) -> Csv {
+    let mut c = Csv::new(vec![
+        "config", "m", "n", "k", "utilization", "power_mw", "gflops",
+        "gflops_per_w", "cycles", "window_cycles", "conflicts",
+    ]);
+    for r in rows {
+        c.row(vec![
+            r.config.name().to_string(),
+            r.problem.m.to_string(),
+            r.problem.n.to_string(),
+            r.problem.k.to_string(),
+            f(r.utilization, 5),
+            f(r.power_mw, 2),
+            f(r.gflops, 3),
+            f(r.gflops_per_w, 3),
+            r.cycles.to_string(),
+            r.window_cycles.to_string(),
+            r.conflicts.to_string(),
+        ]);
+    }
+    c
+}
+
+pub fn render_headline(h: &Headline) -> String {
+    format!(
+        "## Headline (abstract / §IV-B)\n\n\
+         * zonl48db utilization: {:.1}% .. {:.1}% (whiskers), median \
+         {:.1}% (paper: 96.1%..99.4%)\n\
+         * baseline median utilization: {:.1}% (paper: 88.2%)\n\
+         * median performance improvement vs baseline: {:+.1}% \
+         (paper: +11%)\n\
+         * median energy-efficiency improvement vs baseline: {:+.1}% \
+         (paper: +8%)\n",
+        h.zonl48_util_min * 100.0,
+        h.zonl48_util_max * 100.0,
+        h.zonl48_util_median * 100.0,
+        h.base_util_median * 100.0,
+        h.perf_gain_pct,
+        h.eff_gain_pct,
+    )
+}
+
+// ------------------------------------------------------------ Table II --
+
+pub fn render_table2(rows: &[Table2Row]) -> String {
+    let mut out = String::new();
+    out.push_str("## Table II — SoA comparison on 32x32x32 DP GEMM\n\n");
+    out.push_str(
+        "| System | Area comp | mem | interco | ctrl | total [MGE] | \
+         Power comp | mem | interco | ctrl | total [mW] | Util | Perf \
+         [Gflop/s] | Area eff | Energy eff |\n",
+    );
+    out.push_str(
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | \
+             {:.1}% | {} | {} | {} |\n",
+            r.name,
+            f(r.area_comp, 2),
+            f(r.area_mem, 2),
+            f(r.area_interco, 2),
+            f(r.area_ctrl, 2),
+            f(r.area_total, 2),
+            f(r.pow_comp, 1),
+            f(r.pow_mem, 1),
+            f(r.pow_interco, 1),
+            f(r.pow_ctrl, 1),
+            f(r.pow_total, 1),
+            r.utilization * 100.0,
+            f(r.perf_gflops, 2),
+            f(r.area_eff, 1),
+            f(r.energy_eff, 1),
+        ));
+    }
+    out
+}
+
+pub fn table2_csv(rows: &[Table2Row]) -> Csv {
+    let mut c = Csv::new(vec![
+        "system", "area_total_mge", "power_total_mw", "utilization",
+        "perf_gflops", "area_eff", "energy_eff",
+    ]);
+    for r in rows {
+        c.row(vec![
+            r.name.clone(),
+            f(r.area_total, 3),
+            f(r.pow_total, 1),
+            f(r.utilization, 4),
+            f(r.perf_gflops, 3),
+            f(r.area_eff, 2),
+            f(r.energy_eff, 2),
+        ]);
+    }
+    c
+}
+
+// ------------------------------------------------------------- Fig. 4 --
+
+pub fn render_fig4() -> String {
+    let mut out = String::new();
+    out.push_str("## Fig. 4 — routing congestion proxy\n\n```\n");
+    out.push_str(&congestion::render_fig4());
+    out.push_str("```\n");
+    out
+}
+
+// ----------------------------------------------------------- ablation --
+
+pub fn render_ablation(rows: &[AblationRow]) -> String {
+    let mut out = String::new();
+    out.push_str("## Layout ablation (32x32x32)\n\n");
+    out.push_str("| config | layout | utilization | conflicts |\n");
+    out.push_str("|---|---|---|---|\n");
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {:.1}% | {} |\n",
+            r.config.name(),
+            r.layout,
+            r.utilization * 100.0,
+            r.conflicts
+        ));
+    }
+    out
+}
+
+/// Write a string artifact under `results/`.
+pub fn save(dir: &Path, name: &str, content: &str) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(name), content)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::box_stats;
+
+    #[test]
+    fn boxes_render_and_scale() {
+        let s1 = box_stats(&[0.8, 0.85, 0.9, 0.95]);
+        let s2 = box_stats(&[0.95, 0.96, 0.97, 0.99]);
+        let out =
+            render_boxes("util", &[("a", s1), ("b", s2)], "frac");
+        assert!(out.contains("med"));
+        assert!(out.lines().count() >= 3);
+    }
+
+    #[test]
+    fn table1_renders_all_configs() {
+        let t = render_table1(&crate::model::table1());
+        for id in ConfigId::all() {
+            assert!(t.contains(id.name()));
+        }
+        assert!(t.contains("Δ total"));
+    }
+
+    #[test]
+    fn fig4_contains_pressure_bars() {
+        let s = render_fig4();
+        assert!(s.contains("zonl64fc"));
+    }
+}

@@ -1,0 +1,91 @@
+//! Multi-threaded experiment runner (std::thread scoped workers; tokio
+//! is unavailable offline and the workload is CPU-bound anyway).
+//!
+//! Work is distributed by index stealing over an atomic counter, so
+//! results land at their job's index — fully deterministic output
+//! order regardless of thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Apply `f` to each job on `threads` workers; preserves input order.
+pub fn parallel_map<J, R, F>(
+    jobs: &[J],
+    threads: usize,
+    f: F,
+) -> anyhow::Result<Vec<R>>
+where
+    J: Sync,
+    R: Send,
+    F: Fn(&J) -> anyhow::Result<R> + Sync,
+{
+    let threads = threads.max(1).min(jobs.len().max(1));
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<anyhow::Result<R>>>> =
+        jobs.iter().map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let r = f(&jobs[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job not run"))
+        .collect()
+}
+
+/// A sensible default worker count.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<usize> = (0..100).collect();
+        let out = parallel_map(&jobs, 8, |&x| Ok(x * 2)).unwrap();
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_works() {
+        let jobs = vec![1, 2, 3];
+        let out = parallel_map(&jobs, 1, |&x| Ok(x + 1)).unwrap();
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn propagates_errors() {
+        let jobs = vec![1, 2, 3];
+        let res: anyhow::Result<Vec<i32>> =
+            parallel_map(&jobs, 2, |&x| {
+                if x == 2 {
+                    anyhow::bail!("boom")
+                } else {
+                    Ok(x)
+                }
+            });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn empty_jobs_ok() {
+        let jobs: Vec<u8> = vec![];
+        let out = parallel_map(&jobs, 4, |&x| Ok(x)).unwrap();
+        assert!(out.is_empty());
+    }
+}

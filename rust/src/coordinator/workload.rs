@@ -1,0 +1,91 @@
+//! Workload generation — the paper's evaluation methodology (§IV-B):
+//! 50 problem sizes with M, N, K drawn uniformly from
+//! {8, 16, 24, ..., 128}.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Problem {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl Problem {
+    pub fn macs(&self) -> u64 {
+        (self.m * self.n * self.k) as u64
+    }
+}
+
+impl std::fmt::Display for Problem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.m, self.n, self.k)
+    }
+}
+
+/// The paper's dimension grid.
+pub fn dim_grid() -> Vec<usize> {
+    (1..=16).map(|i| i * 8).collect()
+}
+
+/// Sample `count` problems with the paper's distribution.
+pub fn sample_problems(count: usize, seed: u64) -> Vec<Problem> {
+    let grid = dim_grid();
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| Problem {
+            m: *rng.choice(&grid),
+            n: *rng.choice(&grid),
+            k: *rng.choice(&grid),
+        })
+        .collect()
+}
+
+/// LLM-shaped GEMMs (attention/MLP projections of a small transformer,
+/// tiled to the cluster grid) — used by the llm_gemm example.
+pub fn llm_problems() -> Vec<(&'static str, Problem)> {
+    vec![
+        ("qkv_proj", Problem { m: 128, n: 96, k: 64 }),
+        ("attn_out", Problem { m: 128, n: 64, k: 64 }),
+        ("mlp_up", Problem { m: 128, n: 128, k: 64 }),
+        ("mlp_down", Problem { m: 128, n: 64, k: 128 }),
+        ("head", Problem { m: 64, n: 128, k: 64 }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_8_to_128() {
+        let g = dim_grid();
+        assert_eq!(g.first(), Some(&8));
+        assert_eq!(g.last(), Some(&128));
+        assert_eq!(g.len(), 16);
+    }
+
+    #[test]
+    fn sampling_deterministic_and_on_grid() {
+        let a = sample_problems(50, 42);
+        let b = sample_problems(50, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 50);
+        for p in &a {
+            assert!(p.m % 8 == 0 && p.m >= 8 && p.m <= 128);
+            assert!(p.n % 8 == 0 && p.n >= 8 && p.n <= 128);
+            assert!(p.k % 8 == 0 && p.k >= 8 && p.k <= 128);
+        }
+        // different seeds differ
+        let c = sample_problems(50, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn samples_cover_the_range() {
+        let ps = sample_problems(200, 7);
+        let small = ps.iter().filter(|p| p.m <= 32).count();
+        let large = ps.iter().filter(|p| p.m >= 96).count();
+        assert!(small > 20 && large > 20, "uniformity check");
+    }
+}

@@ -1,0 +1,306 @@
+//! The Snitch FPU: a fully-pipelined 64-bit FP datapath with a register
+//! file, a scoreboard, and SSR register interception on ft0/ft1/ft2.
+//!
+//! Timing model: every FP compute op has a fixed pipeline latency
+//! (default 3 cycles, Snitch's FPU depth for FP64 FMA) and the unit
+//! accepts one op per cycle.  Results write back to the FP register
+//! file, or — when the destination is ft2 and SSRs are enabled — into
+//! the SSR-2 write streamer's FIFO (handled by the core, which reserves
+//! write-FIFO credit at issue so the writeback can never block).
+//!
+//! Numerics are real: `fmadd.d` uses `f64::mul_add` (fused, like the
+//! RTL FPU), so the simulated cluster produces actual matrices that the
+//! PJRT golden model checks end-to-end.
+
+use crate::isa::Instr;
+
+#[derive(Clone, Copy, Debug)]
+pub struct FpuConfig {
+    /// Pipeline latency of FMA-class ops (cycles from issue to
+    /// writeback).
+    pub latency: u32,
+    /// Maximum in-flight ops (pipeline depth; issue stalls beyond).
+    pub depth: usize,
+}
+
+impl Default for FpuConfig {
+    fn default() -> Self {
+        Self { latency: 3, depth: 8 }
+    }
+}
+
+/// One in-flight operation.
+#[derive(Clone, Copy, Debug)]
+struct InFlight {
+    done_at: u64,
+    dest: u8,
+    value: f64,
+    /// Writeback goes to the SSR write stream instead of the RF.
+    to_ssr: bool,
+}
+
+/// A completed writeback the core must commit this cycle.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Writeback {
+    pub dest: u8,
+    pub value: f64,
+    pub to_ssr: bool,
+}
+
+pub struct Fpu {
+    cfg: FpuConfig,
+    pub regs: [f64; 32],
+    /// Scoreboard: in-flight writer count per FP register.
+    busy: [u8; 32],
+    pipe: Vec<InFlight>,
+    /// Total compute ops executed (the utilization numerator).
+    pub ops_issued: u64,
+}
+
+impl Fpu {
+    pub fn new(cfg: FpuConfig) -> Self {
+        Self {
+            cfg,
+            regs: [0.0; 32],
+            busy: [0; 32],
+            pipe: Vec::with_capacity(cfg.depth),
+            ops_issued: 0,
+        }
+    }
+
+    /// Pipeline has a free slot?
+    #[inline(always)]
+    pub fn can_issue(&self) -> bool {
+        self.pipe.len() < self.cfg.depth
+    }
+
+    /// Is `reg` pending a writeback (RAW/WAW hazard)?
+    #[inline(always)]
+    pub fn reg_busy(&self, reg: u8) -> bool {
+        self.busy[reg as usize] > 0
+    }
+
+    pub fn idle(&self) -> bool {
+        self.pipe.is_empty()
+    }
+
+    /// Issue one FP compute op. `ssr_vals` provides the operand values
+    /// for sources intercepted by SSR streams, *by source slot*
+    /// (frs1/frs2/frs3 order, matching `Instr::fp_sources`), already
+    /// popped by the caller; `None` slots read the RF.  `now` is the
+    /// current cycle. Returns false if the op could not issue (pipeline
+    /// full) — the caller must retry.
+    pub fn issue(
+        &mut self,
+        i: &Instr,
+        ssr_vals: &[Option<f64>; 3],
+        ssr_write_dest: bool,
+        now: u64,
+    ) -> bool {
+        if !self.can_issue() {
+            return false;
+        }
+        let rd = |slot: usize, r: u8| -> f64 {
+            ssr_vals[slot].unwrap_or(self.regs[r as usize])
+        };
+        let (dest, value) = match *i {
+            Instr::FmaddD { frd, frs1, frs2, frs3 } => {
+                let a = rd(0, frs1);
+                let b = rd(1, frs2);
+                let c = rd(2, frs3);
+                (frd, a.mul_add(b, c))
+            }
+            Instr::FmulD { frd, frs1, frs2 } => {
+                (frd, rd(0, frs1) * rd(1, frs2))
+            }
+            Instr::FaddD { frd, frs1, frs2 } => {
+                (frd, rd(0, frs1) + rd(1, frs2))
+            }
+            Instr::FsubD { frd, frs1, frs2 } => {
+                (frd, rd(0, frs1) - rd(1, frs2))
+            }
+            Instr::FsgnjD { frd, frs1, frs2 } => {
+                (frd, rd(0, frs1).copysign(rd(1, frs2)))
+            }
+            ref other => panic!("not an FPU compute op: {other:?}"),
+        };
+        self.pipe.push(InFlight {
+            done_at: now + self.cfg.latency as u64,
+            dest,
+            value,
+            to_ssr: ssr_write_dest,
+        });
+        if !ssr_write_dest {
+            self.busy[dest as usize] += 1;
+        }
+        self.ops_issued += 1;
+        true
+    }
+
+    /// Issue with a pre-resolved result value (the core's fast path
+    /// computes operands inline). Same pipeline/scoreboard behaviour
+    /// as [`Fpu::issue`].
+    #[inline(always)]
+    pub fn issue_resolved(
+        &mut self,
+        dest: u8,
+        value: f64,
+        ssr_write_dest: bool,
+        now: u64,
+    ) -> bool {
+        if !self.can_issue() {
+            return false;
+        }
+        self.pipe.push(InFlight {
+            done_at: now + self.cfg.latency as u64,
+            dest,
+            value,
+            to_ssr: ssr_write_dest,
+        });
+        if !ssr_write_dest {
+            self.busy[dest as usize] += 1;
+        }
+        self.ops_issued += 1;
+        true
+    }
+
+    /// Direct register write (fld data return, fcvt, fmv.d.x).
+    pub fn write_reg(&mut self, reg: u8, value: f64) {
+        self.regs[reg as usize] = value;
+    }
+
+    /// Mark a register busy (e.g. an fld in flight).
+    pub fn mark_busy(&mut self, reg: u8) {
+        self.busy[reg as usize] += 1;
+    }
+
+    pub fn clear_busy(&mut self, reg: u8) {
+        debug_assert!(self.busy[reg as usize] > 0);
+        self.busy[reg as usize] -= 1;
+    }
+
+    /// Advance to cycle `now`: commit all writebacks due. Returns the
+    /// SSR-bound writebacks (RF writebacks are applied internally).
+    pub fn tick(&mut self, now: u64, ssr_out: &mut Vec<Writeback>) {
+        let mut i = 0;
+        while i < self.pipe.len() {
+            if self.pipe[i].done_at <= now {
+                let f = self.pipe.swap_remove(i);
+                if f.to_ssr {
+                    ssr_out.push(Writeback {
+                        dest: f.dest,
+                        value: f.value,
+                        to_ssr: true,
+                    });
+                } else {
+                    self.regs[f.dest as usize] = f.value;
+                    self.busy[f.dest as usize] -= 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fpu() -> Fpu {
+        Fpu::new(FpuConfig::default())
+    }
+
+    const NO_SSR: [Option<f64>; 3] = [None, None, None];
+
+    #[test]
+    fn fmadd_is_fused() {
+        let mut f = fpu();
+        f.regs[4] = 3.0;
+        f.regs[5] = 4.0;
+        f.regs[6] = 0.5;
+        let i = Instr::FmaddD { frd: 7, frs1: 4, frs2: 5, frs3: 6 };
+        assert!(f.issue(&i, &NO_SSR, false, 0));
+        assert!(f.reg_busy(7));
+        let mut out = Vec::new();
+        f.tick(3, &mut out);
+        assert!(out.is_empty());
+        assert_eq!(f.regs[7], 3.0f64.mul_add(4.0, 0.5));
+        assert!(!f.reg_busy(7));
+    }
+
+    #[test]
+    fn latency_respected() {
+        let mut f = fpu();
+        f.regs[4] = 1.0;
+        f.regs[5] = 2.0;
+        let i = Instr::FmulD { frd: 8, frs1: 4, frs2: 5 };
+        assert!(f.issue(&i, &NO_SSR, false, 10));
+        let mut out = Vec::new();
+        f.tick(12, &mut out); // latency 3: not ready at cycle 12
+        assert!(f.reg_busy(8));
+        f.tick(13, &mut out);
+        assert!(!f.reg_busy(8));
+        assert_eq!(f.regs[8], 2.0);
+    }
+
+    #[test]
+    fn ssr_operand_interception() {
+        let mut f = fpu();
+        f.regs[0] = 99.0; // must be ignored: SSR provides f0
+        let i = Instr::FmulD { frd: 9, frs1: 0, frs2: 1 };
+        let vals = [Some(6.0), Some(7.0), None];
+        assert!(f.issue(&i, &vals, false, 0));
+        let mut out = Vec::new();
+        f.tick(3, &mut out);
+        assert_eq!(f.regs[9], 42.0);
+    }
+
+    #[test]
+    fn ssr_writeback_routed_out() {
+        let mut f = fpu();
+        f.regs[4] = 2.0;
+        f.regs[5] = 3.0;
+        let i = Instr::FmulD { frd: 2, frs1: 4, frs2: 5 };
+        assert!(f.issue(&i, &NO_SSR, true, 0));
+        // Destination is the SSR write stream: f2 itself is NOT busy.
+        assert!(!f.reg_busy(2));
+        let mut out = Vec::new();
+        f.tick(3, &mut out);
+        assert_eq!(
+            out,
+            vec![Writeback { dest: 2, value: 6.0, to_ssr: true }]
+        );
+        assert_eq!(f.regs[2], 0.0, "RF untouched");
+    }
+
+    #[test]
+    fn pipeline_fills_and_drains() {
+        let mut f = Fpu::new(FpuConfig { latency: 3, depth: 3 });
+        let i = Instr::FaddD { frd: 10, frs1: 11, frs2: 12 };
+        assert!(f.issue(&i, &NO_SSR, false, 0));
+        assert!(f.issue(&i, &NO_SSR, false, 1));
+        assert!(f.issue(&i, &NO_SSR, false, 2));
+        assert!(!f.can_issue());
+        let mut out = Vec::new();
+        f.tick(3, &mut out);
+        assert!(f.can_issue());
+        f.tick(5, &mut out);
+        assert!(f.idle());
+        assert_eq!(f.ops_issued, 3);
+    }
+
+    #[test]
+    fn waw_counting() {
+        let mut f = fpu();
+        let i = Instr::FaddD { frd: 10, frs1: 11, frs2: 12 };
+        f.issue(&i, &NO_SSR, false, 0);
+        f.issue(&i, &NO_SSR, false, 1);
+        assert!(f.reg_busy(10));
+        let mut out = Vec::new();
+        f.tick(3, &mut out);
+        assert!(f.reg_busy(10), "second writer still in flight");
+        f.tick(4, &mut out);
+        assert!(!f.reg_busy(10));
+    }
+}

@@ -1,0 +1,9 @@
+//! The Snitch core model: integer frontend, FP subsystem (FREP
+//! sequencer + FPU), and the per-core perf counters.
+
+pub mod fpu;
+pub mod sequencer;
+pub mod snitch;
+
+pub use sequencer::{SeqConfig, Sequencer};
+pub use snitch::{Core, CoreConfig, CorePerf};

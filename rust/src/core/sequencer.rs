@@ -1,0 +1,692 @@
+//! The FREP sequencer — the paper's §III-A contribution (Fig. 2).
+//!
+//! Instructions offloaded from the Snitch frontend are partially decoded
+//! and binned:
+//!
+//! 1. **FREPs** are fully decoded into a loop config (`frep_cfg`) and
+//!    forwarded to the *nest controller* (never stored in the ring
+//!    buffer).
+//! 2. **FP compute instructions** enter the ring buffer (RB) and can be
+//!    re-issued if they fall inside an FREP body.
+//! 3. Instructions with integer-RF operands bypass the sequencer (the
+//!    core model routes those through the LSU directly).
+//!
+//! The nest controller dynamically constructs a loop nest from incoming
+//! FREP instructions: a FREP whose body fits inside the currently
+//! innermost active loop's window nests one level deeper (up to the
+//! design-time `max_nest_depth`, the paper's `N`).  Loops may share
+//! start and/or end instructions; entry/exit of *multiple* loops on one
+//! instruction is resolved in a single cycle (the paper's
+//! starting/ending-loops detectors built on leading/trailing-zero
+//! counters) so the sequencer sustains one instruction per cycle on
+//! both perfectly and imperfectly nested loops.
+//!
+//! Two design-time switches model the two generations of hardware:
+//!
+//! * `max_nest_depth = 1`, `block_offload_during_loop = true` — the
+//!   baseline Zaruba-style FREP [3]: a single loop controller; while a
+//!   loop is active the offload path is blocked, so post-loop
+//!   instructions issue in lock-step with the frontend and the outer
+//!   loop's management instructions create real FPU bubbles (the
+//!   "2 instructions per iteration" overhead of §III-A).
+//! * `max_nest_depth = N > 1`, `block_offload_during_loop = false` —
+//!   the proposed zero-overhead loop-nest sequencer.
+
+use crate::isa::Instr;
+
+/// Design-time sequencer parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SeqConfig {
+    /// Ring-buffer depth in instructions.
+    pub rb_depth: usize,
+    /// Maximum loop-nest depth (the paper's `N`). 1 = baseline FREP.
+    pub max_nest_depth: usize,
+    /// Baseline behaviour: refuse new offloads while a loop is active
+    /// (except the active loop's own body still streaming in).
+    pub block_offload_during_loop: bool,
+}
+
+impl SeqConfig {
+    /// Baseline Zaruba-style FREP (Base32fc).
+    pub fn baseline() -> Self {
+        Self {
+            rb_depth: 16,
+            max_nest_depth: 1,
+            block_offload_during_loop: true,
+        }
+    }
+
+    /// Zero-overhead loop nest (Zonl* configurations).
+    pub fn zonl() -> Self {
+        Self {
+            rb_depth: 32,
+            max_nest_depth: 4,
+            block_offload_during_loop: false,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct LoopCfg {
+    /// Sequence number of the loop's first body instruction.
+    base: u64,
+    /// Number of RB-resident instructions in the body.
+    n_inst: u32,
+    /// Total iterations.
+    n_iter: u32,
+    /// Current iteration (0-based).
+    iter: u32,
+}
+
+impl LoopCfg {
+    fn end(&self) -> u64 {
+        self.base + self.n_inst as u64
+    }
+
+    fn last_iter(&self) -> bool {
+        self.iter + 1 == self.n_iter
+    }
+}
+
+/// Issue-side event summary for one `advance()` call (perf counters).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IssueInfo {
+    /// Instruction came from RB replay (vs freshly streamed-in).
+    pub replayed: bool,
+}
+
+pub struct Sequencer {
+    cfg: SeqConfig,
+    /// Ring buffer, indexed by `seq % rb_depth`.
+    rb: Vec<Instr>,
+    /// Next sequence number to be written.
+    wseq: u64,
+    /// Next sequence number to be issued (the paper's `rb_raddr`).
+    raddr: u64,
+    /// Oldest retained sequence number (RB tail).
+    tail: u64,
+    /// Active loop nest, outermost first (the paper's `cfg[N]` +
+    /// loop controllers).
+    nest: Vec<LoopCfg>,
+    /// Sequence numbers < `first_pass` have been issued at least once.
+    first_pass: u64,
+}
+
+impl Sequencer {
+    pub fn new(cfg: SeqConfig) -> Self {
+        assert!(cfg.rb_depth >= 4);
+        assert!(
+            cfg.rb_depth.is_power_of_two(),
+            "rb_depth must be a power of two (index masking)"
+        );
+        assert!((1..=8).contains(&cfg.max_nest_depth));
+        Self {
+            rb: vec![Instr::Nop; cfg.rb_depth],
+            cfg,
+            wseq: 0,
+            raddr: 0,
+            tail: 0,
+            nest: Vec::with_capacity(cfg.max_nest_depth),
+            first_pass: 0,
+        }
+    }
+
+    /// Number of live RB entries.
+    fn occupancy(&self) -> usize {
+        (self.wseq - self.tail) as usize
+    }
+
+    fn rb_full(&self) -> bool {
+        self.occupancy() >= self.cfg.rb_depth
+    }
+
+    /// Is the nest currently executing (configured and not finished)?
+    pub fn loop_active(&self) -> bool {
+        !self.nest.is_empty()
+    }
+
+    /// Anything left to issue?
+    pub fn busy(&self) -> bool {
+        self.raddr < self.wseq || self.loop_active()
+    }
+
+    /// In blocking (baseline) mode, offloads are refused while a loop is
+    /// active, *except* the body of the active loop itself, which is
+    /// still streaming in on its first pass.
+    fn offload_blocked(&self) -> bool {
+        if !self.cfg.block_offload_during_loop {
+            return false;
+        }
+        match self.nest.last() {
+            Some(l) => self.wseq >= l.end(),
+            None => false,
+        }
+    }
+
+    /// Can the frontend push an FP compute instruction this cycle?
+    pub fn can_accept_fp(&self) -> bool {
+        !self.rb_full() && !self.offload_blocked()
+    }
+
+    /// Push a category-2 instruction into the RB.
+    /// Returns false (and consumes nothing) if it must retry.
+    pub fn push_fp(&mut self, i: Instr) -> bool {
+        debug_assert!(i.is_fp_compute());
+        if !self.can_accept_fp() {
+            return false;
+        }
+        let idx = (self.wseq & (self.cfg.rb_depth as u64 - 1)) as usize;
+        self.rb[idx] = i;
+        self.wseq += 1;
+        true
+    }
+
+    /// Can the frontend push an FREP this cycle?
+    ///
+    /// A new loop is accepted iff:
+    /// * no nest is active (starts a fresh nest), or
+    /// * the new loop's window fits inside the loops that *contain*
+    ///   it (dynamic nest construction — it may be a sibling of an
+    ///   earlier, already-finished inner loop) and its containment
+    ///   depth stays below N — only in non-blocking (ZONL) mode.
+    pub fn can_accept_frep(&self, n_inst: u32) -> bool {
+        if self.nest.is_empty() {
+            return true;
+        }
+        if self.cfg.block_offload_during_loop {
+            return false; // baseline: one loop at a time
+        }
+        let end = self.wseq + n_inst as u64;
+        // Loops whose window contains the new one (a chain, since all
+        // configured windows are properly nested).
+        let chain = self
+            .nest
+            .iter()
+            .filter(|l| l.base <= self.wseq && end <= l.end())
+            .count();
+        if chain == 0 {
+            // Entirely outside the active nest: a *sequential* loop —
+            // it must wait for the nest to complete.
+            return false;
+        }
+        chain < self.cfg.max_nest_depth
+    }
+
+    /// Push a FREP (category 1). The loop body is the next `n_inst`
+    /// RB-resident instructions; `n_iter` total iterations.
+    pub fn push_frep(&mut self, n_inst: u32, n_iter: u32) -> bool {
+        assert!(n_inst >= 1 && n_iter >= 1, "degenerate FREP");
+        if !self.can_accept_frep(n_inst) {
+            return false;
+        }
+        self.nest.push(LoopCfg {
+            base: self.wseq,
+            n_inst,
+            n_iter,
+            iter: 0,
+        });
+        true
+    }
+
+    /// Peek the instruction that would issue this cycle, if any.
+    pub fn peek(&self) -> Option<&Instr> {
+        if self.raddr >= self.wseq {
+            return None;
+        }
+        // The issue pointer may sit at the base of a loop whose body has
+        // not fully streamed in yet — that is fine, instructions issue
+        // as they arrive (first pass).
+        Some(&self.rb[(self.raddr & (self.cfg.rb_depth as u64 - 1)) as usize])
+    }
+
+    /// Commit the issue of the peeked instruction and update the nest
+    /// state machine (the paper's single-cycle multi-loop entry/exit
+    /// resolution). Must only be called after `peek()` returned `Some`.
+    pub fn advance(&mut self) -> IssueInfo {
+        debug_assert!(self.raddr < self.wseq);
+        let pos = self.raddr;
+        let info = IssueInfo {
+            replayed: pos < self.first_pass,
+        };
+
+        // --- ending-loops detection (the paper's trailing-zero-counter
+        // detector, resolved in a single cycle) ------------------------
+        // E = indices of loops whose window's *last* instruction is
+        // `pos`. Loops not in E but nested deeper may have ended at an
+        // earlier position (dormant until re-entered) and must not be
+        // touched here.
+        // (fixed-size scratch: nest depth is tiny and this is the
+        // simulator's hot path — no allocation per issued instruction)
+        let mut enders_buf = [0usize; 8];
+        let mut n_enders = 0;
+        for (i, l) in self.nest.iter().enumerate() {
+            if l.end() == pos + 1 {
+                enders_buf[n_enders] = i;
+                n_enders += 1;
+            }
+        }
+        let enders = &enders_buf[..n_enders];
+
+        if enders.is_empty() {
+            // No loop ends here: plain advance.
+            self.raddr = pos + 1;
+        } else {
+            // Innermost ending loop with iterations left iterates first
+            // (standard nest semantics): rewind to its base and restart
+            // every loop strictly inside it.
+            let rewind_to = enders
+                .iter()
+                .rev()
+                .copied()
+                .find(|&i| !self.nest[i].last_iter());
+            match rewind_to {
+                Some(i) => {
+                    self.nest[i].iter += 1;
+                    let base = self.nest[i].base;
+                    for l in self.nest.iter_mut().skip(i + 1) {
+                        l.iter = 0;
+                    }
+                    self.raddr = base;
+                }
+                None => {
+                    // Every loop ending here is in its last iteration.
+                    if enders[0] == 0 {
+                        // The outermost loop ends: the whole nest
+                        // completes (`nest_ends`).
+                        self.nest.clear();
+                    } else {
+                        // Inner loops finished this round; they stay
+                        // configured (they re-run when an enclosing
+                        // loop rewinds) with their counters reset.
+                        for &i in enders {
+                            self.nest[i].iter = 0;
+                        }
+                    }
+                    self.raddr = pos + 1;
+                }
+            }
+        }
+
+        self.first_pass = self.first_pass.max(pos + 1);
+        self.retire();
+        info
+    }
+
+    /// Free RB entries that can no longer be revisited.
+    fn retire(&mut self) {
+        let keep_from = match self.nest.first() {
+            Some(outer) => outer.base.min(self.raddr),
+            None => self.raddr,
+        };
+        self.tail = self.tail.max(keep_from);
+    }
+
+    /// Hard reset (program end / fault).
+    pub fn reset(&mut self) {
+        self.wseq = 0;
+        self.raddr = 0;
+        self.tail = 0;
+        self.first_pass = 0;
+        self.nest.clear();
+    }
+
+    /// Current nest depth (for traces/tests).
+    pub fn nest_depth(&self) -> usize {
+        self.nest.len()
+    }
+}
+
+// ===================================================================
+// Software oracle: expand a loop-nest program to its flat issue trace.
+// Used by unit and property tests.
+// ===================================================================
+
+/// A test-side description of a sequencer program: a mix of plain
+/// instructions and loop declarations over the *following* `n_inst`
+/// plain instructions.
+#[derive(Clone, Debug)]
+pub enum NestItem {
+    /// A body instruction (identified by an id carried in the fmul's
+    /// register fields for traceability).
+    Op(u8),
+    /// frep: loop over the next `n_inst` ops, `n_iter` times.
+    Loop { n_inst: u32, n_iter: u32 },
+}
+
+/// Reference expansion: what the issue trace must be.
+pub fn oracle_expand(items: &[NestItem]) -> Vec<u8> {
+    // Build the op list and the loop list (base = index into ops).
+    let mut ops: Vec<u8> = Vec::new();
+    let mut loops: Vec<(usize, u32, u32)> = Vec::new(); // (base, n, iter)
+    for it in items {
+        match *it {
+            NestItem::Op(id) => ops.push(id),
+            NestItem::Loop { n_inst, n_iter } => {
+                loops.push((ops.len(), n_inst, n_iter));
+            }
+        }
+    }
+
+    // Recursive expansion over [lo, hi) with the loops fully inside.
+    fn expand(
+        ops: &[u8],
+        loops: &[(usize, u32, u32)],
+        lo: usize,
+        hi: usize,
+        out: &mut Vec<u8>,
+    ) {
+        // Find the first (outermost) loop starting in [lo, hi).
+        let next = loops
+            .iter()
+            .enumerate()
+            .filter(|(_, &(b, n, _))| b >= lo && b + n as usize <= hi)
+            .min_by_key(|(_, &(b, n, _))| (b, usize::MAX - n as usize));
+        match next {
+            None => out.extend_from_slice(&ops[lo..hi]),
+            Some((idx, &(b, n, iters))) => {
+                // Emit the prefix before the loop.
+                out.extend_from_slice(&ops[lo..b]);
+                let inner: Vec<(usize, u32, u32)> = loops
+                    .iter()
+                    .copied()
+                    .enumerate()
+                    .filter(|&(i, _)| i != idx)
+                    .map(|(_, l)| l)
+                    .collect();
+                for _ in 0..iters {
+                    expand(ops, &inner, b, b + n as usize, out);
+                }
+                expand(&ops, &inner, b + n as usize, hi, out);
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    let all: Vec<(usize, u32, u32)> = loops.clone();
+    expand(&ops, &all, 0, ops.len(), &mut out);
+    out
+}
+
+/// Drive a `Sequencer` with `items`, pushing as fast as accepted and
+/// issuing one instruction per cycle; return `(trace, cycles)`.
+/// `cycles` counts every cycle the FPU could have consumed an
+/// instruction — so `cycles - trace.len()` is the bubble count.
+pub fn run_sequencer(seq: &mut Sequencer, items: &[NestItem]) -> (Vec<u8>, u64) {
+    let mut trace: Vec<u8> = Vec::new();
+    let mut cycles: u64 = 0;
+    let mut feed = items.iter().peekable();
+    let safety = 10_000_000u64;
+
+    loop {
+        // Frontend side: push at most one item per cycle.
+        match feed.peek() {
+            Some(NestItem::Op(id)) => {
+                let i = Instr::FmulD { frd: *id, frs1: *id, frs2: *id };
+                if seq.push_fp(i) {
+                    feed.next();
+                }
+            }
+            Some(NestItem::Loop { n_inst, n_iter }) => {
+                if seq.push_frep(*n_inst, *n_iter) {
+                    feed.next();
+                    // FREP consumes a frontend slot but no FPU slot;
+                    // fall through so an RB instruction can still issue
+                    // this cycle (the sequencer and frontend are
+                    // decoupled).
+                }
+            }
+            None => {}
+        }
+
+        // Issue side: one instruction per cycle if available.
+        if let Some(&Instr::FmulD { frd, .. }) = seq.peek() {
+            trace.push(frd);
+            seq.advance();
+        }
+
+        cycles += 1;
+        if feed.peek().is_none() && !seq.busy() {
+            break;
+        }
+        assert!(cycles < safety, "sequencer livelock");
+    }
+    (trace, cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn zonl() -> Sequencer {
+        Sequencer::new(SeqConfig::zonl())
+    }
+
+    #[test]
+    fn plain_stream_no_loops() {
+        let items: Vec<NestItem> = (0..10).map(NestItem::Op).collect();
+        let (trace, _) = run_sequencer(&mut zonl(), &items);
+        assert_eq!(trace, oracle_expand(&items));
+    }
+
+    #[test]
+    fn single_loop_baseline_equivalence() {
+        let items = vec![
+            NestItem::Op(1),
+            NestItem::Loop { n_inst: 3, n_iter: 4 },
+            NestItem::Op(2),
+            NestItem::Op(3),
+            NestItem::Op(4),
+            NestItem::Op(5),
+        ];
+        let want = oracle_expand(&items);
+        let (trace, _) =
+            run_sequencer(&mut Sequencer::new(SeqConfig::baseline()), &items);
+        assert_eq!(trace, want);
+        let (trace2, _) = run_sequencer(&mut zonl(), &items);
+        assert_eq!(trace2, want);
+    }
+
+    #[test]
+    fn perfect_nest_shared_start_end() {
+        // Outer and inner share both start and end instructions:
+        // outer(3 iters) { inner(2 iters) { a b } }
+        let items = vec![
+            NestItem::Loop { n_inst: 2, n_iter: 3 },
+            NestItem::Loop { n_inst: 2, n_iter: 2 },
+            NestItem::Op(7),
+            NestItem::Op(8),
+        ];
+        let want = oracle_expand(&items);
+        assert_eq!(want, vec![7, 8, 7, 8, 7, 8, 7, 8, 7, 8, 7, 8]);
+        let (trace, _) = run_sequencer(&mut zonl(), &items);
+        assert_eq!(trace, want);
+    }
+
+    #[test]
+    fn imperfect_nest_matmul_shape() {
+        // The ZONL matmul pass: outer { fmul x2 ; inner{ fmadd x2 } ; wb x2 }
+        let items = vec![
+            NestItem::Loop { n_inst: 6, n_iter: 3 }, // outer
+            NestItem::Op(1),
+            NestItem::Op(2),
+            NestItem::Loop { n_inst: 2, n_iter: 4 }, // inner
+            NestItem::Op(3),
+            NestItem::Op(4),
+            NestItem::Op(5),
+            NestItem::Op(6),
+        ];
+        let want = oracle_expand(&items);
+        let (trace, cycles) = run_sequencer(&mut zonl(), &items);
+        assert_eq!(trace, want);
+        // Zero-overhead: issue rate 1/cycle after the pipeline fills.
+        // Frontend feeds 8 items; issue starts on cycle 2 at the latest.
+        assert!(
+            cycles <= want.len() as u64 + 3,
+            "{} bubbles",
+            cycles - want.len() as u64
+        );
+    }
+
+    #[test]
+    fn imperfect_nest_prefix_only() {
+        // outer { a ; inner{ b c } } — loop ends together with inner.
+        let items = vec![
+            NestItem::Loop { n_inst: 3, n_iter: 2 },
+            NestItem::Op(1),
+            NestItem::Loop { n_inst: 2, n_iter: 3 },
+            NestItem::Op(2),
+            NestItem::Op(3),
+        ];
+        let want = oracle_expand(&items);
+        assert_eq!(
+            want,
+            vec![1, 2, 3, 2, 3, 2, 3, 1, 2, 3, 2, 3, 2, 3]
+        );
+        let (trace, _) = run_sequencer(&mut zonl(), &items);
+        assert_eq!(trace, want);
+    }
+
+    #[test]
+    fn triple_nest() {
+        let items = vec![
+            NestItem::Loop { n_inst: 4, n_iter: 2 },
+            NestItem::Op(1),
+            NestItem::Loop { n_inst: 3, n_iter: 2 },
+            NestItem::Loop { n_inst: 2, n_iter: 2 },
+            NestItem::Op(2),
+            NestItem::Op(3),
+            NestItem::Op(4),
+        ];
+        let want = oracle_expand(&items);
+        let (trace, _) = run_sequencer(&mut zonl(), &items);
+        assert_eq!(trace, want);
+    }
+
+    #[test]
+    fn sequential_loops() {
+        let items = vec![
+            NestItem::Loop { n_inst: 2, n_iter: 2 },
+            NestItem::Op(1),
+            NestItem::Op(2),
+            NestItem::Loop { n_inst: 2, n_iter: 3 },
+            NestItem::Op(3),
+            NestItem::Op(4),
+        ];
+        let want = oracle_expand(&items);
+        assert_eq!(want, vec![1, 2, 1, 2, 3, 4, 3, 4, 3, 4]);
+        for cfg in [SeqConfig::baseline(), SeqConfig::zonl()] {
+            let (trace, _) = run_sequencer(&mut Sequencer::new(cfg), &items);
+            assert_eq!(trace, want);
+        }
+    }
+
+    #[test]
+    fn baseline_blocks_offload_during_loop() {
+        let mut seq = Sequencer::new(SeqConfig::baseline());
+        assert!(seq.push_frep(2, 5));
+        let op = |id| Instr::FmulD { frd: id, frs1: id, frs2: id };
+        assert!(seq.push_fp(op(1)));
+        assert!(seq.push_fp(op(2)));
+        // Body complete: further offloads must now be refused.
+        assert!(!seq.can_accept_fp());
+        assert!(!seq.push_fp(op(3)));
+        // And a second (sequential) FREP as well.
+        assert!(!seq.can_accept_frep(2));
+        // Drain the loop; acceptance resumes.
+        let mut n = 0;
+        while seq.peek().is_some() {
+            seq.advance();
+            n += 1;
+        }
+        assert_eq!(n, 10);
+        assert!(seq.can_accept_fp());
+        assert!(seq.can_accept_frep(2));
+    }
+
+    #[test]
+    fn zonl_accepts_runahead_during_loop() {
+        let mut seq = zonl();
+        assert!(seq.push_frep(2, 8));
+        let op = |id| Instr::FmulD { frd: id, frs1: id, frs2: id };
+        assert!(seq.push_fp(op(1)));
+        assert!(seq.push_fp(op(2)));
+        // Body complete; run-ahead pushes are accepted (RB space left).
+        assert!(seq.can_accept_fp());
+        assert!(seq.push_fp(op(3)));
+    }
+
+    #[test]
+    fn nest_depth_limit_respected() {
+        let mut seq = Sequencer::new(SeqConfig {
+            rb_depth: 32,
+            max_nest_depth: 2,
+            block_offload_during_loop: false,
+        });
+        assert!(seq.push_frep(8, 2));
+        assert!(seq.push_frep(4, 2));
+        assert!(!seq.can_accept_frep(2)); // depth 2 reached
+    }
+
+    #[test]
+    fn frep_outside_window_not_nested() {
+        let mut seq = zonl();
+        assert!(seq.push_frep(2, 2));
+        let op = |id| Instr::FmulD { frd: id, frs1: id, frs2: id };
+        assert!(seq.push_fp(op(1)));
+        assert!(seq.push_fp(op(2)));
+        // This FREP starts beyond the active loop's window: it is a
+        // *sequential* loop and must wait for the nest to finish.
+        assert!(!seq.can_accept_frep(2));
+    }
+
+    #[test]
+    fn rb_full_blocks_push() {
+        let mut seq = Sequencer::new(SeqConfig {
+            rb_depth: 4,
+            max_nest_depth: 2,
+            block_offload_during_loop: false,
+        });
+        let op = |id| Instr::FmulD { frd: id, frs1: id, frs2: id };
+        // A long-running loop retains its body in the RB.
+        assert!(seq.push_frep(2, 100));
+        assert!(seq.push_fp(op(1)));
+        assert!(seq.push_fp(op(2)));
+        assert!(seq.push_fp(op(3)));
+        assert!(seq.push_fp(op(4)));
+        assert!(!seq.push_fp(op(5)), "RB must be full");
+        // Issue a few: the loop body (ops 1-2) may not be evicted.
+        for _ in 0..10 {
+            assert!(seq.peek().is_some());
+            seq.advance();
+        }
+        assert!(!seq.can_accept_fp(), "loop body still retained");
+    }
+
+    #[test]
+    fn single_iteration_loop_degenerates() {
+        let items = vec![
+            NestItem::Loop { n_inst: 2, n_iter: 1 },
+            NestItem::Op(1),
+            NestItem::Op(2),
+            NestItem::Op(3),
+        ];
+        let want = oracle_expand(&items);
+        assert_eq!(want, vec![1, 2, 3]);
+        let (trace, _) = run_sequencer(&mut zonl(), &items);
+        assert_eq!(trace, want);
+    }
+
+    #[test]
+    fn oracle_imperfect_suffix() {
+        // outer(2) { inner(2){ a } b } => a a b a a b
+        let items = vec![
+            NestItem::Loop { n_inst: 2, n_iter: 2 },
+            NestItem::Loop { n_inst: 1, n_iter: 2 },
+            NestItem::Op(1),
+            NestItem::Op(2),
+        ];
+        assert_eq!(oracle_expand(&items), vec![1, 1, 2, 1, 1, 2]);
+        let (trace, _) = run_sequencer(&mut zonl(), &items);
+        assert_eq!(trace, oracle_expand(&items));
+    }
+}

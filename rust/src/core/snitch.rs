@@ -1,0 +1,737 @@
+//! The Snitch core: a tiny single-issue in-order RV32 integer pipeline
+//! pseudo-dual-issued with the FP subsystem (FREP sequencer + FPU +
+//! SSR streamers) [3].
+//!
+//! Timing model (cycle-stepped, two phases driven by the cluster):
+//!
+//! * `fp_tick` — FPU writebacks, then at most one instruction issues
+//!   from the sequencer to the FPU if its operands are ready (SSR FIFO
+//!   data available, write credit reservable, no RAW on RF operands).
+//! * `frontend_tick` — fetch/decode/execute one instruction: integer
+//!   ops retire immediately; taken branches inject
+//!   `taken_branch_penalty` fetch bubbles; FP compute ops offload to
+//!   the sequencer (stalling on RB-full or baseline replay-blocking);
+//!   loads/stores stall the frontend until their TCDM request wins
+//!   arbitration (grant paths are driven by the cluster).
+//!
+//! The frontend and FP subsystem are decoupled exactly as in the RTL:
+//! integer instructions execute while the sequencer replays, which is
+//! what makes the baseline's outer-loop overhead visible only when the
+//! sequencer blocks offloads during replay (see `sequencer.rs`).
+
+use crate::dma::DmaDesc;
+use crate::isa::{csr, Instr, Program};
+use crate::ssr::{SsrMode, Streamer};
+
+use super::fpu::{Fpu, FpuConfig, Writeback};
+use super::sequencer::{SeqConfig, Sequencer};
+
+#[derive(Clone, Copy, Debug)]
+pub struct CoreConfig {
+    pub seq: SeqConfig,
+    pub fpu: FpuConfig,
+    /// Fetch bubbles after a taken branch (Snitch's 3-stage frontend).
+    pub taken_branch_penalty: u32,
+    /// Fixed latency for LSU accesses that bypass the TCDM (main mem).
+    pub main_mem_latency: u32,
+}
+
+impl CoreConfig {
+    pub fn baseline() -> Self {
+        Self {
+            seq: SeqConfig::baseline(),
+            fpu: FpuConfig::default(),
+            taken_branch_penalty: 2,
+            main_mem_latency: 10,
+        }
+    }
+
+    pub fn zonl() -> Self {
+        Self { seq: SeqConfig::zonl(), ..Self::baseline() }
+    }
+}
+
+/// Per-core performance counters (the stall taxonomy of DESIGN.md §5).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CorePerf {
+    pub cycles: u64,
+    pub fpu_ops: u64,
+    pub fpu_idle_no_instr: u64,
+    pub stall_ssr_empty: u64,
+    pub stall_wfifo: u64,
+    pub stall_raw: u64,
+    pub stall_fpu_full: u64,
+    pub int_instrs: u64,
+    pub fp_offloads: u64,
+    pub offload_stalls: u64,
+    pub branch_bubbles: u64,
+    pub barrier_cycles: u64,
+    pub lsu_stalls: u64,
+    /// Frontend stalls waiting for FP-subsystem drain (fsd ordering,
+    /// SSR disable).
+    pub drain_stalls: u64,
+    pub icache_fetches: u64,
+    pub rb_replays: u64,
+    pub csr_instrs: u64,
+}
+
+impl CorePerf {
+    /// FPU utilization over a cycle window.
+    pub fn utilization(&self, total_cycles: u64) -> f64 {
+        if total_cycles == 0 {
+            0.0
+        } else {
+            self.fpu_ops as f64 / total_cycles as f64
+        }
+    }
+}
+
+/// Pending LSU operation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum LsuOp {
+    LoadInt { rd: u8 },
+    LoadFp { frd: u8 },
+    StoreInt { data: u32 },
+    StoreFp { data: f64 },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum State {
+    Running,
+    /// Waiting for a TCDM LSU grant.
+    LsuWait { addr: u32, op: LsuOp },
+    /// Parked on an in-order drain point (fsd ordering / SSR disable);
+    /// the instruction at `pc` re-executes once the subsystem drains.
+    DrainWait,
+    /// Waiting for FP-subsystem drain, then for barrier release.
+    BarrierWait,
+    Halted,
+}
+
+/// Frontend requests the cluster must service (DM-core DMA ops).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CoreRequest {
+    None,
+    DmaPush(DmaDesc),
+}
+
+pub struct Core {
+    pub id: usize,
+    pub cfg: CoreConfig,
+    prog: Program,
+    pc: usize,
+    pub iregs: [u32; 32],
+    pub fpu: Fpu,
+    pub seq: Sequencer,
+    pub ssrs: [Streamer; 3],
+    pub ssr_enable: bool,
+    state: State,
+    bubbles: u32,
+    barrier_arrived: bool,
+    // DMA staging registers (DM core).
+    dm_src: u32,
+    dm_dst: u32,
+    dm_src_stride: u32,
+    dm_dst_stride: u32,
+    dm_reps: u32,
+    dm_src_stride2: u32,
+    dm_dst_stride2: u32,
+    dm_reps2: u32,
+    dm_txid: u32,
+    pub perf: CorePerf,
+    wb_scratch: Vec<Writeback>,
+}
+
+impl Core {
+    pub fn new(id: usize, cfg: CoreConfig, prog: Program) -> Self {
+        Self {
+            id,
+            cfg,
+            prog,
+            pc: 0,
+            iregs: [0; 32],
+            fpu: Fpu::new(cfg.fpu),
+            seq: Sequencer::new(cfg.seq),
+            ssrs: [Streamer::new(), Streamer::new(), Streamer::new()],
+            ssr_enable: false,
+            state: State::Running,
+            bubbles: 0,
+            barrier_arrived: false,
+            dm_src: 0,
+            dm_dst: 0,
+            dm_src_stride: 0,
+            dm_dst_stride: 0,
+            dm_reps: 1,
+            dm_src_stride2: 0,
+            dm_dst_stride2: 0,
+            dm_reps2: 1,
+            dm_txid: 0,
+            perf: CorePerf::default(),
+            wb_scratch: Vec::with_capacity(4),
+        }
+    }
+
+    pub fn halted(&self) -> bool {
+        self.state == State::Halted
+    }
+
+    /// Arrived at a barrier and fully drained?
+    pub fn at_barrier(&self) -> bool {
+        self.state == State::BarrierWait && self.barrier_arrived
+    }
+
+    pub fn barrier_release(&mut self) {
+        debug_assert!(self.at_barrier());
+        self.state = State::Running;
+        self.barrier_arrived = false;
+    }
+
+    fn subsystem_drained(&self) -> bool {
+        self.seq.busy() == false
+            && self.fpu.idle()
+            && self.ssrs.iter().all(|s| s.drained())
+    }
+
+    fn ssr_read(&self, r: u8) -> bool {
+        self.ssr_enable
+            && (r as usize) < 3
+            && self.ssrs[r as usize].mode == SsrMode::Read
+    }
+
+    fn ssr_write(&self, r: u8) -> bool {
+        self.ssr_enable
+            && (r as usize) < 3
+            && self.ssrs[r as usize].mode == SsrMode::Write
+    }
+
+    // ============================================================
+    // FP subsystem tick
+    // ============================================================
+
+    pub fn fp_tick(&mut self, now: u64) {
+        // 1. FPU writebacks (SSR-bound results feed the write streamer).
+        self.wb_scratch.clear();
+        self.fpu.tick(now, &mut self.wb_scratch);
+        for i in 0..self.wb_scratch.len() {
+            let wb = self.wb_scratch[i];
+            self.ssrs[wb.dest as usize].push_write(wb.value);
+        }
+
+        // 2. Sequencer -> FPU issue (at most one per cycle).
+        let Some(&instr) = self.seq.peek() else {
+            if self.state != State::Halted {
+                self.perf.fpu_idle_no_instr += 1;
+            }
+            return;
+        };
+        if !self.fpu.can_issue() {
+            self.perf.stall_fpu_full += 1;
+            return;
+        }
+
+        // Fast path: fmadd/fmul (the kernel hot loop). Checks and
+        // pops are hand-inlined; semantics identical to the generic
+        // path below.
+        match instr {
+            Instr::FmaddD { frd, frs1, frs2, frs3 } => {
+                let s1 = self.ssr_read(frs1);
+                let s2 = self.ssr_read(frs2);
+                let s3 = self.ssr_read(frs3);
+                let ready = (!s1 || self.ssrs[frs1 as usize].can_pop())
+                    && (!s2 || self.ssrs[frs2 as usize].can_pop())
+                    && (!s3 || self.ssrs[frs3 as usize].can_pop());
+                if !ready {
+                    self.perf.stall_ssr_empty += 1;
+                    return;
+                }
+                if (!s1 && self.fpu.reg_busy(frs1))
+                    || (!s2 && self.fpu.reg_busy(frs2))
+                    || (!s3 && self.fpu.reg_busy(frs3))
+                {
+                    self.perf.stall_raw += 1;
+                    return;
+                }
+                let ssr_dest = self.ssr_write(frd);
+                if ssr_dest && !self.ssrs[frd as usize].can_reserve() {
+                    self.perf.stall_wfifo += 1;
+                    return;
+                }
+                let a = if s1 {
+                    self.ssrs[frs1 as usize].pop()
+                } else {
+                    self.fpu.regs[frs1 as usize]
+                };
+                let b = if s2 {
+                    self.ssrs[frs2 as usize].pop()
+                } else {
+                    self.fpu.regs[frs2 as usize]
+                };
+                let c = if s3 {
+                    self.ssrs[frs3 as usize].pop()
+                } else {
+                    self.fpu.regs[frs3 as usize]
+                };
+                if ssr_dest {
+                    self.ssrs[frd as usize].reserve();
+                }
+                let ok = self.fpu.issue_resolved(
+                    frd,
+                    a.mul_add(b, c),
+                    ssr_dest,
+                    now,
+                );
+                debug_assert!(ok);
+                let info = self.seq.advance();
+                if info.replayed {
+                    self.perf.rb_replays += 1;
+                }
+                self.perf.fpu_ops += 1;
+                return;
+            }
+            Instr::FmulD { frd, frs1, frs2 } => {
+                let s1 = self.ssr_read(frs1);
+                let s2 = self.ssr_read(frs2);
+                if (s1 && !self.ssrs[frs1 as usize].can_pop())
+                    || (s2 && !self.ssrs[frs2 as usize].can_pop())
+                {
+                    self.perf.stall_ssr_empty += 1;
+                    return;
+                }
+                if (!s1 && self.fpu.reg_busy(frs1))
+                    || (!s2 && self.fpu.reg_busy(frs2))
+                {
+                    self.perf.stall_raw += 1;
+                    return;
+                }
+                let ssr_dest = self.ssr_write(frd);
+                if ssr_dest && !self.ssrs[frd as usize].can_reserve() {
+                    self.perf.stall_wfifo += 1;
+                    return;
+                }
+                let a = if s1 {
+                    self.ssrs[frs1 as usize].pop()
+                } else {
+                    self.fpu.regs[frs1 as usize]
+                };
+                let b = if s2 {
+                    self.ssrs[frs2 as usize].pop()
+                } else {
+                    self.fpu.regs[frs2 as usize]
+                };
+                if ssr_dest {
+                    self.ssrs[frd as usize].reserve();
+                }
+                let ok =
+                    self.fpu.issue_resolved(frd, a * b, ssr_dest, now);
+                debug_assert!(ok);
+                let info = self.seq.advance();
+                if info.replayed {
+                    self.perf.rb_replays += 1;
+                }
+                self.perf.fpu_ops += 1;
+                return;
+            }
+            _ => {}
+        }
+
+        // Generic path (fadd/fsub/fsgnj and exotic operand mixes).
+        // Operand readiness (check all, then commit pops atomically).
+        let sources = instr.fp_sources();
+        for src in sources.iter().flatten() {
+            if self.ssr_read(*src) {
+                if !self.ssrs[*src as usize].can_pop() {
+                    self.perf.stall_ssr_empty += 1;
+                    return;
+                }
+            } else if self.fpu.reg_busy(*src) {
+                self.perf.stall_raw += 1;
+                return;
+            }
+        }
+        let dest = instr.fp_dest().expect("compute op has a dest");
+        let ssr_dest = self.ssr_write(dest);
+        if ssr_dest && !self.ssrs[dest as usize].can_reserve() {
+            self.perf.stall_wfifo += 1;
+            return;
+        }
+
+        // Commit: pop SSR operands per source *occurrence*.
+        let mut vals: [Option<f64>; 3] = [None, None, None];
+        for (slot, src) in sources.iter().enumerate() {
+            if let Some(r) = src {
+                if self.ssr_read(*r) {
+                    vals[slot] = Some(self.ssrs[*r as usize].pop());
+                }
+            }
+        }
+        if ssr_dest {
+            self.ssrs[dest as usize].reserve();
+        }
+        let ok = self.fpu.issue(&instr, &vals, ssr_dest, now);
+        debug_assert!(ok);
+        let info = self.seq.advance();
+        if info.replayed {
+            self.perf.rb_replays += 1;
+        }
+        self.perf.fpu_ops += 1;
+    }
+
+    // ============================================================
+    // Frontend tick
+    // ============================================================
+
+    /// Execute one frontend cycle. Returns a request the cluster must
+    /// service (DMA pushes from the DM core).
+    pub fn frontend_tick(&mut self, now: u64, dma_ready: bool) -> CoreRequest {
+        match self.state {
+            State::Halted => return CoreRequest::None,
+            State::LsuWait { .. } => {
+                self.perf.lsu_stalls += 1;
+                return CoreRequest::None;
+            }
+            State::DrainWait => {
+                self.perf.drain_stalls += 1;
+                if self.seq.busy()
+                    || !self.fpu.idle()
+                    || !self.ssrs.iter().all(|s| s.drained())
+                {
+                    return CoreRequest::None;
+                }
+                self.state = State::Running; // re-decode the instr now
+            }
+            State::BarrierWait => {
+                self.perf.barrier_cycles += 1;
+                if !self.barrier_arrived && self.subsystem_drained() {
+                    self.barrier_arrived = true;
+                }
+                return CoreRequest::None;
+            }
+            State::Running => {}
+        }
+        if self.bubbles > 0 {
+            self.bubbles -= 1;
+            self.perf.branch_bubbles += 1;
+            return CoreRequest::None;
+        }
+        let Some(&instr) = self.prog.instrs.get(self.pc) else {
+            self.state = State::Halted;
+            return CoreRequest::None;
+        };
+
+        // ---- FP offload path -------------------------------------
+        if instr.is_fp_compute() {
+            if self.seq.push_fp(instr) {
+                self.pc += 1;
+                self.perf.fp_offloads += 1;
+                self.perf.icache_fetches += 1;
+            } else {
+                self.perf.offload_stalls += 1;
+            }
+            return CoreRequest::None;
+        }
+        if let Instr::Frep { iters_reg, n_inst, .. } = instr {
+            let iters = self.iregs[iters_reg as usize].wrapping_add(1);
+            if self.seq.push_frep(n_inst as u32 + 1, iters) {
+                self.pc += 1;
+                self.perf.icache_fetches += 1;
+            } else {
+                self.perf.offload_stalls += 1;
+            }
+            return CoreRequest::None;
+        }
+
+        // ---- integer / system path --------------------------------
+        // (the fetch is counted at retire below — stall-retry paths
+        // keep the instruction in the decode stage, one real fetch)
+        let mut req = CoreRequest::None;
+        let mut next_pc = self.pc + 1;
+        let rs = |r: u8, regs: &[u32; 32]| -> u32 {
+            if r == 0 {
+                0
+            } else {
+                regs[r as usize]
+            }
+        };
+        let wr = |core: &mut Self, r: u8, v: u32| {
+            if r != 0 {
+                core.iregs[r as usize] = v;
+            }
+        };
+        match instr {
+            Instr::Lui { rd, imm } => wr(self, rd, imm as u32),
+            Instr::Auipc { rd, imm } => {
+                wr(self, rd, (self.pc as u32 * 4).wrapping_add(imm as u32))
+            }
+            Instr::Addi { rd, rs1, imm } => {
+                let v = rs(rs1, &self.iregs).wrapping_add(imm as u32);
+                wr(self, rd, v);
+            }
+            Instr::Slli { rd, rs1, shamt } => {
+                let v = rs(rs1, &self.iregs) << shamt;
+                wr(self, rd, v);
+            }
+            Instr::Srli { rd, rs1, shamt } => {
+                let v = rs(rs1, &self.iregs) >> shamt;
+                wr(self, rd, v);
+            }
+            Instr::Andi { rd, rs1, imm } => {
+                let v = rs(rs1, &self.iregs) & imm as u32;
+                wr(self, rd, v);
+            }
+            Instr::Add { rd, rs1, rs2 } => {
+                let v =
+                    rs(rs1, &self.iregs).wrapping_add(rs(rs2, &self.iregs));
+                wr(self, rd, v);
+            }
+            Instr::Sub { rd, rs1, rs2 } => {
+                let v =
+                    rs(rs1, &self.iregs).wrapping_sub(rs(rs2, &self.iregs));
+                wr(self, rd, v);
+            }
+            Instr::Mul { rd, rs1, rs2 } => {
+                let v =
+                    rs(rs1, &self.iregs).wrapping_mul(rs(rs2, &self.iregs));
+                wr(self, rd, v);
+            }
+            Instr::Beq { rs1, rs2, off }
+            | Instr::Bne { rs1, rs2, off }
+            | Instr::Blt { rs1, rs2, off }
+            | Instr::Bge { rs1, rs2, off } => {
+                let a = rs(rs1, &self.iregs);
+                let b = rs(rs2, &self.iregs);
+                let taken = match instr {
+                    Instr::Beq { .. } => a == b,
+                    Instr::Bne { .. } => a != b,
+                    Instr::Blt { .. } => (a as i32) < (b as i32),
+                    Instr::Bge { .. } => (a as i32) >= (b as i32),
+                    _ => unreachable!(),
+                };
+                if taken {
+                    next_pc =
+                        (self.pc as i64 + (off / 4) as i64) as usize;
+                    self.bubbles = self.cfg.taken_branch_penalty;
+                }
+            }
+            Instr::Jal { rd, off } => {
+                wr(self, rd, (self.pc as u32 + 1) * 4);
+                next_pc = (self.pc as i64 + (off / 4) as i64) as usize;
+                self.bubbles = self.cfg.taken_branch_penalty;
+            }
+            Instr::Lw { rd, rs1, imm } => {
+                let addr =
+                    rs(rs1, &self.iregs).wrapping_add(imm as u32);
+                self.state = State::LsuWait {
+                    addr,
+                    op: LsuOp::LoadInt { rd },
+                };
+            }
+            Instr::Sw { rs2, rs1, imm } => {
+                let addr =
+                    rs(rs1, &self.iregs).wrapping_add(imm as u32);
+                self.state = State::LsuWait {
+                    addr,
+                    op: LsuOp::StoreInt { data: rs(rs2, &self.iregs) },
+                };
+            }
+            Instr::Fld { frd, rs1, imm } => {
+                let addr =
+                    rs(rs1, &self.iregs).wrapping_add(imm as u32);
+                self.state = State::LsuWait {
+                    addr,
+                    op: LsuOp::LoadFp { frd },
+                };
+            }
+            Instr::Fsd { frs2, rs1, imm } => {
+                // In-order FP semantics: the store must observe every
+                // older offloaded op's writeback (the RTL enforces this
+                // through the FP scoreboard).
+                if self.seq.busy() || self.fpu.reg_busy(frs2) {
+                    self.state = State::DrainWait;
+                    return CoreRequest::None;
+                }
+                let addr =
+                    rs(rs1, &self.iregs).wrapping_add(imm as u32);
+                self.state = State::LsuWait {
+                    addr,
+                    op: LsuOp::StoreFp {
+                        data: self.fpu.regs[frs2 as usize],
+                    },
+                };
+            }
+            Instr::Csrrw { rd, csr: c, rs1 } | Instr::Csrrs { rd, csr: c, rs1 } => {
+                self.perf.csr_instrs += 1;
+                let old = match c {
+                    csr::MCYCLE => now as u32,
+                    csr::MHARTID => self.id as u32,
+                    csr::SSR_ENABLE => self.ssr_enable as u32,
+                    _ => 0,
+                };
+                wr(self, rd, old);
+                if c == csr::SSR_ENABLE && rs1 != 0 {
+                    self.ssr_enable = rs(rs1, &self.iregs) & 1 == 1;
+                }
+            }
+            Instr::Csrrsi { csr: c, imm } => {
+                self.perf.csr_instrs += 1;
+                if c == csr::SSR_ENABLE && imm & 1 == 1 {
+                    self.ssr_enable = true;
+                }
+            }
+            Instr::Csrrci { csr: c, imm } => {
+                // Disabling SSR interception is only safe once every
+                // offloaded op that consumes/produces stream data has
+                // retired — kernels rely on this drain point.
+                if c == csr::SSR_ENABLE
+                    && (self.seq.busy()
+                        || !self.fpu.idle()
+                        || !self.ssrs.iter().all(|s| s.drained()))
+                {
+                    self.state = State::DrainWait;
+                    return CoreRequest::None;
+                }
+                self.perf.csr_instrs += 1;
+                if c == csr::SSR_ENABLE && imm & 1 == 1 {
+                    self.ssr_enable = false;
+                }
+            }
+            Instr::SsrCfgW { value, ssr, field } => {
+                let v = rs(value, &self.iregs);
+                self.ssrs[ssr as usize].config(field, v);
+            }
+            Instr::FcvtDW { frd, rs1 } => {
+                let v = rs(rs1, &self.iregs) as i32 as f64;
+                self.fpu.write_reg(frd, v);
+            }
+            Instr::Dmsrc { rs1 } => self.dm_src = rs(rs1, &self.iregs),
+            Instr::Dmdst { rs1 } => self.dm_dst = rs(rs1, &self.iregs),
+            Instr::Dmstr { rs1, rs2 } => {
+                self.dm_src_stride = rs(rs1, &self.iregs);
+                self.dm_dst_stride = rs(rs2, &self.iregs);
+            }
+            Instr::Dmrep { rs1 } => {
+                self.dm_reps = rs(rs1, &self.iregs).max(1)
+            }
+            Instr::Dmstr2 { rs1, rs2 } => {
+                self.dm_src_stride2 = rs(rs1, &self.iregs);
+                self.dm_dst_stride2 = rs(rs2, &self.iregs);
+            }
+            Instr::Dmrep2 { rs1 } => {
+                self.dm_reps2 = rs(rs1, &self.iregs).max(1)
+            }
+            Instr::Dmcpy { rd, rs1 } => {
+                if dma_ready {
+                    let desc = DmaDesc {
+                        src: self.dm_src,
+                        dst: self.dm_dst,
+                        size: rs(rs1, &self.iregs),
+                        src_stride: self.dm_src_stride,
+                        dst_stride: self.dm_dst_stride,
+                        reps: self.dm_reps,
+                        src_stride2: self.dm_src_stride2,
+                        dst_stride2: self.dm_dst_stride2,
+                        reps2: self.dm_reps2,
+                    };
+                    self.dm_txid += 1;
+                    let txid = self.dm_txid;
+                    wr(self, rd, txid);
+                    req = CoreRequest::DmaPush(desc);
+                } else {
+                    // DMA queue full: retry this instruction.
+                    self.perf.lsu_stalls += 1;
+                    return CoreRequest::None;
+                }
+            }
+            Instr::Dmstat { .. } => {
+                // The cluster substitutes the live in-flight count; the
+                // core-side shim is patched by `set_dmstat` before this
+                // executes (see cluster::step).
+                unreachable!("Dmstat handled by the cluster wrapper")
+            }
+            Instr::Barrier => {
+                self.state = State::BarrierWait;
+                self.barrier_arrived = self.subsystem_drained();
+            }
+            Instr::Ecall => {
+                self.state = State::Halted;
+            }
+            Instr::Nop => {}
+            Instr::Frep { .. }
+            | Instr::FmaddD { .. }
+            | Instr::FmulD { .. }
+            | Instr::FaddD { .. }
+            | Instr::FsubD { .. }
+            | Instr::FsgnjD { .. } => unreachable!("handled above"),
+        }
+        self.perf.int_instrs += 1;
+        self.perf.icache_fetches += 1;
+        // pc advances for every executed instruction, including those
+        // that enter LsuWait (the wait resumes *after* the access).
+        match self.state {
+            State::BarrierWait | State::Halted => {
+                self.pc += 1;
+            }
+            _ => {
+                self.pc = next_pc;
+            }
+        }
+        req
+    }
+
+    /// Execute a `dmstat` immediately with the cluster-provided count.
+    /// Returns true if the current instruction was a dmstat.
+    pub fn try_dmstat(&mut self, in_flight: u32) -> bool {
+        if self.state != State::Running || self.bubbles > 0 {
+            return false;
+        }
+        if let Some(Instr::Dmstat { rd }) = self.prog.instrs.get(self.pc) {
+            if *rd != 0 {
+                self.iregs[*rd as usize] = in_flight;
+            }
+            self.pc += 1;
+            self.perf.int_instrs += 1;
+            self.perf.icache_fetches += 1;
+            return true;
+        }
+        false
+    }
+
+    // ============================================================
+    // LSU interface (driven by the cluster's arbitration)
+    // ============================================================
+
+    /// The TCDM request this core's LSU presents this cycle.
+    pub fn lsu_request(&self) -> Option<(u32, bool, u64)> {
+        match self.state {
+            State::LsuWait { addr, op } => {
+                let (write, data) = match op {
+                    LsuOp::LoadInt { .. } | LsuOp::LoadFp { .. } => {
+                        (false, 0u64)
+                    }
+                    LsuOp::StoreInt { data } => (true, data as u64),
+                    LsuOp::StoreFp { data } => (true, data.to_bits()),
+                };
+                Some((addr, write, data))
+            }
+            _ => None,
+        }
+    }
+
+    /// The LSU request was granted; deliver data and resume.
+    pub fn lsu_granted(&mut self, read_bits: u64) {
+        let State::LsuWait { op, .. } = self.state else {
+            panic!("lsu_granted while not waiting")
+        };
+        match op {
+            LsuOp::LoadInt { rd } => {
+                if rd != 0 {
+                    self.iregs[rd as usize] = read_bits as u32;
+                }
+            }
+            LsuOp::LoadFp { frd } => {
+                self.fpu.write_reg(frd, f64::from_bits(read_bits));
+            }
+            LsuOp::StoreInt { .. } | LsuOp::StoreFp { .. } => {}
+        }
+        self.state = State::Running;
+    }
+}

@@ -1,0 +1,363 @@
+//! The cluster DMA engine (Snitch Xdma).
+//!
+//! A 512-bit engine for burst transfers between main memory and the
+//! TCDM.  Each cycle it presents at most one *beat* — up to 8
+//! consecutive 64-bit words, never crossing a superbank row boundary —
+//! to the TCDM interconnect; the main-memory side is modeled with
+//! matching bandwidth (one beat per cycle, burst latency hidden), so
+//! the TCDM arbitration is the only source of DMA stalls, as in the
+//! paper's cluster.
+//!
+//! Supports 1D and 2D transfers (inner size + strides + repetitions),
+//! programmed from the DM core via the Xdma instructions
+//! (`dmsrc`/`dmdst`/`dmstr`/`dmrep`/`dmcpy`) and polled with `dmstat`.
+
+use std::collections::VecDeque;
+
+use crate::mem::{DmaBeat, MainMemory, Tcdm, TCDM_BASE};
+
+/// An up-to-3D transfer descriptor (1D when `reps == 1 && reps2 == 1`).
+/// Dimension 2 wraps dimension 1 which wraps the contiguous inner row.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DmaDesc {
+    pub src: u32,
+    pub dst: u32,
+    /// Inner (row) size in bytes; must be a multiple of 8.
+    pub size: u32,
+    pub src_stride: u32,
+    pub dst_stride: u32,
+    pub reps: u32,
+    /// 3rd dimension (iDMA-style); strides applied every `reps` rows.
+    pub src_stride2: u32,
+    pub dst_stride2: u32,
+    pub reps2: u32,
+}
+
+impl DmaDesc {
+    /// Plain 2D descriptor.
+    pub fn d2(src: u32, dst: u32, size: u32, src_stride: u32,
+              dst_stride: u32, reps: u32) -> Self {
+        Self {
+            src, dst, size, src_stride, dst_stride, reps,
+            src_stride2: 0, dst_stride2: 0, reps2: 1,
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.size as u64 * self.reps as u64 * self.reps2 as u64
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Active {
+    desc: DmaDesc,
+    rep: u32,
+    rep2: u32,
+    /// Byte offset within the current row.
+    off: u32,
+}
+
+/// Direction of the TCDM side of the current beat.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Dir {
+    /// main memory -> TCDM (beat is a TCDM write)
+    ToTcdm,
+    /// TCDM -> main memory (beat is a TCDM read)
+    FromTcdm,
+}
+
+pub struct Dma {
+    queue: VecDeque<DmaDesc>,
+    active: Option<Active>,
+    queue_depth: usize,
+    // --- statistics ---
+    pub beats: u64,
+    pub stall_cycles: u64,
+    pub bytes_moved: u64,
+    pub busy_cycles: u64,
+}
+
+impl Dma {
+    pub fn new(queue_depth: usize) -> Self {
+        Self {
+            queue: VecDeque::with_capacity(queue_depth),
+            active: None,
+            queue_depth,
+            beats: 0,
+            stall_cycles: 0,
+            bytes_moved: 0,
+            busy_cycles: 0,
+        }
+    }
+
+    pub fn can_push(&self) -> bool {
+        self.queue.len() < self.queue_depth
+    }
+
+    /// Enqueue a transfer (`dmcpy`). Returns false when the queue is
+    /// full (the DM core retries).
+    pub fn push(&mut self, d: DmaDesc) -> bool {
+        assert_eq!(d.size % 8, 0, "DMA size must be 8-byte aligned");
+        assert_eq!(d.src % 8, 0);
+        assert_eq!(d.dst % 8, 0);
+        assert!(d.reps >= 1 && d.reps2 >= 1);
+        if !self.can_push() {
+            return false;
+        }
+        self.queue.push_back(d);
+        true
+    }
+
+    /// Number of transfers in flight (`dmstat`).
+    pub fn in_flight(&self) -> u32 {
+        self.queue.len() as u32 + self.active.is_some() as u32
+    }
+
+    pub fn busy(&self) -> bool {
+        self.in_flight() > 0
+    }
+
+    fn dir(a: &Active) -> Dir {
+        if a.desc.dst >= TCDM_BASE && a.desc.dst < crate::mem::MAIN_MEM_BASE {
+            Dir::ToTcdm
+        } else {
+            Dir::FromTcdm
+        }
+    }
+
+    /// Pop the next descriptor into the active slot if idle.
+    fn activate(&mut self) {
+        if self.active.is_none() {
+            if let Some(d) = self.queue.pop_front() {
+                self.active =
+                    Some(Active { desc: d, rep: 0, rep2: 0, off: 0 });
+            }
+        }
+    }
+
+    /// Compute this cycle's beat, reading main-memory data eagerly for
+    /// TCDM-write beats. Returns `None` when idle.
+    pub fn next_beat(&mut self, mem: &MainMemory) -> Option<DmaBeat> {
+        self.activate();
+        let a = self.active.as_ref()?;
+        let d = &a.desc;
+        let (src_addr, dst_addr) = (
+            d.src + a.rep2 * d.src_stride2 + a.rep * d.src_stride + a.off,
+            d.dst + a.rep2 * d.dst_stride2 + a.rep * d.dst_stride + a.off,
+        );
+        let remaining_row = (d.size - a.off) / 8;
+        let (tcdm_addr, dir) = match Self::dir(a) {
+            Dir::ToTcdm => (dst_addr, Dir::ToTcdm),
+            Dir::FromTcdm => (src_addr, Dir::FromTcdm),
+        };
+        // Never cross the superbank row (8-word boundary) on the TCDM
+        // side.
+        let word = (tcdm_addr - TCDM_BASE) / 8;
+        let to_boundary = 8 - (word % 8);
+        let n_words = remaining_row.min(to_boundary).min(8) as u8;
+        let mut data = [0u64; 8];
+        let write = dir == Dir::ToTcdm;
+        if write {
+            for w in 0..n_words as usize {
+                data[w] = mem.read_u64(src_addr + (w as u32) * 8);
+            }
+        }
+        Some(DmaBeat { addr: tcdm_addr, n_words, write, data })
+    }
+
+    /// The interconnect granted this cycle's beat: commit the
+    /// main-memory side and advance. `tcdm_read` carries the data for
+    /// TCDM-read beats.
+    pub fn beat_granted(
+        &mut self,
+        beat: &DmaBeat,
+        tcdm_read: &[u64; 8],
+        mem: &mut MainMemory,
+    ) {
+        let a = self.active.as_mut().expect("no active transfer");
+        let d = a.desc;
+        if !beat.write {
+            // TCDM -> main memory
+            let dst = d.dst
+                + a.rep2 * d.dst_stride2
+                + a.rep * d.dst_stride
+                + a.off;
+            for w in 0..beat.n_words as usize {
+                mem.write_u64(dst + (w as u32) * 8, tcdm_read[w]);
+            }
+        }
+        let bytes = beat.n_words as u32 * 8;
+        a.off += bytes;
+        self.beats += 1;
+        self.bytes_moved += bytes as u64;
+        if a.off >= d.size {
+            a.off = 0;
+            a.rep += 1;
+            if a.rep >= d.reps {
+                a.rep = 0;
+                a.rep2 += 1;
+                if a.rep2 >= d.reps2 {
+                    self.active = None;
+                }
+            }
+        }
+    }
+
+    /// The beat lost superbank arbitration this cycle.
+    pub fn beat_denied(&mut self) {
+        self.stall_cycles += 1;
+    }
+}
+
+/// Convenience: run a DMA transfer to completion against memory with no
+/// contention (used by tests and by experiment setup fast paths).
+pub fn run_uncontended(
+    dma: &mut Dma,
+    tcdm: &mut Tcdm,
+    mem: &mut MainMemory,
+) -> u64 {
+    let mut cycles = 0;
+    while dma.busy() {
+        if let Some(beat) = dma.next_beat(mem) {
+            let mut read = [0u64; 8];
+            if beat.write {
+                for w in 0..beat.n_words as usize {
+                    tcdm.write_u64(beat.addr + (w as u32) * 8, beat.data[w]);
+                }
+            } else {
+                for w in 0..beat.n_words as usize {
+                    read[w] = tcdm.read_u64(beat.addr + (w as u32) * 8);
+                }
+            }
+            dma.beat_granted(&beat, &read, mem);
+        }
+        cycles += 1;
+        assert!(cycles < 10_000_000, "DMA livelock");
+    }
+    cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{Topology, MAIN_MEM_BASE};
+
+    fn setup() -> (Dma, Tcdm, MainMemory) {
+        (
+            Dma::new(4),
+            Tcdm::new(Topology::Fc { banks: 32 }, 128 * 1024),
+            MainMemory::new(1 << 20),
+        )
+    }
+
+    #[test]
+    fn one_d_roundtrip() {
+        let (mut dma, mut tcdm, mut mem) = setup();
+        let xs: Vec<f64> = (0..64).map(|i| i as f64 * 1.5).collect();
+        mem.write_slice_f64(MAIN_MEM_BASE, &xs);
+        // load to TCDM
+        assert!(dma.push(DmaDesc::d2(MAIN_MEM_BASE, TCDM_BASE, 64 * 8,
+                                     0, 0, 1)));
+        let cycles = run_uncontended(&mut dma, &mut tcdm, &mut mem);
+        assert_eq!(cycles, 8, "64 words = 8 beats at 64B/cycle");
+        assert_eq!(tcdm.read_f64(TCDM_BASE + 63 * 8), 63.0 * 1.5);
+        // store back to a different main-memory region
+        assert!(dma.push(DmaDesc::d2(TCDM_BASE, MAIN_MEM_BASE + 0x8000,
+                                     64 * 8, 0, 0, 1)));
+        run_uncontended(&mut dma, &mut tcdm, &mut mem);
+        assert_eq!(mem.read_vec_f64(MAIN_MEM_BASE + 0x8000, 64), xs);
+    }
+
+    #[test]
+    fn two_d_strided_gather() {
+        let (mut dma, mut tcdm, mut mem) = setup();
+        // A 4x16 tile out of a 4x32 row-major matrix (stride 32 words).
+        for r in 0..4u32 {
+            for c in 0..32u32 {
+                mem.write_f64(
+                    MAIN_MEM_BASE + (r * 32 + c) * 8,
+                    (r * 100 + c) as f64,
+                );
+            }
+        }
+        assert!(dma.push(DmaDesc::d2(MAIN_MEM_BASE, TCDM_BASE, 16 * 8,
+                                     32 * 8, 16 * 8, 4)));
+        run_uncontended(&mut dma, &mut tcdm, &mut mem);
+        for r in 0..4u32 {
+            for c in 0..16u32 {
+                assert_eq!(
+                    tcdm.read_f64(TCDM_BASE + (r * 16 + c) * 8),
+                    (r * 100 + c) as f64,
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn beats_respect_superbank_rows() {
+        let (mut dma, mut mut_tcdm, mut mem) = setup();
+        // Destination starts 3 words into a superbank row: first beat
+        // must shorten to 5 words.
+        assert!(dma.push(DmaDesc::d2(MAIN_MEM_BASE, TCDM_BASE + 3 * 8,
+                                     16 * 8, 0, 0, 1)));
+        let beat = dma.next_beat(&mem).unwrap();
+        assert_eq!(beat.n_words, 5);
+        let _ = run_uncontended(&mut dma, &mut mut_tcdm, &mut mem);
+    }
+
+    #[test]
+    fn queue_depth_enforced() {
+        let (mut dma, _, _) = setup();
+        let d = DmaDesc::d2(MAIN_MEM_BASE, TCDM_BASE, 8, 0, 0, 1);
+        for _ in 0..4 {
+            assert!(dma.push(d));
+        }
+        assert!(!dma.push(d));
+        assert_eq!(dma.in_flight(), 4);
+    }
+
+    #[test]
+    fn three_d_strided_scatter() {
+        let (mut dma, mut tcdm, mut mem) = setup();
+        // 2 outer reps of (3 chunks of 64B): the grouped-layout pattern.
+        for w in 0..48u32 {
+            mem.write_u64(MAIN_MEM_BASE + w * 8, w as u64);
+        }
+        assert!(dma.push(DmaDesc {
+            src: MAIN_MEM_BASE,
+            dst: TCDM_BASE,
+            size: 64,
+            src_stride: 64,
+            dst_stride: 32 * 8, // one chunk per 32-word "row"
+            reps: 3,
+            src_stride2: 3 * 64,
+            dst_stride2: 3 * 32 * 8,
+            reps2: 2,
+        }));
+        run_uncontended(&mut dma, &mut tcdm, &mut mem);
+        for outer in 0..2u32 {
+            for chunk in 0..3u32 {
+                for w in 0..8u32 {
+                    let addr = TCDM_BASE
+                        + outer * 3 * 32 * 8
+                        + chunk * 32 * 8
+                        + w * 8;
+                    assert_eq!(
+                        tcdm.read_u64(addr),
+                        ((outer * 3 + chunk) * 8 + w) as u64,
+                    );
+                }
+            }
+        }
+        assert_eq!(dma.bytes_moved, 384);
+    }
+
+    #[test]
+    fn stats_account_bytes() {
+        let (mut dma, mut tcdm, mut mem) = setup();
+        dma.push(DmaDesc::d2(MAIN_MEM_BASE, TCDM_BASE, 256, 0, 0, 2));
+        run_uncontended(&mut dma, &mut tcdm, &mut mem);
+        assert_eq!(dma.bytes_moved, 512);
+        assert_eq!(dma.beats, 8);
+    }
+}

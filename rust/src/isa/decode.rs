@@ -1,0 +1,253 @@
+//! RV32 instruction decoding — the inverse of [`super::encode`].
+
+use super::{Instr, SsrField};
+
+fn rd(w: u32) -> u8 {
+    ((w >> 7) & 0x1F) as u8
+}
+
+fn rs1(w: u32) -> u8 {
+    ((w >> 15) & 0x1F) as u8
+}
+
+fn rs2(w: u32) -> u8 {
+    ((w >> 20) & 0x1F) as u8
+}
+
+fn rs3(w: u32) -> u8 {
+    ((w >> 27) & 0x1F) as u8
+}
+
+fn f3(w: u32) -> u32 {
+    (w >> 12) & 0x7
+}
+
+fn f7(w: u32) -> u32 {
+    w >> 25
+}
+
+fn imm_i(w: u32) -> i32 {
+    (w as i32) >> 20
+}
+
+fn imm_s(w: u32) -> i32 {
+    (((w as i32) >> 25) << 5) | ((w >> 7) & 0x1F) as i32
+}
+
+fn imm_b(w: u32) -> i32 {
+    let sign = (w as i32) >> 31; // imm[12]
+    ((sign << 12)
+        | (((w >> 7) & 1) as i32) << 11
+        | (((w >> 25) & 0x3F) as i32) << 5
+        | (((w >> 8) & 0xF) as i32) << 1) as i32
+}
+
+fn imm_u(w: u32) -> i32 {
+    (w & 0xFFFF_F000) as i32
+}
+
+fn imm_j(w: u32) -> i32 {
+    let sign = (w as i32) >> 31; // imm[20]
+    (sign << 20)
+        | ((((w >> 12) & 0xFF) as i32) << 12)
+        | ((((w >> 20) & 1) as i32) << 11)
+        | ((((w >> 21) & 0x3FF) as i32) << 1)
+}
+
+/// Decode a 32-bit word; `None` for encodings outside the supported set.
+pub fn decode(w: u32) -> Option<Instr> {
+    use Instr::*;
+    let op = w & 0x7F;
+    Some(match op {
+        0b0110111 => Lui { rd: rd(w), imm: imm_u(w) },
+        0b0010111 => Auipc { rd: rd(w), imm: imm_u(w) },
+        0b1101111 => Jal { rd: rd(w), off: imm_j(w) },
+        0b0010011 => match f3(w) {
+            0b000 => {
+                if w == 0x0000_0013 {
+                    Nop
+                } else {
+                    Addi { rd: rd(w), rs1: rs1(w), imm: imm_i(w) }
+                }
+            }
+            0b001 => Slli { rd: rd(w), rs1: rs1(w), shamt: rs2(w) },
+            0b101 => Srli { rd: rd(w), rs1: rs1(w), shamt: rs2(w) },
+            0b111 => Andi { rd: rd(w), rs1: rs1(w), imm: imm_i(w) },
+            _ => return None,
+        },
+        0b0110011 => match (f7(w), f3(w)) {
+            (0b0000000, 0b000) => Add { rd: rd(w), rs1: rs1(w), rs2: rs2(w) },
+            (0b0100000, 0b000) => Sub { rd: rd(w), rs1: rs1(w), rs2: rs2(w) },
+            (0b0000001, 0b000) => Mul { rd: rd(w), rs1: rs1(w), rs2: rs2(w) },
+            _ => return None,
+        },
+        0b1100011 => {
+            let (r1, r2, off) = (rs1(w), rs2(w), imm_b(w));
+            match f3(w) {
+                0b000 => Beq { rs1: r1, rs2: r2, off },
+                0b001 => Bne { rs1: r1, rs2: r2, off },
+                0b100 => Blt { rs1: r1, rs2: r2, off },
+                0b101 => Bge { rs1: r1, rs2: r2, off },
+                _ => return None,
+            }
+        }
+        0b0000011 if f3(w) == 0b010 => {
+            Lw { rd: rd(w), rs1: rs1(w), imm: imm_i(w) }
+        }
+        0b0100011 if f3(w) == 0b010 => {
+            Sw { rs2: rs2(w), rs1: rs1(w), imm: imm_s(w) }
+        }
+        0b1110011 => {
+            let csr = (w >> 20) as u16;
+            match f3(w) {
+                0b000 if w == 0x0000_0073 => Ecall,
+                0b001 => Csrrw { rd: rd(w), csr, rs1: rs1(w) },
+                0b010 => Csrrs { rd: rd(w), csr, rs1: rs1(w) },
+                0b110 => Csrrsi { csr, imm: rs1(w) },
+                0b111 => Csrrci { csr, imm: rs1(w) },
+                _ => return None,
+            }
+        }
+        0b0000111 if f3(w) == 0b011 => {
+            Fld { frd: rd(w), rs1: rs1(w), imm: imm_i(w) }
+        }
+        0b0100111 if f3(w) == 0b011 => {
+            Fsd { frs2: rs2(w), rs1: rs1(w), imm: imm_s(w) }
+        }
+        0b1000011 if (w >> 25) & 0x3 == 0b01 => FmaddD {
+            frd: rd(w),
+            frs1: rs1(w),
+            frs2: rs2(w),
+            frs3: rs3(w),
+        },
+        0b1010011 => match f7(w) {
+            0b0000001 => FaddD { frd: rd(w), frs1: rs1(w), frs2: rs2(w) },
+            0b0000101 => FsubD { frd: rd(w), frs1: rs1(w), frs2: rs2(w) },
+            0b0001001 => FmulD { frd: rd(w), frs1: rs1(w), frs2: rs2(w) },
+            0b0010001 if f3(w) == 0 => {
+                FsgnjD { frd: rd(w), frs1: rs1(w), frs2: rs2(w) }
+            }
+            0b1101001 if rs2(w) == 0 => FcvtDW { frd: rd(w), rs1: rs1(w) },
+            _ => return None,
+        },
+        // custom-1: FREP
+        0b0101011 => Frep {
+            outer: f3(w) == 0,
+            iters_reg: rs1(w),
+            n_inst: (imm_i(w) & 0xFF) as u8,
+        },
+        // custom-2: scfgw
+        0b1011011 if f3(w) == 0b010 => {
+            let imm = imm_i(w);
+            SsrCfgW {
+                value: rs1(w),
+                ssr: (imm & 0x7) as u8,
+                field: SsrField::from_word(((imm >> 3) & 0x1F) as u8)?,
+            }
+        }
+        // custom-0: Xdma + barrier
+        0b0001011 => match f3(w) {
+            0b000 => Dmsrc { rs1: rs1(w) },
+            0b001 => Dmdst { rs1: rs1(w) },
+            0b010 if f7(w) == 0 => Dmstr { rs1: rs1(w), rs2: rs2(w) },
+            0b010 if f7(w) == 1 => Dmstr2 { rs1: rs1(w), rs2: rs2(w) },
+            0b011 if f7(w) == 0 => Dmrep { rs1: rs1(w) },
+            0b011 if f7(w) == 1 => Dmrep2 { rs1: rs1(w) },
+            0b100 => Dmcpy { rd: rd(w), rs1: rs1(w) },
+            0b101 => Dmstat { rd: rd(w) },
+            0b110 => Barrier,
+            _ => return None,
+        },
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encode::encode;
+    use super::*;
+    use crate::isa::SsrField;
+
+    fn roundtrip(i: Instr) {
+        let w = encode(&i);
+        assert_eq!(decode(w), Some(i), "word {w:#010x}");
+    }
+
+    #[test]
+    fn roundtrip_integer() {
+        roundtrip(Instr::Lui { rd: 3, imm: 0x7FFF_F000u32 as i32 });
+        roundtrip(Instr::Auipc { rd: 4, imm: 0x1000 });
+        roundtrip(Instr::Addi { rd: 1, rs1: 2, imm: -42 });
+        roundtrip(Instr::Slli { rd: 1, rs1: 2, shamt: 31 });
+        roundtrip(Instr::Srli { rd: 1, rs1: 2, shamt: 3 });
+        roundtrip(Instr::Andi { rd: 9, rs1: 8, imm: 255 });
+        roundtrip(Instr::Add { rd: 5, rs1: 6, rs2: 7 });
+        roundtrip(Instr::Sub { rd: 5, rs1: 6, rs2: 7 });
+        roundtrip(Instr::Mul { rd: 5, rs1: 6, rs2: 7 });
+    }
+
+    #[test]
+    fn roundtrip_control() {
+        roundtrip(Instr::Beq { rs1: 1, rs2: 2, off: -4096 });
+        roundtrip(Instr::Bne { rs1: 1, rs2: 2, off: 4094 });
+        roundtrip(Instr::Blt { rs1: 3, rs2: 4, off: -2 });
+        roundtrip(Instr::Bge { rs1: 3, rs2: 4, off: 2048 });
+        roundtrip(Instr::Jal { rd: 1, off: -1048576 });
+        roundtrip(Instr::Jal { rd: 0, off: 1048574 });
+    }
+
+    #[test]
+    fn roundtrip_memory_csr() {
+        roundtrip(Instr::Lw { rd: 1, rs1: 2, imm: 2047 });
+        roundtrip(Instr::Sw { rs2: 1, rs1: 2, imm: -2048 });
+        roundtrip(Instr::Csrrw { rd: 0, csr: 0x7C0, rs1: 5 });
+        roundtrip(Instr::Csrrs { rd: 3, csr: 0xB00, rs1: 0 });
+        roundtrip(Instr::Csrrsi { csr: 0x7C0, imm: 1 });
+        roundtrip(Instr::Csrrci { csr: 0x7C0, imm: 1 });
+        roundtrip(Instr::Ecall);
+        roundtrip(Instr::Nop);
+    }
+
+    #[test]
+    fn roundtrip_fp() {
+        roundtrip(Instr::Fld { frd: 31, rs1: 2, imm: 8 });
+        roundtrip(Instr::Fsd { frs2: 30, rs1: 2, imm: -8 });
+        roundtrip(Instr::FmaddD { frd: 10, frs1: 0, frs2: 1, frs3: 10 });
+        roundtrip(Instr::FmulD { frd: 11, frs1: 0, frs2: 1 });
+        roundtrip(Instr::FaddD { frd: 12, frs1: 13, frs2: 14 });
+        roundtrip(Instr::FsubD { frd: 12, frs1: 13, frs2: 14 });
+        roundtrip(Instr::FsgnjD { frd: 15, frs1: 16, frs2: 16 });
+        roundtrip(Instr::FcvtDW { frd: 17, rs1: 9 });
+    }
+
+    #[test]
+    fn roundtrip_snitch_custom() {
+        roundtrip(Instr::Frep { outer: true, iters_reg: 5, n_inst: 7 });
+        roundtrip(Instr::Frep { outer: false, iters_reg: 6, n_inst: 23 });
+        roundtrip(Instr::SsrCfgW {
+            value: 9,
+            ssr: 2,
+            field: SsrField::Stride(3),
+        });
+        roundtrip(Instr::SsrCfgW {
+            value: 9,
+            ssr: 0,
+            field: SsrField::ReadBase(3),
+        });
+        roundtrip(Instr::Dmsrc { rs1: 10 });
+        roundtrip(Instr::Dmdst { rs1: 11 });
+        roundtrip(Instr::Dmstr { rs1: 12, rs2: 13 });
+        roundtrip(Instr::Dmrep { rs1: 14 });
+        roundtrip(Instr::Dmstr2 { rs1: 12, rs2: 13 });
+        roundtrip(Instr::Dmrep2 { rs1: 14 });
+        roundtrip(Instr::Dmcpy { rd: 15, rs1: 16 });
+        roundtrip(Instr::Dmstat { rd: 17 });
+        roundtrip(Instr::Barrier);
+    }
+
+    #[test]
+    fn garbage_decodes_to_none() {
+        assert_eq!(decode(0xFFFF_FFFF), None);
+        assert_eq!(decode(0x0000_0000), None);
+    }
+}

@@ -1,0 +1,119 @@
+//! Disassembler — used by execution traces and debugging output.
+
+use super::{Instr, SsrField};
+
+fn x(r: u8) -> String {
+    format!("x{r}")
+}
+
+fn f(r: u8) -> String {
+    format!("f{r}")
+}
+
+/// Render one instruction in a GNU-as-like syntax.
+pub fn disasm(i: &Instr) -> String {
+    use Instr::*;
+    match *i {
+        Lui { rd, imm } => format!("lui {}, {:#x}", x(rd), (imm as u32) >> 12),
+        Auipc { rd, imm } => format!("auipc {}, {:#x}", x(rd), imm),
+        Addi { rd, rs1, imm } => format!("addi {}, {}, {}", x(rd), x(rs1), imm),
+        Slli { rd, rs1, shamt } => {
+            format!("slli {}, {}, {}", x(rd), x(rs1), shamt)
+        }
+        Srli { rd, rs1, shamt } => {
+            format!("srli {}, {}, {}", x(rd), x(rs1), shamt)
+        }
+        Andi { rd, rs1, imm } => format!("andi {}, {}, {}", x(rd), x(rs1), imm),
+        Add { rd, rs1, rs2 } => format!("add {}, {}, {}", x(rd), x(rs1), x(rs2)),
+        Sub { rd, rs1, rs2 } => format!("sub {}, {}, {}", x(rd), x(rs1), x(rs2)),
+        Mul { rd, rs1, rs2 } => format!("mul {}, {}, {}", x(rd), x(rs1), x(rs2)),
+        Beq { rs1, rs2, off } => format!("beq {}, {}, {}", x(rs1), x(rs2), off),
+        Bne { rs1, rs2, off } => format!("bne {}, {}, {}", x(rs1), x(rs2), off),
+        Blt { rs1, rs2, off } => format!("blt {}, {}, {}", x(rs1), x(rs2), off),
+        Bge { rs1, rs2, off } => format!("bge {}, {}, {}", x(rs1), x(rs2), off),
+        Jal { rd, off } => format!("jal {}, {}", x(rd), off),
+        Lw { rd, rs1, imm } => format!("lw {}, {}({})", x(rd), imm, x(rs1)),
+        Sw { rs2, rs1, imm } => format!("sw {}, {}({})", x(rs2), imm, x(rs1)),
+        Csrrw { rd, csr, rs1 } => {
+            format!("csrrw {}, {:#x}, {}", x(rd), csr, x(rs1))
+        }
+        Csrrs { rd, csr, rs1 } => {
+            format!("csrrs {}, {:#x}, {}", x(rd), csr, x(rs1))
+        }
+        Csrrsi { csr, imm } => format!("csrrsi x0, {csr:#x}, {imm}"),
+        Csrrci { csr, imm } => format!("csrrci x0, {csr:#x}, {imm}"),
+        Fld { frd, rs1, imm } => format!("fld {}, {}({})", f(frd), imm, x(rs1)),
+        Fsd { frs2, rs1, imm } => {
+            format!("fsd {}, {}({})", f(frs2), imm, x(rs1))
+        }
+        FmaddD { frd, frs1, frs2, frs3 } => format!(
+            "fmadd.d {}, {}, {}, {}",
+            f(frd), f(frs1), f(frs2), f(frs3)
+        ),
+        FmulD { frd, frs1, frs2 } => {
+            format!("fmul.d {}, {}, {}", f(frd), f(frs1), f(frs2))
+        }
+        FaddD { frd, frs1, frs2 } => {
+            format!("fadd.d {}, {}, {}", f(frd), f(frs1), f(frs2))
+        }
+        FsubD { frd, frs1, frs2 } => {
+            format!("fsub.d {}, {}, {}", f(frd), f(frs1), f(frs2))
+        }
+        FsgnjD { frd, frs1, frs2 } if frs1 == frs2 => {
+            format!("fmv.d {}, {}", f(frd), f(frs1))
+        }
+        FsgnjD { frd, frs1, frs2 } => {
+            format!("fsgnj.d {}, {}, {}", f(frd), f(frs1), f(frs2))
+        }
+        FcvtDW { frd, rs1 } => format!("fcvt.d.w {}, {}", f(frd), x(rs1)),
+        Frep { outer, iters_reg, n_inst } => format!(
+            "frep.{} {}, {}",
+            if outer { "o" } else { "i" },
+            x(iters_reg),
+            n_inst
+        ),
+        SsrCfgW { value, ssr, field } => {
+            let fname = match field {
+                SsrField::Repeat => "repeat".to_string(),
+                SsrField::Bound(d) => format!("bound[{d}]"),
+                SsrField::Stride(d) => format!("stride[{d}]"),
+                SsrField::ReadBase(d) => format!("rbase.{}d", d + 1),
+                SsrField::WriteBase(d) => format!("wbase.{}d", d + 1),
+            };
+            format!("scfgw {}, ssr{ssr}.{fname}", x(value))
+        }
+        Dmsrc { rs1 } => format!("dmsrc {}", x(rs1)),
+        Dmdst { rs1 } => format!("dmdst {}", x(rs1)),
+        Dmstr { rs1, rs2 } => format!("dmstr {}, {}", x(rs1), x(rs2)),
+        Dmrep { rs1 } => format!("dmrep {}", x(rs1)),
+        Dmstr2 { rs1, rs2 } => format!("dmstr2 {}, {}", x(rs1), x(rs2)),
+        Dmrep2 { rs1 } => format!("dmrep2 {}", x(rs1)),
+        Dmcpy { rd, rs1 } => format!("dmcpy {}, {}", x(rd), x(rs1)),
+        Dmstat { rd } => format!("dmstat {}", x(rd)),
+        Barrier => "barrier".to_string(),
+        Ecall => "ecall".to_string(),
+        Nop => "nop".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn readable_output() {
+        assert_eq!(
+            disasm(&Instr::FmaddD { frd: 10, frs1: 0, frs2: 1, frs3: 10 }),
+            "fmadd.d f10, f0, f1, f10"
+        );
+        assert_eq!(
+            disasm(&Instr::Frep { outer: true, iters_reg: 5, n_inst: 8 }),
+            "frep.o x5, 8"
+        );
+        assert_eq!(
+            disasm(&Instr::FsgnjD { frd: 3, frs1: 4, frs2: 4 }),
+            "fmv.d f3, f4"
+        );
+        assert_eq!(disasm(&Instr::Barrier), "barrier");
+    }
+}

@@ -1,0 +1,236 @@
+//! RV32 instruction encoding.
+//!
+//! Standard RV32IMFD encodings follow the ISA manual. Snitch custom
+//! extensions occupy the custom opcode spaces:
+//!
+//! * `custom-1` (0b0101011): FREP — `funct3`=0 outer / 1 inner,
+//!   rs1 = iteration-count register, imm[11:0] = body length - 1.
+//!   (Upstream Snitch packs stagger fields too; we retain the register/
+//!   body-length fields and drop staggering, which the paper never uses.)
+//! * `custom-2` (0b1011011): `scfgw` — rs1 = value,
+//!   imm[11:0] = ssr | field<<3.
+//! * `custom-0` (0b0001011): Xdma + barrier, distinguished by funct3:
+//!   0 dmsrc, 1 dmdst, 2 dmstr, 3 dmrep, 4 dmcpy, 5 dmstat, 6 barrier;
+//!   funct7=1 on funct3 2/3 selects the 3rd-dimension variants
+//!   (dmstr2/dmrep2).
+
+use super::Instr;
+
+const OP_LUI: u32 = 0b0110111;
+const OP_AUIPC: u32 = 0b0010111;
+const OP_JAL: u32 = 0b1101111;
+const OP_BRANCH: u32 = 0b1100011;
+const OP_LOAD: u32 = 0b0000011;
+const OP_STORE: u32 = 0b0100011;
+const OP_IMM: u32 = 0b0010011;
+const OP_OP: u32 = 0b0110011;
+const OP_SYSTEM: u32 = 0b1110011;
+const OP_LOAD_FP: u32 = 0b0000111;
+const OP_STORE_FP: u32 = 0b0100111;
+const OP_MADD: u32 = 0b1000011;
+const OP_FP: u32 = 0b1010011;
+const OP_CUSTOM0: u32 = 0b0001011;
+const OP_CUSTOM1: u32 = 0b0101011;
+const OP_CUSTOM2: u32 = 0b1011011;
+
+fn r_type(f7: u32, rs2: u8, rs1: u8, f3: u32, rd: u8, op: u32) -> u32 {
+    (f7 << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (f3 << 12)
+        | ((rd as u32) << 7)
+        | op
+}
+
+fn i_type(imm: i32, rs1: u8, f3: u32, rd: u8, op: u32) -> u32 {
+    (((imm as u32) & 0xFFF) << 20)
+        | ((rs1 as u32) << 15)
+        | (f3 << 12)
+        | ((rd as u32) << 7)
+        | op
+}
+
+fn s_type(imm: i32, rs2: u8, rs1: u8, f3: u32, op: u32) -> u32 {
+    let imm = imm as u32;
+    (((imm >> 5) & 0x7F) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (f3 << 12)
+        | ((imm & 0x1F) << 7)
+        | op
+}
+
+fn b_type(off: i32, rs2: u8, rs1: u8, f3: u32, op: u32) -> u32 {
+    let o = off as u32;
+    (((o >> 12) & 1) << 31)
+        | (((o >> 5) & 0x3F) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (f3 << 12)
+        | (((o >> 1) & 0xF) << 8)
+        | (((o >> 11) & 1) << 7)
+        | op
+}
+
+fn u_type(imm: i32, rd: u8, op: u32) -> u32 {
+    ((imm as u32) & 0xFFFF_F000) | ((rd as u32) << 7) | op
+}
+
+fn j_type(off: i32, rd: u8, op: u32) -> u32 {
+    let o = off as u32;
+    (((o >> 20) & 1) << 31)
+        | (((o >> 1) & 0x3FF) << 21)
+        | (((o >> 11) & 1) << 20)
+        | (((o >> 12) & 0xFF) << 12)
+        | ((rd as u32) << 7)
+        | op
+}
+
+fn r4_type(rs3: u8, fmt: u32, rs2: u8, rs1: u8, f3: u32, rd: u8,
+           op: u32) -> u32 {
+    ((rs3 as u32) << 27)
+        | (fmt << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (f3 << 12)
+        | ((rd as u32) << 7)
+        | op
+}
+
+fn csr_type(csr: u16, rs1_or_imm: u8, f3: u32, rd: u8) -> u32 {
+    ((csr as u32) << 20)
+        | ((rs1_or_imm as u32) << 15)
+        | (f3 << 12)
+        | ((rd as u32) << 7)
+        | OP_SYSTEM
+}
+
+/// Encode one instruction to its 32-bit word.
+pub fn encode(i: &Instr) -> u32 {
+    use Instr::*;
+    match *i {
+        Lui { rd, imm } => u_type(imm, rd, OP_LUI),
+        Auipc { rd, imm } => u_type(imm, rd, OP_AUIPC),
+        Addi { rd, rs1, imm } => i_type(imm, rs1, 0b000, rd, OP_IMM),
+        Slli { rd, rs1, shamt } => {
+            i_type(shamt as i32, rs1, 0b001, rd, OP_IMM)
+        }
+        Srli { rd, rs1, shamt } => {
+            i_type(shamt as i32, rs1, 0b101, rd, OP_IMM)
+        }
+        Andi { rd, rs1, imm } => i_type(imm, rs1, 0b111, rd, OP_IMM),
+        Add { rd, rs1, rs2 } => r_type(0, rs2, rs1, 0b000, rd, OP_OP),
+        Sub { rd, rs1, rs2 } => {
+            r_type(0b0100000, rs2, rs1, 0b000, rd, OP_OP)
+        }
+        Mul { rd, rs1, rs2 } => {
+            r_type(0b0000001, rs2, rs1, 0b000, rd, OP_OP)
+        }
+        Beq { rs1, rs2, off } => b_type(off, rs2, rs1, 0b000, OP_BRANCH),
+        Bne { rs1, rs2, off } => b_type(off, rs2, rs1, 0b001, OP_BRANCH),
+        Blt { rs1, rs2, off } => b_type(off, rs2, rs1, 0b100, OP_BRANCH),
+        Bge { rs1, rs2, off } => b_type(off, rs2, rs1, 0b101, OP_BRANCH),
+        Jal { rd, off } => j_type(off, rd, OP_JAL),
+        Lw { rd, rs1, imm } => i_type(imm, rs1, 0b010, rd, OP_LOAD),
+        Sw { rs2, rs1, imm } => s_type(imm, rs2, rs1, 0b010, OP_STORE),
+        Csrrw { rd, csr, rs1 } => csr_type(csr, rs1, 0b001, rd),
+        Csrrs { rd, csr, rs1 } => csr_type(csr, rs1, 0b010, rd),
+        Csrrsi { csr, imm } => csr_type(csr, imm, 0b110, 0),
+        Csrrci { csr, imm } => csr_type(csr, imm, 0b111, 0),
+        Fld { frd, rs1, imm } => i_type(imm, rs1, 0b011, frd, OP_LOAD_FP),
+        Fsd { frs2, rs1, imm } => {
+            s_type(imm, frs2, rs1, 0b011, OP_STORE_FP)
+        }
+        FmaddD { frd, frs1, frs2, frs3 } => {
+            r4_type(frs3, 0b01, frs2, frs1, 0b111, frd, OP_MADD)
+        }
+        FmulD { frd, frs1, frs2 } => {
+            r_type(0b0001001, frs2, frs1, 0b111, frd, OP_FP)
+        }
+        FaddD { frd, frs1, frs2 } => {
+            r_type(0b0000001, frs2, frs1, 0b111, frd, OP_FP)
+        }
+        FsubD { frd, frs1, frs2 } => {
+            r_type(0b0000101, frs2, frs1, 0b111, frd, OP_FP)
+        }
+        FsgnjD { frd, frs1, frs2 } => {
+            r_type(0b0010001, frs2, frs1, 0b000, frd, OP_FP)
+        }
+        FcvtDW { frd, rs1 } => {
+            r_type(0b1101001, 0, rs1, 0b000, frd, OP_FP)
+        }
+        Frep { outer, iters_reg, n_inst } => i_type(
+            n_inst as i32,
+            iters_reg,
+            if outer { 0b000 } else { 0b001 },
+            0,
+            OP_CUSTOM1,
+        ),
+        SsrCfgW { value, ssr, field } => i_type(
+            (ssr as i32) | ((field.to_word() as i32) << 3),
+            value,
+            0b010,
+            0,
+            OP_CUSTOM2,
+        ),
+        Dmsrc { rs1 } => r_type(0, 0, rs1, 0b000, 0, OP_CUSTOM0),
+        Dmdst { rs1 } => r_type(0, 0, rs1, 0b001, 0, OP_CUSTOM0),
+        Dmstr { rs1, rs2 } => r_type(0, rs2, rs1, 0b010, 0, OP_CUSTOM0),
+        Dmrep { rs1 } => r_type(0, 0, rs1, 0b011, 0, OP_CUSTOM0),
+        Dmstr2 { rs1, rs2 } => {
+            r_type(1, rs2, rs1, 0b010, 0, OP_CUSTOM0)
+        }
+        Dmrep2 { rs1 } => r_type(1, 0, rs1, 0b011, 0, OP_CUSTOM0),
+        Dmcpy { rd, rs1 } => r_type(0, 0, rs1, 0b100, rd, OP_CUSTOM0),
+        Dmstat { rd } => r_type(0, 0, 0, 0b101, rd, OP_CUSTOM0),
+        Barrier => r_type(0, 0, 0, 0b110, 0, OP_CUSTOM0),
+        Ecall => i_type(0, 0, 0b000, 0, OP_SYSTEM),
+        Nop => i_type(0, 0, 0b000, 0, OP_IMM),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_encodings() {
+        // Cross-checked against riscv-gnu-toolchain output.
+        // addi x1, x2, 42 -> 0x02A10093
+        assert_eq!(
+            encode(&Instr::Addi { rd: 1, rs1: 2, imm: 42 }),
+            0x02A1_0093
+        );
+        // lui x5, 0x12345000 -> 0x123452B7
+        assert_eq!(
+            encode(&Instr::Lui { rd: 5, imm: 0x12345 << 12 }),
+            0x1234_52B7
+        );
+        // lw x6, 8(x7) -> 0x0083A303
+        assert_eq!(encode(&Instr::Lw { rd: 6, rs1: 7, imm: 8 }), 0x0083_A303);
+        // sw x6, 12(x7) -> 0x0063A623
+        assert_eq!(
+            encode(&Instr::Sw { rs2: 6, rs1: 7, imm: 12 }),
+            0x0063_A623
+        );
+        // fmadd.d f10, f0, f1, f10 -> rs3=01010 fmt=01
+        let w = encode(&Instr::FmaddD { frd: 10, frs1: 0, frs2: 1,
+                                        frs3: 10 });
+        assert_eq!(w & 0x7F, 0b1000011);
+        assert_eq!((w >> 27) & 0x1F, 10);
+        // nop == addi x0,x0,0 -> 0x00000013
+        assert_eq!(encode(&Instr::Nop), 0x0000_0013);
+        // ecall -> 0x00000073
+        assert_eq!(encode(&Instr::Ecall), 0x0000_0073);
+    }
+
+    #[test]
+    fn branch_offset_bits() {
+        // bne x1, x2, -4: B-type immediate encoding of -4.
+        let w = encode(&Instr::Bne { rs1: 1, rs2: 2, off: -4 });
+        assert_eq!(w & 0x7F, 0b1100011);
+        assert_eq!((w >> 12) & 0x7, 0b001);
+        // negative offsets set the sign bit (imm[12] at bit 31).
+        assert_eq!(w >> 31, 1);
+    }
+}

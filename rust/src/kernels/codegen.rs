@@ -1,0 +1,402 @@
+//! Kernel code generation — emits the paper's matmul kernels as real
+//! instruction streams.
+//!
+//! Compute cores run the Fig. 1b kernel: SSR-fed, FREP-driven, unroll-8
+//! dot products with peeled first (fmul) and last (fmadd → ft2)
+//! iterations.  Two variants:
+//!
+//! * **baseline** — the inner K loop maps to `frep`, the collapsed
+//!   (M/8·N/8)-iteration outer loop is software (`addi` + `bne`): the
+//!   two loop-management instructions per iteration of §III-A.
+//! * **zonl** — the outer loop maps to a second, *outer* FREP: the
+//!   whole tile becomes one imperfect loop nest (fmul×8 ; [fmadd×8]^K-2
+//!   ; fmadd×8) executed entirely from the sequencer ring buffer.
+//!
+//! The DM core runs the double-buffer schedule: load phase-0 tiles,
+//! then per pass store the previous C tile and load the next A/B tiles
+//! while the compute cores work, meeting them at a cluster barrier.
+
+use crate::cluster::ClusterConfig;
+use crate::isa::asm::Asm;
+use crate::isa::{csr, reg, Instr, Program, SsrField};
+use crate::mem::MAIN_MEM_BASE;
+
+use super::layout::BufferMap;
+use super::tiling::Tiling;
+
+/// Column unroll factor (the paper's implementations use 8).
+pub const UNROLL: usize = 8;
+/// Compute cores per cluster.
+pub const N_CORES: usize = 8;
+
+/// Main-memory placement of the operand matrices.
+#[derive(Clone, Copy, Debug)]
+pub struct MainLayout {
+    pub a: u32,
+    pub b: u32,
+    pub c: u32,
+}
+
+pub fn main_layout(t: &Tiling) -> MainLayout {
+    let align = |x: u32| (x + 63) & !63;
+    let a = MAIN_MEM_BASE;
+    let b = align(a + (t.m * t.k * 8) as u32);
+    let c = align(b + (t.k * t.n * 8) as u32);
+    MainLayout { a, b, c }
+}
+
+/// One li+scfgw pair.
+fn cfg(a: &mut Asm, ssr: u8, field: SsrField, value: u32) {
+    a.li(reg::T0, value);
+    a.push(Instr::SsrCfgW { value: reg::T0, ssr, field });
+}
+
+/// Emit the SSR loop geometry (bounds/strides/repeat) for this tiling.
+/// Only needed once per program; per-pass re-arming writes bases only.
+///
+/// Works for both layouts through the chunk abstraction: a tile row is
+/// a sequence of 8-word chunks spaced `chunk_stride` apart (64 B when
+/// linear, one hyperbank row when grouped), rows are `row_stride`
+/// apart.  The K walk of the A stream decomposes into (k_lo: within a
+/// chunk) x (k_hi: across chunks) — 4 dims plus the element-repeat,
+/// exactly Snitch's SSR capability.
+fn emit_ssr_geometry(a: &mut Asm, t: &Tiling, map: &BufferMap) {
+    let u = UNROLL as u32;
+    let k = t.k as u32;
+    let jn = (t.nt / UNROLL) as u32; // column groups
+    let im = (t.mt / N_CORES) as u32; // rows per core
+    // ssr0 = A reads: repeat u; [k_lo (8B x8), k_hi (chunk), j (0),
+    //                            i (8 rows)]
+    cfg(a, 0, SsrField::Repeat, u - 1);
+    cfg(a, 0, SsrField::Bound(0), 8 - 1);
+    cfg(a, 0, SsrField::Stride(0), 8);
+    cfg(a, 0, SsrField::Bound(1), k / 8 - 1);
+    cfg(a, 0, SsrField::Stride(1), map.a[0].chunk_stride);
+    cfg(a, 0, SsrField::Bound(2), jn - 1);
+    cfg(a, 0, SsrField::Stride(2), 0);
+    cfg(a, 0, SsrField::Bound(3), im - 1);
+    cfg(a, 0, SsrField::Stride(3), 8 * map.a[0].row_stride);
+    // ssr1 = B reads: [u (8B), k (row), j (chunk), i (0)]
+    cfg(a, 1, SsrField::Bound(0), u - 1);
+    cfg(a, 1, SsrField::Stride(0), 8);
+    cfg(a, 1, SsrField::Bound(1), k - 1);
+    cfg(a, 1, SsrField::Stride(1), map.b[0].row_stride);
+    cfg(a, 1, SsrField::Bound(2), jn - 1);
+    cfg(a, 1, SsrField::Stride(2), map.b[0].chunk_stride);
+    cfg(a, 1, SsrField::Bound(3), im - 1);
+    cfg(a, 1, SsrField::Stride(3), 0);
+    // ssr2 = C writes: [u (8B), j (chunk), i (8 rows)]
+    cfg(a, 2, SsrField::Bound(0), u - 1);
+    cfg(a, 2, SsrField::Stride(0), 8);
+    cfg(a, 2, SsrField::Bound(1), jn - 1);
+    cfg(a, 2, SsrField::Stride(1), map.c[0].chunk_stride);
+    cfg(a, 2, SsrField::Bound(2), im - 1);
+    cfg(a, 2, SsrField::Stride(2), 8 * map.c[0].row_stride);
+}
+
+/// The 24-instruction kernel body: peeled fmul row, FREP'd fmadd row,
+/// peeled writeback row.
+fn emit_kernel_body(a: &mut Asm, k: usize, zonl_nest: bool) {
+    debug_assert!(k >= 3, "kernel needs K >= 3 for the peel structure");
+    // first iteration: c_u = a * b  (avoids zeroing the accumulators)
+    for uu in 0..UNROLL as u8 {
+        a.push(Instr::FmulD {
+            frd: reg::FA0 + uu,
+            frs1: reg::FT0,
+            frs2: reg::FT1,
+        });
+    }
+    // middle iterations: hardware loop over the 8-instruction body
+    a.li(reg::T2, (k - 2 - 1) as u32); // frep iterates value+1 times
+    a.push(Instr::Frep {
+        outer: !zonl_nest, // frep.i when nested inside an outer frep.o
+        iters_reg: reg::T2,
+        n_inst: (UNROLL - 1) as u8,
+    });
+    for uu in 0..UNROLL as u8 {
+        a.push(Instr::FmaddD {
+            frd: reg::FA0 + uu,
+            frs1: reg::FT0,
+            frs2: reg::FT1,
+            frs3: reg::FA0 + uu,
+        });
+    }
+    // last iteration: results stream to memory through ft2
+    for uu in 0..UNROLL as u8 {
+        a.push(Instr::FmaddD {
+            frd: reg::FT2,
+            frs1: reg::FT0,
+            frs2: reg::FT1,
+            frs3: reg::FA0 + uu,
+        });
+    }
+}
+
+/// Build the program for compute core `core` (0..8).
+pub fn compute_program(
+    core: usize,
+    t: &Tiling,
+    map: &BufferMap,
+    zonl: bool,
+) -> Program {
+    assert!(core < N_CORES);
+    assert_eq!(t.mt % N_CORES, 0, "tile height must cover all 8 cores");
+    assert_eq!(t.nt % UNROLL, 0);
+    let mut a = Asm::new();
+    let (grid_m, grid_n) = t.grid();
+    let outer_iters = (t.mt / N_CORES) * (t.nt / UNROLL);
+
+    // Stream geometry and the pass-0 bases are configured in the
+    // shadow of the prologue DMA load — they cost no compute-window
+    // cycles (what an optimized kernel does in practice).
+    emit_ssr_geometry(&mut a, t, map);
+    let arm = |a: &mut Asm, p: usize| {
+        let a_base = map.a[p].base + core as u32 * map.a[p].row_stride;
+        let c_base = map.c[p].base + core as u32 * map.c[p].row_stride;
+        cfg(a, 0, SsrField::ReadBase(3), a_base);
+        cfg(a, 1, SsrField::ReadBase(3), map.b[p].base);
+        cfg(a, 2, SsrField::WriteBase(2), c_base);
+    };
+    arm(&mut a, 0);
+    a.push(Instr::Barrier); // b_0: phase-0 tiles ready
+
+    for pass in 0..grid_m * grid_n {
+        a.push(Instr::Csrrsi { csr: csr::SSR_ENABLE, imm: 1 });
+
+        if zonl {
+            // The whole tile is one imperfect FREP nest.
+            a.li(reg::T1, (outer_iters - 1) as u32);
+            a.push(Instr::Frep {
+                outer: true,
+                iters_reg: reg::T1,
+                n_inst: 23, // 24-instruction body
+            });
+            emit_kernel_body(&mut a, t.k, true);
+        } else {
+            // Software outer loop: addi + bne per iteration (§III-A).
+            a.li(reg::T1, outer_iters as u32);
+            let loop_top = a.label();
+            a.bind(loop_top);
+            emit_kernel_body(&mut a, t.k, false);
+            a.push(Instr::Addi { rd: reg::T1, rs1: reg::T1, imm: -1 });
+            a.bne(reg::T1, reg::ZERO, loop_top);
+        }
+
+        a.push(Instr::Csrrci { csr: csr::SSR_ENABLE, imm: 1 });
+        // Re-arm for the *next* pass before the barrier: the scfgw
+        // writes overlap the wait for the DM core instead of eating
+        // compute-window cycles.
+        if pass + 1 < grid_m * grid_n {
+            arm(&mut a, (pass + 1) % 2);
+        }
+        a.push(Instr::Barrier); // b_{pass+1}
+    }
+    a.push(Instr::Ecall);
+    a.assemble()
+}
+
+// ------------------------------------------------------------------
+// DM core program
+// ------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn emit_dma3(
+    a: &mut Asm,
+    src: u32,
+    dst: u32,
+    size: u32,
+    strides1: (u32, u32),
+    reps1: u32,
+    strides2: (u32, u32),
+    reps2: u32,
+) {
+    a.li(reg::A0, src);
+    a.push(Instr::Dmsrc { rs1: reg::A0 });
+    a.li(reg::A1, dst);
+    a.push(Instr::Dmdst { rs1: reg::A1 });
+    a.li(reg::A2, strides1.0);
+    a.li(reg::A3, strides1.1);
+    a.push(Instr::Dmstr { rs1: reg::A2, rs2: reg::A3 });
+    a.li(reg::A4, reps1);
+    a.push(Instr::Dmrep { rs1: reg::A4 });
+    a.li(reg::A2, strides2.0);
+    a.li(reg::A3, strides2.1);
+    a.push(Instr::Dmstr2 { rs1: reg::A2, rs2: reg::A3 });
+    a.li(reg::A4, reps2);
+    a.push(Instr::Dmrep2 { rs1: reg::A4 });
+    a.li(reg::A5, size);
+    a.push(Instr::Dmcpy { rd: reg::T0, rs1: reg::A5 });
+}
+
+fn emit_dma_wait(a: &mut Asm) {
+    let poll = a.label();
+    a.bind(poll);
+    a.push(Instr::Dmstat { rd: reg::T1 });
+    a.bne(reg::T1, reg::ZERO, poll);
+}
+
+/// Build the DM core's double-buffer schedule program.
+pub fn dm_program(t: &Tiling, map: &BufferMap, main: &MainLayout) -> Program {
+    let mut a = Asm::new();
+    let (grid_m, grid_n) = t.grid();
+    let passes: Vec<(usize, usize)> = (0..grid_m)
+        .flat_map(|it| (0..grid_n).map(move |jt| (it, jt)))
+        .collect();
+
+    // All transfers are 3D: 64-byte chunks (dim 0), chunks-per-row
+    // (dim 1), rows (dim 2).  Every beat is one full superbank row.
+    let load_a = |a: &mut Asm, it: usize, p: usize| {
+        emit_dma3(
+            a,
+            main.a + (it * t.mt * t.k * 8) as u32,
+            map.a[p].base,
+            64,
+            (64, map.a[p].chunk_stride),
+            (t.k / 8) as u32,
+            ((t.k * 8) as u32, map.a[p].row_stride),
+            t.mt as u32,
+        );
+    };
+    let load_b = |a: &mut Asm, jt: usize, p: usize| {
+        emit_dma3(
+            a,
+            main.b + (jt * t.nt * 8) as u32,
+            map.b[p].base,
+            64,
+            (64, map.b[p].chunk_stride),
+            (t.nt / 8) as u32,
+            ((t.n * 8) as u32, map.b[p].row_stride),
+            t.k as u32,
+        );
+    };
+    let store_c = |a: &mut Asm, it: usize, jt: usize, p: usize| {
+        emit_dma3(
+            a,
+            map.c[p].base,
+            main.c + ((it * t.mt * t.n + jt * t.nt) * 8) as u32,
+            64,
+            (map.c[p].chunk_stride, 64),
+            (t.nt / 8) as u32,
+            (map.c[p].row_stride, (t.n * 8) as u32),
+            t.mt as u32,
+        );
+    };
+
+    // Prologue: fill phase 0.
+    load_a(&mut a, passes[0].0, 0);
+    load_b(&mut a, passes[0].1, 0);
+    emit_dma_wait(&mut a);
+    a.push(Instr::Barrier); // b_0
+
+    for (pass, &(_it, _jt)) in passes.iter().enumerate() {
+        // While compute runs pass `pass` out of phase pass%2:
+        if pass + 1 < passes.len() {
+            let (nit, njt) = passes[pass + 1];
+            load_a(&mut a, nit, (pass + 1) % 2);
+            load_b(&mut a, njt, (pass + 1) % 2);
+        }
+        if pass >= 1 {
+            let (pit, pjt) = passes[pass - 1];
+            store_c(&mut a, pit, pjt, (pass - 1) % 2);
+        }
+        emit_dma_wait(&mut a);
+        a.push(Instr::Barrier); // b_{pass+1}
+    }
+    // Epilogue: store the final C tile.
+    let (lit, ljt) = *passes.last().unwrap();
+    store_c(&mut a, lit, ljt, (passes.len() - 1) % 2);
+    emit_dma_wait(&mut a);
+    a.push(Instr::Ecall);
+    a.assemble()
+}
+
+/// Build all 9 programs (8 compute + DM) for a problem on a config.
+pub fn build_programs(
+    cfg: &ClusterConfig,
+    t: &Tiling,
+    map: &BufferMap,
+) -> Vec<Program> {
+    let main = main_layout(t);
+    let mut progs: Vec<Program> = (0..N_CORES)
+        .map(|c| compute_program(c, t, map, cfg.zonl))
+        .collect();
+    progs.push(dm_program(t, map, &main));
+    progs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ConfigId;
+    use crate::kernels::layout::plan_buffers;
+    use crate::kernels::tiling::choose_tiling;
+
+    fn setup(id: ConfigId, m: usize, n: usize, k: usize)
+        -> (Tiling, BufferMap, ClusterConfig) {
+        let cfg = id.cluster_config();
+        let t = choose_tiling(m, n, k, cfg.tcdm_bytes).unwrap();
+        let map = plan_buffers(&t, cfg.topology, cfg.tcdm_bytes,
+                               crate::kernels::LayoutKind::Grouped);
+        (t, map, cfg)
+    }
+
+    #[test]
+    fn baseline_kernel_has_software_loop() {
+        let (t, map, _) = setup(ConfigId::Base32Fc, 32, 32, 32);
+        let p = compute_program(0, &t, &map, false);
+        let n_bne = p.instrs.iter()
+            .filter(|i| matches!(i, Instr::Bne { .. })).count();
+        let n_frep = p.instrs.iter()
+            .filter(|i| matches!(i, Instr::Frep { .. })).count();
+        assert_eq!(n_bne, 1, "one backedge for the software outer loop");
+        assert_eq!(n_frep, 1, "inner K loop only");
+    }
+
+    #[test]
+    fn zonl_kernel_has_no_branches() {
+        let (t, map, _) = setup(ConfigId::Zonl48Db, 32, 32, 32);
+        let p = compute_program(0, &t, &map, true);
+        assert!(!p.instrs.iter().any(|i| matches!(
+            i,
+            Instr::Bne { .. } | Instr::Beq { .. } | Instr::Blt { .. }
+        )));
+        let freps: Vec<_> = p.instrs.iter()
+            .filter(|i| matches!(i, Instr::Frep { .. })).collect();
+        assert_eq!(freps.len(), 2, "outer + inner FREP");
+    }
+
+    #[test]
+    fn fp_op_count_matches_tile_math() {
+        let (t, map, _) = setup(ConfigId::Base32Fc, 32, 32, 32);
+        let p = compute_program(0, &t, &map, false);
+        // static FP compute instrs per pass: 24 (peel+body+wb)
+        let fp = p.instrs.iter().filter(|i| i.is_fp_compute()).count();
+        assert_eq!(fp, 24 * t.passes());
+    }
+
+    #[test]
+    fn dm_program_transfer_count() {
+        let (t, map, _) = setup(ConfigId::Base32Fc, 64, 64, 64);
+        let main = main_layout(&t);
+        let p = dm_program(&t, &map, &main);
+        let n_cpy = p.instrs.iter()
+            .filter(|i| matches!(i, Instr::Dmcpy { .. })).count();
+        let passes = t.passes();
+        // loads: 2 per pass (incl. prologue), stores: 1 per pass.
+        assert_eq!(n_cpy, 2 * passes + passes);
+    }
+
+    #[test]
+    fn barrier_counts_line_up() {
+        let (t, map, cfg) = setup(ConfigId::Zonl64Db, 64, 32, 40);
+        let progs = build_programs(&cfg, &t, &map);
+        let barriers = |p: &Program| {
+            p.instrs.iter()
+                .filter(|i| matches!(i, Instr::Barrier)).count()
+        };
+        let expect = t.passes() + 1;
+        for p in &progs {
+            assert_eq!(barriers(p), expect);
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! End-to-end matmul driver: the public "run a GEMM on a cluster" API.
+//!
+//! Plans the tiling and buffers, generates the 9 programs, loads A and
+//! B into simulated main memory, runs the cluster to completion, and
+//! reads C back — the exact flow a real Snitch-cluster deployment uses
+//! (host writes DRAM, cluster computes, host reads DRAM).
+
+use anyhow::{Context, Result};
+
+use crate::cluster::{Cluster, ClusterConfig, ClusterPerf, ConfigId};
+
+use super::codegen::{build_programs, main_layout, MainLayout, N_CORES, UNROLL};
+use super::layout::{plan_buffers, BufferMap, LayoutKind};
+use super::tiling::{choose_tiling, Tiling};
+
+/// A planned GEMM: everything needed to generate code and place data.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmPlan {
+    pub tiling: Tiling,
+    pub map: BufferMap,
+    pub main: MainLayout,
+    pub layout: LayoutKind,
+}
+
+/// Result of a simulated GEMM.
+#[derive(Clone, Debug)]
+pub struct GemmResult {
+    pub c: Vec<f64>,
+    pub cycles: u64,
+    pub perf: ClusterPerf,
+    pub plan: GemmPlan,
+    pub config: ConfigId,
+}
+
+impl GemmResult {
+    /// FPU utilization as the paper reports it.
+    pub fn utilization(&self) -> f64 {
+        self.perf.utilization
+    }
+
+    /// Performance in DP Gflop/s at 1 GHz, using the paper's peak
+    /// convention (Table II: 8 cores at 8 DPGflop/s peak, i.e. one MAC
+    /// counted per FPU per cycle — see EXPERIMENTS.md §Conventions).
+    pub fn gflops(&self) -> f64 {
+        self.utilization() * 8.0
+    }
+}
+
+/// Validate the problem against the paper's evaluation grid.
+pub fn check_dims(m: usize, n: usize, k: usize) -> Result<()> {
+    anyhow::ensure!(
+        m % 8 == 0 && n % 8 == 0 && k % 8 == 0 && m > 0 && n > 0 && k > 0,
+        "problem dims must be positive multiples of 8 (got {m}x{n}x{k})"
+    );
+    anyhow::ensure!(
+        n % UNROLL == 0,
+        "N must be a multiple of the unroll factor {UNROLL}"
+    );
+    anyhow::ensure!(k >= 8, "K must be at least 8");
+    Ok(())
+}
+
+/// Plan a GEMM for a configuration.
+pub fn plan_gemm(
+    cfg: &ClusterConfig,
+    m: usize,
+    n: usize,
+    k: usize,
+    layout: LayoutKind,
+) -> Result<GemmPlan> {
+    check_dims(m, n, k)?;
+    let tiling = choose_tiling(m, n, k, cfg.tcdm_bytes)
+        .with_context(|| format!("no tiling fits {m}x{n}x{k}"))?;
+    let map = plan_buffers(&tiling, cfg.topology, cfg.tcdm_bytes, layout);
+    let main = main_layout(&tiling);
+    Ok(GemmPlan { tiling, map, main, layout })
+}
+
+/// Build a ready-to-run cluster with data loaded.
+pub fn build_cluster(
+    id: ConfigId,
+    plan: &GemmPlan,
+    a: &[f64],
+    b: &[f64],
+) -> Cluster {
+    let cfg = id.cluster_config();
+    let t = &plan.tiling;
+    assert_eq!(a.len(), t.m * t.k);
+    assert_eq!(b.len(), t.k * t.n);
+    let progs = build_programs(&cfg, t, &plan.map);
+    let mut cl = Cluster::new(cfg, progs);
+    cl.mem.write_slice_f64(plan.main.a, a);
+    cl.mem.write_slice_f64(plan.main.b, b);
+    cl
+}
+
+/// Simulate `C = A x B` on configuration `id`. The main entry point.
+pub fn run_matmul(
+    id: ConfigId,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+) -> Result<GemmResult> {
+    // The grouped layout is the paper's bank-aware placement (§III-B,
+    // footnote 5): each matrix confined to its own superbank, so the
+    // 24 concurrent core requests hit disjoint bank groups.
+    run_matmul_layout(id, m, n, k, a, b, LayoutKind::Grouped)
+}
+
+/// Like [`run_matmul`] with an explicit layout (the layout ablation).
+pub fn run_matmul_layout(
+    id: ConfigId,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    layout: LayoutKind,
+) -> Result<GemmResult> {
+    let cfg = id.cluster_config();
+    let plan = plan_gemm(&cfg, m, n, k, layout)?;
+    let mut cl = build_cluster(id, &plan, a, b);
+    // Generous deadline: ideal cycles x 64 + fixed slack.
+    let ideal = (m * n * k) as u64 / (N_CORES as u64);
+    let cycles = cl.run(100_000 + ideal * 64).context("cluster run")?;
+    let c = cl.mem.read_vec_f64(plan.main.c, m * n);
+    Ok(GemmResult {
+        c,
+        cycles,
+        perf: cl.perf(),
+        plan,
+        config: id,
+    })
+}
+
+/// Host-side reference with the same FMA association order as the
+/// kernel (fused multiply-add over ascending k): bit-exact against the
+/// simulated cluster.
+pub fn host_ref(m: usize, n: usize, k: usize, a: &[f64], b: &[f64])
+    -> Vec<f64> {
+    let mut c = vec![0.0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            // first iteration is the peeled fmul
+            let mut acc = a[i * k] * b[j];
+            for kk in 1..k {
+                acc = a[i * k + kk].mul_add(b[kk * n + j], acc);
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Deterministic test matrices.
+pub fn test_matrices(m: usize, n: usize, k: usize, seed: u64)
+    -> (Vec<f64>, Vec<f64>) {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(id: ConfigId, m: usize, n: usize, k: usize) -> GemmResult {
+        let (a, b) = test_matrices(m, n, k, 42);
+        let r = run_matmul(id, m, n, k, &a, &b).unwrap();
+        let want = host_ref(m, n, k, &a, &b);
+        for (i, (&got, &w)) in r.c.iter().zip(&want).enumerate() {
+            assert!(
+                (got - w).abs() <= 1e-9 * w.abs().max(1.0),
+                "{}: C[{i}] = {got} want {w} ({m}x{n}x{k})",
+                id.name()
+            );
+        }
+        r
+    }
+
+    #[test]
+    fn cube8_smallest() {
+        let r = check(ConfigId::Base32Fc, 8, 8, 8);
+        assert!(r.cycles > 0);
+    }
+
+    #[test]
+    fn cube32_all_configs_correct() {
+        for id in ConfigId::all() {
+            let r = check(id, 32, 32, 32);
+            assert!(
+                r.utilization() > 0.5,
+                "{} utilization {:.3} too low",
+                id.name(),
+                r.utilization()
+            );
+        }
+    }
+
+    #[test]
+    fn rectangular_multi_tile() {
+        let r = check(ConfigId::Zonl48Db, 64, 32, 16);
+        assert!(r.plan.tiling.passes() >= 1);
+    }
+
+    #[test]
+    fn tiled_128_cube_zonl() {
+        let r = check(ConfigId::Zonl64Db, 128, 64, 128);
+        assert!(r.plan.tiling.passes() > 1, "must run multiple passes");
+    }
+
+    #[test]
+    fn zonl_beats_baseline_utilization() {
+        let (a, b) = test_matrices(32, 32, 32, 7);
+        let base =
+            run_matmul(ConfigId::Base32Fc, 32, 32, 32, &a, &b).unwrap();
+        let zonl =
+            run_matmul(ConfigId::Zonl48Db, 32, 32, 32, &a, &b).unwrap();
+        assert!(
+            zonl.utilization() > base.utilization(),
+            "zonl {:.3} vs base {:.3}",
+            zonl.utilization(),
+            base.utilization()
+        );
+    }
+
+    #[test]
+    fn dims_validation() {
+        assert!(check_dims(12, 8, 8).is_err());
+        assert!(check_dims(8, 8, 8).is_ok());
+        assert!(check_dims(0, 8, 8).is_err());
+    }
+}

@@ -1,0 +1,317 @@
+//! TCDM buffer placement — where the double-buffered A/B/C tiles live.
+//!
+//! Two schemes:
+//!
+//! * **Grouped** (default — the paper's layout, §III-B + footnote 5):
+//!   every matrix tile is confined to its *own superbank* (8-bank
+//!   group), stored as 64-byte chunks strided by the hyperbank row
+//!   (`banks_per_hyperbank * 8` bytes).  The B stream then saturates
+//!   only B's banks, A and C traffic never crosses into it, and the
+//!   "3 reads + 1 write per core" budget maps onto 24 conflict-free
+//!   banks.  Six buffers (2 phases x {A,B,C}) want six groups — which
+//!   is exactly why the paper builds the 48-bank (2x24) Dobu
+//!   configuration.  On 32-bank clusters only 4 groups exist, so phase
+//!   buffers must share groups and double-buffered DMA traffic
+//!   collides with compute — the conflict loss Fig. 5 shows for
+//!   Base32fc/Zonl32fc.
+//! * **Linear**: tiles stored row-major, interleaved across all banks
+//!   (with optional +pad words per row).  Kept for the layout ablation
+//!   bench; it suffers cross-matrix bank interference.
+
+use crate::mem::{Topology, BANKS_PER_SUPERBANK, TCDM_BASE};
+
+use super::tiling::Tiling;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayoutKind {
+    /// Superbank-confined matrices (the paper's bank-aware layout).
+    Grouped,
+    /// Row-major across all banks with `pad` extra words per row.
+    Linear { pad_words: u32 },
+}
+
+/// Address-generation parameters for one buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct BufDesc {
+    /// Address of element 0.
+    pub base: u32,
+    /// Stride between consecutive 8-word chunks (Grouped) or unused
+    /// (Linear, where chunks are contiguous within a row).
+    pub chunk_stride: u32,
+    /// Stride between consecutive *rows* of the tile, in bytes.
+    pub row_stride: u32,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BufferMap {
+    pub kind: LayoutKind,
+    /// Per-phase descriptors (index = pass % 2).
+    pub a: [BufDesc; 2],
+    pub b: [BufDesc; 2],
+    pub c: [BufDesc; 2],
+}
+
+fn align64(x: u32) -> u32 {
+    (x + 63) & !63
+}
+
+/// Linear placement (the ablation baseline).
+fn plan_linear(
+    t: &Tiling,
+    topology: Topology,
+    tcdm_bytes: usize,
+    pad_words: u32,
+) -> BufferMap {
+    let pad = pad_words * 8;
+    let a_row = t.k as u32 * 8 + pad;
+    let b_row = t.nt as u32 * 8 + pad;
+    let c_row = t.nt as u32 * 8 + pad;
+    let a_bytes = align64(a_row * t.mt as u32);
+    let b_bytes = align64(b_row * t.k as u32);
+    let c_bytes = align64(c_row * t.mt as u32);
+    let phase_bytes = a_bytes + b_bytes + c_bytes;
+
+    let phase_base: [u32; 2] = match topology {
+        Topology::Fc { .. } => {
+            assert!(2 * phase_bytes <= tcdm_bytes as u32,
+                    "buffers exceed TCDM");
+            [TCDM_BASE, TCDM_BASE + phase_bytes]
+        }
+        Topology::Dobu { .. } => {
+            let half = (tcdm_bytes / 2) as u32;
+            assert!(phase_bytes <= half,
+                    "phase buffers exceed a hyperbank");
+            [TCDM_BASE, TCDM_BASE + half]
+        }
+    };
+    let d = |base: u32, row: u32| BufDesc {
+        base,
+        chunk_stride: 64, // contiguous chunks
+        row_stride: row,
+    };
+    BufferMap {
+        kind: LayoutKind::Linear { pad_words },
+        a: [d(phase_base[0], a_row), d(phase_base[1], a_row)],
+        b: [
+            d(phase_base[0] + a_bytes, b_row),
+            d(phase_base[1] + a_bytes, b_row),
+        ],
+        c: [
+            d(phase_base[0] + a_bytes + b_bytes, c_row),
+            d(phase_base[1] + a_bytes + b_bytes, c_row),
+        ],
+    }
+}
+
+/// Bank-group assignment per configuration: global group ids for
+/// [phase][matrix] with matrices ordered A, B, C.
+///
+/// With >= 6 groups every buffer gets a private superbank (zero
+/// compute/DMA bank sharing).  With 4 groups (32 banks) the assignment
+/// minimizes sharing against the *highest-duty* compute stream (B):
+/// next-phase A/B loads land on the current A and C groups (1/8 and
+/// 1/K duty) — B's group is never shared.
+pub fn group_assignment(topology: Topology) -> [[usize; 3]; 2] {
+    let groups = topology.total_banks() / BANKS_PER_SUPERBANK;
+    let gph = topology.banks_per_hyperbank() / BANKS_PER_SUPERBANK;
+    match topology {
+        Topology::Fc { .. } => match groups {
+            4 => [[0, 1, 2], [3, 0, 2]], // B1 -> A0's group, C shared
+            _ => [[0, 1, 2], [3, 4, 5]],
+        },
+        Topology::Dobu { .. } => {
+            // phase p in hyperbank p: first 3 groups of each hyperbank
+            [[0, 1, 2], [gph, gph + 1, gph + 2]]
+        }
+    }
+}
+
+/// Grouped placement: buffer base = its group's first bank row; chunks
+/// stride by one hyperbank row.
+fn plan_grouped(t: &Tiling, topology: Topology, tcdm_bytes: usize)
+    -> BufferMap {
+    let bph = topology.banks_per_hyperbank();
+    let gph = bph / BANKS_PER_SUPERBANK; // groups per hyperbank
+    let hyper_bytes = (tcdm_bytes / topology.hyperbanks()) as u32;
+    let chunk_stride = (bph * 8) as u32;
+    let assign = group_assignment(topology);
+
+    // capacity check: a group stores one 64B chunk per hyperbank row.
+    let rows = hyper_bytes / chunk_stride;
+    let group_cap_bytes = rows * 64;
+    let words =
+        [t.mt * t.k, t.k * t.nt, t.mt * t.nt].map(|w| w as u32 * 8);
+    // per-group occupancy (groups may be shared on 32-bank configs)
+    let mut occupancy = vec![0u32; topology.total_banks() / 8];
+    for p in 0..2 {
+        for (mi, &bytes) in words.iter().enumerate() {
+            occupancy[assign[p][mi]] += bytes;
+        }
+    }
+    for (g, &occ) in occupancy.iter().enumerate() {
+        assert!(
+            occ <= group_cap_bytes,
+            "bank group {g} over capacity: {occ} > {group_cap_bytes}"
+        );
+    }
+
+    // Shared groups stack their buffers at different chunk offsets.
+    let mut next_chunk = vec![0u32; topology.total_banks() / 8];
+    let mut desc = |g: usize, tile_words: usize, row_words: usize| {
+        let hyper = g / gph;
+        let g_local = (g % gph) as u32;
+        let base = TCDM_BASE
+            + hyper as u32 * hyper_bytes
+            + g_local * 64
+            + next_chunk[g] * chunk_stride;
+        let chunks = (tile_words as u32 * 8).div_ceil(64);
+        next_chunk[g] += chunks;
+        BufDesc {
+            base,
+            chunk_stride,
+            row_stride: (row_words as u32 / 8) * chunk_stride,
+        }
+    };
+
+    let a = [
+        desc(assign[0][0], t.mt * t.k, t.k),
+        desc(assign[1][0], t.mt * t.k, t.k),
+    ];
+    let b = [
+        desc(assign[0][1], t.k * t.nt, t.nt),
+        desc(assign[1][1], t.k * t.nt, t.nt),
+    ];
+    let c = [
+        desc(assign[0][2], t.mt * t.nt, t.nt),
+        desc(assign[1][2], t.mt * t.nt, t.nt),
+    ];
+    BufferMap { kind: LayoutKind::Grouped, a, b, c }
+}
+
+pub fn plan_buffers(
+    t: &Tiling,
+    topology: Topology,
+    tcdm_bytes: usize,
+    kind: LayoutKind,
+) -> BufferMap {
+    // Grouped layout needs 8-word-aligned rows (chunk granularity).
+    match kind {
+        LayoutKind::Grouped => {
+            assert!(t.k % 8 == 0 && t.nt % 8 == 0);
+            plan_grouped(t, topology, tcdm_bytes)
+        }
+        LayoutKind::Linear { pad_words } => {
+            plan_linear(t, topology, tcdm_bytes, pad_words)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Tcdm;
+
+    fn t32() -> Tiling {
+        Tiling { m: 32, n: 32, k: 32, mt: 32, nt: 32 }
+    }
+
+    #[test]
+    fn linear_packs_sequentially() {
+        let m = plan_buffers(&t32(), Topology::Fc { banks: 32 },
+                             128 * 1024, LayoutKind::Linear { pad_words: 0 });
+        assert_eq!(m.a[0].base, TCDM_BASE);
+        assert!(m.b[0].base > m.a[0].base);
+        assert_eq!(m.a[0].row_stride, 256);
+    }
+
+    #[test]
+    fn grouped_each_matrix_in_own_superbank() {
+        for topo in [
+            Topology::Fc { banks: 64 },
+            Topology::Dobu { banks_per_hyper: 24 },
+            Topology::Dobu { banks_per_hyper: 32 },
+        ] {
+            let bytes = if topo.total_banks() == 48 {
+                96 * 1024
+            } else {
+                128 * 1024
+            };
+            let m = plan_buffers(&t32(), topo, bytes, LayoutKind::Grouped);
+            let tcdm = Tcdm::new(topo, bytes);
+            let mut groups_seen = std::collections::HashSet::new();
+            for (p, bufs) in
+                [(0, [m.a[0], m.b[0], m.c[0]]),
+                 (1, [m.a[1], m.b[1], m.c[1]])]
+            {
+                let _ = p;
+                for d in bufs {
+                    // walk the whole tile; all words in one superbank
+                    let words = 32 * 32;
+                    let mut sb = std::collections::HashSet::new();
+                    for i in 0..words {
+                        let addr = d.base
+                            + (i / 8) as u32 * d.chunk_stride
+                            + (i % 8) as u32 * 8;
+                        sb.insert(
+                            tcdm.superbank_of_bank(tcdm.bank_of(addr)),
+                        );
+                    }
+                    assert_eq!(sb.len(), 1, "{topo:?}: spans {sb:?}");
+                    groups_seen.insert(*sb.iter().next().unwrap());
+                }
+            }
+            assert_eq!(groups_seen.len(), 6,
+                       "{topo:?}: six private groups");
+        }
+    }
+
+    #[test]
+    fn grouped_32banks_shares_minimally() {
+        let topo = Topology::Fc { banks: 32 };
+        let m = plan_buffers(&t32(), topo, 128 * 1024, LayoutKind::Grouped);
+        let tcdm = Tcdm::new(topo, 128 * 1024);
+        let group = |d: &BufDesc| tcdm.superbank_of_bank(tcdm.bank_of(d.base));
+        // B streams (full duty) never share with anything.
+        assert_ne!(group(&m.b[0]), group(&m.b[1]));
+        assert_ne!(group(&m.b[0]), group(&m.a[0]));
+        assert_ne!(group(&m.b[0]), group(&m.c[0]));
+        assert_ne!(group(&m.b[0]), group(&m.a[1]));
+        assert_ne!(group(&m.b[1]), group(&m.a[1]));
+        // the shared pairs stack at distinct chunk offsets
+        assert_eq!(group(&m.a[0]), group(&m.b[1]));
+        assert_ne!(m.a[0].base, m.b[1].base);
+        assert_eq!(group(&m.c[0]), group(&m.c[1]));
+    }
+
+    #[test]
+    fn grouped_dobu_phase_isolated_by_hyperbank() {
+        let topo = Topology::Dobu { banks_per_hyper: 24 };
+        let m = plan_buffers(&t32(), topo, 96 * 1024, LayoutKind::Grouped);
+        let tcdm = Tcdm::new(topo, 96 * 1024);
+        for d in [m.a[0], m.b[0], m.c[0]] {
+            assert_eq!(tcdm.hyperbank_of(d.base), 0);
+        }
+        for d in [m.a[1], m.b[1], m.c[1]] {
+            assert_eq!(tcdm.hyperbank_of(d.base), 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "over capacity")]
+    fn grouped_capacity_enforced() {
+        let t = Tiling { m: 64, n: 64, k: 64, mt: 64, nt: 64 };
+        let _ = plan_buffers(&t, Topology::Dobu { banks_per_hyper: 24 },
+                             96 * 1024, LayoutKind::Grouped);
+    }
+
+    #[test]
+    fn chunk_addressing_is_8_word_aligned() {
+        let m = plan_buffers(&t32(), Topology::Fc { banks: 64 },
+                             128 * 1024, LayoutKind::Grouped);
+        for d in [m.a[0], m.b[0], m.c[0], m.a[1], m.b[1], m.c[1]] {
+            assert_eq!(d.base % 64, 0);
+            assert_eq!(d.chunk_stride % 64, 0);
+            assert_eq!(d.row_stride % 64, 0);
+        }
+    }
+}

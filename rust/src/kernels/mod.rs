@@ -1,0 +1,15 @@
+//! The paper's workload: matmul kernel generation, L1 tiling, TCDM
+//! buffer layout, and the end-to-end GEMM driver.
+
+pub mod codegen;
+pub mod driver;
+pub mod layout;
+pub mod tiling;
+
+pub use codegen::{build_programs, N_CORES, UNROLL};
+pub use driver::{
+    host_ref, plan_gemm, run_matmul, run_matmul_layout, test_matrices,
+    GemmPlan, GemmResult,
+};
+pub use layout::{plan_buffers, BufferMap, LayoutKind};
+pub use tiling::{choose_tiling, Tiling};

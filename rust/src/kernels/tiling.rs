@@ -1,0 +1,148 @@
+//! L1 tile-size selection.
+//!
+//! The cluster computes C = A x B by tiling M and N and keeping the
+//! full K dimension resident (`kt == k`), which is what the paper's
+//! kernel (Fig. 1b) assumes: every outer-loop iteration computes a
+//! *complete* dot product, so C tiles are written exactly once and the
+//! multi-pass C-accumulation problem never arises.
+//!
+//! Budget: double-buffered A, B *and* C tiles must fit the TCDM
+//! (DESIGN.md §5): `2*(mt*k + k*nt + mt*nt)*8 <= tcdm_bytes`.
+
+/// A tile plan for one problem/config pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tiling {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Tile height (rows of A/C); multiple of 8, divides m.
+    pub mt: usize,
+    /// Tile width (cols of B/C); multiple of 8, divides n.
+    pub nt: usize,
+}
+
+impl Tiling {
+    pub fn passes(&self) -> usize {
+        (self.m / self.mt) * (self.n / self.nt)
+    }
+
+    pub fn grid(&self) -> (usize, usize) {
+        (self.m / self.mt, self.n / self.nt)
+    }
+
+    /// Bytes of one phase's buffer set (A + B + C tiles).
+    pub fn phase_bytes(&self) -> usize {
+        (self.mt * self.k + self.k * self.nt + self.mt * self.nt) * 8
+    }
+
+    pub fn fits(&self, tcdm_bytes: usize) -> bool {
+        2 * self.phase_bytes() <= tcdm_bytes
+    }
+}
+
+/// Multiples of 8 that divide `x`, descending.
+fn tile_candidates(x: usize) -> Vec<usize> {
+    assert!(x % 8 == 0 && x > 0, "problem dims must be multiples of 8");
+    let mut v: Vec<usize> =
+        (1..=x / 8).map(|i| i * 8).filter(|t| x % t == 0).collect();
+    v.sort_unstable_by(|a, b| b.cmp(a));
+    v
+}
+
+/// Per-matrix word budget under the grouped (superbank-confined)
+/// layout: one 8-bank group holds 16 KiB = 2048 words in the 48-bank
+/// configuration (96 KiB / 6 groups) — the paper's footnote-5 "every
+/// matrix within 8 banks" capacity. Applying it uniformly keeps tile
+/// choices identical across configurations (fair comparison).
+pub const GROUP_WORDS: usize = 2048;
+
+/// Pick the tile maximizing per-pass compute, preferring square-ish
+/// tiles (less DMA traffic per flop), subject to the TCDM budget and
+/// the per-matrix group capacity.
+pub fn choose_tiling(
+    m: usize,
+    n: usize,
+    k: usize,
+    tcdm_bytes: usize,
+) -> Option<Tiling> {
+    let mut best: Option<(i64, Tiling)> = None;
+    for mt in tile_candidates(m) {
+        for nt in tile_candidates(n) {
+            let t = Tiling { m, n, k, mt, nt };
+            if !t.fits(tcdm_bytes) {
+                continue;
+            }
+            if mt * k > GROUP_WORDS
+                || k * nt > GROUP_WORDS
+                || mt * nt > GROUP_WORDS
+            {
+                continue;
+            }
+            // score: compute volume first, then balance.
+            let score = (mt * nt) as i64 * 1000
+                - (mt as i64 - nt as i64).abs();
+            if best.map_or(true, |(s, _)| score > s) {
+                best = Some((score, t));
+            }
+        }
+    }
+    best.map(|(_, t)| t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cube32_fits_single_tile() {
+        let t = choose_tiling(32, 32, 32, 128 * 1024).unwrap();
+        assert_eq!((t.mt, t.nt), (32, 32));
+        assert_eq!(t.passes(), 1);
+    }
+
+    #[test]
+    fn cube128_needs_tiling() {
+        let t = choose_tiling(128, 128, 128, 128 * 1024).unwrap();
+        assert!(t.fits(128 * 1024));
+        assert!(t.passes() > 1);
+        assert_eq!(128 % t.mt, 0);
+        assert_eq!(128 % t.nt, 0);
+        // Group capacity caps each matrix at 2048 words: 16x16 tiles.
+        assert_eq!((t.mt, t.nt), (16, 16));
+        assert!(t.mt * t.k <= GROUP_WORDS);
+    }
+
+    #[test]
+    fn cube128_in_96kib() {
+        let t = choose_tiling(128, 128, 128, 96 * 1024).unwrap();
+        assert!(t.fits(96 * 1024));
+        assert!(2 * t.phase_bytes() <= 96 * 1024);
+    }
+
+    #[test]
+    fn non_pow2_sizes() {
+        for &(m, n, k) in
+            &[(24, 40, 120), (8, 8, 8), (120, 8, 128), (104, 56, 72)]
+        {
+            for &bytes in &[96 * 1024, 128 * 1024] {
+                let t = choose_tiling(m, n, k, bytes)
+                    .unwrap_or_else(|| panic!("no tiling {m}x{n}x{k}"));
+                assert_eq!(m % t.mt, 0);
+                assert_eq!(n % t.nt, 0);
+                assert!(t.mt % 8 == 0 && t.nt % 8 == 0);
+                assert!(t.fits(bytes));
+                assert!(t.mt * t.k <= GROUP_WORDS);
+                assert!(t.k * t.nt <= GROUP_WORDS);
+            }
+        }
+    }
+
+    #[test]
+    fn prefers_larger_then_square() {
+        let t = choose_tiling(64, 64, 8, 128 * 1024).unwrap();
+        // k tiny: group capacity (not total TCDM) is the binding
+        // constraint: 64x8=512 words per A tile fits, C=64x64=4096
+        // words does not -> 32x64 or 64x32.
+        assert_eq!(t.mt * t.nt, 2048);
+    }
+}

@@ -1,0 +1,32 @@
+//! # zerostall
+//!
+//! A cycle-accurate, functional co-design framework for energy-efficient
+//! RISC-V compute clusters, reproducing *"Towards Zero-Stall Matrix
+//! Multiplication on Energy-Efficient RISC-V Clusters for Machine
+//! Learning Acceleration"* (ETH Zurich, 2025).
+//!
+//! The crate models the full Snitch cluster — cores, FREP sequencer,
+//! SSR streamers, multi-banked TCDM behind fully-connected or
+//! double-buffering-aware (Dobu) interconnects, and the 512-bit DMA —
+//! plus the paper's evaluation harness: area/power models, the OpenGeMM
+//! comparator, and the Fig. 5 / Table I / Table II experiments.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod core;
+pub mod dma;
+pub mod isa;
+pub mod kernels;
+pub mod mem;
+pub mod model;
+pub mod opengemm;
+pub mod runtime;
+pub mod ssr;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

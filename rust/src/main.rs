@@ -1,0 +1,6 @@
+//! zerostall CLI — see `zerostall help`.
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    zerostall::coordinator::cli::main_with_args(args)
+}

@@ -1,0 +1,280 @@
+//! Memory subsystem: TCDM (multi-banked L1 scratchpad), main memory,
+//! and the address map.
+//!
+//! Two bank organizations model the paper's §III-B:
+//!
+//! * **Fully-connected** (`Fc`): one flat set of banks, words
+//!   interleaved across all of them; every core port reaches every bank
+//!   through the all-to-all crossbar; the DMA reaches any *superbank*
+//!   (8 consecutive banks) through its own branch, arbitrated by a mux
+//!   at each superbank.
+//! * **Dobu** (`Dobu`): two *hyperbanks*, each a contiguous address
+//!   region with words interleaved across its own banks (the address
+//!   MSB selects the hyperbank; each hyperbank is addressed like the
+//!   original TCDM).  A demux stage after the per-hyperbank crossbar
+//!   routes each request, so compute and DMA traffic in different
+//!   hyperbanks can never conflict — the zero-conflict property
+//!   double-buffered kernels exploit.
+
+pub mod interconnect;
+
+pub use interconnect::{DmaBeat, Interconnect, PortRequest, XbarStats};
+
+/// TCDM base address (cluster-local scratchpad).
+pub const TCDM_BASE: u32 = 0x1000_0000;
+/// Main (off-cluster) memory base address.
+pub const MAIN_MEM_BASE: u32 = 0x8000_0000;
+/// Banks per superbank (the DMA's 512-bit beat spans exactly one).
+pub const BANKS_PER_SUPERBANK: usize = 8;
+
+/// Bank organization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Flat interleaving over `banks` banks.
+    Fc { banks: usize },
+    /// Two hyperbanks of `banks_per_hyper` banks each.
+    Dobu { banks_per_hyper: usize },
+}
+
+impl Topology {
+    pub fn total_banks(&self) -> usize {
+        match *self {
+            Topology::Fc { banks } => banks,
+            Topology::Dobu { banks_per_hyper } => 2 * banks_per_hyper,
+        }
+    }
+
+    pub fn hyperbanks(&self) -> usize {
+        match *self {
+            Topology::Fc { .. } => 1,
+            Topology::Dobu { .. } => 2,
+        }
+    }
+
+    pub fn banks_per_hyperbank(&self) -> usize {
+        match *self {
+            Topology::Fc { banks } => banks,
+            Topology::Dobu { banks_per_hyper } => banks_per_hyper,
+        }
+    }
+}
+
+/// The tightly-coupled data memory.
+pub struct Tcdm {
+    pub topology: Topology,
+    pub bytes: usize,
+    /// Cached words-per-hyperbank (avoids a division per access).
+    half_words: usize,
+    words: Vec<u64>,
+}
+
+impl Tcdm {
+    pub fn new(topology: Topology, bytes: usize) -> Self {
+        assert_eq!(bytes % 8, 0);
+        let banks = topology.total_banks();
+        assert_eq!(
+            bytes / 8 % banks,
+            0,
+            "TCDM words must divide evenly across banks"
+        );
+        assert_eq!(banks % BANKS_PER_SUPERBANK, 0);
+        Self {
+            topology,
+            bytes,
+            half_words: bytes / 8 / topology.hyperbanks(),
+            words: vec![0u64; bytes / 8],
+        }
+    }
+
+    pub fn contains(&self, addr: u32) -> bool {
+        addr >= TCDM_BASE && addr < TCDM_BASE + self.bytes as u32
+    }
+
+    #[inline]
+    fn word_index(&self, addr: u32) -> usize {
+        debug_assert!(self.contains(addr), "TCDM OOB: {addr:#x}");
+        debug_assert_eq!(addr % 8, 0, "unaligned TCDM access: {addr:#x}");
+        ((addr - TCDM_BASE) / 8) as usize
+    }
+
+    /// Hyperbank of an address (always 0 for Fc).
+    #[inline]
+    pub fn hyperbank_of(&self, addr: u32) -> usize {
+        match self.topology {
+            Topology::Fc { .. } => 0,
+            Topology::Dobu { .. } => {
+                (self.word_index(addr) >= self.half_words) as usize
+            }
+        }
+    }
+
+    /// Global bank id of an address.
+    #[inline]
+    pub fn bank_of(&self, addr: u32) -> usize {
+        let w = self.word_index(addr);
+        match self.topology {
+            Topology::Fc { banks } => w % banks,
+            Topology::Dobu { banks_per_hyper } => {
+                if w >= self.half_words {
+                    banks_per_hyper
+                        + (w - self.half_words) % banks_per_hyper
+                } else {
+                    w % banks_per_hyper
+                }
+            }
+        }
+    }
+
+    /// Superbank id of a bank.
+    #[inline]
+    pub fn superbank_of_bank(&self, bank: usize) -> usize {
+        bank / BANKS_PER_SUPERBANK
+    }
+
+    #[inline]
+    pub fn read_u64(&self, addr: u32) -> u64 {
+        self.words[self.word_index(addr)]
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, addr: u32, v: u64) {
+        let i = self.word_index(addr);
+        self.words[i] = v;
+    }
+
+    #[inline]
+    pub fn read_f64(&self, addr: u32) -> f64 {
+        f64::from_bits(self.read_u64(addr))
+    }
+
+    #[inline]
+    pub fn write_f64(&mut self, addr: u32, v: f64) {
+        self.write_u64(addr, v.to_bits());
+    }
+}
+
+/// Flat main memory (the cluster's view of L2/HBM behind the DMA).
+pub struct MainMemory {
+    words: Vec<u64>,
+    pub bytes: usize,
+}
+
+impl MainMemory {
+    pub fn new(bytes: usize) -> Self {
+        assert_eq!(bytes % 8, 0);
+        Self {
+            words: vec![0u64; bytes / 8],
+            bytes,
+        }
+    }
+
+    pub fn contains(&self, addr: u32) -> bool {
+        addr >= MAIN_MEM_BASE && addr < MAIN_MEM_BASE + self.bytes as u32
+    }
+
+    #[inline]
+    fn idx(&self, addr: u32) -> usize {
+        debug_assert!(self.contains(addr), "main-mem OOB: {addr:#x}");
+        debug_assert_eq!(addr % 8, 0);
+        ((addr - MAIN_MEM_BASE) / 8) as usize
+    }
+
+    #[inline]
+    pub fn read_u64(&self, addr: u32) -> u64 {
+        self.words[self.idx(addr)]
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, addr: u32, v: u64) {
+        let i = self.idx(addr);
+        self.words[i] = v;
+    }
+
+    #[inline]
+    pub fn read_f64(&self, addr: u32) -> f64 {
+        f64::from_bits(self.read_u64(addr))
+    }
+
+    #[inline]
+    pub fn write_f64(&mut self, addr: u32, v: f64) {
+        self.write_u64(addr, v.to_bits());
+    }
+
+    /// Bulk helpers for experiment setup/readback.
+    pub fn write_slice_f64(&mut self, addr: u32, xs: &[f64]) {
+        for (i, &x) in xs.iter().enumerate() {
+            self.write_f64(addr + (i as u32) * 8, x);
+        }
+    }
+
+    pub fn read_vec_f64(&self, addr: u32, n: usize) -> Vec<f64> {
+        (0..n).map(|i| self.read_f64(addr + (i as u32) * 8)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fc_interleaving() {
+        let t = Tcdm::new(Topology::Fc { banks: 32 }, 128 * 1024);
+        assert_eq!(t.bank_of(TCDM_BASE), 0);
+        assert_eq!(t.bank_of(TCDM_BASE + 8), 1);
+        assert_eq!(t.bank_of(TCDM_BASE + 8 * 31), 31);
+        assert_eq!(t.bank_of(TCDM_BASE + 8 * 32), 0);
+        assert_eq!(t.hyperbank_of(TCDM_BASE + 64 * 1024), 0);
+    }
+
+    #[test]
+    fn dobu_hyperbank_split() {
+        // zonl48db: 96 KiB, 2x24 banks.
+        let t = Tcdm::new(Topology::Dobu { banks_per_hyper: 24 }, 96 * 1024);
+        let half = 48 * 1024;
+        assert_eq!(t.hyperbank_of(TCDM_BASE), 0);
+        assert_eq!(t.hyperbank_of(TCDM_BASE + half - 8), 0);
+        assert_eq!(t.hyperbank_of(TCDM_BASE + half), 1);
+        // interleave restarts inside each hyperbank
+        assert_eq!(t.bank_of(TCDM_BASE), 0);
+        assert_eq!(t.bank_of(TCDM_BASE + 8 * 24), 0);
+        assert_eq!(t.bank_of(TCDM_BASE + half), 24);
+        assert_eq!(t.bank_of(TCDM_BASE + half + 8 * 23), 47);
+    }
+
+    #[test]
+    fn dobu_addresses_cover_all_banks() {
+        let t = Tcdm::new(Topology::Dobu { banks_per_hyper: 32 }, 128 * 1024);
+        let mut seen = vec![false; 64];
+        for w in 0..(128 * 1024 / 8) {
+            seen[t.bank_of(TCDM_BASE + w * 8)] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn storage_roundtrip() {
+        let mut t = Tcdm::new(Topology::Fc { banks: 32 }, 128 * 1024);
+        t.write_f64(TCDM_BASE + 0x100, 3.25);
+        assert_eq!(t.read_f64(TCDM_BASE + 0x100), 3.25);
+        let mut m = MainMemory::new(1 << 20);
+        m.write_slice_f64(MAIN_MEM_BASE, &[1.0, 2.0, 3.0]);
+        assert_eq!(m.read_vec_f64(MAIN_MEM_BASE, 3), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "divide evenly")]
+    fn uneven_banking_rejected() {
+        let _ = Tcdm::new(Topology::Fc { banks: 48 }, 100 * 1024);
+    }
+
+    #[test]
+    fn topology_accessors() {
+        let fc = Topology::Fc { banks: 64 };
+        assert_eq!(fc.total_banks(), 64);
+        assert_eq!(fc.hyperbanks(), 1);
+        let db = Topology::Dobu { banks_per_hyper: 24 };
+        assert_eq!(db.total_banks(), 48);
+        assert_eq!(db.hyperbanks(), 2);
+        assert_eq!(db.banks_per_hyperbank(), 24);
+    }
+}

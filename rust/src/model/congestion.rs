@@ -1,0 +1,104 @@
+//! Routing-congestion proxy — the Fig. 4 substitute.
+//!
+//! Fig. 4 shows placed-and-routed layouts with the "sum of overflow
+//! routes" metric highlighting congestion hot-spots.  Without a P&R
+//! flow we compute a structural proxy: routing *demand* is the modeled
+//! wire length (area model), routing *supply* scales with cell area
+//! (more standard-cell area = more routing tracks over it).  The
+//! overflow score is the demand exceeding a utilization-derated
+//! supply, which reproduces the figure's qualitative story: the
+//! 64-bank fully-connected crossbar overflows badly, the Dobu variants
+//! route like the baseline.
+
+use crate::cluster::ConfigId;
+
+use super::area;
+
+/// Routing tracks deliverable per MGE of cell area (mm of wire),
+/// derated to the ~80% utilization P&R tools sustain.
+const SUPPLY_MM_PER_MGE: f64 = 7.3;
+const SUPPLY_DERATE: f64 = 1.0;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CongestionReport {
+    pub id: ConfigId,
+    /// Routing demand (modeled wire length, mm).
+    pub demand_mm: f64,
+    /// Derated routing supply (mm).
+    pub supply_mm: f64,
+    /// Sum-of-overflow-routes proxy (mm of unroutable demand).
+    pub overflow_mm: f64,
+    /// demand / supply.
+    pub pressure: f64,
+}
+
+pub fn congestion(id: ConfigId) -> CongestionReport {
+    let a = area::area(id);
+    let supply = a.cell_mge * SUPPLY_MM_PER_MGE * SUPPLY_DERATE;
+    let overflow = (a.wire_mm - supply).max(0.0);
+    CongestionReport {
+        id,
+        demand_mm: a.wire_mm,
+        supply_mm: supply,
+        overflow_mm: overflow,
+        pressure: a.wire_mm / supply,
+    }
+}
+
+/// ASCII rendition of Fig. 4: a bar per config, '#' marks overflow.
+pub fn render_fig4() -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Fig. 4 proxy — routing pressure (demand/supply), '#' = overflow\n",
+    );
+    for id in ConfigId::all() {
+        let c = congestion(id);
+        let bars = (c.pressure * 40.0).round() as usize;
+        let cap = 40usize; // pressure 1.0
+        let (ok, over) = if bars > cap {
+            (cap, bars - cap)
+        } else {
+            (bars, 0)
+        };
+        out.push_str(&format!(
+            "{:<10} |{}{}| {:.3}{}\n",
+            id.name(),
+            "=".repeat(ok),
+            "#".repeat(over),
+            c.pressure,
+            if over > 0 { "  << CONGESTED" } else { "" },
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fc64_overflows_dobu_does_not() {
+        // The qualitative content of Fig. 4.
+        let fc64 = congestion(ConfigId::Zonl64Fc);
+        let db64 = congestion(ConfigId::Zonl64Db);
+        let base = congestion(ConfigId::Base32Fc);
+        assert!(fc64.overflow_mm > 0.0, "fc64 must overflow");
+        assert_eq!(db64.overflow_mm, 0.0, "dobu64 routes cleanly");
+        assert!(fc64.pressure > db64.pressure);
+        assert!((db64.pressure - base.pressure).abs() < 0.12);
+    }
+
+    #[test]
+    fn pressure_ordering() {
+        let p = |id| congestion(id).pressure;
+        assert!(p(ConfigId::Zonl64Fc) > p(ConfigId::Zonl64Db));
+        assert!(p(ConfigId::Zonl64Db) >= p(ConfigId::Zonl48Db) - 0.05);
+    }
+
+    #[test]
+    fn render_mentions_congestion() {
+        let s = render_fig4();
+        assert!(s.contains("CONGESTED"));
+        assert!(s.contains("zonl64fc"));
+    }
+}

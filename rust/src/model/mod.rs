@@ -1,0 +1,10 @@
+//! Physical-design models: area (Table I), power/energy (Table II,
+//! Fig. 5) and the routing-congestion proxy (Fig. 4).
+
+pub mod area;
+pub mod congestion;
+pub mod power;
+
+pub use area::{area, table1, AreaBreakdown};
+pub use congestion::{congestion, render_fig4, CongestionReport};
+pub use power::{energy, EnergyReport, PowerBreakdown};

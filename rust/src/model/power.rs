@@ -1,0 +1,216 @@
+//! Event-based power/energy model — the Fig. 5 power & energy-eff
+//! boxes and the Table II power breakdown.
+//!
+//! The paper extracts switching activity from post-layout simulation
+//! and feeds PrimeTime (TT, 25C, 0.8V, 1 GHz). We instead charge a
+//! calibrated energy per architectural event counted by the simulator
+//! (FPU op, TCDM access via a given interconnect, conflict retry, I$
+//! vs ring-buffer fetch, DMA beat) on top of per-domain static/clock
+//! power. Constants are calibrated to Table II's Base32fc column; the
+//! *deltas* across configurations then follow from activity and
+//! structure (interconnect energy scales with crossbar width, macro
+//! access energy with macro capacity).
+
+use crate::cluster::{ClusterPerf, ConfigId};
+use crate::mem::Topology;
+
+/// Calibrated per-event energies (pJ) and static powers (mW) at 1 GHz.
+mod cal {
+    /// DP FMA incl. FP register file access.
+    pub const E_FPU_OP: f64 = 12.7;
+    /// Compute-domain static + clock (8 FPUs + cores).
+    pub const P_COMP_STATIC: f64 = 10.0;
+    /// SRAM access: fixed part (pJ).
+    pub const E_MACRO_FIXED: f64 = 2.9;
+    /// SRAM access: per-KiB-of-macro-capacity part (pJ/KiB).
+    pub const E_MACRO_PER_KIB: f64 = 0.58;
+    /// Memory-domain static (mW).
+    pub const P_MEM_STATIC: f64 = 5.0;
+    /// Interconnect traversal per access, per bank-per-hyperbank
+    /// (pJ / 32 banks at the baseline -> 4.05 pJ).
+    pub const E_IC_PER_BPH: f64 = 0.1266;
+    /// Dobu demux stage per access (pJ).
+    pub const E_IC_DEMUX: f64 = 0.8;
+    /// Arbitration energy of a denied (retried) request (pJ).
+    pub const E_CONFLICT: f64 = 1.0;
+    /// DMA beat (512-bit) energy, both endpoints (pJ).
+    pub const E_DMA_BEAT: f64 = 20.0;
+    /// Control-domain static + clock (frontends, DM core, cluster
+    /// fabric) (mW).
+    pub const P_CTRL_STATIC: f64 = 160.0;
+    /// Instruction fetch from the L0 I$ (pJ).
+    pub const E_ICACHE_FETCH: f64 = 2.5;
+    /// Instruction re-issue from the FREP ring buffer (pJ) — the
+    /// energy win of fetching loop bodies from the RB (§III-A).
+    pub const E_RB_REPLAY: f64 = 0.5;
+    /// Extra ZONL sequencer leakage+clock per core (mW).
+    pub const P_SEQ_ZONL: f64 = 0.33;
+    /// Integer instruction execute (pJ).
+    pub const E_INT_OP: f64 = 1.2;
+    /// Frontend issue activity per cycle per core when running (mW
+    /// equivalent is folded into P_CTRL_STATIC).
+    pub const CORES_WITH_SEQ: f64 = 9.0;
+}
+
+/// Power split in mW (Table II columns).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PowerBreakdown {
+    pub compute_mw: f64,
+    pub mem_mw: f64,
+    pub interco_mw: f64,
+    pub ctrl_mw: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total_mw(&self) -> f64 {
+        self.compute_mw + self.mem_mw + self.interco_mw + self.ctrl_mw
+    }
+}
+
+/// Full energy report for one simulated run.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyReport {
+    pub power: PowerBreakdown,
+    /// Total energy over the compute window (uJ).
+    pub energy_uj: f64,
+    /// DP Gflop/s at 1 GHz (paper peak convention: util x 8).
+    pub gflops: f64,
+    /// DP Gflop/s/W.
+    pub gflops_per_w: f64,
+    /// DP Gflop/s/mm^2.
+    pub gflops_per_mm2: f64,
+}
+
+/// Per-access interconnect energy for a topology (pJ).
+fn e_interconnect(t: Topology) -> f64 {
+    let bph = t.banks_per_hyperbank() as f64;
+    let demux = match t {
+        Topology::Fc { .. } => 0.0,
+        Topology::Dobu { .. } => cal::E_IC_DEMUX,
+    };
+    cal::E_IC_PER_BPH * bph + demux
+}
+
+/// Per-access SRAM energy given macro capacity (pJ).
+fn e_macro(t: Topology, tcdm_bytes: usize) -> f64 {
+    let kib_per_bank =
+        tcdm_bytes as f64 / 1024.0 / t.total_banks() as f64;
+    cal::E_MACRO_FIXED + cal::E_MACRO_PER_KIB * kib_per_bank
+}
+
+/// Evaluate the model over a run's perf counters.
+pub fn energy(id: ConfigId, perf: &ClusterPerf) -> EnergyReport {
+    let cfg = id.cluster_config();
+    let t = cfg.topology;
+    let cycles = perf.window_cycles.max(1) as f64;
+    let secs = cycles * 1e-9; // 1 GHz
+    let to_mw = |pj: f64| pj * 1e-12 / secs * 1e3;
+
+    // --- compute domain ---
+    let compute_mw = cal::P_COMP_STATIC
+        + to_mw(cal::E_FPU_OP * perf.fpu_ops_total as f64);
+
+    // --- memory domain (SRAM macros) ---
+    let accesses = perf.tcdm_core_accesses as f64
+        + perf.dma_beats as f64 * 8.0;
+    let mem_mw =
+        cal::P_MEM_STATIC + to_mw(e_macro(t, cfg.tcdm_bytes) * accesses);
+
+    // --- interconnect domain ---
+    let interco_mw = to_mw(
+        e_interconnect(t) * perf.tcdm_core_accesses as f64
+            + cal::E_CONFLICT * perf.tcdm_conflicts as f64
+            + cal::E_DMA_BEAT * perf.dma_beats as f64,
+    );
+
+    // --- control domain ---
+    let zonl = cfg.zonl as u8 as f64;
+    let ctrl_mw = cal::P_CTRL_STATIC
+        + zonl * cal::P_SEQ_ZONL * cal::CORES_WITH_SEQ
+        + to_mw(
+            cal::E_ICACHE_FETCH * perf.icache_fetches as f64
+                + cal::E_RB_REPLAY * perf.rb_replays as f64
+                + cal::E_INT_OP * perf.int_instrs as f64,
+        );
+
+    let power = PowerBreakdown { compute_mw, mem_mw, interco_mw, ctrl_mw };
+    let total_w = power.total_mw() / 1e3;
+    let gflops = perf.utilization * 8.0;
+    let area = super::area::area(id);
+    EnergyReport {
+        power,
+        energy_uj: total_w * secs * 1e6,
+        gflops,
+        gflops_per_w: gflops / total_w,
+        gflops_per_mm2: gflops / area.total_mm2(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{run_matmul, test_matrices};
+
+    fn run(id: ConfigId) -> EnergyReport {
+        let (a, b) = test_matrices(32, 32, 32, 3);
+        let r = run_matmul(id, 32, 32, 32, &a, &b).unwrap();
+        energy(id, &r.perf)
+    }
+
+    #[test]
+    fn base32fc_total_power_near_table2() {
+        // Paper: 340.4 mW on the 32^3 kernel.
+        let e = run(ConfigId::Base32Fc);
+        let total = e.power.total_mw();
+        assert!(
+            (total - 340.4).abs() / 340.4 < 0.10,
+            "total {total:.1} mW vs 340.4"
+        );
+        // Component sanity: ctrl dominates, compute ~100-120 mW.
+        assert!(e.power.ctrl_mw > 150.0);
+        assert!(e.power.compute_mw > 90.0 && e.power.compute_mw < 130.0);
+    }
+
+    #[test]
+    fn zonl48db_energy_efficiency_beats_baseline() {
+        // Paper: +8% median energy efficiency; on 32^3 Table II gives
+        // 23.2 vs 22.4 DPGflop/s/W (+3.6%).
+        let b = run(ConfigId::Base32Fc);
+        let z = run(ConfigId::Zonl48Db);
+        assert!(
+            z.gflops_per_w > b.gflops_per_w,
+            "48db {:.1} vs base {:.1}",
+            z.gflops_per_w,
+            b.gflops_per_w
+        );
+        // In the right absolute range (paper: 22.4 / 23.2).
+        assert!(b.gflops_per_w > 19.0 && b.gflops_per_w < 26.0);
+        assert!(z.gflops_per_w > 20.0 && z.gflops_per_w < 27.0);
+    }
+
+    #[test]
+    fn fc64_burns_more_interconnect_power() {
+        // Paper: Zonl64fc costs +12% median energy vs Zonl32fc.
+        let z32 = run(ConfigId::Zonl32Fc);
+        let z64 = run(ConfigId::Zonl64Fc);
+        assert!(
+            z64.power.interco_mw > 1.5 * z32.power.interco_mw,
+            "fc64 interco {:.1} vs fc32 {:.1}",
+            z64.power.interco_mw,
+            z32.power.interco_mw
+        );
+        // And the Dobu version avoids most of that cost.
+        let db64 = run(ConfigId::Zonl64Db);
+        assert!(db64.power.interco_mw < 1.2 * z32.power.interco_mw);
+    }
+
+    #[test]
+    fn energy_positive_and_consistent() {
+        for id in ConfigId::all() {
+            let e = run(id);
+            assert!(e.energy_uj > 0.0);
+            assert!(e.gflops > 5.0 && e.gflops <= 8.0);
+            assert!(e.gflops_per_mm2 > 5.0);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! OpenGeMM comparator model [6] — the specialized-accelerator row of
+//! Table II.
+//!
+//! OpenGeMM couples a Snitch control core with a GEMM accelerator and
+//! tightly-coupled wide memory banks. For an arithmetic-precision-
+//! agnostic comparison the paper swaps its 8x8x8 INT8 core for a
+//! 2x2x2-FP64 SIMD equivalent, giving the same 8 DPGflop/s peak as the
+//! cluster, and scales the published power by 4.92x for technology
+//! (0.7x), voltage and frequency (prop. V^2 f); areas convert at
+//! 1 GE_TSMC16 = 0.138 um^2.
+//!
+//! The cycle model reproduces OpenGeMM's utilization behaviour: an
+//! output-stationary 2x2x2 datapath (8 MACs/cycle) with a per-launch
+//! control/config overhead and a systolic fill/drain term.  Calibrated
+//! to the published ~95% on 32^3 and 99.34% peak on large workloads.
+
+/// Result of the comparator cycle model for one GEMM.
+#[derive(Clone, Copy, Debug)]
+pub struct OpenGemmRun {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub cycles: u64,
+    pub utilization: f64,
+    pub gflops: f64,
+}
+
+/// Per-launch control overhead (CSR config through the Snitch control
+/// core + accelerator start), cycles.
+const LAUNCH_OVERHEAD: u64 = 100;
+
+/// Cycle model: ideal MNK/8 plus launch + fill/drain + preload ramp.
+pub fn run(m: usize, n: usize, k: usize) -> OpenGemmRun {
+    let ideal = (m * n * k) as u64 / 8;
+    let fill_drain = 2 * k as u64; // systolic array fill + drain
+    let preload = (m * n) as u64 / 16; // output tile init/writeback ramp
+    let cycles = ideal + LAUNCH_OVERHEAD + fill_drain + preload;
+    let utilization = ideal as f64 / cycles as f64;
+    OpenGemmRun {
+        m,
+        n,
+        k,
+        cycles,
+        utilization,
+        gflops: utilization * 8.0,
+    }
+}
+
+/// Area breakdown (MGE), Table II conventions.
+#[derive(Clone, Copy, Debug)]
+pub struct OpenGemmArea {
+    pub compute_mge: f64,
+    pub mem_interco_mge: f64,
+    pub ctrl_mge: f64,
+}
+
+impl OpenGemmArea {
+    pub fn total_mge(&self) -> f64 {
+        self.compute_mge + self.mem_interco_mge + self.ctrl_mge
+    }
+
+    pub fn total_mm2(&self) -> f64 {
+        self.total_mge() * 0.121 // reported in GF12 GE like the others
+    }
+}
+
+/// Published/derived Table II area row.
+///
+/// The paper's Table II totals are self-consistent with
+/// `total = comp + L1 + ctrl` (the separately-listed interconnect
+/// share is folded into the memory column); for OpenGeMM the published
+/// total is 3.85 MGE with mem+interco 2.44 and ctrl 0.86, leaving
+/// 0.55 MGE for the dense 2x2x2 FP64 datapath (8 tightly-arrayed FMA
+/// lanes — far smaller than 8 independent Snitch FPU complexes).
+pub fn area() -> OpenGemmArea {
+    OpenGemmArea {
+        compute_mge: 3.85 - 2.44 - 0.86,
+        mem_interco_mge: 2.44,
+        ctrl_mge: 0.86,
+    }
+}
+
+/// Power breakdown (mW) at a given utilization; compute power scales
+/// with activity around the published 106.3 mW @ 95%.
+#[derive(Clone, Copy, Debug)]
+pub struct OpenGemmPower {
+    pub compute_mw: f64,
+    pub mem_interco_mw: f64,
+    pub ctrl_mw: f64,
+}
+
+impl OpenGemmPower {
+    pub fn total_mw(&self) -> f64 {
+        self.compute_mw + self.mem_interco_mw + self.ctrl_mw
+    }
+}
+
+pub fn power(utilization: f64) -> OpenGemmPower {
+    OpenGemmPower {
+        compute_mw: 106.3 * (utilization / 0.95),
+        mem_interco_mw: 90.2,
+        ctrl_mw: 93.0,
+    }
+}
+
+/// The complete Table II row on a 32^3 kernel.
+pub fn table2_row() -> (OpenGemmRun, OpenGemmArea, OpenGemmPower) {
+    let r = run(32, 32, 32);
+    (r, area(), power(r.utilization))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn util_95_on_cube32() {
+        let r = run(32, 32, 32);
+        assert!(
+            (r.utilization - 0.95).abs() < 0.01,
+            "32^3 util {:.3}",
+            r.utilization
+        );
+    }
+
+    #[test]
+    fn util_saturates_to_published_peak() {
+        let r = run(128, 128, 128);
+        assert!(
+            r.utilization > 0.99 && r.utilization < 0.9951,
+            "128^3 util {:.4}",
+            r.utilization
+        );
+    }
+
+    #[test]
+    fn small_sizes_lose_like_an_accelerator() {
+        let r = run(8, 8, 8);
+        assert!(r.utilization < 0.40, "8^3 util {:.3}", r.utilization);
+    }
+
+    #[test]
+    fn table2_row_matches_paper() {
+        let (r, a, p) = table2_row();
+        assert!((a.total_mge() - 3.85).abs() < 0.01);
+        assert!((p.total_mw() - 289.5).abs() / 289.5 < 0.02,
+                "power {:.1}", p.total_mw());
+        let eff = r.gflops / (p.total_mw() / 1e3);
+        assert!((eff - 26.3).abs() < 1.0, "energy eff {eff:.1}");
+        // area efficiency ~16.3 DPGflop/s/mm^2
+        let aeff = r.gflops / a.total_mm2();
+        assert!((aeff - 16.3).abs() < 1.0, "area eff {aeff:.1}");
+    }
+}

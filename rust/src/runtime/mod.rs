@@ -1,0 +1,167 @@
+//! PJRT golden-model runtime.
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py` (HLO
+//! *text* — see DESIGN.md for why not serialized protos) and executes
+//! them on the PJRT CPU client through the `xla` crate.  Python never
+//! runs here; the artifacts are the only bridge.
+//!
+//! The golden model validates the *functional* output of the simulated
+//! cluster: `golden_matmul` composes the `matmul_acc_32` tile
+//! executable (one double-buffer iteration, `C + A @ B` on 32^3 tiles,
+//! zero-padded) over the K/M/N grid for any size in the paper's
+//! {8..128}^3 evaluation space.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A compiled AOT artifact ready to execute.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT client: {e:?}"))?;
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        anyhow::ensure!(
+            dir.join("manifest.json").exists(),
+            "artifacts not built — run `make artifacts` (looked in {})",
+            dir.display()
+        );
+        Ok(Self { client, dir })
+    }
+
+    /// Default artifacts location (repo-relative).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn load(&self, name: &str) -> Result<Artifact> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("path utf8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        Ok(Artifact { exe, name: name.to_string() })
+    }
+}
+
+impl Artifact {
+    /// Execute on f64 matrices; `shapes` give each input's dims.
+    pub fn run_f64(
+        &self,
+        inputs: &[(&[f64], &[usize])],
+    ) -> Result<Vec<f64>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+            lits.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?
+            [0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("sync: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+        out.to_vec::<f64>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+}
+
+/// Tile size of the accumulate artifact.
+const T: usize = 32;
+
+/// Golden `C = A @ B` for any (m, n, k) multiples of 8 up to 128+:
+/// zero-pads to 32-multiples and composes `matmul_acc_32` over the
+/// tile grid — the same double-buffer iteration structure the
+/// simulated cluster executes.
+pub fn golden_matmul(
+    rt: &Runtime,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+) -> Result<Vec<f64>> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let acc = rt.load("matmul_acc_32")?;
+    let pad = |d: usize| d.div_ceil(T) * T;
+    let (mp, np, kp) = (pad(m), pad(n), pad(k));
+    let mut ap = vec![0.0; mp * kp];
+    for i in 0..m {
+        ap[i * kp..i * kp + k].copy_from_slice(&a[i * k..(i + 1) * k]);
+    }
+    let mut bp = vec![0.0; kp * np];
+    for i in 0..k {
+        bp[i * np..i * np + n].copy_from_slice(&b[i * n..(i + 1) * n]);
+    }
+    let mut cp = vec![0.0; mp * np];
+
+    let mut a_tile = vec![0.0; T * T];
+    let mut b_tile = vec![0.0; T * T];
+    let mut c_tile = vec![0.0; T * T];
+    for it in 0..mp / T {
+        for jt in 0..np / T {
+            c_tile.fill(0.0);
+            for kt in 0..kp / T {
+                for r in 0..T {
+                    let src = (it * T + r) * kp + kt * T;
+                    a_tile[r * T..(r + 1) * T]
+                        .copy_from_slice(&ap[src..src + T]);
+                }
+                for r in 0..T {
+                    let src = (kt * T + r) * np + jt * T;
+                    b_tile[r * T..(r + 1) * T]
+                        .copy_from_slice(&bp[src..src + T]);
+                }
+                c_tile = acc.run_f64(&[
+                    (&c_tile, &[T, T]),
+                    (&a_tile, &[T, T]),
+                    (&b_tile, &[T, T]),
+                ])?;
+            }
+            for r in 0..T {
+                let dst = (it * T + r) * np + jt * T;
+                cp[dst..dst + T].copy_from_slice(&c_tile[r * T..(r + 1) * T]);
+            }
+        }
+    }
+    // strip padding
+    let mut c = vec![0.0; m * n];
+    for i in 0..m {
+        c[i * n..(i + 1) * n].copy_from_slice(&cp[i * np..i * np + n]);
+    }
+    Ok(c)
+}
+
+/// Relative-error comparison between simulator output and golden model
+/// (association orders differ: fused fmadd chain vs XLA dot).
+pub fn max_rel_error(got: &[f64], want: &[f64]) -> f64 {
+    got.iter()
+        .zip(want)
+        .map(|(g, w)| (g - w).abs() / w.abs().max(1.0))
+        .fold(0.0, f64::max)
+}

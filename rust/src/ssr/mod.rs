@@ -1,0 +1,408 @@
+//! Stream Semantic Registers (SSRs) — Snitch's data movers [4].
+//!
+//! Each compute core has three streamers mapped onto ft0/ft1/ft2:
+//! reads of an enabled stream register pop from the streamer's data
+//! FIFO (filled by a 4-deep affine address generator prefetching from
+//! TCDM), writes push into the write FIFO (drained to TCDM in the
+//! background).  Each streamer owns one 64-bit TCDM port, so a core
+//! presents up to 3 requests per cycle to the interconnect — the
+//! 3 reads + 1 write budget the paper's §III-B bandwidth math uses
+//! (the LSU shares the write port in real Snitch; we give the LSU its
+//! own request slot, which matters only outside SSR hot loops).
+//!
+//! The *element repeat* feature serves each streamed element `r+1`
+//! times before advancing — Fig. 1b streams one A element to all
+//! `unroll` fmadds this way, cutting the A stream's bandwidth by 8x.
+
+use crate::isa::SsrField;
+
+/// Data FIFO depth per streamer (Snitch default).
+pub const SSR_FIFO_DEPTH: usize = 4;
+/// Maximum address-generation dimensions.
+pub const SSR_DIMS: usize = 4;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SsrMode {
+    Idle,
+    Read,
+    Write,
+}
+
+#[derive(Clone, Debug)]
+pub struct Streamer {
+    pub mode: SsrMode,
+    base: u32,
+    /// Iteration counts per dim (config writes `n-1`, we store `n`).
+    bounds: [u32; SSR_DIMS],
+    /// Byte strides per dim.
+    strides: [i32; SSR_DIMS],
+    dims: u8,
+    /// Serve each element `repeat + 1` times.
+    repeat: u32,
+
+    // --- address generator state ---
+    idx: [u32; SSR_DIMS],
+    addr: u32,
+    exhausted: bool,
+
+    // --- data FIFO ---
+    fifo: [f64; SSR_FIFO_DEPTH],
+    head: usize,
+    len: usize,
+    /// Reads: how many times the current head has been served.
+    rep_served: u32,
+    /// Writes: FIFO slots promised to in-flight FPU ops.
+    reserved: usize,
+
+    // --- statistics ---
+    pub total_requests: u64,
+    pub conflicts: u64,
+}
+
+impl Default for Streamer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Streamer {
+    pub fn new() -> Self {
+        Self {
+            mode: SsrMode::Idle,
+            base: 0,
+            bounds: [1; SSR_DIMS],
+            strides: [0; SSR_DIMS],
+            dims: 0,
+            repeat: 0,
+            idx: [0; SSR_DIMS],
+            addr: 0,
+            exhausted: true,
+            fifo: [0.0; SSR_FIFO_DEPTH],
+            head: 0,
+            len: 0,
+            rep_served: 0,
+            reserved: 0,
+            total_requests: 0,
+            conflicts: 0,
+        }
+    }
+
+    /// Apply a `scfgw` config write.
+    pub fn config(&mut self, field: SsrField, value: u32) {
+        match field {
+            SsrField::Repeat => self.repeat = value,
+            SsrField::Bound(d) => self.bounds[d as usize] = value + 1,
+            SsrField::Stride(d) => self.strides[d as usize] = value as i32,
+            SsrField::ReadBase(d) => self.arm(SsrMode::Read, d + 1, value),
+            SsrField::WriteBase(d) => self.arm(SsrMode::Write, d + 1, value),
+        }
+    }
+
+    fn arm(&mut self, mode: SsrMode, dims: u8, base: u32) {
+        assert!(dims as usize <= SSR_DIMS);
+        assert_eq!(base % 8, 0, "SSR base must be 8-byte aligned");
+        self.mode = mode;
+        self.dims = dims;
+        self.base = base;
+        self.idx = [0; SSR_DIMS];
+        self.addr = base;
+        self.exhausted = false;
+        self.head = 0;
+        self.len = 0;
+        self.rep_served = 0;
+        self.reserved = 0;
+    }
+
+    pub fn disarm(&mut self) {
+        self.mode = SsrMode::Idle;
+        self.exhausted = true;
+        self.len = 0;
+        self.reserved = 0;
+    }
+
+    /// Advance the odometer to the next address.
+    fn advance_gen(&mut self) {
+        for d in 0..self.dims as usize {
+            self.idx[d] += 1;
+            self.addr = self.addr.wrapping_add(self.strides[d] as u32);
+            if self.idx[d] < self.bounds[d] {
+                return;
+            }
+            // carry: unwind this dim
+            self.addr = self.addr.wrapping_sub(
+                (self.strides[d] as u32).wrapping_mul(self.bounds[d]),
+            );
+            self.idx[d] = 0;
+        }
+        self.exhausted = true;
+    }
+
+    // ------------------------------------------------ read side ----
+
+    /// TCDM read request this cycle, if the generator is live and the
+    /// FIFO has room.
+    #[inline(always)]
+    pub fn read_request(&self) -> Option<u32> {
+        if self.mode == SsrMode::Read
+            && !self.exhausted
+            && self.len < SSR_FIFO_DEPTH
+        {
+            Some(self.addr)
+        } else {
+            None
+        }
+    }
+
+    /// A read was granted: push data, advance the generator.
+    pub fn read_granted(&mut self, data: f64) {
+        debug_assert!(self.len < SSR_FIFO_DEPTH);
+        let tail = (self.head + self.len) % SSR_FIFO_DEPTH;
+        self.fifo[tail] = data;
+        self.len += 1;
+        self.advance_gen();
+    }
+
+    /// Is an operand available for the FPU this cycle?
+    #[inline(always)]
+    pub fn can_pop(&self) -> bool {
+        self.mode == SsrMode::Read && self.len > 0
+    }
+
+    /// Consume one operand (honouring element repeat).
+    #[inline(always)]
+    pub fn pop(&mut self) -> f64 {
+        debug_assert!(self.can_pop());
+        let v = self.fifo[self.head];
+        self.rep_served += 1;
+        if self.rep_served > self.repeat {
+            self.rep_served = 0;
+            self.head = (self.head + 1) % SSR_FIFO_DEPTH;
+            self.len -= 1;
+        }
+        v
+    }
+
+    // ----------------------------------------------- write side ----
+
+    /// Reserve a write-FIFO slot at FPU issue time (so the writeback
+    /// can never block the pipeline).
+    pub fn can_reserve(&self) -> bool {
+        self.mode == SsrMode::Write
+            && self.len + self.reserved < SSR_FIFO_DEPTH
+    }
+
+    pub fn reserve(&mut self) {
+        debug_assert!(self.can_reserve());
+        self.reserved += 1;
+    }
+
+    /// FPU writeback arrives: convert a reservation into data.
+    pub fn push_write(&mut self, value: f64) {
+        debug_assert!(self.reserved > 0);
+        self.reserved -= 1;
+        let tail = (self.head + self.len) % SSR_FIFO_DEPTH;
+        self.fifo[tail] = value;
+        self.len += 1;
+    }
+
+    /// TCDM write request this cycle (head of the write FIFO).
+    pub fn write_request(&self) -> Option<(u32, f64)> {
+        if self.mode == SsrMode::Write && self.len > 0 && !self.exhausted {
+            Some((self.addr, self.fifo[self.head]))
+        } else {
+            None
+        }
+    }
+
+    /// The write was granted: pop and advance.
+    pub fn write_granted(&mut self) {
+        debug_assert!(self.len > 0);
+        self.head = (self.head + 1) % SSR_FIFO_DEPTH;
+        self.len -= 1;
+        self.advance_gen();
+    }
+
+    /// Fully drained (barrier condition)?
+    pub fn drained(&self) -> bool {
+        match self.mode {
+            SsrMode::Idle => true,
+            SsrMode::Read => true, // reads may be abandoned at disable
+            SsrMode::Write => self.len == 0 && self.reserved == 0,
+        }
+    }
+
+    /// Total elements this generator walks (for tests).
+    pub fn total_elems(&self) -> u64 {
+        (0..self.dims as usize)
+            .map(|d| self.bounds[d] as u64)
+            .product()
+    }
+}
+
+/// Software oracle: the exact address sequence an armed generator
+/// walks. Used by unit and property tests.
+pub fn oracle_addresses(
+    base: u32,
+    bounds: &[u32],
+    strides: &[i32],
+) -> Vec<u32> {
+    let dims = bounds.len();
+    assert_eq!(dims, strides.len());
+    let mut out = Vec::new();
+    let mut idx = vec![0u32; dims];
+    loop {
+        let mut addr = base as i64;
+        for d in 0..dims {
+            addr += idx[d] as i64 * strides[d] as i64;
+        }
+        out.push(addr as u32);
+        // odometer
+        let mut d = 0;
+        loop {
+            if d == dims {
+                return out;
+            }
+            idx[d] += 1;
+            if idx[d] < bounds[d] {
+                break;
+            }
+            idx[d] = 0;
+            d += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn armed_read(base: u32, bounds: &[u32], strides: &[i32]) -> Streamer {
+        let mut s = Streamer::new();
+        for (d, (&b, &st)) in bounds.iter().zip(strides).enumerate() {
+            s.config(SsrField::Bound(d as u8), b - 1);
+            s.config(SsrField::Stride(d as u8), st as u32);
+        }
+        s.config(SsrField::ReadBase(bounds.len() as u8 - 1), base);
+        s
+    }
+
+    /// Drain a read streamer completely, returning the request trace.
+    fn drain_reads(s: &mut Streamer) -> Vec<u32> {
+        let mut addrs = Vec::new();
+        let mut guard = 0;
+        while let Some(a) = s.read_request() {
+            addrs.push(a);
+            s.read_granted(0.0);
+            // consume to keep the FIFO from filling
+            while s.can_pop() {
+                s.pop();
+            }
+            guard += 1;
+            assert!(guard < 100_000);
+        }
+        addrs
+    }
+
+    #[test]
+    fn addrgen_1d() {
+        let mut s = armed_read(0x1000, &[4], &[8]);
+        assert_eq!(
+            drain_reads(&mut s),
+            oracle_addresses(0x1000, &[4], &[8])
+        );
+    }
+
+    #[test]
+    fn addrgen_2d_row_major() {
+        // 3 rows of 4 elements, row stride 64 bytes.
+        let got = drain_reads(&mut armed_read(0, &[4, 3], &[8, 64]));
+        assert_eq!(got, oracle_addresses(0, &[4, 3], &[8, 64]));
+        assert_eq!(got.len(), 12);
+        assert_eq!(got[4], 64);
+    }
+
+    #[test]
+    fn addrgen_4d_with_zero_stride() {
+        // The B-matrix pattern: u(8), then repeat the j-block (stride 0).
+        let bounds = [4u32, 2, 3, 2];
+        let strides = [8i32, 32, 0, 256];
+        let got = drain_reads(&mut armed_read(0x800, &bounds, &strides));
+        assert_eq!(got, oracle_addresses(0x800, &bounds, &strides));
+    }
+
+    #[test]
+    fn addrgen_negative_stride() {
+        let got = drain_reads(&mut armed_read(0x100, &[4], &[-8]));
+        assert_eq!(got, vec![0x100, 0xF8, 0xF0, 0xE8]);
+    }
+
+    #[test]
+    fn repeat_serves_element_n_times() {
+        let mut s = Streamer::new();
+        s.config(SsrField::Bound(0), 1); // 2 elements
+        s.config(SsrField::Stride(0), 8);
+        s.config(SsrField::Repeat, 2); // serve 3x each
+        s.config(SsrField::ReadBase(0), 0);
+        s.read_granted(1.5);
+        s.read_granted(2.5);
+        let mut got = Vec::new();
+        for _ in 0..6 {
+            assert!(s.can_pop());
+            got.push(s.pop());
+        }
+        assert_eq!(got, vec![1.5, 1.5, 1.5, 2.5, 2.5, 2.5]);
+        assert!(!s.can_pop());
+    }
+
+    #[test]
+    fn fifo_backpressure() {
+        let mut s = armed_read(0, &[100], &[8]);
+        for i in 0..SSR_FIFO_DEPTH {
+            assert!(s.read_request().is_some());
+            s.read_granted(i as f64);
+        }
+        assert!(s.read_request().is_none(), "FIFO full");
+        s.pop();
+        assert!(s.read_request().is_some());
+    }
+
+    #[test]
+    fn write_stream_reserve_push_drain() {
+        let mut s = Streamer::new();
+        s.config(SsrField::Bound(0), 3); // 4 writes
+        s.config(SsrField::Stride(0), 8);
+        s.config(SsrField::WriteBase(0), 0x40);
+        assert!(s.can_reserve());
+        s.reserve();
+        s.reserve();
+        assert!(!s.drained());
+        s.push_write(1.0);
+        s.push_write(2.0);
+        assert_eq!(s.write_request(), Some((0x40, 1.0)));
+        s.write_granted();
+        assert_eq!(s.write_request(), Some((0x48, 2.0)));
+        s.write_granted();
+        assert!(s.drained());
+        assert!(s.write_request().is_none());
+    }
+
+    #[test]
+    fn write_reserve_respects_capacity() {
+        let mut s = Streamer::new();
+        s.config(SsrField::WriteBase(0), 0);
+        for _ in 0..SSR_FIFO_DEPTH {
+            assert!(s.can_reserve());
+            s.reserve();
+        }
+        assert!(!s.can_reserve());
+    }
+
+    #[test]
+    fn exhaustion_total_elems() {
+        let s = armed_read(0, &[4, 3, 2], &[8, 32, 96]);
+        assert_eq!(s.total_elems(), 24);
+        let mut s2 = s.clone();
+        assert_eq!(drain_reads(&mut s2).len(), 24);
+        assert!(s2.read_request().is_none());
+    }
+}

@@ -1,0 +1,152 @@
+//! Tiny benchmark harness (criterion is not available offline).
+//!
+//! Used by the `[[bench]]` targets (all `harness = false`): warmup,
+//! timed iterations, and a robust summary (median + MAD) printed in a
+//! criterion-like format so `cargo bench` output stays familiar.
+
+use std::time::{Duration, Instant};
+
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    min_iters: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(1),
+            min_iters: 5,
+        }
+    }
+}
+
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub mad: Duration,
+    pub mean: Duration,
+}
+
+impl Sample {
+    pub fn print(&self) {
+        println!(
+            "{:<44} time: [{:>12} median] mad: {:>10} mean: {:>12} ({} iters)",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mad),
+            fmt_dur(self.mean),
+            self.iters
+        );
+    }
+
+    /// items/second given how many logical items one iteration processes.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median.as_secs_f64()
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            min_iters: 3,
+        }
+    }
+
+    /// Benchmark `f`, which should perform ONE logical iteration and
+    /// return a value (kept opaque to prevent dead-code elimination).
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Sample {
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup || warm_iters < 1 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = start.elapsed() / warm_iters.max(1) as u32;
+
+        // Choose a batch size targeting ~20 samples in the budget.
+        let target_sample = (self.measure / 20).max(Duration::from_micros(50));
+        let batch = (target_sample.as_nanos() / per_iter.as_nanos().max(1))
+            .clamp(1, 1 << 20) as u64;
+
+        let mut samples: Vec<Duration> = Vec::new();
+        let mut total_iters = 0u64;
+        let begin = Instant::now();
+        while begin.elapsed() < self.measure
+            || samples.len() < self.min_iters as usize
+        {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed() / batch as u32);
+            total_iters += batch;
+        }
+
+        samples.sort();
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let mut devs: Vec<i128> = samples
+            .iter()
+            .map(|s| (s.as_nanos() as i128 - median.as_nanos() as i128).abs())
+            .collect();
+        devs.sort();
+        let mad = Duration::from_nanos(devs[devs.len() / 2] as u64);
+
+        let s = Sample {
+            name: name.to_string(),
+            iters: total_iters,
+            median,
+            mad,
+            mean,
+        };
+        s.print();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::quick();
+        let s = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                // keep the loop opaque in release builds
+                acc = acc.wrapping_add(std::hint::black_box(i) * i);
+            }
+            acc
+        });
+        assert!(s.iters > 0);
+        assert!(s.mean.as_nanos() < 1_000_000, "suspiciously slow");
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

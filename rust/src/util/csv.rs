@@ -1,0 +1,90 @@
+//! Minimal CSV writer for experiment outputs (`results/*.csv`).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    fn escape(cell: &str) -> String {
+        if cell.contains([',', '"', '\n']) {
+            format!("\"{}\"", cell.replace('"', "\"\""))
+        } else {
+            cell.to_string()
+        }
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let esc = |cells: &[String]| {
+            cells.iter().map(|c| Self::escape(c)).collect::<Vec<_>>()
+                .join(",")
+        };
+        let _ = writeln!(out, "{}", esc(&self.header));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", esc(r));
+        }
+        out
+    }
+
+    pub fn write(&self, path: &Path) -> io::Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_string())
+    }
+}
+
+/// Format a float with fixed decimals, trimming noise for reports.
+pub fn f(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basic() {
+        let mut c = Csv::new(vec!["a", "b"]);
+        c.row(vec!["1", "2"]).row(vec!["x,y", "q\"z"]);
+        let s = c.to_string();
+        assert_eq!(s, "a,b\n1,2\n\"x,y\",\"q\"\"z\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        Csv::new(vec!["a"]).row(vec!["1", "2"]);
+    }
+
+    #[test]
+    fn float_format() {
+        assert_eq!(f(3.14159, 2), "3.14");
+    }
+}

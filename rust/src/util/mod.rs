@@ -1,0 +1,9 @@
+//! Small self-contained utilities (no external crates are available in
+//! this environment beyond `xla`/`anyhow`, so the RNG, statistics,
+//! property-testing and CSV helpers live here).
+
+pub mod bench;
+pub mod csv;
+pub mod prop;
+pub mod rng;
+pub mod stats;

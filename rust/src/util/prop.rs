@@ -1,0 +1,185 @@
+//! Mini property-testing framework.
+//!
+//! `proptest` is not available offline, so this module provides the
+//! subset the test-suite needs: seeded case generation, a configurable
+//! case count, and greedy input shrinking for failures (halving numeric
+//! fields via the `Shrink` trait).  Failures report the master seed and
+//! case index so they replay exactly.
+
+use super::rng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Env overrides let CI widen coverage without code changes.
+        let cases = std::env::var("PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Self { cases, seed }
+    }
+}
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized {
+    /// Candidate shrinks, in decreasing preference. Empty = atomic.
+    fn shrinks(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrinks(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![self / 2, self - 1]
+        }
+    }
+}
+
+impl Shrink for u64 {
+    fn shrinks(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![self / 2, self - 1]
+        }
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Drop halves, drop one element, shrink one element.
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        if self.len() > 1 {
+            let mut v = self.clone();
+            v.pop();
+            out.push(v);
+        }
+        for i in 0..self.len().min(4) {
+            for s in self[i].shrinks() {
+                let mut v = self.clone();
+                v[i] = s;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// Run `prop` against `cases` inputs drawn by `gen`.  On failure, tries
+/// up to 200 shrink steps and panics with the minimal failing input's
+/// debug representation.
+pub fn check<T, G, P>(cfg: &Config, mut gen: G, mut prop: P)
+where
+    T: Shrink + Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut master = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = master.fork(case as u64);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Shrink.
+            let mut best = input.clone();
+            let mut best_msg = first_msg;
+            let mut budget = 200usize;
+            'outer: while budget > 0 {
+                for cand in best.shrinks() {
+                    budget = budget.saturating_sub(1);
+                    if let Err(msg) = prop(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={}, case={case}):\n  input: {:?}\n  \
+                 error: {}",
+                cfg.seed, best, best_msg
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            &Config { cases: 50, seed: 1 },
+            |r| r.range(0, 100),
+            |&x| {
+                if x <= 100 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} > 100"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(
+            &Config { cases: 50, seed: 2 },
+            |r| r.range(0, 100),
+            |&x| {
+                if x < 50 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_reaches_boundary() {
+        // Capture the panic message and confirm the shrunk witness is the
+        // boundary value 50, not an arbitrary large one.
+        let res = std::panic::catch_unwind(|| {
+            check(
+                &Config { cases: 50, seed: 3 },
+                |r| r.range(0, 10_000),
+                |&x| {
+                    if x < 50 {
+                        Ok(())
+                    } else {
+                        Err("boundary".into())
+                    }
+                },
+            );
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("input: 50"), "unshrunk witness: {msg}");
+    }
+
+    #[test]
+    fn vec_shrink_produces_smaller() {
+        let v = vec![4usize, 5, 6];
+        assert!(v.shrinks().iter().all(|s| s.len() < v.len()
+            || s.iter().sum::<usize>() < v.iter().sum::<usize>()));
+    }
+}

@@ -1,0 +1,145 @@
+//! Descriptive statistics for experiment reporting (Fig. 5 box plots).
+
+/// Five-number summary plus mean — exactly what a box plot needs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BoxStats {
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub n: usize,
+}
+
+impl BoxStats {
+    pub fn iqr(&self) -> f64 {
+        self.q3 - self.q1
+    }
+
+    /// Values outside `[q1 - 1.5 IQR, q3 + 1.5 IQR]` (Tukey fences),
+    /// matching how the paper's Fig. 5 marks outliers.
+    pub fn outliers(&self, xs: &[f64]) -> Vec<f64> {
+        let lo = self.q1 - 1.5 * self.iqr();
+        let hi = self.q3 + 1.5 * self.iqr();
+        xs.iter().copied().filter(|&x| x < lo || x > hi).collect()
+    }
+
+    /// Smallest / largest non-outlier values (box-plot whisker ends).
+    pub fn whiskers(&self, xs: &[f64]) -> (f64, f64) {
+        let lo = self.q1 - 1.5 * self.iqr();
+        let hi = self.q3 + 1.5 * self.iqr();
+        let mut wlo = f64::INFINITY;
+        let mut whi = f64::NEG_INFINITY;
+        for &x in xs {
+            if x >= lo && x <= hi {
+                wlo = wlo.min(x);
+                whi = whi.max(x);
+            }
+        }
+        (wlo, whi)
+    }
+}
+
+/// Linear-interpolated quantile (type-7, numpy default) of a sorted slice.
+fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+pub fn box_stats(xs: &[f64]) -> BoxStats {
+    assert!(!xs.is_empty(), "box_stats of empty slice");
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).expect("NaN in stats input"));
+    BoxStats {
+        min: s[0],
+        q1: quantile_sorted(&s, 0.25),
+        median: quantile_sorted(&s, 0.5),
+        q3: quantile_sorted(&s, 0.75),
+        max: *s.last().unwrap(),
+        mean: s.iter().sum::<f64>() / s.len() as f64,
+        n: s.len(),
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    box_stats(xs).median
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        / xs.len().max(1) as f64)
+        .sqrt()
+}
+
+/// Geometric mean (used for speedup aggregation).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn quartiles_numpy_type7() {
+        // numpy.percentile([1..5], [25, 50, 75]) == [2.0, 3.0, 4.0]
+        let s = box_stats(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.q1, 2.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.q3, 4.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn single_element() {
+        let s = box_stats(&[7.0]);
+        assert_eq!(s.median, 7.0);
+        assert_eq!(s.q1, 7.0);
+        assert_eq!(s.max, 7.0);
+    }
+
+    #[test]
+    fn outliers_tukey() {
+        let mut xs: Vec<f64> = (1..=20).map(|x| x as f64).collect();
+        xs.push(100.0);
+        let s = box_stats(&xs);
+        let out = s.outliers(&xs);
+        assert_eq!(out, vec![100.0]);
+        let (wlo, whi) = s.whiskers(&xs);
+        assert_eq!(wlo, 1.0);
+        assert_eq!(whi, 20.0);
+    }
+
+    #[test]
+    fn geomean_of_twos() {
+        let g = geomean(&[2.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stddev_constant_is_zero() {
+        assert_eq!(stddev(&[5.0, 5.0, 5.0]), 0.0);
+    }
+}

@@ -1,0 +1,87 @@
+//! E8 — end-to-end golden validation: the cycle-accurate cluster's
+//! functional output vs the AOT-compiled JAX/Pallas model executed
+//! through PJRT (rust `xla` crate, CPU client).
+//!
+//! Requires `make artifacts` (the build system runs it before
+//! `cargo test`); tests fail with a clear message otherwise.
+
+use zerostall::cluster::ConfigId;
+use zerostall::kernels::{run_matmul, test_matrices};
+use zerostall::runtime::{golden_matmul, max_rel_error, Runtime};
+
+fn runtime() -> Runtime {
+    Runtime::new(Runtime::default_dir()).expect(
+        "artifacts missing — run `make artifacts` before cargo test",
+    )
+}
+
+#[test]
+fn golden_cube_sizes() {
+    let rt = runtime();
+    for s in [8usize, 16, 32, 64] {
+        let (a, b) = test_matrices(s, s, s, 21);
+        let sim =
+            run_matmul(ConfigId::Zonl48Db, s, s, s, &a, &b).unwrap();
+        let gold = golden_matmul(&rt, s, s, s, &a, &b).unwrap();
+        let err = max_rel_error(&sim.c, &gold);
+        assert!(err < 1e-9, "{s}^3: rel err {err:.2e}");
+    }
+}
+
+#[test]
+fn golden_rectangular_padded() {
+    // Sizes that are not multiples of the 32-wide golden tile: the
+    // zero-padding composition path.
+    let rt = runtime();
+    for (m, n, k) in [(24, 40, 8), (8, 8, 72), (56, 16, 48)] {
+        let (a, b) = test_matrices(m, n, k, 22);
+        let sim =
+            run_matmul(ConfigId::Zonl64Db, m, n, k, &a, &b).unwrap();
+        let gold = golden_matmul(&rt, m, n, k, &a, &b).unwrap();
+        let err = max_rel_error(&sim.c, &gold);
+        assert!(err < 1e-9, "{m}x{n}x{k}: rel err {err:.2e}");
+    }
+}
+
+#[test]
+fn golden_all_configs_agree() {
+    let rt = runtime();
+    let (m, n, k) = (32, 32, 32);
+    let (a, b) = test_matrices(m, n, k, 23);
+    let gold = golden_matmul(&rt, m, n, k, &a, &b).unwrap();
+    for id in ConfigId::all() {
+        let sim = run_matmul(id, m, n, k, &a, &b).unwrap();
+        let err = max_rel_error(&sim.c, &gold);
+        assert!(err < 1e-9, "{}: rel err {err:.2e}", id.name());
+    }
+}
+
+#[test]
+fn plain_artifact_executes() {
+    // The non-accumulating 32^3 artifact (quickstart path).
+    let rt = runtime();
+    let art = rt.load("matmul_32").unwrap();
+    let (a, b) = test_matrices(32, 32, 32, 24);
+    let c = art
+        .run_f64(&[(&a, &[32, 32]), (&b, &[32, 32])])
+        .unwrap();
+    // sanity vs golden composition
+    let gold = golden_matmul(&rt, 32, 32, 32, &a, &b).unwrap();
+    let err = max_rel_error(&c, &gold);
+    assert!(err < 1e-12, "artifact mismatch {err:.2e}");
+}
+
+#[test]
+fn pallas_lowered_full_size_artifact() {
+    // matmul_128 is the Pallas-tiled (L1 kernel) lowering: proves the
+    // pallas kernel + jax grid compose into one executable module.
+    let rt = runtime();
+    let art = rt.load("matmul_128").unwrap();
+    let (a, b) = test_matrices(128, 128, 128, 25);
+    let c = art
+        .run_f64(&[(&a, &[128, 128]), (&b, &[128, 128])])
+        .unwrap();
+    let gold = golden_matmul(&rt, 128, 128, 128, &a, &b).unwrap();
+    let err = max_rel_error(&c, &gold);
+    assert!(err < 1e-11, "pallas artifact mismatch {err:.2e}");
+}

@@ -1,0 +1,557 @@
+//! Property-based tests over the simulator's core invariants,
+//! using the built-in mini framework (`util::prop` — proptest is not
+//! available offline; see DESIGN.md).
+
+use zerostall::cluster::ConfigId;
+use zerostall::core::sequencer::{
+    oracle_expand, run_sequencer, NestItem, SeqConfig, Sequencer,
+};
+use zerostall::isa::{decode::decode, encode::encode, Instr, SsrField};
+use zerostall::kernels::{
+    choose_tiling, plan_buffers, LayoutKind, Tiling,
+};
+use zerostall::mem::{Tcdm, Topology, TCDM_BASE};
+use zerostall::ssr::{oracle_addresses, Streamer};
+use zerostall::util::prop::{check, Config, Shrink};
+use zerostall::util::rng::Rng;
+
+fn cfg(cases: usize, seed: u64) -> Config {
+    Config { cases, seed }
+}
+
+// =================================================================
+// FREP sequencer vs software loop-nest oracle (the paper's §III-A
+// correctness claim, incl. loops sharing start/end instructions).
+// =================================================================
+
+/// A generated nest program (shrinkable).
+#[derive(Clone, Debug)]
+struct NestProg(Vec<(u8, u32, u32)>); // (kind, n_inst, n_iter) kind0=op
+
+impl Shrink for NestProg {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.0.len() > 1 {
+            out.push(NestProg(self.0[..self.0.len() / 2].to_vec()));
+            let mut v = self.0.clone();
+            v.pop();
+            out.push(NestProg(v));
+        }
+        out
+    }
+}
+
+fn gen_nest(rng: &mut Rng, max_depth: usize) -> Vec<NestItem> {
+    // Build a random proper nest bottom-up: generate a body, count its
+    // RB-resident ops, then (maybe) wrap it in a loop — so every
+    // declared n_inst matches the instructions that actually follow.
+    // Loops may share start and/or end instructions with their parent.
+    fn segment(
+        rng: &mut Rng,
+        depth: usize,
+        max_depth: usize,
+        next_id: &mut u8,
+    ) -> (Vec<NestItem>, u32) {
+        let mut items = Vec::new();
+        let mut ops = 0u32;
+        let pieces = rng.range(1, 3);
+        for _ in 0..pieces {
+            if depth < max_depth && rng.below(2) == 0 {
+                let (body, body_ops) =
+                    segment(rng, depth + 1, max_depth, next_id);
+                if body_ops > 0 {
+                    items.push(NestItem::Loop {
+                        n_inst: body_ops,
+                        n_iter: rng.range(1, 4) as u32,
+                    });
+                    items.extend(body);
+                    ops += body_ops;
+                }
+            } else {
+                for _ in 0..rng.range(1, 3) {
+                    items.push(NestItem::Op(*next_id));
+                    *next_id = next_id.wrapping_add(1);
+                    ops += 1;
+                }
+            }
+        }
+        (items, ops)
+    }
+    let mut out = Vec::new();
+    let mut id = 1u8;
+    for _ in 0..rng.range(1, 3) {
+        let (seg, seg_ops) = segment(rng, 1, max_depth, &mut id);
+        if seg_ops > 0 && rng.bool() {
+            out.push(NestItem::Loop {
+                n_inst: seg_ops,
+                n_iter: rng.range(1, 5) as u32,
+            });
+        }
+        out.extend(seg);
+    }
+    out
+}
+
+#[test]
+fn prop_sequencer_matches_oracle_zonl() {
+    check(
+        &cfg(200, 0xA11CE),
+        |rng| {
+            let items = gen_nest(rng, 3);
+            // encode to the shrinkable carrier
+            NestProg(
+                items
+                    .iter()
+                    .map(|i| match i {
+                        NestItem::Op(id) => (0u8, *id as u32, 0),
+                        NestItem::Loop { n_inst, n_iter } => {
+                            (1u8, *n_inst, *n_iter)
+                        }
+                    })
+                    .collect(),
+            )
+        },
+        |prog| {
+            let items: Vec<NestItem> = prog
+                .0
+                .iter()
+                .map(|&(k, a, b)| {
+                    if k == 0 {
+                        NestItem::Op(a as u8)
+                    } else {
+                        NestItem::Loop { n_inst: a, n_iter: b }
+                    }
+                })
+                .collect();
+            // Validate well-formedness (shrinking may truncate bodies:
+            // every loop must be followed by >= n_inst ops in scope).
+            let total_ops = items
+                .iter()
+                .filter(|i| matches!(i, NestItem::Op(_)))
+                .count() as u32;
+            let mut pos = 0u32;
+            for it in &items {
+                match it {
+                    NestItem::Op(_) => pos += 1,
+                    NestItem::Loop { n_inst, .. } => {
+                        if pos + n_inst > total_ops {
+                            return Ok(()); // malformed after shrink
+                        }
+                    }
+                }
+            }
+            let want = oracle_expand(&items);
+            if want.len() > 50_000 {
+                return Ok(()); // keep runtime bounded
+            }
+            let mut seq = Sequencer::new(SeqConfig {
+                rb_depth: 64,
+                max_nest_depth: 4,
+                block_offload_during_loop: false,
+            });
+            let (got, cycles) = run_sequencer(&mut seq, &items);
+            if got != want {
+                return Err(format!(
+                    "trace mismatch: got {} ops want {}",
+                    got.len(),
+                    want.len()
+                ));
+            }
+            // Zero-overhead claim: one instruction per cycle modulo
+            // the frontend feed (items.len() is an upper bound on the
+            // non-overlapped feed cycles).
+            let budget = want.len() as u64 + items.len() as u64 + 4;
+            if cycles > budget {
+                return Err(format!(
+                    "{cycles} cycles for {} ops (budget {budget})",
+                    want.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sequencer_baseline_sequential_loops() {
+    // Baseline (depth-1, blocking) must still execute any flat
+    // sequence of non-nested loops correctly.
+    check(
+        &cfg(100, 0xB0B),
+        |rng| {
+            let mut v = Vec::new();
+            for _ in 0..rng.range(1, 4) {
+                v.push((1u8, rng.range(1, 5) as u32, rng.range(1, 6) as u32));
+                for i in 0..v.last().unwrap().1 {
+                    v.push((0u8, i + 1, 0));
+                }
+            }
+            NestProg(v)
+        },
+        |prog| {
+            let mut items = Vec::new();
+            let mut expect_ops = 0usize;
+            let mut it = prog.0.iter().peekable();
+            while let Some(&(k, a, b)) = it.next() {
+                if k == 1 {
+                    // collect exactly `a` following ops as the body
+                    let mut body = Vec::new();
+                    for _ in 0..a {
+                        match it.next() {
+                            Some(&(0, id, _)) => {
+                                body.push(NestItem::Op(id as u8))
+                            }
+                            _ => return Ok(()), // malformed after shrink
+                        }
+                    }
+                    items.push(NestItem::Loop { n_inst: a, n_iter: b });
+                    expect_ops += a as usize * b as usize;
+                    items.extend(body);
+                } else {
+                    items.push(NestItem::Op(a as u8));
+                    expect_ops += 1;
+                }
+            }
+            let want = oracle_expand(&items);
+            if want.len() != expect_ops {
+                return Ok(()); // malformed program after shrinking
+            }
+            let mut seq = Sequencer::new(SeqConfig::baseline());
+            let (got, _) = run_sequencer(&mut seq, &items);
+            if got != want {
+                return Err("baseline trace mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// =================================================================
+// SSR address generator vs affine oracle
+// =================================================================
+
+#[test]
+fn prop_ssr_addrgen_matches_oracle() {
+    check(
+        &cfg(300, 0x55E),
+        |rng| {
+            let dims = rng.range(1, 4);
+            let mut v = vec![dims as usize];
+            for _ in 0..dims {
+                v.push(rng.range(1, 6)); // bound
+                v.push(rng.range(0, 5) * 8); // stride (bytes)
+            }
+            v
+        },
+        |spec| {
+            let dims = spec[0].min(4).max(1);
+            if spec.len() < 1 + 2 * dims {
+                return Ok(());
+            }
+            let bounds: Vec<u32> = (0..dims)
+                .map(|d| spec[1 + 2 * d].max(1) as u32)
+                .collect();
+            let strides: Vec<i32> =
+                (0..dims).map(|d| spec[2 + 2 * d] as i32).collect();
+            let base = 0x1000u32;
+            let mut s = Streamer::new();
+            for d in 0..dims {
+                s.config(SsrField::Bound(d as u8), bounds[d] - 1);
+                s.config(SsrField::Stride(d as u8), strides[d] as u32);
+            }
+            s.config(SsrField::ReadBase(dims as u8 - 1), base);
+            let want = oracle_addresses(base, &bounds, &strides);
+            let mut got = Vec::new();
+            while let Some(addr) = s.read_request() {
+                got.push(addr);
+                s.read_granted(0.0);
+                while s.can_pop() {
+                    s.pop();
+                }
+                if got.len() > want.len() + 8 {
+                    break;
+                }
+            }
+            if got != want {
+                return Err(format!(
+                    "addr trace mismatch ({} vs {})",
+                    got.len(),
+                    want.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// =================================================================
+// ISA encode/decode round-trip on randomized instructions
+// =================================================================
+
+#[test]
+fn prop_isa_roundtrip() {
+    check(
+        &cfg(500, 0x15A),
+        |rng| {
+            vec![
+                rng.range(0, 20),          // opcode selector
+                rng.range(0, 31),          // rd
+                rng.range(0, 31),          // rs1
+                rng.range(0, 31),          // rs2
+                rng.range(0, 4094) as usize, // imm-ish
+            ]
+        },
+        |v| {
+            if v.len() < 5 {
+                return Ok(());
+            }
+            let (rd, rs1, rs2) =
+                (v[1] as u8 & 31, v[2] as u8 & 31, v[3] as u8 & 31);
+            let imm = (v[4] as i32 & 0xFFF) - 2048;
+            let i = match v[0] % 17 {
+                0 => Instr::Addi { rd, rs1, imm },
+                1 => Instr::Add { rd, rs1, rs2 },
+                2 => Instr::Sub { rd, rs1, rs2 },
+                3 => Instr::Mul { rd, rs1, rs2 },
+                4 => Instr::Bne { rs1, rs2, off: (imm / 2) * 2 },
+                5 => Instr::Lw { rd, rs1, imm },
+                6 => Instr::Sw { rs2, rs1, imm },
+                7 => Instr::Fld { frd: rd, rs1, imm },
+                8 => Instr::Fsd { frs2: rs2, rs1, imm },
+                9 => Instr::FmaddD {
+                    frd: rd,
+                    frs1: rs1,
+                    frs2: rs2,
+                    frs3: rd,
+                },
+                10 => Instr::FmulD { frd: rd, frs1: rs1, frs2: rs2 },
+                11 => Instr::Frep {
+                    outer: imm & 1 == 0,
+                    iters_reg: rs1,
+                    n_inst: (imm & 0xFF) as u8,
+                },
+                12 => Instr::SsrCfgW {
+                    value: rs1,
+                    ssr: (rd & 3).min(2),
+                    field: SsrField::Bound(rs2 & 3),
+                },
+                13 => Instr::Dmcpy { rd, rs1 },
+                14 => Instr::Lui { rd, imm: imm << 12 },
+                15 => Instr::Slli { rd, rs1, shamt: rs2 & 31 },
+                _ => Instr::Csrrs { rd, csr: 0x7C0, rs1 },
+            };
+            let w = encode(&i);
+            match decode(w) {
+                Some(back) if back == i => Ok(()),
+                Some(back) => {
+                    Err(format!("{i:?} -> {w:#x} -> {back:?}"))
+                }
+                None => Err(format!("{i:?} -> {w:#x} -> None")),
+            }
+        },
+    );
+}
+
+// =================================================================
+// Interconnect: requests to distinct banks never conflict
+// =================================================================
+
+#[test]
+fn prop_distinct_banks_no_conflicts() {
+    check(
+        &cfg(200, 0xD15C),
+        |rng| {
+            // distinct bank picks
+            let n = rng.range(1, 24);
+            let mut banks: Vec<usize> = (0..32).collect();
+            // Fisher-Yates prefix shuffle
+            for i in 0..n {
+                let j = rng.range(i, 31);
+                banks.swap(i, j);
+            }
+            banks[..n].to_vec()
+        },
+        |banks| {
+            use zerostall::mem::{Interconnect, PortRequest};
+            let mut tcdm =
+                Tcdm::new(Topology::Fc { banks: 32 }, 128 * 1024);
+            let mut x = Interconnect::new(32, 64);
+            let reqs: Vec<PortRequest> = banks
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| PortRequest {
+                    port: i as u16,
+                    addr: TCDM_BASE + (b as u32) * 8,
+                    write: false,
+                    data: 0,
+                })
+                .collect();
+            let mut grants = vec![false; reqs.len()];
+            let mut data = vec![0u64; reqs.len()];
+            x.arbitrate(&mut tcdm, &reqs, &mut grants, &mut data, None);
+            if grants.iter().all(|&g| g) {
+                Ok(())
+            } else {
+                Err("conflict among distinct banks".into())
+            }
+        },
+    );
+}
+
+// =================================================================
+// Grouped layout: every buffer stays within its superbank
+// =================================================================
+
+#[test]
+fn prop_grouped_layout_confinement() {
+    check(
+        &cfg(150, 0x6E0),
+        |rng| {
+            vec![
+                rng.range(1, 16) * 8, // m
+                rng.range(1, 16) * 8, // n
+                rng.range(1, 16) * 8, // k
+                rng.range(0, 4),      // config index
+            ]
+        },
+        |v| {
+            if v.len() < 4 {
+                return Ok(());
+            }
+            let (m, n, k) = (v[0].max(8), v[1].max(8), v[2].max(8));
+            let id = ConfigId::all()[v[3] % 5];
+            let c = id.cluster_config();
+            let Some(t) = choose_tiling(m, n, k, c.tcdm_bytes) else {
+                return Err(format!("no tiling for {m}x{n}x{k}"));
+            };
+            let map = plan_buffers(
+                &t,
+                c.topology,
+                c.tcdm_bytes,
+                LayoutKind::Grouped,
+            );
+            let tcdm = Tcdm::new(c.topology, c.tcdm_bytes);
+            let tiles = [
+                (map.a, t.mt * t.k),
+                (map.b, t.k * t.nt),
+                (map.c, t.mt * t.nt),
+            ];
+            for (bufs, words) in tiles {
+                for d in bufs {
+                    let sb0 =
+                        tcdm.superbank_of_bank(tcdm.bank_of(d.base));
+                    for i in (0..words).step_by(7) {
+                        let addr = d.base
+                            + (i / 8) as u32 * d.chunk_stride
+                            + (i % 8) as u32 * 8;
+                        if !tcdm.contains(addr) {
+                            return Err(format!(
+                                "OOB {addr:#x} ({m}x{n}x{k} {})",
+                                id.name()
+                            ));
+                        }
+                        let sb = tcdm
+                            .superbank_of_bank(tcdm.bank_of(addr));
+                        if sb != sb0 {
+                            return Err(format!(
+                                "escaped superbank ({m}x{n}x{k})"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// =================================================================
+// Tiling: solver output always legal
+// =================================================================
+
+#[test]
+fn prop_tiling_legal() {
+    check(
+        &cfg(300, 0x717),
+        |rng| {
+            vec![
+                rng.range(1, 16) * 8,
+                rng.range(1, 16) * 8,
+                rng.range(1, 16) * 8,
+            ]
+        },
+        |v| {
+            if v.len() < 3 {
+                return Ok(());
+            }
+            let (m, n, k) = (v[0].max(8), v[1].max(8), v[2].max(8));
+            for bytes in [96 * 1024, 128 * 1024] {
+                let Some(t) = choose_tiling(m, n, k, bytes) else {
+                    return Err(format!("no tiling {m}x{n}x{k}"));
+                };
+                let legal = m % t.mt == 0
+                    && n % t.nt == 0
+                    && t.mt % 8 == 0
+                    && t.nt % 8 == 0
+                    && t.fits(bytes);
+                if !legal {
+                    return Err(format!("illegal tiling {t:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// =================================================================
+// End-to-end numerics on random problems (one config, small sizes)
+// =================================================================
+
+#[test]
+fn prop_matmul_numerics_random_sizes() {
+    check(
+        &cfg(12, 0xE2E),
+        |rng| {
+            vec![
+                rng.range(1, 6) * 8,
+                rng.range(1, 6) * 8,
+                rng.range(1, 6) * 8,
+                rng.range(0, 4),
+            ]
+        },
+        |v| {
+            if v.len() < 4 {
+                return Ok(());
+            }
+            let (m, n, k) = (v[0].max(8), v[1].max(8), v[2].max(8));
+            let id = ConfigId::all()[v[3] % 5];
+            let (a, b) = zerostall::kernels::test_matrices(
+                m, n, k, 1234,
+            );
+            let r = zerostall::kernels::run_matmul(id, m, n, k, &a, &b)
+                .map_err(|e| e.to_string())?;
+            let want = zerostall::kernels::host_ref(m, n, k, &a, &b);
+            for (g, w) in r.c.iter().zip(&want) {
+                if (g - w).abs() > 1e-9 * w.abs().max(1.0) {
+                    return Err(format!(
+                        "numerics {m}x{n}x{k} on {}",
+                        id.name()
+                    ));
+                }
+            }
+            // Conservation: one FPU op per MAC.
+            if r.perf.fpu_ops_total != (m * n * k) as u64 {
+                return Err(format!(
+                    "fpu ops {} != {}",
+                    r.perf.fpu_ops_total,
+                    m * n * k
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// Tiling type needs Debug for failures; silence unused warnings.
+#[allow(dead_code)]
+fn _t(_: Tiling) {}
