@@ -1,0 +1,56 @@
+//! Analytic-backend triage: sweep the full {8..128}^3 evaluation space
+//! for the paper's pick (zonl48db) in well under a second, then
+//! spot-check the extremes against the cycle-accurate ground truth —
+//! the fast-explore / slow-confirm workflow the multi-backend service
+//! enables.
+
+use zerostall::cluster::ConfigId;
+use zerostall::coordinator::experiments::{run_point_with, sweep_grid};
+use zerostall::kernels::{GemmService, LayoutKind};
+
+fn main() -> anyhow::Result<()> {
+    let id = ConfigId::Zonl48Db;
+
+    let analytic = GemmService::analytic();
+    let t0 = std::time::Instant::now();
+    let rows = sweep_grid(&analytic, &[id], 0)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "analytic sweep: {} points in {:.3} s ({:.0} points/s)\n",
+        rows.len(),
+        dt,
+        rows.len() as f64 / dt.max(1e-9)
+    );
+
+    let mut sorted = rows.clone();
+    sorted.sort_by(|x, y| x.utilization.total_cmp(&y.utilization));
+    let worst = &sorted[0];
+    let best = sorted.last().unwrap();
+    println!(
+        "predicted worst point: {} util {:.1}%",
+        worst.problem,
+        worst.utilization * 100.0
+    );
+    println!(
+        "predicted best  point: {} util {:.1}%\n",
+        best.problem,
+        best.utilization * 100.0
+    );
+
+    // Confirm the triage picks cycle-accurately.
+    let cycle = GemmService::cycle();
+    for row in [worst, best] {
+        let measured =
+            run_point_with(&cycle, id, row.problem, LayoutKind::Grouped)?;
+        println!(
+            "{}: analytic {:.1}% vs cycle-accurate {:.1}% \
+             (window {} vs {})",
+            row.problem,
+            row.utilization * 100.0,
+            measured.utilization * 100.0,
+            row.window_cycles,
+            measured.window_cycles,
+        );
+    }
+    Ok(())
+}

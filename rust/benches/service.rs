@@ -1,0 +1,71 @@
+//! Bench: GemmService batched throughput — the plan cache + Arc'd
+//! program sharing on the hot submission path, and the analytic
+//! backend's triage rate over the full evaluation grid.
+
+use zerostall::cluster::ConfigId;
+use zerostall::coordinator::workload::dim_grid;
+use zerostall::kernels::{GemmJob, GemmService, LayoutKind};
+use zerostall::util::bench::Bencher;
+
+fn main() {
+    println!("== service bench: batched GEMM submissions ==");
+    let b = Bencher::default();
+
+    // Hot path: a 16-job cycle-accurate batch of one problem shape —
+    // after the first iteration every submission is a plan-cache hit.
+    let jobs: Vec<GemmJob> = (0..16)
+        .map(|_| {
+            GemmJob::for_problem(
+                ConfigId::Zonl48Db,
+                32,
+                32,
+                32,
+                LayoutKind::Grouped,
+            )
+        })
+        .collect();
+    let svc = GemmService::cycle();
+    let s = b.run("service/cycle_batch16_32cube", || {
+        svc.run_batch(&jobs, 4).unwrap()
+    });
+    println!(
+        "    -> {:.1} sims/s batched (plan cache: {:?})",
+        s.throughput(jobs.len() as f64),
+        svc.stats()
+    );
+
+    // Cold path: same batch against a fresh service every iteration
+    // (every plan is a miss) — the delta is what memoization buys.
+    let s_cold = b.run("service/cycle_batch16_cold", || {
+        GemmService::cycle().run_batch(&jobs, 4).unwrap()
+    });
+    println!(
+        "    -> {:.1} sims/s cold",
+        s_cold.throughput(jobs.len() as f64)
+    );
+
+    // Analytic triage rate: one full {8..128}^3 grid per iteration.
+    let dims = dim_grid();
+    let mut grid_jobs = Vec::new();
+    for &m in &dims {
+        for &n in &dims {
+            for &k in &dims {
+                grid_jobs.push(GemmJob::for_problem(
+                    ConfigId::Zonl48Db,
+                    m,
+                    n,
+                    k,
+                    LayoutKind::Grouped,
+                ));
+            }
+        }
+    }
+    let svc2 = GemmService::analytic();
+    let s2 = b.run("service/analytic_full_grid_4096", || {
+        svc2.run_batch(&grid_jobs, 4).unwrap()
+    });
+    println!(
+        "    -> {:.0} analytic points/s",
+        s2.throughput(grid_jobs.len() as f64)
+    );
+}

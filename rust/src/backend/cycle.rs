@@ -1,0 +1,103 @@
+//! The cycle-accurate backend — today's full machine model behind the
+//! [`SimBackend`] trait.
+//!
+//! This owns the run-to-completion loop that used to live inline in
+//! `kernels::driver::run_matmul_layout`: build the cluster from the
+//! shared programs, load A/B into simulated main memory, step to
+//! halt, read C back. It is a pure refactor: given the same prepared
+//! GEMM and operands it reproduces the pre-trait cycles, utilization,
+//! and output matrix bit for bit.
+
+use anyhow::{Context, Result};
+
+use crate::cluster::Cluster;
+use crate::kernels::codegen::N_CORES;
+use crate::kernels::GemmResult;
+
+use super::{BackendKind, PreparedGemm, SimBackend};
+
+pub struct CycleAccurate;
+
+impl CycleAccurate {
+    /// Simulation deadline: ideal cycles x 64 + fixed slack (the
+    /// deadlock detector's budget; generous by construction).
+    pub fn deadline(m: usize, n: usize, k: usize) -> u64 {
+        let ideal = (m * n * k) as u64 / (N_CORES as u64);
+        100_000 + ideal * 64
+    }
+}
+
+impl SimBackend for CycleAccurate {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Cycle
+    }
+
+    fn run(
+        &self,
+        prep: &PreparedGemm,
+        a: &[f64],
+        b: &[f64],
+    ) -> Result<GemmResult> {
+        let t = prep.plan.tiling;
+        anyhow::ensure!(
+            a.len() == t.m * t.k && b.len() == t.k * t.n,
+            "cycle backend needs operand data: A {} (want {}), B {} \
+             (want {})",
+            a.len(),
+            t.m * t.k,
+            b.len(),
+            t.k * t.n
+        );
+        let cfg = prep.config.cluster_config();
+        let mut cl = Cluster::from_shared(cfg, &prep.programs);
+        cl.mem.write_slice_f64(prep.plan.main.a, a);
+        cl.mem.write_slice_f64(prep.plan.main.b, b);
+        let cycles = cl
+            .run(Self::deadline(t.m, t.n, t.k))
+            .context("cluster run")?;
+        let c = cl.mem.read_vec_f64(prep.plan.main.c, t.m * t.n);
+        Ok(GemmResult {
+            c,
+            cycles,
+            perf: cl.perf(),
+            plan: prep.plan,
+            config: prep.config,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ConfigId;
+    use crate::kernels::{host_ref, run_matmul, test_matrices};
+
+    #[test]
+    fn matches_driver_path_bit_for_bit() {
+        // The driver funnels through this backend; cross-check against
+        // the host reference to pin the refactor down.
+        let (m, n, k) = (16, 16, 16);
+        let (a, b) = test_matrices(m, n, k, 77);
+        let r = run_matmul(ConfigId::Zonl48Db, m, n, k, &a, &b).unwrap();
+        let want = host_ref(m, n, k, &a, &b);
+        for (g, w) in r.c.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-9 * w.abs().max(1.0));
+        }
+        assert!(r.cycles > 0);
+    }
+
+    #[test]
+    fn rejects_missing_operands() {
+        let svc = crate::kernels::GemmService::cycle();
+        let prep = svc
+            .prepare(
+                ConfigId::Base32Fc,
+                8,
+                8,
+                8,
+                crate::kernels::LayoutKind::Grouped,
+            )
+            .unwrap();
+        assert!(CycleAccurate.run(&prep, &[], &[]).is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Simulation backends — the engines that evaluate a planned GEMM.
+//!
+//! The run path is split in two layers:
+//!
+//! * planning (`kernels::{tiling, layout, codegen}`) produces a
+//!   [`PreparedGemm`]: the tile plan, buffer map, and generated
+//!   programs. Preparation is pure and memoizable — the
+//!   `kernels::service::GemmService` caches it per
+//!   `(M, N, K, config, layout)` key.
+//! * evaluation (this module) turns a prepared GEMM into a
+//!   `GemmResult`. Two engines implement the [`SimBackend`] trait:
+//!
+//!   - [`CycleAccurate`] steps the full `Cluster` machine model to
+//!     completion — bit-exact numerics plus the complete perf-counter
+//!     taxonomy. This is the ground truth (and the pre-refactor
+//!     behaviour of `kernels::driver`).
+//!   - [`Analytic`] predicts cycles / utilization / conflicts from
+//!     the tiling, the congestion proxy, and the paper's Section-IV
+//!     overhead structure without stepping the machine — ~1000x
+//!     faster, for triaging large design-space sweeps. It produces no
+//!     functional output (`GemmResult::c` is empty).
+//!
+//! Backends are object-safe (`Box<dyn SimBackend>`): the service and
+//! the CLI select one at runtime via [`BackendKind`].
+
+pub mod analytic;
+pub mod cycle;
+
+pub use analytic::{fit_calibration, Analytic, CalSample, Calibration, ConfigCal};
+pub use cycle::CycleAccurate;
+
+use std::sync::Arc;
+
+use crate::cluster::ConfigId;
+use crate::isa::Program;
+use crate::kernels::{GemmPlan, GemmResult};
+
+/// Which engine evaluates a GEMM point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Full machine-model simulation (ground truth).
+    Cycle,
+    /// First-order performance model (no functional simulation).
+    Analytic,
+}
+
+impl BackendKind {
+    pub fn all() -> [BackendKind; 2] {
+        [BackendKind::Cycle, BackendKind::Analytic]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Cycle => "cycle",
+            BackendKind::Analytic => "analytic",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<BackendKind> {
+        BackendKind::all().into_iter().find(|b| b.name() == s)
+    }
+}
+
+/// A fully planned GEMM: everything evaluation needs, shareable across
+/// batched submissions (programs are `Arc`ed so repeated runs never
+/// re-clone instruction streams).
+#[derive(Clone, Debug)]
+pub struct PreparedGemm {
+    pub config: ConfigId,
+    pub plan: GemmPlan,
+    /// One program per compute core plus the DM core's last — empty
+    /// when the owning backend reports `needs_programs() == false`.
+    pub programs: Vec<Arc<Program>>,
+}
+
+impl PreparedGemm {
+    pub fn m(&self) -> usize {
+        self.plan.tiling.m
+    }
+
+    pub fn n(&self) -> usize {
+        self.plan.tiling.n
+    }
+
+    pub fn k(&self) -> usize {
+        self.plan.tiling.k
+    }
+}
+
+/// A simulation engine.
+///
+/// Implementations must be `Send + Sync`: the service drains batches
+/// through `coordinator::runner::parallel_map` with one shared backend.
+pub trait SimBackend: Send + Sync {
+    fn kind(&self) -> BackendKind;
+
+    /// Whether `run` consumes operand data (functional simulation).
+    /// Non-functional backends are handed empty slices.
+    fn needs_data(&self) -> bool {
+        true
+    }
+
+    /// Whether `run` executes the generated programs. Model-only
+    /// backends skip code generation entirely (`PreparedGemm::programs`
+    /// stays empty), which is what makes full-grid sweeps cheap.
+    fn needs_programs(&self) -> bool {
+        true
+    }
+
+    /// Evaluate one prepared GEMM. `a` is row-major `m x k`, `b` is
+    /// row-major `k x n`; both may be empty iff `needs_data()` is
+    /// false.
+    fn run(
+        &self,
+        prep: &PreparedGemm,
+        a: &[f64],
+        b: &[f64],
+    ) -> anyhow::Result<GemmResult>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_roundtrip() {
+        for b in BackendKind::all() {
+            assert_eq!(BackendKind::from_name(b.name()), Some(b));
+        }
+        assert_eq!(BackendKind::from_name("rtl"), None);
+    }
+}

@@ -19,6 +19,8 @@ pub mod perf;
 pub use config::{ClusterConfig, ConfigId};
 pub use perf::ClusterPerf;
 
+use std::sync::Arc;
+
 use crate::core::snitch::CoreRequest;
 use crate::core::Core;
 use crate::dma::Dma;
@@ -60,15 +62,23 @@ impl Cluster {
     /// Build a cluster; `programs` holds one program per compute core
     /// plus the DM core's program last (n_compute + 1 total).
     pub fn new(cfg: ClusterConfig, programs: Vec<Program>) -> Self {
+        let shared: Vec<Arc<Program>> =
+            programs.into_iter().map(Arc::new).collect();
+        Self::from_shared(cfg, &shared)
+    }
+
+    /// Build a cluster from shared (memoized) programs without cloning
+    /// the instruction streams — the batched `GemmService` run path.
+    pub fn from_shared(cfg: ClusterConfig, programs: &[Arc<Program>]) -> Self {
         assert_eq!(
             programs.len(),
             cfg.n_compute + 1,
             "need one program per compute core plus the DM core"
         );
         let cores = programs
-            .into_iter()
+            .iter()
             .enumerate()
-            .map(|(id, p)| Core::new(id, cfg.core, p))
+            .map(|(id, p)| Core::new(id, cfg.core, Arc::clone(p)))
             .collect();
         let cap = cfg.n_ports();
         Self {

@@ -2,21 +2,27 @@
 //!
 //! Subcommands:
 //!   run       — one GEMM on one configuration, print metrics
+//!   sweep     — the full {8..128}^3 grid through a chosen backend
+//!   calibrate — fit the analytic model vs cycle-accurate ground truth
 //!   fig5      — the random-size sweep (box plots + CSV + headline)
 //!   table1    — area model rows
 //!   table2    — SoA comparison rows
 //!   fig4      — congestion proxy
 //!   ablation  — layout ablation
-//!   validate  — simulator vs PJRT golden model (needs artifacts/)
+//!   validate  — simulator vs PJRT golden model (needs --features xla)
 //!   seqdemo   — FREP sequencer demo trace
+//!
+//! `run`, `sweep`, and `fig5` accept `--backend {cycle,analytic}`:
+//! `cycle` steps the full machine model, `analytic` evaluates the
+//! calibrated first-order model (~1000x faster, no numerics).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 
+use crate::backend::BackendKind;
 use crate::cluster::ConfigId;
 use crate::coordinator::{experiments, report, runner, workload};
-use crate::kernels::{self, LayoutKind};
-use crate::runtime;
+use crate::kernels::{GemmService, LayoutKind};
 
 pub fn usage() -> &'static str {
     "zerostall — cycle-accurate RISC-V cluster co-design framework\n\
@@ -25,15 +31,18 @@ pub fn usage() -> &'static str {
      \n\
      COMMANDS:\n\
      \x20 run       --config <name> --m <M> --n <N> --k <K> \
-     [--layout grouped|linear|linear-pad]\n\
+     [--layout grouped|linear|linear-pad] [--backend cycle|analytic]\n\
+     \x20 sweep     [--backend analytic|cycle] [--config <name>|all] \
+     [--threads N] [--out results]\n\
+     \x20 calibrate [--threads N] [--out results]\n\
      \x20 fig5      [--samples 50] [--seed 42] [--threads N] \
-     [--out results]\n\
+     [--backend cycle|analytic] [--out results]\n\
      \x20 table1    [--out results]\n\
      \x20 table2    [--out results]\n\
      \x20 fig4      [--out results]\n\
      \x20 ablation  [--m 32 --n 32 --k 32] [--out results]\n\
      \x20 validate  [--artifacts artifacts] [--sizes 32,64] \
-     [--config zonl48db]\n\
+     [--config zonl48db]   (requires --features xla)\n\
      \x20 configs   (list configurations)\n\
      \n\
      CONFIGS: base32fc zonl32fc zonl64fc zonl64db zonl48db\n"
@@ -81,6 +90,18 @@ fn layout_of(s: &str) -> anyhow::Result<LayoutKind> {
     })
 }
 
+fn backend_of(
+    flags: &HashMap<String, String>,
+    default: BackendKind,
+) -> anyhow::Result<BackendKind> {
+    match flags.get("backend") {
+        None => Ok(default),
+        Some(s) => BackendKind::from_name(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown backend `{s}` (cycle|analytic)")
+        }),
+    }
+}
+
 pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
     let Some(cmd) = args.first() else {
         println!("{}", usage());
@@ -119,15 +140,18 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             let layout = layout_of(
                 flags.get("layout").map(|s| s.as_str()).unwrap_or("grouped"),
             )?;
+            let backend = backend_of(&flags, BackendKind::Cycle)?;
+            let svc = GemmService::of_kind(backend);
             let p = workload::Problem { m, n, k };
-            let row = experiments::run_point(id, p, layout)?;
+            let row = experiments::run_point_with(&svc, id, p, layout)?;
             println!(
-                "{} {} layout={:?}\n  cycles={} window={} util={:.2}% \
-                 perf={:.2} DPGflop/s power={:.1} mW eff={:.2} \
-                 DPGflop/s/W conflicts={}",
+                "{} {} layout={:?} backend={}\n  cycles={} window={} \
+                 util={:.2}% perf={:.2} DPGflop/s power={:.1} mW \
+                 eff={:.2} DPGflop/s/W conflicts={}{}",
                 id.name(),
                 p,
                 layout,
+                backend.name(),
                 row.cycles,
                 row.window_cycles,
                 row.utilization * 100.0,
@@ -135,6 +159,88 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                 row.power_mw,
                 row.gflops_per_w,
                 row.conflicts,
+                if backend == BackendKind::Analytic {
+                    "\n  (analytic prediction — no functional output)"
+                } else {
+                    ""
+                },
+            );
+        }
+        "sweep" => {
+            let backend = backend_of(&flags, BackendKind::Analytic)?;
+            let threads =
+                flag(&flags, "threads", runner::default_threads())?;
+            let configs: Vec<ConfigId> = match flags
+                .get("config")
+                .map(|s| s.as_str())
+                .unwrap_or("all")
+            {
+                "all" => ConfigId::all().to_vec(),
+                name => vec![ConfigId::from_name(name).ok_or_else(
+                    || anyhow::anyhow!("unknown config {name}"),
+                )?],
+            };
+            let dims = workload::dim_grid().len();
+            let points = dims * dims * dims * configs.len();
+            eprintln!(
+                "sweep: {points} points ({} configs x {dims}^3 dims) \
+                 via the `{}` backend on {threads} threads...",
+                configs.len(),
+                backend.name(),
+            );
+            if backend == BackendKind::Cycle {
+                eprintln!(
+                    "note: cycle-accurate full-grid sweeps take hours; \
+                     use --backend analytic for triage"
+                );
+            }
+            let svc = GemmService::of_kind(backend);
+            let t0 = std::time::Instant::now();
+            let rows = experiments::sweep_grid(&svc, &configs, threads)?;
+            let elapsed = t0.elapsed().as_secs_f64();
+            let doc = report::render_sweep(&rows, backend.name(), elapsed);
+            println!("{doc}");
+            let stats = svc.stats();
+            eprintln!(
+                "plan cache: {} hits / {} misses ({:.0}% hit rate)",
+                stats.plan_hits,
+                stats.plan_misses,
+                stats.hit_rate() * 100.0,
+            );
+            let name = format!("sweep-{}.csv", backend.name());
+            report::fig5_csv(&rows).write(&out_dir.join(&name))?;
+            report::save(
+                &out_dir,
+                &format!("sweep-{}.md", backend.name()),
+                &doc,
+            )?;
+            eprintln!(
+                "wrote {}/sweep-{}.{{md,csv}}",
+                out_dir.display(),
+                backend.name()
+            );
+        }
+        "calibrate" => {
+            let threads =
+                flag(&flags, "threads", runner::default_threads())?;
+            eprintln!(
+                "calibrate: {} grid points x 5 configs, cycle-accurate \
+                 ground truth on {threads} threads...",
+                experiments::calibration_grid().len()
+            );
+            let out = experiments::calibrate(threads)?;
+            let doc = format!(
+                "{}\n{}",
+                report::render_calibration(&out.calibration),
+                report::render_error_table(&out.errors)
+            );
+            println!("{doc}");
+            report::save(&out_dir, "calibration.md", &doc)?;
+            report::error_csv(&out.errors)
+                .write(&out_dir.join("calibration_errors.csv"))?;
+            eprintln!(
+                "wrote {}/calibration.md and calibration_errors.csv",
+                out_dir.display()
             );
         }
         "fig5" => {
@@ -142,10 +248,14 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             let seed = flag(&flags, "seed", 42u64)?;
             let threads =
                 flag(&flags, "threads", runner::default_threads())?;
+            let backend = backend_of(&flags, BackendKind::Cycle)?;
             eprintln!(
-                "fig5: {samples} sizes x 5 configs on {threads} threads..."
+                "fig5: {samples} sizes x 5 configs via `{}` on {threads} \
+                 threads...",
+                backend.name()
             );
-            let rows = experiments::fig5(samples, seed, threads)?;
+            let svc = GemmService::of_kind(backend);
+            let rows = experiments::fig5_with(&svc, samples, seed, threads)?;
             let summary = experiments::fig5_summary(&rows);
             let head = experiments::headline(&rows);
             let doc = format!(
@@ -191,39 +301,54 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             report::save(&out_dir, "ablation.md", &doc)?;
         }
         "validate" => {
-            let dir = flags
-                .get("artifacts")
-                .map(PathBuf::from)
-                .unwrap_or_else(runtime::Runtime::default_dir);
-            let name = flags
-                .get("config")
-                .cloned()
-                .unwrap_or_else(|| "zonl48db".into());
-            let id = ConfigId::from_name(&name)
-                .ok_or_else(|| anyhow::anyhow!("unknown config {name}"))?;
-            let sizes: Vec<usize> = flags
-                .get("sizes")
-                .map(|s| s.as_str())
-                .unwrap_or("16,32,40")
-                .split(',')
-                .map(|x| x.trim().parse())
-                .collect::<Result<_, _>>()
-                .map_err(|e| anyhow::anyhow!("bad --sizes: {e}"))?;
-            let rt = runtime::Runtime::new(&dir)?;
-            for s in sizes {
-                let (a, b) = kernels::test_matrices(s, s, s, 99);
-                let sim = kernels::run_matmul(id, s, s, s, &a, &b)?;
-                let gold = runtime::golden_matmul(&rt, s, s, s, &a, &b)?;
-                let err = runtime::max_rel_error(&sim.c, &gold);
-                let ok = err < 1e-9;
-                println!(
-                    "{name} {s}x{s}x{s}: max rel err vs PJRT golden = \
-                     {err:.2e} {}",
-                    if ok { "OK" } else { "FAIL" }
-                );
-                anyhow::ensure!(ok, "golden mismatch at {s}^3");
+            #[cfg(feature = "xla")]
+            {
+                let dir = flags
+                    .get("artifacts")
+                    .map(PathBuf::from)
+                    .unwrap_or_else(crate::runtime::Runtime::default_dir);
+                let name = flags
+                    .get("config")
+                    .cloned()
+                    .unwrap_or_else(|| "zonl48db".into());
+                let id = ConfigId::from_name(&name).ok_or_else(|| {
+                    anyhow::anyhow!("unknown config {name}")
+                })?;
+                let sizes: Vec<usize> = flags
+                    .get("sizes")
+                    .map(|s| s.as_str())
+                    .unwrap_or("16,32,40")
+                    .split(',')
+                    .map(|x| x.trim().parse())
+                    .collect::<Result<_, _>>()
+                    .map_err(|e| anyhow::anyhow!("bad --sizes: {e}"))?;
+                let rt = crate::runtime::Runtime::new(&dir)?;
+                for s in sizes {
+                    let (a, b) = crate::kernels::test_matrices(s, s, s, 99);
+                    let sim =
+                        crate::kernels::run_matmul(id, s, s, s, &a, &b)?;
+                    let gold = crate::runtime::golden_matmul(
+                        &rt, s, s, s, &a, &b,
+                    )?;
+                    let err = crate::runtime::max_rel_error(&sim.c, &gold);
+                    let ok = err < 1e-9;
+                    println!(
+                        "{name} {s}x{s}x{s}: max rel err vs PJRT golden = \
+                         {err:.2e} {}",
+                        if ok { "OK" } else { "FAIL" }
+                    );
+                    anyhow::ensure!(ok, "golden mismatch at {s}^3");
+                }
+                println!("golden validation passed");
             }
-            println!("golden validation passed");
+            #[cfg(not(feature = "xla"))]
+            {
+                anyhow::bail!(
+                    "`validate` needs the PJRT golden model: uncomment \
+                     the `xla` dependency in rust/Cargo.toml, rebuild \
+                     with `--features xla`, and run `make artifacts`"
+                );
+            }
         }
         "help" | "--help" | "-h" => println!("{}", usage()),
         other => {
@@ -263,6 +388,22 @@ mod tests {
     }
 
     #[test]
+    fn backend_parsing() {
+        let mut f = HashMap::new();
+        assert_eq!(
+            backend_of(&f, BackendKind::Cycle).unwrap(),
+            BackendKind::Cycle
+        );
+        f.insert("backend".to_string(), "analytic".to_string());
+        assert_eq!(
+            backend_of(&f, BackendKind::Cycle).unwrap(),
+            BackendKind::Analytic
+        );
+        f.insert("backend".to_string(), "rtl".to_string());
+        assert!(backend_of(&f, BackendKind::Cycle).is_err());
+    }
+
+    #[test]
     fn run_command_executes() {
         main_with_args(vec![
             "run".into(),
@@ -279,7 +420,29 @@ mod tests {
     }
 
     #[test]
+    fn run_command_analytic_backend() {
+        main_with_args(vec![
+            "run".into(),
+            "--backend".into(),
+            "analytic".into(),
+            "--m".into(),
+            "32".into(),
+            "--n".into(),
+            "32".into(),
+            "--k".into(),
+            "32".into(),
+        ])
+        .unwrap();
+    }
+
+    #[test]
     fn unknown_command_errors() {
         assert!(main_with_args(vec!["bogus".into()]).is_err());
+    }
+
+    #[test]
+    fn validate_without_xla_feature_errors() {
+        #[cfg(not(feature = "xla"))]
+        assert!(main_with_args(vec!["validate".into()]).is_err());
     }
 }

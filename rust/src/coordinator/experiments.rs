@@ -1,14 +1,19 @@
 //! The paper's experiments: Fig. 5 sweep, Table I, Table II, Fig. 4,
-//! the §IV-B headline numbers, and the layout/design ablations.
+//! the §IV-B headline numbers, the layout/design ablations — plus the
+//! backend-agnostic sweep machinery: every point is evaluated through
+//! a `GemmService` (cycle-accurate or analytic), and `calibrate` fits
+//! the analytic model's constants against cycle-accurate ground truth
+//! and reports the per-configuration error table.
 
+use crate::backend::{fit_calibration, CalSample, Calibration};
 use crate::cluster::ConfigId;
-use crate::kernels::{run_matmul_layout, test_matrices, LayoutKind};
+use crate::kernels::{test_matrices, GemmJob, GemmResult, GemmService, LayoutKind};
 use crate::model::{self, area::AreaBreakdown};
 use crate::opengemm;
 use crate::util::stats::{box_stats, BoxStats};
 
 use super::runner;
-use super::workload::{sample_problems, Problem};
+use super::workload::{dim_grid, sample_problems, Problem};
 
 /// One simulated point of the Fig. 5 sweep.
 #[derive(Clone, Copy, Debug)]
@@ -24,20 +29,35 @@ pub struct Fig5Row {
     pub conflicts: u64,
 }
 
-/// Run one (config, problem) point.
+/// Run one (config, problem) point cycle-accurately (a fresh one-shot
+/// service; sweeps should share one via [`run_point_with`]).
 pub fn run_point(
     config: ConfigId,
     p: Problem,
     layout: LayoutKind,
 ) -> anyhow::Result<Fig5Row> {
-    // Matrices are derived from the problem (deterministic, and
-    // identical across configs so numerics can be cross-checked).
-    let seed = (p.m as u64) << 32 | (p.n as u64) << 16 | p.k as u64;
-    let (a, b) = test_matrices(p.m, p.n, p.k, seed);
-    let r = run_matmul_layout(config, p.m, p.n, p.k, &a, &b, layout)?;
-    let e = model::energy(config, &r.perf);
-    Ok(Fig5Row {
-        config,
+    run_point_with(&GemmService::cycle(), config, p, layout)
+}
+
+/// Run one (config, problem) point through a shared service. Operand
+/// matrices are derived from the problem (deterministic, and identical
+/// across configs so numerics can be cross-checked); non-functional
+/// backends skip them entirely.
+pub fn run_point_with(
+    svc: &GemmService,
+    config: ConfigId,
+    p: Problem,
+    layout: LayoutKind,
+) -> anyhow::Result<Fig5Row> {
+    let job = GemmJob::for_problem(config, p.m, p.n, p.k, layout);
+    let r = svc.run_job(&job)?;
+    Ok(fig5_row(p, &r))
+}
+
+fn fig5_row(p: Problem, r: &GemmResult) -> Fig5Row {
+    let e = model::energy(r.config, &r.perf);
+    Fig5Row {
+        config: r.config,
         problem: p,
         utilization: r.utilization(),
         power_mw: e.power.total_mw(),
@@ -46,12 +66,22 @@ pub fn run_point(
         cycles: r.cycles,
         window_cycles: r.perf.window_cycles,
         conflicts: r.perf.tcdm_conflicts,
-    })
+    }
 }
 
 /// The Fig. 5 experiment: `samples` random sizes on every
 /// configuration, in parallel across `threads` workers.
 pub fn fig5(
+    samples: usize,
+    seed: u64,
+    threads: usize,
+) -> anyhow::Result<Vec<Fig5Row>> {
+    fig5_with(&GemmService::cycle(), samples, seed, threads)
+}
+
+/// Backend-agnostic Fig. 5 sweep through a shared service.
+pub fn fig5_with(
+    svc: &GemmService,
     samples: usize,
     seed: u64,
     threads: usize,
@@ -64,9 +94,149 @@ pub fn fig5(
         }
     }
     let rows = runner::parallel_map(&jobs, threads, |&(id, p)| {
-        run_point(id, p, LayoutKind::Grouped)
+        run_point_with(svc, id, p, LayoutKind::Grouped)
     })?;
     Ok(rows)
+}
+
+/// The exhaustive evaluation space: every (M, N, K) in {8..128}^3 on
+/// the given configurations. 4096 problems per configuration — triage
+/// territory for the analytic backend; hours for the cycle-accurate
+/// one.
+pub fn sweep_grid(
+    svc: &GemmService,
+    configs: &[ConfigId],
+    threads: usize,
+) -> anyhow::Result<Vec<Fig5Row>> {
+    let dims = dim_grid();
+    let mut jobs: Vec<(ConfigId, Problem)> = Vec::new();
+    for &id in configs {
+        for &m in &dims {
+            for &n in &dims {
+                for &k in &dims {
+                    jobs.push((id, Problem { m, n, k }));
+                }
+            }
+        }
+    }
+    runner::parallel_map(&jobs, threads, |&(id, p)| {
+        run_point_with(svc, id, p, LayoutKind::Grouped)
+    })
+}
+
+// ------------------------------------------------------------------
+// Analytic-model calibration
+// ------------------------------------------------------------------
+
+/// The default calibration grid: small but structurally diverse
+/// (single- and multi-pass, square and skewed, short and long K).
+pub fn calibration_grid() -> Vec<Problem> {
+    [
+        (8, 8, 8),
+        (16, 16, 16),
+        (32, 32, 32),
+        (32, 32, 8),
+        (16, 64, 32),
+        (64, 32, 16),
+        (48, 48, 48),
+        (64, 64, 64),
+        (96, 64, 80),
+    ]
+    .iter()
+    .map(|&(m, n, k)| Problem { m, n, k })
+    .collect()
+}
+
+/// Analytic-vs-cycle error summary for one configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ErrorRow {
+    pub config: ConfigId,
+    pub points: usize,
+    pub mean_util_err: f64,
+    pub max_util_err: f64,
+    pub mean_window_err: f64,
+    pub max_window_err: f64,
+}
+
+pub struct CalibrationOutcome {
+    pub calibration: Calibration,
+    pub errors: Vec<ErrorRow>,
+}
+
+/// Per-configuration error table of a calibrated analytic model
+/// against measured cycle-accurate results.
+pub fn error_table(
+    cal: &Calibration,
+    measured: &[GemmResult],
+) -> Vec<ErrorRow> {
+    ConfigId::all()
+        .iter()
+        .map(|&id| {
+            let mut util_errs = Vec::new();
+            let mut win_errs = Vec::new();
+            for r in measured.iter().filter(|r| r.config == id) {
+                let pred =
+                    crate::backend::analytic::predict_perf(cal, id, &r.plan);
+                let u_err = (pred.utilization - r.perf.utilization).abs()
+                    / r.perf.utilization.max(1e-9);
+                let w_err = (pred.window_cycles as f64
+                    - r.perf.window_cycles as f64)
+                    .abs()
+                    / (r.perf.window_cycles as f64).max(1.0);
+                util_errs.push(u_err);
+                win_errs.push(w_err);
+            }
+            let mean = |xs: &[f64]| {
+                if xs.is_empty() {
+                    0.0
+                } else {
+                    xs.iter().sum::<f64>() / xs.len() as f64
+                }
+            };
+            let max = |xs: &[f64]| {
+                xs.iter().cloned().fold(0.0f64, f64::max)
+            };
+            ErrorRow {
+                config: id,
+                points: util_errs.len(),
+                mean_util_err: mean(&util_errs),
+                max_util_err: max(&util_errs),
+                mean_window_err: mean(&win_errs),
+                max_window_err: max(&win_errs),
+            }
+        })
+        .collect()
+}
+
+/// Fit the analytic model against cycle-accurate runs of the default
+/// calibration grid and summarize the residual error per config.
+pub fn calibrate(threads: usize) -> anyhow::Result<CalibrationOutcome> {
+    calibrate_on(&calibration_grid(), threads)
+}
+
+pub fn calibrate_on(
+    grid: &[Problem],
+    threads: usize,
+) -> anyhow::Result<CalibrationOutcome> {
+    let svc = GemmService::cycle();
+    let mut jobs = Vec::new();
+    for id in ConfigId::all() {
+        for p in grid {
+            jobs.push(GemmJob::for_problem(
+                id,
+                p.m,
+                p.n,
+                p.k,
+                LayoutKind::Grouped,
+            ));
+        }
+    }
+    let measured = svc.run_batch(&jobs, threads)?;
+    let samples: Vec<CalSample> =
+        measured.iter().map(CalSample::from_result).collect();
+    let calibration = fit_calibration(&samples);
+    let errors = error_table(&calibration, &measured);
+    Ok(CalibrationOutcome { calibration, errors })
 }
 
 /// Per-configuration box statistics over a metric.
@@ -309,6 +479,74 @@ mod tests {
             "energy-eff gap {:.2} too large",
             eff_gap
         );
+    }
+
+    #[test]
+    fn fig5_identical_through_shared_service() {
+        // The memoizing service path must reproduce the one-shot path
+        // bit for bit (pure refactor guarantee).
+        let svc = GemmService::cycle();
+        let p = Problem { m: 16, n: 16, k: 16 };
+        let via_svc =
+            run_point_with(&svc, ConfigId::Zonl48Db, p, LayoutKind::Grouped)
+                .unwrap();
+        let one_shot =
+            run_point(ConfigId::Zonl48Db, p, LayoutKind::Grouped).unwrap();
+        assert_eq!(via_svc.cycles, one_shot.cycles);
+        assert_eq!(via_svc.window_cycles, one_shot.window_cycles);
+        assert_eq!(via_svc.utilization, one_shot.utilization);
+        assert_eq!(via_svc.conflicts, one_shot.conflicts);
+    }
+
+    #[test]
+    fn analytic_full_grid_sweep_completes() {
+        // The whole {8..128}^3 space on one config — plan-only, no
+        // machine stepping, so this stays test-suite fast.
+        let svc = GemmService::analytic();
+        let rows = sweep_grid(&svc, &[ConfigId::Zonl48Db], 4).unwrap();
+        assert_eq!(rows.len(), 16 * 16 * 16);
+        for r in &rows {
+            assert!(
+                r.utilization > 0.0 && r.utilization <= 1.0,
+                "{} {}: util {}",
+                r.config.name(),
+                r.problem,
+                r.utilization
+            );
+            assert!(r.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn calibration_fits_and_bounds_error() {
+        // Small compute-bound grid: after fitting, the analytic model
+        // must track the cycle-accurate windows closely on it.
+        let grid: Vec<Problem> = [
+            (8, 8, 8),
+            (16, 16, 16),
+            (32, 32, 32),
+            (16, 32, 24),
+            (32, 16, 40),
+        ]
+        .iter()
+        .map(|&(m, n, k)| Problem { m, n, k })
+        .collect();
+        let out = calibrate_on(&grid, 2).unwrap();
+        for e in &out.errors {
+            assert_eq!(e.points, grid.len());
+            assert!(
+                e.mean_window_err < 0.20,
+                "{}: mean window err {:.3}",
+                e.config.name(),
+                e.mean_window_err
+            );
+            assert!(
+                e.mean_util_err < 0.20,
+                "{}: mean util err {:.3}",
+                e.config.name(),
+                e.mean_util_err
+            );
+        }
     }
 
     #[test]

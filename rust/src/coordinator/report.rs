@@ -9,8 +9,9 @@ use crate::util::csv::{f, Csv};
 use crate::util::stats::BoxStats;
 
 use super::experiments::{
-    AblationRow, Fig5Row, Fig5Summary, Headline, Table2Row,
+    AblationRow, ErrorRow, Fig5Row, Fig5Summary, Headline, Table2Row,
 };
+use crate::backend::Calibration;
 use crate::model::area::AreaBreakdown;
 
 // ------------------------------------------------------------- Table I --
@@ -254,6 +255,107 @@ pub fn render_ablation(rows: &[AblationRow]) -> String {
     out
 }
 
+// -------------------------------------------- analytic calibration --
+
+pub fn render_calibration(cal: &Calibration) -> String {
+    let mut out = String::new();
+    out.push_str("## Analytic-model calibration constants\n\n");
+    out.push_str(
+        "| config | alpha (cyc/pass) | beta (cyc/outer-iter) | gamma \
+         (cyc/contested beat) |\n|---|---|---|---|\n",
+    );
+    for (id, c) in cal.entries() {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} |\n",
+            id.name(),
+            f(c.alpha, 2),
+            f(c.beta, 2),
+            f(c.gamma, 3),
+        ));
+    }
+    out
+}
+
+pub fn render_error_table(rows: &[ErrorRow]) -> String {
+    let mut out = String::new();
+    out.push_str("## Analytic vs cycle-accurate error\n\n");
+    out.push_str(
+        "| config | points | mean util err | max util err | mean \
+         window err | max window err |\n|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {:.1}% | {:.1}% | {:.1}% | {:.1}% |\n",
+            r.config.name(),
+            r.points,
+            r.mean_util_err * 100.0,
+            r.max_util_err * 100.0,
+            r.mean_window_err * 100.0,
+            r.max_window_err * 100.0,
+        ));
+    }
+    out
+}
+
+pub fn error_csv(rows: &[ErrorRow]) -> Csv {
+    let mut c = Csv::new(vec![
+        "config",
+        "points",
+        "mean_util_err",
+        "max_util_err",
+        "mean_window_err",
+        "max_window_err",
+    ]);
+    for r in rows {
+        c.row(vec![
+            r.config.name().to_string(),
+            r.points.to_string(),
+            f(r.mean_util_err, 5),
+            f(r.max_util_err, 5),
+            f(r.mean_window_err, 5),
+            f(r.max_window_err, 5),
+        ]);
+    }
+    c
+}
+
+// ------------------------------------------------------------ sweep --
+
+/// Summary of a (possibly full-grid) backend sweep: per-config
+/// utilization distributions plus throughput of the engine itself.
+pub fn render_sweep(
+    rows: &[Fig5Row],
+    backend: &str,
+    elapsed_s: f64,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "## Sweep — {} points via the `{}` backend in {:.2} s \
+         ({:.0} points/s)\n\n",
+        rows.len(),
+        backend,
+        elapsed_s,
+        rows.len() as f64 / elapsed_s.max(1e-9),
+    ));
+    // Per-config boxes, skipping configs absent from this sweep
+    // (unlike fig5_summary, a sweep may cover a subset).
+    let mut utils: Vec<(&str, BoxStats)> = Vec::new();
+    for id in ConfigId::all() {
+        let sel: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.config == id)
+            .map(|r| r.utilization)
+            .collect();
+        if !sel.is_empty() {
+            utils.push((id.name(), crate::util::stats::box_stats(&sel)));
+        }
+    }
+    if !utils.is_empty() {
+        out.push_str(&render_boxes("FPU utilization", &utils, "frac"));
+    }
+    out
+}
+
 /// Write a string artifact under `results/`.
 pub fn save(dir: &Path, name: &str, content: &str) -> anyhow::Result<()> {
     std::fs::create_dir_all(dir)?;
@@ -289,5 +391,26 @@ mod tests {
     fn fig4_contains_pressure_bars() {
         let s = render_fig4();
         assert!(s.contains("zonl64fc"));
+    }
+
+    #[test]
+    fn calibration_and_error_tables_render() {
+        let cal = Calibration::default();
+        let t = render_calibration(&cal);
+        for id in ConfigId::all() {
+            assert!(t.contains(id.name()));
+        }
+        let rows = vec![crate::coordinator::experiments::ErrorRow {
+            config: ConfigId::Zonl48Db,
+            points: 9,
+            mean_util_err: 0.021,
+            max_util_err: 0.043,
+            mean_window_err: 0.018,
+            max_window_err: 0.04,
+        }];
+        let e = render_error_table(&rows);
+        assert!(e.contains("zonl48db"));
+        assert!(e.contains("2.1%"));
+        assert_eq!(error_csv(&rows).rows(), 1);
     }
 }

@@ -19,6 +19,8 @@
 //! what makes the baseline's outer-loop overhead visible only when the
 //! sequencer blocks offloads during replay (see `sequencer.rs`).
 
+use std::sync::Arc;
+
 use crate::dma::DmaDesc;
 use crate::isa::{csr, Instr, Program};
 use crate::ssr::{SsrMode, Streamer};
@@ -118,7 +120,7 @@ pub enum CoreRequest {
 pub struct Core {
     pub id: usize,
     pub cfg: CoreConfig,
-    prog: Program,
+    prog: Arc<Program>,
     pc: usize,
     pub iregs: [u32; 32],
     pub fpu: Fpu,
@@ -143,7 +145,7 @@ pub struct Core {
 }
 
 impl Core {
-    pub fn new(id: usize, cfg: CoreConfig, prog: Program) -> Self {
+    pub fn new(id: usize, cfg: CoreConfig, prog: Arc<Program>) -> Self {
         Self {
             id,
             cfg,

@@ -1,15 +1,20 @@
 //! End-to-end matmul driver: the public "run a GEMM on a cluster" API.
 //!
-//! Plans the tiling and buffers, generates the 9 programs, loads A and
-//! B into simulated main memory, runs the cluster to completion, and
-//! reads C back — the exact flow a real Snitch-cluster deployment uses
-//! (host writes DRAM, cluster computes, host reads DRAM).
+//! Plans the tiling and buffers, generates the 9 programs, and hands
+//! the prepared GEMM to the cycle-accurate backend — the exact flow a
+//! real Snitch-cluster deployment uses (host writes DRAM, cluster
+//! computes, host reads DRAM). The run-to-completion loop itself lives
+//! in `backend::cycle`; batched / multi-backend evaluation goes
+//! through `kernels::service::GemmService`.
+
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::cluster::{Cluster, ClusterConfig, ClusterPerf, ConfigId};
+use crate::backend::{CycleAccurate, PreparedGemm, SimBackend};
+use crate::cluster::{ClusterConfig, ClusterPerf, ConfigId};
 
-use super::codegen::{build_programs, main_layout, MainLayout, N_CORES, UNROLL};
+use super::codegen::{build_programs, main_layout, MainLayout, UNROLL};
 use super::layout::{plan_buffers, BufferMap, LayoutKind};
 use super::tiling::{choose_tiling, Tiling};
 
@@ -22,9 +27,11 @@ pub struct GemmPlan {
     pub layout: LayoutKind,
 }
 
-/// Result of a simulated GEMM.
+/// Result of an evaluated GEMM (any backend).
 #[derive(Clone, Debug)]
 pub struct GemmResult {
+    /// Row-major `m x n` output — empty for non-functional backends
+    /// (the analytic model predicts timing only).
     pub c: Vec<f64>,
     pub cycles: u64,
     pub perf: ClusterPerf,
@@ -76,24 +83,6 @@ pub fn plan_gemm(
     Ok(GemmPlan { tiling, map, main, layout })
 }
 
-/// Build a ready-to-run cluster with data loaded.
-pub fn build_cluster(
-    id: ConfigId,
-    plan: &GemmPlan,
-    a: &[f64],
-    b: &[f64],
-) -> Cluster {
-    let cfg = id.cluster_config();
-    let t = &plan.tiling;
-    assert_eq!(a.len(), t.m * t.k);
-    assert_eq!(b.len(), t.k * t.n);
-    let progs = build_programs(&cfg, t, &plan.map);
-    let mut cl = Cluster::new(cfg, progs);
-    cl.mem.write_slice_f64(plan.main.a, a);
-    cl.mem.write_slice_f64(plan.main.b, b);
-    cl
-}
-
 /// Simulate `C = A x B` on configuration `id`. The main entry point.
 pub fn run_matmul(
     id: ConfigId,
@@ -121,18 +110,12 @@ pub fn run_matmul_layout(
 ) -> Result<GemmResult> {
     let cfg = id.cluster_config();
     let plan = plan_gemm(&cfg, m, n, k, layout)?;
-    let mut cl = build_cluster(id, &plan, a, b);
-    // Generous deadline: ideal cycles x 64 + fixed slack.
-    let ideal = (m * n * k) as u64 / (N_CORES as u64);
-    let cycles = cl.run(100_000 + ideal * 64).context("cluster run")?;
-    let c = cl.mem.read_vec_f64(plan.main.c, m * n);
-    Ok(GemmResult {
-        c,
-        cycles,
-        perf: cl.perf(),
-        plan,
-        config: id,
-    })
+    let programs = build_programs(&cfg, &plan.tiling, &plan.map)
+        .into_iter()
+        .map(Arc::new)
+        .collect();
+    let prep = PreparedGemm { config: id, plan, programs };
+    CycleAccurate.run(&prep, a, b)
 }
 
 /// Host-side reference with the same FMA association order as the

@@ -22,7 +22,7 @@ use crate::mem::{Topology, BANKS_PER_SUPERBANK, TCDM_BASE};
 
 use super::tiling::Tiling;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum LayoutKind {
     /// Superbank-confined matrices (the paper's bank-aware layout).
     Grouped,

@@ -1,9 +1,11 @@
 //! The paper's workload: matmul kernel generation, L1 tiling, TCDM
-//! buffer layout, and the end-to-end GEMM driver.
+//! buffer layout, the end-to-end GEMM driver, and the batched
+//! `GemmService` that memoizes plans across backend runs.
 
 pub mod codegen;
 pub mod driver;
 pub mod layout;
+pub mod service;
 pub mod tiling;
 
 pub use codegen::{build_programs, N_CORES, UNROLL};
@@ -12,4 +14,5 @@ pub use driver::{
     GemmPlan, GemmResult,
 };
 pub use layout::{plan_buffers, BufferMap, LayoutKind};
+pub use service::{problem_seed, GemmJob, GemmService, ServiceStats};
 pub use tiling::{choose_tiling, Tiling};

@@ -11,9 +11,14 @@
 //! plus the paper's evaluation harness: area/power models, the OpenGeMM
 //! comparator, and the Fig. 5 / Table I / Table II experiments.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
-//! paper-vs-measured results.
+//! Evaluation runs through two [`backend`] engines behind one
+//! `SimBackend` trait — the cycle-accurate machine model and a
+//! calibrated first-order analytic model — fronted by the batched,
+//! plan-memoizing `kernels::GemmService`.
+//!
+//! See DESIGN.md for the system inventory and architecture notes.
 
+pub mod backend;
 pub mod cluster;
 pub mod coordinator;
 pub mod core;
@@ -23,6 +28,7 @@ pub mod kernels;
 pub mod mem;
 pub mod model;
 pub mod opengemm;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod ssr;
 pub mod util;

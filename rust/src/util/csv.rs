@@ -31,6 +31,11 @@ impl Csv {
         self
     }
 
+    /// Number of data rows (excluding the header).
+    pub fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
     fn escape(cell: &str) -> String {
         if cell.contains([',', '"', '\n']) {
             format!("\"{}\"", cell.replace('"', "\"\""))

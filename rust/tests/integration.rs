@@ -2,13 +2,15 @@
 //! numerics, perf-counter conservation laws, the paper's structural
 //! claims (E5-E7 of DESIGN.md) and failure handling.
 
+use zerostall::backend::{Analytic, BackendKind, SimBackend};
 use zerostall::cluster::{Cluster, ConfigId};
 use zerostall::coordinator::experiments::{self, run_point};
 use zerostall::coordinator::workload::Problem;
 use zerostall::isa::asm::Asm;
 use zerostall::isa::Instr;
 use zerostall::kernels::{
-    host_ref, run_matmul, run_matmul_layout, test_matrices, LayoutKind,
+    host_ref, run_matmul, run_matmul_layout, test_matrices, GemmJob,
+    GemmService, LayoutKind,
 };
 use zerostall::model::energy;
 
@@ -247,6 +249,99 @@ fn window_cycles_consistency() {
     assert!(r.utilization() <= 1.0);
     let e = energy(ConfigId::Zonl48Db, &r.perf);
     assert!(e.power.total_mw() > 250.0 && e.power.total_mw() < 500.0);
+}
+
+#[test]
+fn service_cycle_backend_identical_to_driver() {
+    // The SimBackend refactor is a pure re-plumbing of the run path:
+    // the service + CycleAccurate must reproduce the driver's cycles,
+    // perf counters, and output matrix exactly.
+    let (m, n, k) = (40, 32, 24);
+    let (a, b) = test_matrices(m, n, k, 31);
+    let svc = GemmService::cycle();
+    assert_eq!(svc.backend_kind(), BackendKind::Cycle);
+    for id in ConfigId::all() {
+        let drv = run_matmul(id, m, n, k, &a, &b).unwrap();
+        let via =
+            svc.run(id, m, n, k, LayoutKind::Grouped, &a, &b).unwrap();
+        assert_eq!(drv.c, via.c, "{}: output differs", id.name());
+        assert_eq!(drv.cycles, via.cycles, "{}", id.name());
+        assert_eq!(
+            drv.perf.window_cycles,
+            via.perf.window_cycles,
+            "{}",
+            id.name()
+        );
+        assert_eq!(
+            drv.perf.tcdm_conflicts,
+            via.perf.tcdm_conflicts,
+            "{}",
+            id.name()
+        );
+    }
+}
+
+#[test]
+fn service_batch_reuses_plans_across_threads() {
+    let svc = GemmService::cycle();
+    let jobs: Vec<GemmJob> = (0..6)
+        .map(|_| {
+            GemmJob::for_problem(
+                ConfigId::Zonl48Db,
+                16,
+                16,
+                16,
+                LayoutKind::Grouped,
+            )
+        })
+        .collect();
+    let rows = svc.run_batch(&jobs, 3).unwrap();
+    assert!(rows.windows(2).all(|w| w[0].cycles == w[1].cycles));
+    let s = svc.stats();
+    assert_eq!(s.plan_hits + s.plan_misses, 6);
+    assert!(s.plan_hits >= 3, "cache must serve repeats: {s:?}");
+}
+
+#[test]
+fn analytic_backend_orders_configs_like_cycle() {
+    // The analytic model must reproduce the paper's structural
+    // ordering (zonl48db ~ zonl64db > zonl32fc > base32fc) even with
+    // the shipped default calibration.
+    let svc = GemmService::analytic();
+    let p = Problem { m: 96, n: 64, k: 80 };
+    let u = |id| {
+        experiments::run_point_with(&svc, id, p, LayoutKind::Grouped)
+            .unwrap()
+            .utilization
+    };
+    let base = u(ConfigId::Base32Fc);
+    let z32 = u(ConfigId::Zonl32Fc);
+    let z48 = u(ConfigId::Zonl48Db);
+    assert!(z32 > base, "analytic: zonl32 {z32:.3} <= base {base:.3}");
+    assert!(z48 >= z32, "analytic: z48 {z48:.3} < z32 {z32:.3}");
+    assert!(z48 > 0.9, "analytic z48 {z48:.3} out of the paper's band");
+}
+
+#[test]
+fn analytic_backend_runs_without_programs_or_data() {
+    let svc = GemmService::analytic();
+    let prep = svc
+        .prepare(ConfigId::Zonl48Db, 64, 64, 64, LayoutKind::Grouped)
+        .unwrap();
+    assert!(
+        prep.programs.is_empty(),
+        "analytic preparation must skip codegen"
+    );
+    let backend = Analytic::default();
+    assert!(!backend.needs_data() && !backend.needs_programs());
+    let r = backend.run(&prep, &[], &[]).unwrap();
+    assert!(r.c.is_empty());
+    assert!(r.perf.window_cycles > 0);
+    // DMA byte conservation holds for predictions too.
+    let t = r.plan.tiling;
+    let expect = t.passes() as u64
+        * ((t.mt * t.k + t.k * t.nt + t.mt * t.nt) * 8) as u64;
+    assert_eq!(r.perf.dma_bytes, expect);
 }
 
 #[test]

@@ -552,6 +552,194 @@ fn prop_matmul_numerics_random_sizes() {
     );
 }
 
+// =================================================================
+// Buffer placement: the six double-buffered tiles never overlap
+// =================================================================
+
+/// Word address of tile element (row, col) under a BufDesc: rows are
+/// `row_stride` apart, each row is a run of 8-word chunks spaced
+/// `chunk_stride` apart.
+fn buf_addr(
+    d: &zerostall::kernels::layout::BufDesc,
+    row: usize,
+    col: usize,
+) -> u32 {
+    d.base
+        + row as u32 * d.row_stride
+        + (col / 8) as u32 * d.chunk_stride
+        + (col % 8) as u32 * 8
+}
+
+#[test]
+fn prop_plan_buffers_never_overlap() {
+    check(
+        &cfg(80, 0xB0F5),
+        |rng| {
+            vec![
+                rng.range(1, 16) * 8, // m
+                rng.range(1, 16) * 8, // n
+                rng.range(1, 16) * 8, // k
+                rng.range(0, 4),      // config index
+                rng.range(0, 2),      // layout: grouped | linear+pad
+            ]
+        },
+        |v| {
+            if v.len() < 5 {
+                return Ok(());
+            }
+            let (m, n, k) = (v[0].max(8), v[1].max(8), v[2].max(8));
+            let id = ConfigId::all()[v[3] % 5];
+            let layout = if v[4] % 2 == 0 {
+                LayoutKind::Grouped
+            } else {
+                LayoutKind::Linear { pad_words: 1 }
+            };
+            let c = id.cluster_config();
+            let Some(t) = choose_tiling(m, n, k, c.tcdm_bytes) else {
+                return Err(format!("no tiling for {m}x{n}x{k}"));
+            };
+            let map = plan_buffers(&t, c.topology, c.tcdm_bytes, layout);
+            let tcdm = Tcdm::new(c.topology, c.tcdm_bytes);
+            let bufs = [
+                (map.a[0], t.mt, t.k),
+                (map.a[1], t.mt, t.k),
+                (map.b[0], t.k, t.nt),
+                (map.b[1], t.k, t.nt),
+                (map.c[0], t.mt, t.nt),
+                (map.c[1], t.mt, t.nt),
+            ];
+            let mut seen = std::collections::HashSet::new();
+            let mut expected = 0usize;
+            for (d, rows, cols) in bufs {
+                for r in 0..rows {
+                    for col in 0..cols {
+                        let addr = buf_addr(&d, r, col);
+                        if !tcdm.contains(addr) {
+                            return Err(format!(
+                                "OOB {addr:#x} ({m}x{n}x{k} {} {layout:?})",
+                                id.name()
+                            ));
+                        }
+                        if !seen.insert(addr) {
+                            return Err(format!(
+                                "overlap at {addr:#x} ({m}x{n}x{k} {} \
+                                 {layout:?})",
+                                id.name()
+                            ));
+                        }
+                        expected += 1;
+                    }
+                }
+            }
+            if seen.len() != expected {
+                return Err("address count mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// =================================================================
+// Tiling: the chosen tiles cover M x K x N exactly (no MAC lost,
+// none double-counted)
+// =================================================================
+
+#[test]
+fn prop_tiling_covers_problem_exactly() {
+    check(
+        &cfg(300, 0xC0FE),
+        |rng| {
+            vec![
+                rng.range(1, 16) * 8,
+                rng.range(1, 16) * 8,
+                rng.range(1, 16) * 8,
+            ]
+        },
+        |v| {
+            if v.len() < 3 {
+                return Ok(());
+            }
+            let (m, n, k) = (v[0].max(8), v[1].max(8), v[2].max(8));
+            for bytes in [96 * 1024, 128 * 1024] {
+                let Some(t) = choose_tiling(m, n, k, bytes) else {
+                    return Err(format!("no tiling {m}x{n}x{k}"));
+                };
+                let (gm, gn) = t.grid();
+                if gm * t.mt != m || gn * t.nt != n {
+                    return Err(format!(
+                        "grid {gm}x{gn} of {}x{} tiles does not cover \
+                         {m}x{n}",
+                        t.mt, t.nt
+                    ));
+                }
+                // K stays resident: per-pass MACs x passes == total.
+                let macs =
+                    t.passes() as u64 * (t.mt * t.nt * t.k) as u64;
+                if macs != (m * n * k) as u64 {
+                    return Err(format!(
+                        "covered {macs} MACs, problem has {}",
+                        m * n * k
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// =================================================================
+// Analytic backend: calibrated predictions track the cycle-accurate
+// ground truth on a small randomized grid
+// =================================================================
+
+#[test]
+fn prop_analytic_tracks_cycle_accurate() {
+    use zerostall::coordinator::experiments::calibrate_on;
+    use zerostall::coordinator::workload::Problem;
+
+    // Fixed structural anchors (spread in outer-iteration count and
+    // passes) plus randomized extra points.
+    let mut grid = vec![
+        Problem { m: 8, n: 8, k: 8 },
+        Problem { m: 16, n: 16, k: 16 },
+        Problem { m: 32, n: 32, k: 32 },
+        Problem { m: 32, n: 16, k: 40 },
+    ];
+    let mut rng = Rng::new(0xCA11B);
+    while grid.len() < 7 {
+        let p = Problem {
+            m: rng.range(1, 6) * 8,
+            n: rng.range(1, 6) * 8,
+            k: rng.range(1, 6) * 8,
+        };
+        if !grid.contains(&p) {
+            grid.push(p);
+        }
+    }
+    let out = calibrate_on(&grid, 2).unwrap();
+    for e in &out.errors {
+        assert!(
+            e.mean_window_err < 0.20,
+            "{}: mean window err {:.3} over {} points",
+            e.config.name(),
+            e.mean_window_err,
+            e.points
+        );
+        assert!(
+            e.max_window_err < 0.40,
+            "{}: max window err {:.3}",
+            e.config.name(),
+            e.max_window_err
+        );
+        assert!(
+            e.mean_util_err < 0.20,
+            "{}: mean util err {:.3}",
+            e.config.name(),
+            e.mean_util_err
+        );
+    }
+}
+
 // Tiling type needs Debug for failures; silence unused warnings.
 #[allow(dead_code)]
 fn _t(_: Tiling) {}
