@@ -1,56 +1,72 @@
-//! End-to-end driver on a realistic workload: the GEMM trace of one
-//! small transformer layer (the workloads the paper's introduction
-//! motivates), batched token processing on the optimized cluster.
+//! End-to-end driver on a realistic workload: one transformer layer's
+//! projection GEMMs (the workloads the paper's introduction motivates)
+//! as a `NetGraph` from the model zoo — bias adds and activations
+//! fused into the kernels' writeback pass, residuals scheduled by the
+//! DAG runner, batched token processing on the optimized cluster.
 //!
-//! For every projection of the layer we simulate the full
-//! load-compute-store pipeline on both the baseline and the paper's
-//! zonl48db configuration and report per-layer latency, utilization,
-//! energy, and the resulting end-to-end tokens/s of the layer.
+//! For both the baseline and the paper's zonl48db configuration we run
+//! the whole network through the cycle-accurate backend and report
+//! per-layer latency, utilization, and energy, the end-to-end
+//! tokens/s, and the TCDM round-trips the fused epilogues avoided.
 
 use zerostall::cluster::ConfigId;
-use zerostall::coordinator::workload::llm_problems;
-use zerostall::kernels::{host_ref, run_matmul, test_matrices};
-use zerostall::model::energy;
+use zerostall::coordinator::net::run_net;
+use zerostall::coordinator::workload::graph::TensorKind;
+use zerostall::coordinator::workload::zoo;
+use zerostall::kernels::{GemmService, LayoutKind};
 
 fn main() -> anyhow::Result<()> {
-    println!("transformer-layer GEMM trace (batch = M tokens)\n");
+    let g = zoo::build("llm")?;
+    let tokens = g
+        .tensors
+        .iter()
+        .find(|t| t.kind == TensorKind::Input)
+        .map(|t| t.rows)
+        .unwrap_or(0);
+    println!(
+        "transformer-layer network `{}`: {} ops, {} MACs (batch = \
+         {tokens} tokens)\n",
+        g.name,
+        g.ops.len(),
+        g.macs(),
+    );
     for id in [ConfigId::Base32Fc, ConfigId::Zonl48Db] {
         println!("=== {} ===", id.name());
-        let mut total_cycles = 0u64;
-        let mut total_uj = 0.0f64;
-        let mut batch_tokens = 0usize;
-        for (name, p) in llm_problems() {
-            let (a, b) = test_matrices(p.m, p.n, p.k, 2026);
-            let r = run_matmul(id, p.m, p.n, p.k, &a, &b)?;
-            // verify numerics on every layer
-            let want = host_ref(p.m, p.n, p.k, &a, &b);
-            let ok = r
-                .c
-                .iter()
-                .zip(&want)
-                .all(|(g, w)| (g - w).abs() <= 1e-9 * w.abs().max(1.0));
-            anyhow::ensure!(ok, "numerics mismatch on {name}");
-            let e = energy(id, &r.perf);
+        let svc = GemmService::cycle();
+        let run =
+            run_net(&svc, &g, id, LayoutKind::Grouped, 4, 2026)?;
+        let r = &run.report;
+        for l in &r.layers {
+            let shape = l
+                .problem
+                .map(|p| p.to_string())
+                .unwrap_or_else(|| "elementwise".into());
             println!(
-                "  {:<9} {:>12}  {:>8} cyc  util {:>5.1}%  {:>6.2} \
-                 DPGflop/s  {:>7.2} uJ",
-                name,
-                p.to_string(),
-                r.cycles,
-                r.utilization() * 100.0,
-                e.gflops,
-                e.energy_uj,
+                "  {:<13} {:>12}  epi={:<9} {:>8} cyc  util {:>5.1}%  \
+                 {:>7.2} uJ  trips+{}",
+                l.name,
+                shape,
+                l.epilogue,
+                l.cycles,
+                l.utilization * 100.0,
+                l.energy_uj,
+                l.extra_roundtrips,
             );
-            total_cycles += r.cycles;
-            total_uj += e.energy_uj;
-            batch_tokens = p.m;
         }
         let tokens_per_s =
-            batch_tokens as f64 / (total_cycles as f64 * 1e-9);
+            tokens as f64 / (r.total_cycles as f64 * 1e-9) / 1e3;
         println!(
-            "  layer total: {total_cycles} cycles, {total_uj:.1} uJ, \
-             {:.1} ktok/s at 1 GHz\n",
-            tokens_per_s / 1e3,
+            "  network: {} cycles, {:.1} uJ, util {:.1}%, {:.1} ktok/s \
+             at 1 GHz",
+            r.total_cycles,
+            r.total_energy_uj,
+            r.utilization * 100.0,
+            tokens_per_s,
+        );
+        println!(
+            "  fused epilogue elements: {} (zero extra TCDM \
+             round-trips from GEMM layers; residual adds pay {})\n",
+            r.fused_elems, r.extra_roundtrips,
         );
     }
     Ok(())

@@ -1,0 +1,45 @@
+//! Bench: NetGraph DAG execution throughput — layers/sec through the
+//! DAG scheduler with a warm plan cache, on both backends.
+
+use zerostall::cluster::ConfigId;
+use zerostall::coordinator::net::run_net;
+use zerostall::coordinator::workload::zoo;
+use zerostall::kernels::{GemmService, LayoutKind};
+use zerostall::util::bench::Bencher;
+
+fn main() {
+    println!("== netgraph bench: DAG-scheduled network execution ==");
+    let b = Bencher::default();
+    let g = zoo::build("ffn").unwrap();
+    let layers = g.ops.len() as f64;
+
+    // Analytic backend: pure scheduling + model evaluation rate.
+    let ana = GemmService::analytic();
+    // warm the plan cache outside the timed region
+    run_net(&ana, &g, ConfigId::Zonl48Db, LayoutKind::Grouped, 2, 1)
+        .unwrap();
+    let s = b.run("net/ffn/analytic_warm", || {
+        run_net(&ana, &g, ConfigId::Zonl48Db, LayoutKind::Grouped, 2, 1)
+            .unwrap()
+    });
+    println!(
+        "    -> {:.0} layers/s analytic (plan cache {:?})",
+        s.throughput(layers),
+        ana.stats(),
+    );
+
+    // Cycle backend: functional network execution with fused
+    // epilogues, warm plan cache (programs Arc-shared across runs).
+    let cyc = GemmService::cycle();
+    run_net(&cyc, &g, ConfigId::Zonl48Db, LayoutKind::Grouped, 2, 1)
+        .unwrap();
+    let s2 = b.run("net/ffn/cycle_warm", || {
+        run_net(&cyc, &g, ConfigId::Zonl48Db, LayoutKind::Grouped, 2, 1)
+            .unwrap()
+    });
+    println!(
+        "    -> {:.2} layers/s cycle-accurate (plan cache {:?})",
+        s2.throughput(layers),
+        cyc.stats(),
+    );
+}

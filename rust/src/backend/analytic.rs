@@ -56,6 +56,10 @@ pub struct ConfigCal {
     /// Core-side cycles lost per pressure-scaled DMA beat that
     /// overlaps compute on a shared bank group.
     pub gamma: f64,
+    /// Issue cost per fused-epilogue FP op (activation writeback rows;
+    /// a fused bias costs nothing — it rides the peeled first
+    /// k-iteration). 1.0 = one issue slot per op, the zero-stall bound.
+    pub epsilon: f64,
 }
 
 /// The full per-configuration constant table.
@@ -93,12 +97,18 @@ impl Default for Calibration {
     /// row); 32-bank configurations additionally lose ~0.6 cycles per
     /// contested DMA beat at the superbank mux.
     fn default() -> Self {
-        let zonl = ConfigCal { alpha: 24.0, beta: 8.0, gamma: 0.6 };
+        let zonl =
+            ConfigCal { alpha: 24.0, beta: 8.0, gamma: 0.6, epsilon: 1.0 };
         Self {
             entries: [
                 (
                     ConfigId::Base32Fc,
-                    ConfigCal { alpha: 80.0, beta: 35.0, gamma: 0.6 },
+                    ConfigCal {
+                        alpha: 80.0,
+                        beta: 35.0,
+                        gamma: 0.6,
+                        epsilon: 1.0,
+                    },
                 ),
                 (ConfigId::Zonl32Fc, zonl),
                 (ConfigId::Zonl64Fc, zonl),
@@ -148,6 +158,10 @@ pub struct Features {
     pub shared: bool,
     /// Clamped routing-pressure proxy (`model::congestion`).
     pub pressure: f64,
+    /// Fused-epilogue FP issues per core per pass (activation rows).
+    pub epi_pass: f64,
+    /// Fused-epilogue FP issues per core, summed over passes.
+    pub epi_total: f64,
 }
 
 pub fn features(config: ConfigId, plan: &GemmPlan) -> Features {
@@ -156,7 +170,11 @@ pub fn features(config: ConfigId, plan: &GemmPlan) -> Features {
     let passes = t.passes();
     let fp_pass = (t.mt * t.nt * t.k) as f64 / N_CORES as f64;
     let outer_pass = ((t.mt / N_CORES) * (t.nt / UNROLL)) as f64;
-    let load_beats = ((t.mt * t.k + t.k * t.nt) / 8) as f64;
+    let epi_pass = (t.mt * t.nt * plan.epi.ops_per_elem()) as f64
+        / N_CORES as f64;
+    let bias_beats = if plan.epi.bias { (t.nt / 8) as f64 } else { 0.0 };
+    let load_beats =
+        ((t.mt * t.k + t.k * t.nt) / 8) as f64 + bias_beats;
     let store_beats = (t.mt * t.nt / 8) as f64;
     // Loads overlap compute in passes 0..passes-1, stores in
     // 1..passes: each occurs (passes - 1) times.
@@ -176,6 +194,8 @@ pub fn features(config: ConfigId, plan: &GemmPlan) -> Features {
         dma_pass: load_beats + store_beats,
         shared,
         pressure,
+        epi_pass,
+        epi_total: passes as f64 * epi_pass,
     }
 }
 
@@ -219,7 +239,10 @@ pub fn predict_perf(
         let shared_conf =
             if shared { cc.gamma * overlap * pressure } else { 0.0 };
         let conf = shared_conf + lin_frac * fp_pass;
-        let comp = fp_pass + cc.beta * outer_pass + conf;
+        let comp = fp_pass
+            + cc.epsilon * f.epi_pass
+            + cc.beta * outer_pass
+            + conf;
         // Contested beats are retried at the superbank mux: the engine
         // sustains roughly 2 cycles per beat while compute is active
         // on the same group.
@@ -231,7 +254,10 @@ pub fn predict_perf(
         conflict_cycles += conf;
     }
 
-    let fp_total = (t.m * t.n * t.k) as u64;
+    // Epilogue FP ops count toward issue (and the FPU-op counters),
+    // exactly as the cycle backend counts them.
+    let epi_ops = (t.m * t.n * plan.epi.ops_per_elem()) as u64;
+    let fp_total = (t.m * t.n * t.k) as u64 + epi_ops;
     let window_cycles = window.round().max(1.0) as u64;
     let utilization =
         fp_total as f64 / (window_cycles as f64 * N_CORES as f64);
@@ -259,13 +285,17 @@ pub fn predict_perf(
         )
     };
     let dm_int = 40.0 * passes as f64 + 30.0;
-    let a_reqs = fp_total / 8;
-    let b_reqs = fp_total;
+    let macs = (t.m * t.n * t.k) as u64;
+    let a_reqs = macs / 8;
+    let b_reqs = macs;
     let c_reqs = (t.m * t.n) as u64;
-    let grants = a_reqs + b_reqs + c_reqs;
+    let bias_reqs = if plan.epi.bias { (t.m * t.n) as u64 } else { 0 };
+    let grants = a_reqs + b_reqs + c_reqs + bias_reqs;
     let conflicts = conflict_cycles.round() as u64;
-    let dma_bytes =
-        passes as u64 * ((t.mt * t.k + t.k * t.nt + t.mt * t.nt) * 8) as u64;
+    let bias_bytes = if plan.epi.bias { t.nt * 8 } else { 0 };
+    let dma_bytes = passes as u64
+        * ((t.mt * t.k + t.k * t.nt + t.mt * t.nt) * 8 + bias_bytes)
+            as u64;
     let dma_beats = dma_bytes / 64;
     let dma_echo = if shared { dma_beats / 4 } else { 0 };
 
@@ -316,17 +346,16 @@ impl CalSample {
     }
 }
 
-/// Solve the 3x3 linear system `m x = b` by Gaussian elimination with
+/// Solve the NxN linear system `m x = b` by Gaussian elimination with
 /// partial pivoting; near-singular pivots zero their unknown (the
 /// regressor was absent from the sample set).
-fn solve3(mut m: [[f64; 3]; 3], mut b: [f64; 3]) -> [f64; 3] {
-    let n = 3;
-    let mut x = [0.0f64; 3];
-    let mut skip = [false; 3];
-    for col in 0..n {
+fn solve<const N: usize>(mut m: [[f64; N]; N], mut b: [f64; N]) -> [f64; N] {
+    let mut x = [0.0f64; N];
+    let mut skip = [false; N];
+    for col in 0..N {
         // pivot
         let mut piv = col;
-        for r in col + 1..n {
+        for r in col + 1..N {
             if m[r][col].abs() > m[piv][col].abs() {
                 piv = r;
             }
@@ -337,17 +366,17 @@ fn solve3(mut m: [[f64; 3]; 3], mut b: [f64; 3]) -> [f64; 3] {
         }
         m.swap(col, piv);
         b.swap(col, piv);
-        for r in 0..n {
+        for r in 0..N {
             if r != col {
                 let f = m[r][col] / m[col][col];
-                for c in 0..n {
+                for c in 0..N {
                     m[r][c] -= f * m[col][c];
                 }
                 b[r] -= f * b[col];
             }
         }
     }
-    for col in 0..n {
+    for col in 0..N {
         if !skip[col] && m[col][col].abs() > 1e-9 {
             x[col] = b[col] / m[col][col];
         }
@@ -355,15 +384,18 @@ fn solve3(mut m: [[f64; 3]; 3], mut b: [f64; 3]) -> [f64; 3] {
     x
 }
 
-/// Fit per-configuration `(alpha, beta, gamma)` by least squares on
-/// measured compute windows: minimize over the compute-bound samples
+/// Fit per-configuration `(alpha, beta, gamma, epsilon)` by least
+/// squares on measured compute windows: minimize over the
+/// compute-bound samples
 ///
 /// ```text
-/// window - passes*fp_pass ~= alpha*passes + beta*outer + gamma*overlap
+/// window - passes*fp_pass ~= alpha*passes + beta*outer
+///                          + gamma*overlap + epsilon*epi
 /// ```
 ///
-/// Configurations with fewer than 3 usable samples (or no variation in
-/// a regressor) keep the shipped defaults for the unresolved terms.
+/// Configurations with fewer than 4 usable samples (one per unknown —
+/// fewer would leave the normal system rank-deficient) or no variation
+/// in a regressor keep the shipped defaults for the unresolved terms.
 pub fn fit_calibration(samples: &[CalSample]) -> Calibration {
     let mut cal = Calibration::default();
     for id in ConfigId::all() {
@@ -376,24 +408,26 @@ pub fn fit_calibration(samples: &[CalSample]) -> Calibration {
                     && s.features.fp_pass > 1.5 * s.features.dma_pass
             })
             .collect();
-        if rows.len() < 3 {
+        if rows.len() < 4 {
             continue;
         }
-        // normal equations for [passes, outer_total, overlap_total]
-        let mut ata = [[0.0f64; 3]; 3];
-        let mut atb = [0.0f64; 3];
+        // normal equations for
+        // [passes, outer_total, overlap_total, epi_total]
+        let mut ata = [[0.0f64; 4]; 4];
+        let mut atb = [0.0f64; 4];
         for s in &rows {
             let f = s.features;
-            let xs = [f.passes, f.outer_total, f.overlap_total];
+            let xs =
+                [f.passes, f.outer_total, f.overlap_total, f.epi_total];
             let y = s.window_measured - f.passes * f.fp_pass;
-            for i in 0..3 {
-                for j in 0..3 {
+            for i in 0..4 {
+                for j in 0..4 {
                     ata[i][j] += xs[i] * xs[j];
                 }
                 atb[i] += xs[i] * y;
             }
         }
-        let x = solve3(ata, atb);
+        let x = solve(ata, atb);
         let default = cal.get(id);
         let pick = |v: f64, d: f64| {
             if v.is_finite() && v >= 0.0 && v < 1e6 {
@@ -409,6 +443,11 @@ pub fn fit_calibration(samples: &[CalSample]) -> Calibration {
                 pick(x[2], default.gamma)
             } else {
                 default.gamma
+            },
+            epsilon: if rows.iter().any(|s| s.features.epi_total > 0.0) {
+                pick(x[3], default.epsilon)
+            } else {
+                default.epsilon
             },
         };
         cal.set(id, fitted);
@@ -451,11 +490,12 @@ impl SimBackend for Analytic {
         false
     }
 
-    fn run(
+    fn run_fused(
         &self,
         prep: &PreparedGemm,
         _a: &[f64],
         _b: &[f64],
+        _bias: &[f64],
     ) -> anyhow::Result<GemmResult> {
         let perf = predict_perf(&self.cal, prep.config, &prep.plan);
         Ok(GemmResult {
@@ -528,7 +568,7 @@ mod tests {
     }
 
     #[test]
-    fn solve3_recovers_coefficients() {
+    fn solve_recovers_coefficients() {
         // x = (2, 3, 5) under a full-rank system.
         let m = [[4.0, 1.0, 0.0], [1.0, 3.0, 1.0], [0.0, 1.0, 5.0]];
         let want = [2.0, 3.0, 5.0];
@@ -537,18 +577,18 @@ mod tests {
             m[1][0] * want[0] + m[1][1] * want[1] + m[1][2] * want[2],
             m[2][0] * want[0] + m[2][1] * want[1] + m[2][2] * want[2],
         ];
-        let x = solve3(m, b);
+        let x = solve(m, b);
         for (g, w) in x.iter().zip(&want) {
             assert!((g - w).abs() < 1e-6, "{x:?}");
         }
     }
 
     #[test]
-    fn solve3_zero_column_skips_unknown() {
+    fn solve_zero_column_skips_unknown() {
         // Third regressor absent: coefficient must come out 0.
         let m = [[2.0, 1.0, 0.0], [1.0, 2.0, 0.0], [0.0, 0.0, 0.0]];
         let b = [5.0, 4.0, 0.0];
-        let x = solve3(m, b);
+        let x = solve(m, b);
         assert_eq!(x[2], 0.0);
         assert!((2.0 * x[0] + x[1] - 5.0).abs() < 1e-6);
     }
@@ -557,7 +597,8 @@ mod tests {
     fn fit_recovers_synthetic_constants() {
         // Generate windows from known constants; the fit must recover
         // them (compute-bound, varied shapes).
-        let truth = ConfigCal { alpha: 50.0, beta: 12.0, gamma: 0.0 };
+        let truth =
+            ConfigCal { alpha: 50.0, beta: 12.0, gamma: 0.0, epsilon: 1.0 };
         let mut samples = Vec::new();
         for (m, n, k) in
             [(16, 16, 16), (32, 32, 32), (32, 16, 48), (48, 48, 32)]
@@ -577,10 +618,86 @@ mod tests {
         let got = cal.get(ConfigId::Zonl64Db);
         assert!((got.alpha - truth.alpha).abs() < 1.0, "{got:?}");
         assert!((got.beta - truth.beta).abs() < 0.5, "{got:?}");
+        // no fused samples: epsilon keeps its default
+        assert_eq!(got.epsilon, 1.0);
         // untouched configs keep defaults
         assert_eq!(
             cal.get(ConfigId::Base32Fc),
             Calibration::default().get(ConfigId::Base32Fc)
+        );
+    }
+
+    #[test]
+    fn fit_recovers_epsilon_from_fused_samples() {
+        use crate::kernels::epilogue::{Activation, Epilogue};
+        use crate::kernels::plan_gemm_fused;
+        let truth =
+            ConfigCal { alpha: 40.0, beta: 9.0, gamma: 0.0, epsilon: 1.4 };
+        let epi = Epilogue { bias: true, act: Some(Activation::Relu) };
+        let mut samples = Vec::new();
+        for (m, n, k, fused) in [
+            (16, 16, 16, false),
+            (32, 32, 32, false),
+            (32, 16, 48, true),
+            (48, 48, 32, true),
+            (16, 32, 40, true),
+        ] {
+            let e = if fused { epi } else { Epilogue::NONE };
+            let p = plan_gemm_fused(
+                &ConfigId::Zonl48Db.cluster_config(),
+                m,
+                n,
+                k,
+                LayoutKind::Grouped,
+                e,
+            )
+            .unwrap();
+            let f = features(ConfigId::Zonl48Db, &p);
+            let window = f.passes * f.fp_pass
+                + truth.alpha * f.passes
+                + truth.beta * f.outer_total
+                + truth.epsilon * f.epi_total;
+            samples.push(CalSample {
+                config: ConfigId::Zonl48Db,
+                features: f,
+                window_measured: window,
+            });
+        }
+        let cal = fit_calibration(&samples);
+        let got = cal.get(ConfigId::Zonl48Db);
+        assert!((got.epsilon - truth.epsilon).abs() < 0.1, "{got:?}");
+        assert!((got.alpha - truth.alpha).abs() < 2.0, "{got:?}");
+    }
+
+    #[test]
+    fn fused_epilogue_prediction_adds_issue_cost() {
+        use crate::kernels::epilogue::{Activation, Epilogue};
+        use crate::kernels::plan_gemm_fused;
+        let cal = Calibration::default();
+        let cfg = ConfigId::Zonl48Db.cluster_config();
+        let plain = plan(ConfigId::Zonl48Db, 32, 32, 32);
+        let fused = plan_gemm_fused(
+            &cfg,
+            32,
+            32,
+            32,
+            LayoutKind::Grouped,
+            Epilogue { bias: true, act: Some(Activation::Gelu) },
+        )
+        .unwrap();
+        let wp = predict_perf(&cal, ConfigId::Zonl48Db, &plain);
+        let wf = predict_perf(&cal, ConfigId::Zonl48Db, &fused);
+        assert!(
+            wf.window_cycles > wp.window_cycles,
+            "activation row must cost issue cycles: {} vs {}",
+            wf.window_cycles,
+            wp.window_cycles
+        );
+        // one extra op per element
+        assert_eq!(
+            wf.fpu_ops_total,
+            wp.fpu_ops_total + 32 * 32,
+            "epilogue ops counted"
         );
     }
 }

@@ -32,11 +32,12 @@ impl SimBackend for CycleAccurate {
         BackendKind::Cycle
     }
 
-    fn run(
+    fn run_fused(
         &self,
         prep: &PreparedGemm,
         a: &[f64],
         b: &[f64],
+        bias: &[f64],
     ) -> Result<GemmResult> {
         let t = prep.plan.tiling;
         anyhow::ensure!(
@@ -48,10 +49,19 @@ impl SimBackend for CycleAccurate {
             b.len(),
             t.k * t.n
         );
+        anyhow::ensure!(
+            !prep.plan.epi.bias || bias.len() == t.n,
+            "fused bias epilogue needs a length-{} bias vector (got {})",
+            t.n,
+            bias.len()
+        );
         let cfg = prep.config.cluster_config();
         let mut cl = Cluster::from_shared(cfg, &prep.programs);
         cl.mem.write_slice_f64(prep.plan.main.a, a);
         cl.mem.write_slice_f64(prep.plan.main.b, b);
+        if prep.plan.epi.bias {
+            cl.mem.write_slice_f64(prep.plan.main.bias, bias);
+        }
         let cycles = cl
             .run(Self::deadline(t.m, t.n, t.k))
             .context("cluster run")?;

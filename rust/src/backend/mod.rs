@@ -4,9 +4,10 @@
 //!
 //! * planning (`kernels::{tiling, layout, codegen}`) produces a
 //!   [`PreparedGemm`]: the tile plan, buffer map, and generated
-//!   programs. Preparation is pure and memoizable — the
+//!   programs (including any fused bias/activation epilogue).
+//!   Preparation is pure and memoizable — the
 //!   `kernels::service::GemmService` caches it per
-//!   `(M, N, K, config, layout)` key.
+//!   `(M, N, K, config, layout, epilogue)` key.
 //! * evaluation (this module) turns a prepared GEMM into a
 //!   `GemmResult`. Two engines implement the [`SimBackend`] trait:
 //!
@@ -109,12 +110,25 @@ pub trait SimBackend: Send + Sync {
 
     /// Evaluate one prepared GEMM. `a` is row-major `m x k`, `b` is
     /// row-major `k x n`; both may be empty iff `needs_data()` is
-    /// false.
+    /// false. Plans with a fused bias epilogue additionally consume a
+    /// length-`n` bias vector via [`SimBackend::run_fused`]; this
+    /// convenience passes an empty one.
     fn run(
         &self,
         prep: &PreparedGemm,
         a: &[f64],
         b: &[f64],
+    ) -> anyhow::Result<GemmResult> {
+        self.run_fused(prep, a, b, &[])
+    }
+
+    /// Evaluate one prepared GEMM with its fused-epilogue operands.
+    fn run_fused(
+        &self,
+        prep: &PreparedGemm,
+        a: &[f64],
+        b: &[f64],
+        bias: &[f64],
     ) -> anyhow::Result<GemmResult>;
 }
 

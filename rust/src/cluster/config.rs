@@ -95,9 +95,12 @@ pub struct ClusterConfig {
 
 impl ClusterConfig {
     /// Total request ports on the core side of the interconnect:
-    /// (3 SSR + 1 LSU) per compute core + 1 LSU for the DM core.
+    /// (4 SSR + 1 LSU) per compute core, plus a full 5-port slot for
+    /// the DM core (its SSR ports stay idle; its LSU sits at the
+    /// slot's last port, matching the cluster's `base_port = core*5`
+    /// numbering).
     pub fn n_ports(&self) -> usize {
-        self.n_compute * 4 + 4
+        (self.n_compute + 1) * 5
     }
 
     /// Custom core parameters (used by ablation studies).

@@ -156,8 +156,8 @@ impl Cluster {
         self.reqs.clear();
         self.owners.clear();
         for (ci, c) in self.cores.iter().enumerate() {
-            let base_port = (ci * 4) as u16;
-            for s in 0..3u8 {
+            let base_port = (ci * 5) as u16;
+            for s in 0..4u8 {
                 let str_ = &c.ssrs[s as usize];
                 match str_.mode {
                     // Read prefetch is gated on the SSR-enable CSR:
@@ -201,7 +201,7 @@ impl Cluster {
                     "LSU outside TCDM unsupported: {addr:#x}"
                 );
                 self.reqs.push(PortRequest {
-                    port: base_port + 3,
+                    port: base_port + 4,
                     addr,
                     write,
                     data,

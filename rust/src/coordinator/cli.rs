@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run       — one GEMM on one configuration, print metrics
+//!   net       — a multi-layer zoo network through the DAG scheduler
 //!   sweep     — the full {8..128}^3 grid through a chosen backend
 //!   calibrate — fit the analytic model vs cycle-accurate ground truth
 //!   fig5      — the random-size sweep (box plots + CSV + headline)
@@ -12,16 +13,18 @@
 //!   validate  — simulator vs PJRT golden model (needs --features xla)
 //!   seqdemo   — FREP sequencer demo trace
 //!
-//! `run`, `sweep`, and `fig5` accept `--backend {cycle,analytic}`:
-//! `cycle` steps the full machine model, `analytic` evaluates the
-//! calibrated first-order model (~1000x faster, no numerics).
+//! `run`, `net`, `sweep`, and `fig5` accept `--backend
+//! {cycle,analytic}`: `cycle` steps the full machine model, `analytic`
+//! evaluates the calibrated first-order model (~1000x faster, no
+//! numerics).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 
 use crate::backend::BackendKind;
 use crate::cluster::ConfigId;
-use crate::coordinator::{experiments, report, runner, workload};
+use crate::coordinator::workload::zoo;
+use crate::coordinator::{experiments, net, report, runner, workload};
 use crate::kernels::{GemmService, LayoutKind};
 
 pub fn usage() -> &'static str {
@@ -32,6 +35,9 @@ pub fn usage() -> &'static str {
      COMMANDS:\n\
      \x20 run       --config <name> --m <M> --n <N> --k <K> \
      [--layout grouped|linear|linear-pad] [--backend cycle|analytic]\n\
+     \x20 net       --model mlp|ffn|qkv|attn|conv|llm \
+     [--config <name>] [--backend cycle|analytic] [--threads N] \
+     [--seed S] [--out results]\n\
      \x20 sweep     [--backend analytic|cycle] [--config <name>|all] \
      [--threads N] [--out results]\n\
      \x20 calibrate [--threads N] [--out results]\n\
@@ -164,6 +170,50 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                 } else {
                     ""
                 },
+            );
+        }
+        "net" => {
+            let model = flags
+                .get("model")
+                .cloned()
+                .unwrap_or_else(|| "ffn".into());
+            let name = flags
+                .get("config")
+                .cloned()
+                .unwrap_or_else(|| "zonl48db".into());
+            let id = ConfigId::from_name(&name)
+                .ok_or_else(|| anyhow::anyhow!("unknown config {name}"))?;
+            let backend = backend_of(&flags, BackendKind::Cycle)?;
+            let threads =
+                flag(&flags, "threads", runner::default_threads())?;
+            let seed = flag(&flags, "seed", 2026u64)?;
+            let g = zoo::build(&model)?;
+            eprintln!(
+                "net: `{model}` ({} ops, {} MACs) on {} via `{}` on \
+                 {threads} threads...",
+                g.ops.len(),
+                g.macs(),
+                id.name(),
+                backend.name(),
+            );
+            let svc = GemmService::of_kind(backend);
+            let run = net::run_net(
+                &svc,
+                &g,
+                id,
+                LayoutKind::Grouped,
+                threads,
+                seed,
+            )?;
+            let doc = report::render_net(&run.report);
+            println!("{doc}");
+            let stem = format!("net-{model}-{}", backend.name());
+            report::save(&out_dir, &format!("{stem}.md"), &doc)?;
+            report::net_csv(&run.report)
+                .write(&out_dir.join(format!("{stem}.csv")))?;
+            eprintln!(
+                "wrote {}/{stem}.{{md,csv}}",
+                out_dir.display()
             );
         }
         "sweep" => {
@@ -438,6 +488,38 @@ mod tests {
     #[test]
     fn unknown_command_errors() {
         assert!(main_with_args(vec!["bogus".into()]).is_err());
+    }
+
+    #[test]
+    fn net_command_runs_both_backends() {
+        let dir = std::env::temp_dir().join("zerostall-net-cli-test");
+        for backend in ["analytic", "cycle"] {
+            main_with_args(vec![
+                "net".into(),
+                "--model".into(),
+                "ffn".into(),
+                "--backend".into(),
+                backend.into(),
+                "--threads".into(),
+                "2".into(),
+                "--out".into(),
+                dir.display().to_string(),
+            ])
+            .unwrap();
+        }
+        assert!(dir.join("net-ffn-cycle.csv").exists());
+        assert!(dir.join("net-ffn-analytic.md").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn net_command_rejects_unknown_model() {
+        assert!(main_with_args(vec![
+            "net".into(),
+            "--model".into(),
+            "resnet9000".into(),
+        ])
+        .is_err());
     }
 
     #[test]

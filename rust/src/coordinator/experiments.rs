@@ -7,7 +7,10 @@
 
 use crate::backend::{fit_calibration, CalSample, Calibration};
 use crate::cluster::ConfigId;
-use crate::kernels::{test_matrices, GemmJob, GemmResult, GemmService, LayoutKind};
+use crate::kernels::{
+    test_matrices, Activation, Epilogue, GemmJob, GemmResult,
+    GemmService, LayoutKind,
+};
 use crate::model::{self, area::AreaBreakdown};
 use crate::opengemm;
 use crate::util::stats::{box_stats, BoxStats};
@@ -230,12 +233,38 @@ pub fn calibrate_on(
                 LayoutKind::Grouped,
             ));
         }
+        // Fused-epilogue samples so the fit resolves epsilon (the
+        // per-element epilogue issue cost) alongside alpha/beta/gamma.
+        for (p, epi) in grid.iter().zip(
+            [
+                Epilogue { bias: true, act: Some(Activation::Relu) },
+                Epilogue { bias: true, act: Some(Activation::Gelu) },
+            ]
+            .iter()
+            .cycle(),
+        ) {
+            jobs.push(GemmJob::fused(
+                id,
+                p.m,
+                p.n,
+                p.k,
+                LayoutKind::Grouped,
+                *epi,
+            ));
+        }
     }
     let measured = svc.run_batch(&jobs, threads)?;
     let samples: Vec<CalSample> =
         measured.iter().map(CalSample::from_result).collect();
     let calibration = fit_calibration(&samples);
-    let errors = error_table(&calibration, &measured);
+    // The error table reports the plain-GEMM points (the paper's
+    // evaluation space); fused accuracy is covered by the NetGraph
+    // tests and the `net` report.
+    let plain: Vec<GemmResult> = measured
+        .into_iter()
+        .filter(|r| r.plan.epi.is_none())
+        .collect();
+    let errors = error_table(&calibration, &plain);
     Ok(CalibrationOutcome { calibration, errors })
 }
 

@@ -1,8 +1,10 @@
-//! Experiment orchestration: workload sampling, the multi-threaded
-//! sweep runner, report rendering, and the CLI.
+//! Experiment orchestration: workload sampling, the NetGraph DAG
+//! runner, the multi-threaded sweep runner, report rendering, and the
+//! CLI.
 
 pub mod cli;
 pub mod experiments;
+pub mod net;
 pub mod report;
 pub mod runner;
 pub mod workload;

@@ -262,15 +262,17 @@ pub fn render_calibration(cal: &Calibration) -> String {
     out.push_str("## Analytic-model calibration constants\n\n");
     out.push_str(
         "| config | alpha (cyc/pass) | beta (cyc/outer-iter) | gamma \
-         (cyc/contested beat) |\n|---|---|---|---|\n",
+         (cyc/contested beat) | epsilon (cyc/epilogue op) |\n\
+         |---|---|---|---|---|\n",
     );
     for (id, c) in cal.entries() {
         out.push_str(&format!(
-            "| {} | {} | {} | {} |\n",
+            "| {} | {} | {} | {} | {} |\n",
             id.name(),
             f(c.alpha, 2),
             f(c.beta, 2),
             f(c.gamma, 3),
+            f(c.epsilon, 3),
         ));
     }
     out
@@ -314,6 +316,104 @@ pub fn error_csv(rows: &[ErrorRow]) -> Csv {
             f(r.max_util_err, 5),
             f(r.mean_window_err, 5),
             f(r.max_window_err, 5),
+        ]);
+    }
+    c
+}
+
+// -------------------------------------------------------- NetGraph --
+
+pub fn render_net(r: &crate::coordinator::net::NetReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "## Network `{}` on {} via the `{}` backend\n\n",
+        r.model,
+        r.config.name(),
+        r.backend.name(),
+    ));
+    out.push_str(
+        "| layer | kind | shape | epilogue | cycles | window | util | \
+         power [mW] | energy [uJ] | fused elems | extra TCDM trips |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|\n",
+    );
+    for l in &r.layers {
+        let shape = match &l.problem {
+            Some(p) => p.to_string(),
+            None => "-".to_string(),
+        };
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {:.1}% | {} | {} | {} | \
+             {} |\n",
+            l.name,
+            l.kind,
+            shape,
+            l.epilogue,
+            l.cycles,
+            l.window_cycles,
+            l.utilization * 100.0,
+            f(l.power_mw, 1),
+            f(l.energy_uj, 2),
+            l.fused_elems,
+            l.extra_roundtrips,
+        ));
+    }
+    out.push_str(&format!(
+        "\n* end-to-end: {} cycles, {} uJ, {:.1}% utilization over \
+         {} MACs\n\
+         * fused epilogue elements: {} (TCDM round-trips avoided); \
+         extra round-trips from unfused ops: {}\n\
+         * peak live tensor bytes: {} | plan cache: {} hits / {} \
+         misses\n",
+        r.total_cycles,
+        f(r.total_energy_uj, 2),
+        r.utilization * 100.0,
+        r.total_macs,
+        r.fused_elems,
+        r.extra_roundtrips,
+        r.peak_live_bytes,
+        r.plan_stats.plan_hits,
+        r.plan_stats.plan_misses,
+    ));
+    out
+}
+
+pub fn net_csv(r: &crate::coordinator::net::NetReport) -> Csv {
+    let mut c = Csv::new(vec![
+        "layer",
+        "kind",
+        "m",
+        "n",
+        "k",
+        "epilogue",
+        "cycles",
+        "window_cycles",
+        "utilization",
+        "power_mw",
+        "energy_uj",
+        "fused_elems",
+        "extra_roundtrips",
+    ]);
+    for l in &r.layers {
+        let (m, n, k) = match &l.problem {
+            Some(p) => {
+                (p.m.to_string(), p.n.to_string(), p.k.to_string())
+            }
+            None => ("".into(), "".into(), "".into()),
+        };
+        c.row(vec![
+            l.name.clone(),
+            l.kind.to_string(),
+            m,
+            n,
+            k,
+            l.epilogue.clone(),
+            l.cycles.to_string(),
+            l.window_cycles.to_string(),
+            f(l.utilization, 5),
+            f(l.power_mw, 2),
+            f(l.energy_uj, 4),
+            l.fused_elems.to_string(),
+            l.extra_roundtrips.to_string(),
         ]);
     }
     c
@@ -391,6 +491,30 @@ mod tests {
     fn fig4_contains_pressure_bars() {
         let s = render_fig4();
         assert!(s.contains("zonl64fc"));
+    }
+
+    #[test]
+    fn net_report_renders() {
+        use crate::coordinator::net::run_net;
+        use crate::coordinator::workload::zoo;
+        use crate::kernels::{GemmService, LayoutKind};
+        let svc = GemmService::analytic();
+        let g = zoo::build("ffn").unwrap();
+        let run = run_net(
+            &svc,
+            &g,
+            ConfigId::Zonl48Db,
+            LayoutKind::Grouped,
+            1,
+            3,
+        )
+        .unwrap();
+        let doc = render_net(&run.report);
+        assert!(doc.contains("mlp_up"));
+        assert!(doc.contains("bias+gelu"));
+        assert!(doc.contains("end-to-end"));
+        let csv = net_csv(&run.report);
+        assert_eq!(csv.rows(), run.report.layers.len());
     }
 
     #[test]

@@ -1,0 +1,404 @@
+//! NetGraph — the multi-layer network IR.
+//!
+//! A [`NetGraph`] is a DAG of named tensors and ops. The op set is the
+//! GEMM-centric slice real ML inference needs on this cluster:
+//!
+//! * [`NetOp::Gemm`] — `out = act(x * w [+ bias])` with the bias add
+//!   and activation *fused into the kernel's writeback pass*
+//!   (`kernels::Epilogue`), so layer outputs never round-trip through
+//!   memory between the matmul and its elementwise tail;
+//! * [`NetOp::Add`] — residual addition of two same-shape tensors
+//!   (the skip connections of transformer blocks). Executed as an
+//!   elementwise pass by the scheduler.
+//!
+//! Shape inference runs at construction: `gemm`/`add` validate operand
+//! shapes immediately and allocate the output tensor, so an assembled
+//! graph is well-formed by construction and `ops` is topologically
+//! sorted (an op can only reference tensors that already exist). The
+//! DAG *scheduler* (`coordinator::net`) still re-derives readiness
+//! from the dependency structure — the property tests shuffle
+//! execution order to prove it.
+
+use anyhow::{ensure, Result};
+
+use crate::kernels::Epilogue;
+
+use super::Problem;
+
+/// Index into [`NetGraph::tensors`].
+pub type TensorId = usize;
+
+/// What produces a tensor's contents.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorKind {
+    /// External activation input (generated per run from the seed).
+    Input,
+    /// Constant parameter (generated once from the seed).
+    Weight,
+    /// Per-column bias vector (constant parameter).
+    Bias,
+    /// Produced by an op.
+    Computed,
+}
+
+/// A named, row-major 2-D tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub kind: TensorKind,
+}
+
+impl Tensor {
+    pub fn elems(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * 8
+    }
+}
+
+/// One network-level operation.
+#[derive(Clone, Debug)]
+pub enum NetOp {
+    /// `out = epi(x * w [+ bias])` with the epilogue fused into the
+    /// GEMM kernels.
+    Gemm {
+        name: String,
+        x: TensorId,
+        w: TensorId,
+        bias: Option<TensorId>,
+        epi: Epilogue,
+        out: TensorId,
+    },
+    /// `out = a + b` (residual add), elementwise.
+    Add { name: String, a: TensorId, b: TensorId, out: TensorId },
+}
+
+impl NetOp {
+    pub fn name(&self) -> &str {
+        match self {
+            NetOp::Gemm { name, .. } | NetOp::Add { name, .. } => name,
+        }
+    }
+
+    pub fn out(&self) -> TensorId {
+        match self {
+            NetOp::Gemm { out, .. } | NetOp::Add { out, .. } => *out,
+        }
+    }
+
+    /// Tensors this op reads.
+    pub fn inputs(&self) -> Vec<TensorId> {
+        match self {
+            NetOp::Gemm { x, w, bias, .. } => {
+                let mut v = vec![*x, *w];
+                if let Some(b) = bias {
+                    v.push(*b);
+                }
+                v
+            }
+            NetOp::Add { a, b, .. } => vec![*a, *b],
+        }
+    }
+}
+
+/// A multi-layer network: tensors + topologically-constructed ops.
+#[derive(Clone, Debug, Default)]
+pub struct NetGraph {
+    pub name: String,
+    pub tensors: Vec<Tensor>,
+    pub ops: Vec<NetOp>,
+}
+
+impl NetGraph {
+    pub fn new(name: &str) -> NetGraph {
+        NetGraph { name: name.to_string(), ..NetGraph::default() }
+    }
+
+    fn push_tensor(
+        &mut self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        kind: TensorKind,
+    ) -> TensorId {
+        self.tensors.push(Tensor {
+            name: name.to_string(),
+            rows,
+            cols,
+            kind,
+        });
+        self.tensors.len() - 1
+    }
+
+    /// Declare an external activation input (`rows x cols`).
+    pub fn input(&mut self, name: &str, rows: usize, cols: usize)
+        -> TensorId {
+        self.push_tensor(name, rows, cols, TensorKind::Input)
+    }
+
+    /// Declare a weight parameter (`rows x cols`, i.e. `k x n`).
+    pub fn weight(&mut self, name: &str, rows: usize, cols: usize)
+        -> TensorId {
+        self.push_tensor(name, rows, cols, TensorKind::Weight)
+    }
+
+    /// Declare a per-column bias vector of length `cols`.
+    pub fn bias(&mut self, name: &str, cols: usize) -> TensorId {
+        self.push_tensor(name, 1, cols, TensorKind::Bias)
+    }
+
+    /// Append `out = act(x * w [+ bias])`. Shape-inferred and
+    /// validated; returns the output tensor.
+    pub fn gemm(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        w: TensorId,
+        bias: Option<TensorId>,
+        act: Option<crate::kernels::Activation>,
+    ) -> Result<TensorId> {
+        let (xt, wt) = (&self.tensors[x], &self.tensors[w]);
+        ensure!(
+            xt.cols == wt.rows,
+            "{name}: inner dims differ ({} vs {})",
+            xt.cols,
+            wt.rows
+        );
+        let (m, n, k) = (xt.rows, wt.cols, xt.cols);
+        crate::kernels::driver::check_dims(m, n, k)?;
+        if let Some(b) = bias {
+            let bt = &self.tensors[b];
+            ensure!(
+                bt.rows == 1 && bt.cols == n,
+                "{name}: bias must be 1x{n}, got {}x{}",
+                bt.rows,
+                bt.cols
+            );
+            ensure!(
+                bt.kind == TensorKind::Bias,
+                "{name}: bias operand must be a bias tensor"
+            );
+        }
+        let epi = Epilogue { bias: bias.is_some(), act };
+        let out =
+            self.push_tensor(&format!("{name}.out"), m, n,
+                             TensorKind::Computed);
+        self.ops.push(NetOp::Gemm {
+            name: name.to_string(),
+            x,
+            w,
+            bias,
+            epi,
+            out,
+        });
+        Ok(out)
+    }
+
+    /// Append `out = a + b` (residual add).
+    pub fn add(&mut self, name: &str, a: TensorId, b: TensorId)
+        -> Result<TensorId> {
+        let (at, bt) = (&self.tensors[a], &self.tensors[b]);
+        ensure!(
+            at.rows == bt.rows && at.cols == bt.cols,
+            "{name}: shape mismatch {}x{} vs {}x{}",
+            at.rows,
+            at.cols,
+            bt.rows,
+            bt.cols
+        );
+        let (rows, cols) = (at.rows, at.cols);
+        let out = self.push_tensor(
+            &format!("{name}.out"),
+            rows,
+            cols,
+            TensorKind::Computed,
+        );
+        self.ops.push(NetOp::Add { name: name.to_string(), a, b, out });
+        Ok(out)
+    }
+
+    /// Tensors computed by some op but consumed by none — the network
+    /// outputs.
+    pub fn outputs(&self) -> Vec<TensorId> {
+        let mut consumed = vec![false; self.tensors.len()];
+        for op in &self.ops {
+            for t in op.inputs() {
+                consumed[t] = true;
+            }
+        }
+        self.ops
+            .iter()
+            .map(|op| op.out())
+            .filter(|&t| !consumed[t])
+            .collect()
+    }
+
+    /// The GEMM shapes of the network, in op order (conversion point
+    /// to the single-GEMM evaluation world).
+    pub fn problems(&self) -> Vec<(String, Problem)> {
+        self.ops
+            .iter()
+            .filter_map(|op| match op {
+                NetOp::Gemm { name, x, w, .. } => {
+                    let (xt, wt) = (&self.tensors[*x], &self.tensors[*w]);
+                    Some((
+                        name.clone(),
+                        Problem { m: xt.rows, n: wt.cols, k: xt.cols },
+                    ))
+                }
+                NetOp::Add { .. } => None,
+            })
+            .collect()
+    }
+
+    /// Total MACs across all GEMM ops.
+    pub fn macs(&self) -> u64 {
+        self.problems().iter().map(|(_, p)| p.macs()).sum()
+    }
+
+    /// The tensor-derived dependency structure: producer op per
+    /// tensor, initial unmet-dependency count per op (counting
+    /// multi-edges), and the dependent-op adjacency (with
+    /// multiplicity). Shared by [`NetGraph::topo_order`] and the
+    /// NetRunner's wave scheduler. Errors on undefined or
+    /// twice-written tensors (cannot happen for builder-constructed
+    /// graphs; guards hand-assembled ones).
+    #[allow(clippy::type_complexity)]
+    pub fn dependency_structure(
+        &self,
+    ) -> Result<(Vec<Option<usize>>, Vec<usize>, Vec<Vec<usize>>)> {
+        let mut producer: Vec<Option<usize>> =
+            vec![None; self.tensors.len()];
+        for (i, op) in self.ops.iter().enumerate() {
+            ensure!(
+                op.out() < self.tensors.len(),
+                "op {i} writes undefined tensor"
+            );
+            ensure!(
+                producer[op.out()].is_none(),
+                "tensor {} written twice",
+                self.tensors[op.out()].name
+            );
+            producer[op.out()] = Some(i);
+        }
+        let mut deps: Vec<usize> = vec![0; self.ops.len()];
+        let mut dependents: Vec<Vec<usize>> =
+            vec![Vec::new(); self.ops.len()];
+        for (i, op) in self.ops.iter().enumerate() {
+            for t in op.inputs() {
+                ensure!(
+                    t < self.tensors.len(),
+                    "op {i} reads undefined tensor"
+                );
+                if let Some(p) = producer[t] {
+                    deps[i] += 1;
+                    dependents[p].push(i);
+                }
+            }
+        }
+        Ok((producer, deps, dependents))
+    }
+
+    /// Kahn topological order over ops (indices into `ops`), derived
+    /// purely from the tensor dependency structure. Errors if the
+    /// graph is cyclic or references undefined tensors.
+    pub fn topo_order(&self) -> Result<Vec<usize>> {
+        let (_, mut deps, dependents) = self.dependency_structure()?;
+        let mut ready: Vec<usize> = (0..self.ops.len())
+            .filter(|&i| deps[i] == 0)
+            .collect();
+        let mut order = Vec::with_capacity(self.ops.len());
+        while let Some(i) = ready.pop() {
+            order.push(i);
+            for &d in &dependents[i] {
+                deps[d] -= 1;
+                if deps[d] == 0 {
+                    ready.push(d);
+                }
+            }
+        }
+        ensure!(
+            order.len() == self.ops.len(),
+            "cycle in network graph ({} of {} ops schedulable)",
+            order.len(),
+            self.ops.len()
+        );
+        Ok(order)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Activation;
+
+    fn tiny() -> NetGraph {
+        let mut g = NetGraph::new("tiny");
+        let x = g.input("x", 16, 32);
+        let w1 = g.weight("w1", 32, 16);
+        let b1 = g.bias("b1", 16);
+        let h = g
+            .gemm("fc1", x, w1, Some(b1), Some(Activation::Relu))
+            .unwrap();
+        let w2 = g.weight("w2", 16, 32);
+        let y = g.gemm("fc2", h, w2, None, None).unwrap();
+        let r = g.add("res", y, x).unwrap();
+        let _ = r;
+        g
+    }
+
+    #[test]
+    fn shapes_infer_and_chain() {
+        let g = tiny();
+        assert_eq!(g.ops.len(), 3);
+        let probs = g.problems();
+        assert_eq!(probs.len(), 2);
+        assert_eq!(probs[0].1, Problem { m: 16, n: 16, k: 32 });
+        assert_eq!(probs[1].1, Problem { m: 16, n: 32, k: 16 });
+        assert_eq!(g.outputs().len(), 1, "single network output");
+        assert_eq!(g.macs(), (16 * 16 * 32 + 16 * 32 * 16) as u64);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut g = NetGraph::new("bad");
+        let x = g.input("x", 16, 32);
+        let w = g.weight("w", 16, 16); // inner dim mismatch
+        assert!(g.gemm("fc", x, w, None, None).is_err());
+        // off-grid dims rejected too
+        let x2 = g.input("x2", 12, 32);
+        let w2 = g.weight("w2", 32, 16);
+        assert!(g.gemm("fc2", x2, w2, None, None).is_err());
+        // bias length must match n
+        let x3 = g.input("x3", 16, 32);
+        let w3 = g.weight("w3", 32, 16);
+        let b = g.bias("b", 8);
+        assert!(g.gemm("fc3", x3, w3, Some(b), None).is_err());
+    }
+
+    #[test]
+    fn topo_order_respects_dependencies() {
+        let g = tiny();
+        let order = g.topo_order().unwrap();
+        assert_eq!(order.len(), 3);
+        let pos =
+            |i: usize| order.iter().position(|&x| x == i).unwrap();
+        // fc2 consumes fc1's output; res consumes fc2's.
+        assert!(pos(0) < pos(1));
+        assert!(pos(1) < pos(2));
+    }
+
+    #[test]
+    fn epilogue_fused_into_gemm_op() {
+        let g = tiny();
+        let NetOp::Gemm { epi, .. } = &g.ops[0] else {
+            panic!("first op is a gemm");
+        };
+        assert!(epi.bias);
+        assert_eq!(epi.act, Some(Activation::Relu));
+    }
+}

@@ -1,6 +1,13 @@
 //! Workload generation — the paper's evaluation methodology (§IV-B):
 //! 50 problem sizes with M, N, K drawn uniformly from
-//! {8, 16, 24, ..., 128}.
+//! {8, 16, 24, ..., 128} — plus the network-level workload layer:
+//! [`graph`] (the NetGraph multi-layer IR) and [`zoo`] (ready-made
+//! models: MLP, transformer FFN / QKV blocks, conv-as-GEMM).
+
+pub mod graph;
+pub mod zoo;
+
+pub use graph::{NetGraph, NetOp, Tensor, TensorId};
 
 use crate::util::rng::Rng;
 
@@ -39,18 +46,6 @@ pub fn sample_problems(count: usize, seed: u64) -> Vec<Problem> {
             k: *rng.choice(&grid),
         })
         .collect()
-}
-
-/// LLM-shaped GEMMs (attention/MLP projections of a small transformer,
-/// tiled to the cluster grid) — used by the llm_gemm example.
-pub fn llm_problems() -> Vec<(&'static str, Problem)> {
-    vec![
-        ("qkv_proj", Problem { m: 128, n: 96, k: 64 }),
-        ("attn_out", Problem { m: 128, n: 64, k: 64 }),
-        ("mlp_up", Problem { m: 128, n: 128, k: 64 }),
-        ("mlp_down", Problem { m: 128, n: 64, k: 128 }),
-        ("head", Problem { m: 64, n: 128, k: 64 }),
-    ]
 }
 
 #[cfg(test)]

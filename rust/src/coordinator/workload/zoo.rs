@@ -1,0 +1,220 @@
+//! Model zoo — ready-made [`NetGraph`]s for the workloads the paper's
+//! introduction motivates, replacing the old hard-coded
+//! `llm_problems()` list.
+//!
+//! All dimensions are multiples of 8 (the cluster's evaluation grid).
+//! Attention score/context products (`softmax(QK^T)V`) are not GEMM
+//! ops in this IR; transformer blocks model the *projection* GEMMs
+//! (QKV, attention output, MLP) and take the attention-weighted values
+//! as a second external input.
+
+use anyhow::{bail, Result};
+
+use crate::kernels::Activation;
+
+use super::graph::NetGraph;
+use super::Problem;
+
+/// Names accepted by [`build`].
+pub fn models() -> [&'static str; 6] {
+    ["mlp", "ffn", "qkv", "attn", "conv", "llm"]
+}
+
+/// Build a zoo model by name with its canonical dimensions.
+pub fn build(name: &str) -> Result<NetGraph> {
+    Ok(match name {
+        "mlp" => mlp(32, &[64, 128, 64, 32])?,
+        "ffn" => transformer_ffn(64, 64, 128)?,
+        "qkv" => qkv_projection(64, 64)?,
+        "attn" => attention_block(64, 64)?,
+        "conv" => conv3x3(16, 16, 8, 32)?,
+        "llm" => transformer_layer()?,
+        other => bail!(
+            "unknown model `{other}` (choose from {})",
+            models().join("|")
+        ),
+    })
+}
+
+/// Fully-connected MLP: `dims[0] -> dims[1] -> ...`, bias + ReLU on
+/// every layer except the last (bias only).
+pub fn mlp(batch: usize, dims: &[usize]) -> Result<NetGraph> {
+    anyhow::ensure!(dims.len() >= 2, "mlp needs at least one layer");
+    let mut g = NetGraph::new("mlp");
+    let mut x = g.input("x", batch, dims[0]);
+    for (i, win) in dims.windows(2).enumerate() {
+        let last = i + 2 == dims.len();
+        let w = g.weight(&format!("w{i}"), win[0], win[1]);
+        let b = g.bias(&format!("b{i}"), win[1]);
+        let act = if last { None } else { Some(Activation::Relu) };
+        x = g.gemm(&format!("fc{i}"), x, w, Some(b), act)?;
+    }
+    Ok(g)
+}
+
+/// Transformer feed-forward block: up-projection with fused bias+GeLU,
+/// down-projection with fused bias, residual add.
+pub fn transformer_ffn(
+    tokens: usize,
+    d_model: usize,
+    d_ff: usize,
+) -> Result<NetGraph> {
+    let mut g = NetGraph::new("ffn");
+    let x = g.input("x", tokens, d_model);
+    let w1 = g.weight("w_up", d_model, d_ff);
+    let b1 = g.bias("b_up", d_ff);
+    let h = g.gemm("mlp_up", x, w1, Some(b1), Some(Activation::Gelu))?;
+    let w2 = g.weight("w_down", d_ff, d_model);
+    let b2 = g.bias("b_down", d_model);
+    let y = g.gemm("mlp_down", h, w2, Some(b2), None)?;
+    g.add("residual", y, x)?;
+    Ok(g)
+}
+
+/// Fused QKV projection: one `d_model x 3*d_model` GEMM.
+pub fn qkv_projection(tokens: usize, d_model: usize) -> Result<NetGraph> {
+    let mut g = NetGraph::new("qkv");
+    let x = g.input("x", tokens, d_model);
+    let w = g.weight("w_qkv", d_model, 3 * d_model);
+    let b = g.bias("b_qkv", 3 * d_model);
+    g.gemm("qkv_proj", x, w, Some(b), None)?;
+    Ok(g)
+}
+
+/// Attention projection block: QKV projection + output projection of
+/// the attention-weighted values (external input) + residual.
+pub fn attention_block(tokens: usize, d_model: usize) -> Result<NetGraph> {
+    let mut g = NetGraph::new("attn");
+    let x = g.input("x", tokens, d_model);
+    let wq = g.weight("w_qkv", d_model, 3 * d_model);
+    let bq = g.bias("b_qkv", 3 * d_model);
+    g.gemm("qkv_proj", x, wq, Some(bq), None)?;
+    // softmax(QK^T)V happens outside the GEMM IR
+    let av = g.input("attn_values", tokens, d_model);
+    let wo = g.weight("w_out", d_model, d_model);
+    let bo = g.bias("b_out", d_model);
+    let o = g.gemm("attn_out", av, wo, Some(bo), None)?;
+    g.add("residual", o, x)?;
+    Ok(g)
+}
+
+/// Dimensions of a conv layer lowered to GEMM via im2col: each output
+/// pixel's receptive field becomes a row of the `M x K` patch matrix
+/// (`M = out_h*out_w`, `K = kh*kw*cin`), the filter bank the `K x N`
+/// weight (`N = cout`). Dims round up to the cluster's 8-grid.
+pub fn conv_as_gemm_dims(
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    kh: usize,
+    kw: usize,
+) -> Problem {
+    let r8 = |x: usize| x.div_ceil(8) * 8;
+    Problem {
+        m: r8(h * w), // same-padded output map
+        k: r8(kh * kw * cin),
+        n: r8(cout),
+    }
+}
+
+/// 3x3 same-padded conv + bias + ReLU as an im2col GEMM.
+pub fn conv3x3(
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+) -> Result<NetGraph> {
+    let p = conv_as_gemm_dims(h, w, cin, cout, 3, 3);
+    let mut g = NetGraph::new("conv");
+    let x = g.input("im2col_patches", p.m, p.k);
+    let wt = g.weight("filters", p.k, p.n);
+    let b = g.bias("b", p.n);
+    g.gemm("conv3x3", x, wt, Some(b), Some(Activation::Relu))?;
+    Ok(g)
+}
+
+/// One full transformer layer's projection GEMMs — the model the old
+/// `llm_problems()` list approximated (same shapes, now with real
+/// dataflow, fused epilogues, and residuals): 128 tokens, d_model 64,
+/// 3x32 QKV heads, d_ff 128.
+pub fn transformer_layer() -> Result<NetGraph> {
+    let (tokens, d_model, d_qkv, d_ff) = (128, 64, 96, 128);
+    let mut g = NetGraph::new("llm");
+    let x = g.input("x", tokens, d_model);
+    let wq = g.weight("w_qkv", d_model, d_qkv);
+    let bq = g.bias("b_qkv", d_qkv);
+    g.gemm("qkv_proj", x, wq, Some(bq), None)?;
+    let av = g.input("attn_values", tokens, d_model);
+    let wo = g.weight("w_out", d_model, d_model);
+    let bo = g.bias("b_out", d_model);
+    let o = g.gemm("attn_out", av, wo, Some(bo), None)?;
+    let h = g.add("attn_residual", o, x)?;
+    let w1 = g.weight("w_up", d_model, d_ff);
+    let b1 = g.bias("b_up", d_ff);
+    let up = g.gemm("mlp_up", h, w1, Some(b1), Some(Activation::Gelu))?;
+    let w2 = g.weight("w_down", d_ff, d_model);
+    let b2 = g.bias("b_down", d_model);
+    let down = g.gemm("mlp_down", up, w2, Some(b2), None)?;
+    g.add("mlp_residual", down, h)?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_zoo_models_build_and_validate() {
+        for name in models() {
+            let g = build(name).unwrap();
+            assert!(!g.ops.is_empty(), "{name}: empty graph");
+            assert!(!g.problems().is_empty(), "{name}: no GEMMs");
+            g.topo_order().unwrap();
+            for (_, p) in g.problems() {
+                assert!(p.m % 8 == 0 && p.n % 8 == 0 && p.k % 8 == 0);
+            }
+        }
+        assert!(build("bogus").is_err());
+    }
+
+    #[test]
+    fn llm_model_matches_historic_projection_shapes() {
+        // The shapes the old hard-coded llm_problems() list carried.
+        let g = transformer_layer().unwrap();
+        let probs = g.problems();
+        let get = |n: &str| {
+            probs.iter().find(|(name, _)| name == n).unwrap().1
+        };
+        assert_eq!(get("qkv_proj"), Problem { m: 128, n: 96, k: 64 });
+        assert_eq!(get("attn_out"), Problem { m: 128, n: 64, k: 64 });
+        assert_eq!(get("mlp_up"), Problem { m: 128, n: 128, k: 64 });
+        assert_eq!(get("mlp_down"), Problem { m: 128, n: 64, k: 128 });
+    }
+
+    #[test]
+    fn conv_lowering_rounds_to_grid() {
+        let p = conv_as_gemm_dims(16, 16, 8, 32, 3, 3);
+        assert_eq!(p.m, 256);
+        assert_eq!(p.k, 72); // 3*3*8 = 72, already on-grid
+        assert_eq!(p.n, 32);
+        let p2 = conv_as_gemm_dims(5, 5, 3, 10, 3, 3);
+        assert_eq!(p2.m, 32); // 25 -> 32
+        assert_eq!(p2.k, 32); // 27 -> 32
+        assert_eq!(p2.n, 16); // 10 -> 16
+    }
+
+    #[test]
+    fn ffn_fuses_everything() {
+        let g = transformer_ffn(64, 64, 128).unwrap();
+        use crate::coordinator::workload::NetOp;
+        let fused = g
+            .ops
+            .iter()
+            .filter(|op| {
+                matches!(op, NetOp::Gemm { epi, .. } if !epi.is_none())
+            })
+            .count();
+        assert_eq!(fused, 2, "both projections carry fused epilogues");
+    }
+}

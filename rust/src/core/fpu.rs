@@ -119,8 +119,14 @@ impl Fpu {
             Instr::FsubD { frd, frs1, frs2 } => {
                 (frd, rd(0, frs1) - rd(1, frs2))
             }
+            Instr::FmaxD { frd, frs1, frs2 } => {
+                (frd, rd(0, frs1).max(rd(1, frs2)))
+            }
             Instr::FsgnjD { frd, frs1, frs2 } => {
                 (frd, rd(0, frs1).copysign(rd(1, frs2)))
+            }
+            Instr::FgeluD { frd, frs1 } => {
+                (frd, crate::isa::gelu(rd(0, frs1)))
             }
             ref other => panic!("not an FPU compute op: {other:?}"),
         };

@@ -125,7 +125,8 @@ pub struct Core {
     pub iregs: [u32; 32],
     pub fpu: Fpu,
     pub seq: Sequencer,
-    pub ssrs: [Streamer; 3],
+    /// ft0/ft1 reads, ft2 write, ft3 epilogue-bias read.
+    pub ssrs: [Streamer; 4],
     pub ssr_enable: bool,
     state: State,
     bubbles: u32,
@@ -154,7 +155,12 @@ impl Core {
             iregs: [0; 32],
             fpu: Fpu::new(cfg.fpu),
             seq: Sequencer::new(cfg.seq),
-            ssrs: [Streamer::new(), Streamer::new(), Streamer::new()],
+            ssrs: [
+                Streamer::new(),
+                Streamer::new(),
+                Streamer::new(),
+                Streamer::new(),
+            ],
             ssr_enable: false,
             state: State::Running,
             bubbles: 0,
@@ -196,13 +202,13 @@ impl Core {
 
     fn ssr_read(&self, r: u8) -> bool {
         self.ssr_enable
-            && (r as usize) < 3
+            && (r as usize) < 4
             && self.ssrs[r as usize].mode == SsrMode::Read
     }
 
     fn ssr_write(&self, r: u8) -> bool {
         self.ssr_enable
-            && (r as usize) < 3
+            && (r as usize) < 4
             && self.ssrs[r as usize].mode == SsrMode::Write
     }
 
@@ -662,7 +668,9 @@ impl Core {
             | Instr::FmulD { .. }
             | Instr::FaddD { .. }
             | Instr::FsubD { .. }
-            | Instr::FsgnjD { .. } => unreachable!("handled above"),
+            | Instr::FmaxD { .. }
+            | Instr::FsgnjD { .. }
+            | Instr::FgeluD { .. } => unreachable!("handled above"),
         }
         self.perf.int_instrs += 1;
         self.perf.icache_fetches += 1;

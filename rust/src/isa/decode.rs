@@ -124,8 +124,14 @@ pub fn decode(w: u32) -> Option<Instr> {
             0b0000001 => FaddD { frd: rd(w), frs1: rs1(w), frs2: rs2(w) },
             0b0000101 => FsubD { frd: rd(w), frs1: rs1(w), frs2: rs2(w) },
             0b0001001 => FmulD { frd: rd(w), frs1: rs1(w), frs2: rs2(w) },
+            0b0010101 if f3(w) == 0b001 => {
+                FmaxD { frd: rd(w), frs1: rs1(w), frs2: rs2(w) }
+            }
             0b0010001 if f3(w) == 0 => {
                 FsgnjD { frd: rd(w), frs1: rs1(w), frs2: rs2(w) }
+            }
+            0b1111111 if f3(w) == 0b001 && rs2(w) == 0 => {
+                FgeluD { frd: rd(w), frs1: rs1(w) }
             }
             0b1101001 if rs2(w) == 0 => FcvtDW { frd: rd(w), rs1: rs1(w) },
             _ => return None,
@@ -216,6 +222,8 @@ mod tests {
         roundtrip(Instr::FmulD { frd: 11, frs1: 0, frs2: 1 });
         roundtrip(Instr::FaddD { frd: 12, frs1: 13, frs2: 14 });
         roundtrip(Instr::FsubD { frd: 12, frs1: 13, frs2: 14 });
+        roundtrip(Instr::FmaxD { frd: 2, frs1: 18, frs2: 9 });
+        roundtrip(Instr::FgeluD { frd: 2, frs1: 10 });
         roundtrip(Instr::FsgnjD { frd: 15, frs1: 16, frs2: 16 });
         roundtrip(Instr::FcvtDW { frd: 17, rs1: 9 });
     }

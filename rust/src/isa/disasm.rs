@@ -59,6 +59,12 @@ pub fn disasm(i: &Instr) -> String {
         FsubD { frd, frs1, frs2 } => {
             format!("fsub.d {}, {}, {}", f(frd), f(frs1), f(frs2))
         }
+        FmaxD { frd, frs1, frs2 } => {
+            format!("fmax.d {}, {}, {}", f(frd), f(frs1), f(frs2))
+        }
+        FgeluD { frd, frs1 } => {
+            format!("fgelu.d {}, {}", f(frd), f(frs1))
+        }
         FsgnjD { frd, frs1, frs2 } if frs1 == frs2 => {
             format!("fmv.d {}, {}", f(frd), f(frs1))
         }

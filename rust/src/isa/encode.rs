@@ -153,8 +153,17 @@ pub fn encode(i: &Instr) -> u32 {
         FsubD { frd, frs1, frs2 } => {
             r_type(0b0000101, frs2, frs1, 0b111, frd, OP_FP)
         }
+        FmaxD { frd, frs1, frs2 } => {
+            r_type(0b0010101, frs2, frs1, 0b001, frd, OP_FP)
+        }
         FsgnjD { frd, frs1, frs2 } => {
             r_type(0b0010001, frs2, frs1, 0b000, frd, OP_FP)
+        }
+        // Activation-unit extension (deviation: upstream Snitch has no
+        // GeLU op; we claim the reserved funct7=0b1111111/funct3=001
+        // point of the OP-FP space for the fused-epilogue unit).
+        FgeluD { frd, frs1 } => {
+            r_type(0b1111111, 0, frs1, 0b001, frd, OP_FP)
         }
         FcvtDW { frd, rs1 } => {
             r_type(0b1101001, 0, rs1, 0b000, frd, OP_FP)

@@ -33,10 +33,14 @@ pub mod reg {
     pub const A3: u8 = 13;
     pub const A4: u8 = 14;
     pub const A5: u8 = 15;
-    // FP: ft0-ft2 are the SSR-mapped streams.
+    // FP: ft0-ft3 are the SSR-mapped streams.
     pub const FT0: u8 = 0;
     pub const FT1: u8 = 1;
     pub const FT2: u8 = 2;
+    /// ft3: the 4th SSR stream — the fused-epilogue bias operand.
+    pub const FT3: u8 = 3;
+    /// f9: holds 0.0 for the ReLU writeback row (`fmax.d ft2, x, f9`).
+    pub const FZERO: u8 = 9;
     /// fa0..: accumulator registers used by the matmul kernels (c0..c7
     /// in Fig. 1b of the paper).
     pub const FA0: u8 = 10;
@@ -131,8 +135,15 @@ pub enum Instr {
     FmulD { frd: FReg, frs1: FReg, frs2: FReg },
     FaddD { frd: FReg, frs1: FReg, frs2: FReg },
     FsubD { frd: FReg, frs1: FReg, frs2: FReg },
+    /// fmax.d — the fused-ReLU writeback op (`fmax.d ft2, acc, f9`).
+    FmaxD { frd: FReg, frs1: FReg, frs2: FReg },
     /// fsgnj.d frd, frs1, frs1 == fmv.d
     FsgnjD { frd: FReg, frs1: FReg, frs2: FReg },
+    /// Custom activation-unit op: frd = gelu(frs1) (tanh approximation,
+    /// see [`gelu`]). Real Snitch lowers GeLU to a software sequence;
+    /// we model a single-issue activation FPU extension and document
+    /// the deviation in encode.rs.
+    FgeluD { frd: FReg, frs1: FReg },
     FcvtDW { frd: FReg, rs1: IReg },
     // ---- Snitch FREP (custom-1) ----
     /// Hardware loop: repeat the next `n_inst` FP instructions
@@ -181,7 +192,9 @@ impl Instr {
                 | Instr::FmulD { .. }
                 | Instr::FaddD { .. }
                 | Instr::FsubD { .. }
+                | Instr::FmaxD { .. }
                 | Instr::FsgnjD { .. }
+                | Instr::FgeluD { .. }
         )
     }
 
@@ -213,9 +226,11 @@ impl Instr {
             Instr::FmulD { frs1, frs2, .. }
             | Instr::FaddD { frs1, frs2, .. }
             | Instr::FsubD { frs1, frs2, .. }
+            | Instr::FmaxD { frs1, frs2, .. }
             | Instr::FsgnjD { frs1, frs2, .. } => {
                 [Some(frs1), Some(frs2), None]
             }
+            Instr::FgeluD { frs1, .. } => [Some(frs1), None, None],
             Instr::Fsd { frs2, .. } => [Some(frs2), None, None],
             _ => [None, None, None],
         }
@@ -228,12 +243,23 @@ impl Instr {
             | Instr::FmulD { frd, .. }
             | Instr::FaddD { frd, .. }
             | Instr::FsubD { frd, .. }
+            | Instr::FmaxD { frd, .. }
             | Instr::FsgnjD { frd, .. }
+            | Instr::FgeluD { frd, .. }
             | Instr::Fld { frd, .. }
             | Instr::FcvtDW { frd, .. } => Some(frd),
             _ => None,
         }
     }
+}
+
+/// The GeLU the activation unit (and the host reference) computes: the
+/// tanh approximation `0.5 x (1 + tanh(sqrt(2/pi) (x + 0.044715 x^3)))`.
+/// One shared definition keeps the simulated cluster and the host
+/// oracle bit-identical.
+pub fn gelu(x: f64) -> f64 {
+    const SQRT_2_OVER_PI: f64 = 0.797_884_560_802_865_4;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh())
 }
 
 /// An assembled program: decoded IR plus the raw encodings.
@@ -272,6 +298,26 @@ mod tests {
         let fma = Instr::FmaddD { frd: 10, frs1: 0, frs2: 1, frs3: 10 };
         assert_eq!(fma.fp_sources(), [Some(0), Some(1), Some(10)]);
         assert_eq!(fma.fp_dest(), Some(10));
+    }
+
+    #[test]
+    fn epilogue_ops_classify_as_fp_compute() {
+        let fmax = Instr::FmaxD { frd: 2, frs1: 18, frs2: 9 };
+        assert!(fmax.is_fp_compute());
+        assert_eq!(fmax.fp_sources(), [Some(18), Some(9), None]);
+        assert_eq!(fmax.fp_dest(), Some(2));
+        let fgelu = Instr::FgeluD { frd: 2, frs1: 10 };
+        assert!(fgelu.is_fp_compute());
+        assert_eq!(fgelu.fp_sources(), [Some(10), None, None]);
+        assert_eq!(fgelu.fp_dest(), Some(2));
+    }
+
+    #[test]
+    fn gelu_reference_values() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-5);
+        assert!(gelu(-10.0).abs() < 1e-6, "saturates to 0 for large -x");
+        assert!((gelu(10.0) - 10.0).abs() < 1e-6, "identity for large x");
     }
 
     #[test]

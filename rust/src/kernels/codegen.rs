@@ -15,12 +15,21 @@
 //! The DM core runs the double-buffer schedule: load phase-0 tiles,
 //! then per pass store the previous C tile and load the next A/B tiles
 //! while the compute cores work, meeting them at a cluster barrier.
+//!
+//! **Fused epilogues** (`Epilogue`): a bias epilogue replaces the
+//! peeled `fmul` row with `fmadd acc, a, b, bias` — the bias streams
+//! through the 4th SSR (ft3) and costs zero extra issue slots; an
+//! activation epilogue keeps the last k-iteration in the accumulators
+//! and appends one `fmax.d`/`fgelu.d` writeback row per outer
+//! iteration. The C tile never touches TCDM between GEMM and
+//! elementwise work.
 
 use crate::cluster::ClusterConfig;
 use crate::isa::asm::Asm;
 use crate::isa::{csr, reg, Instr, Program, SsrField};
 use crate::mem::MAIN_MEM_BASE;
 
+use super::epilogue::{Activation, Epilogue};
 use super::layout::BufferMap;
 use super::tiling::Tiling;
 
@@ -35,6 +44,9 @@ pub struct MainLayout {
     pub a: u32,
     pub b: u32,
     pub c: u32,
+    /// Bias vector (`n` words) for fused epilogues; valid address
+    /// either way, only DMA'd when the plan's epilogue has a bias.
+    pub bias: u32,
 }
 
 pub fn main_layout(t: &Tiling) -> MainLayout {
@@ -42,7 +54,8 @@ pub fn main_layout(t: &Tiling) -> MainLayout {
     let a = MAIN_MEM_BASE;
     let b = align(a + (t.m * t.k * 8) as u32);
     let c = align(b + (t.k * t.n * 8) as u32);
-    MainLayout { a, b, c }
+    let bias = align(c + (t.m * t.n * 8) as u32);
+    MainLayout { a, b, c, bias }
 }
 
 /// One li+scfgw pair.
@@ -92,19 +105,46 @@ fn emit_ssr_geometry(a: &mut Asm, t: &Tiling, map: &BufferMap) {
     cfg(a, 2, SsrField::Stride(1), map.c[0].chunk_stride);
     cfg(a, 2, SsrField::Bound(2), im - 1);
     cfg(a, 2, SsrField::Stride(2), 8 * map.c[0].row_stride);
+    // ssr3 = epilogue bias reads: [u (8B), j (chunk), i (re-read)] —
+    // every row of the tile consumes the same nt-word slice.
+    if let Some(bias) = &map.bias {
+        cfg(a, 3, SsrField::Bound(0), u - 1);
+        cfg(a, 3, SsrField::Stride(0), 8);
+        cfg(a, 3, SsrField::Bound(1), jn - 1);
+        cfg(a, 3, SsrField::Stride(1), bias[0].chunk_stride);
+        cfg(a, 3, SsrField::Bound(2), im - 1);
+        cfg(a, 3, SsrField::Stride(2), 0);
+    }
 }
 
-/// The 24-instruction kernel body: peeled fmul row, FREP'd fmadd row,
-/// peeled writeback row.
-fn emit_kernel_body(a: &mut Asm, k: usize, zonl_nest: bool) {
+/// RB-resident FP ops per outer iteration of the fused kernel body.
+pub fn body_ops(epi: Epilogue) -> usize {
+    3 * UNROLL + epi.extra_rows() * UNROLL
+}
+
+/// The kernel body: peeled first row, FREP'd fmadd row, peeled
+/// writeback row — 24 instructions for a plain GEMM, plus one 8-wide
+/// activation row for fused activation epilogues. A fused bias rides
+/// the peeled first row for free (`fmadd acc, a, b, bias` with the
+/// bias streamed through ft3).
+fn emit_kernel_body(a: &mut Asm, k: usize, zonl_nest: bool, epi: Epilogue) {
     debug_assert!(k >= 3, "kernel needs K >= 3 for the peel structure");
-    // first iteration: c_u = a * b  (avoids zeroing the accumulators)
+    // first iteration: c_u = a*b (+ bias) — no accumulator zeroing
     for uu in 0..UNROLL as u8 {
-        a.push(Instr::FmulD {
-            frd: reg::FA0 + uu,
-            frs1: reg::FT0,
-            frs2: reg::FT1,
-        });
+        if epi.bias {
+            a.push(Instr::FmaddD {
+                frd: reg::FA0 + uu,
+                frs1: reg::FT0,
+                frs2: reg::FT1,
+                frs3: reg::FT3,
+            });
+        } else {
+            a.push(Instr::FmulD {
+                frd: reg::FA0 + uu,
+                frs1: reg::FT0,
+                frs2: reg::FT1,
+            });
+        }
     }
     // middle iterations: hardware loop over the 8-instruction body
     a.li(reg::T2, (k - 2 - 1) as u32); // frep iterates value+1 times
@@ -121,14 +161,39 @@ fn emit_kernel_body(a: &mut Asm, k: usize, zonl_nest: bool) {
             frs3: reg::FA0 + uu,
         });
     }
-    // last iteration: results stream to memory through ft2
+    // last iteration: without an activation the results stream to
+    // memory through ft2; with one they stay in the accumulators for
+    // the activation row.
+    let last_dest = |uu: u8| {
+        if epi.act.is_some() {
+            reg::FA0 + uu
+        } else {
+            reg::FT2
+        }
+    };
     for uu in 0..UNROLL as u8 {
         a.push(Instr::FmaddD {
-            frd: reg::FT2,
+            frd: last_dest(uu),
             frs1: reg::FT0,
             frs2: reg::FT1,
             frs3: reg::FA0 + uu,
         });
+    }
+    // activation writeback row: act(acc) streams out through ft2
+    if let Some(act) = epi.act {
+        for uu in 0..UNROLL as u8 {
+            match act {
+                Activation::Relu => a.push(Instr::FmaxD {
+                    frd: reg::FT2,
+                    frs1: reg::FA0 + uu,
+                    frs2: reg::FZERO,
+                }),
+                Activation::Gelu => a.push(Instr::FgeluD {
+                    frd: reg::FT2,
+                    frs1: reg::FA0 + uu,
+                }),
+            }
+        }
     }
 }
 
@@ -138,10 +203,12 @@ pub fn compute_program(
     t: &Tiling,
     map: &BufferMap,
     zonl: bool,
+    epi: Epilogue,
 ) -> Program {
     assert!(core < N_CORES);
     assert_eq!(t.mt % N_CORES, 0, "tile height must cover all 8 cores");
     assert_eq!(t.nt % UNROLL, 0);
+    assert!(!epi.bias || map.bias.is_some(), "bias epilogue needs buffers");
     let mut a = Asm::new();
     let (grid_m, grid_n) = t.grid();
     let outer_iters = (t.mt / N_CORES) * (t.nt / UNROLL);
@@ -150,12 +217,19 @@ pub fn compute_program(
     // shadow of the prologue DMA load — they cost no compute-window
     // cycles (what an optimized kernel does in practice).
     emit_ssr_geometry(&mut a, t, map);
+    if epi.act == Some(Activation::Relu) {
+        // f9 := 0.0 for the fmax.d writeback row.
+        a.push(Instr::FcvtDW { frd: reg::FZERO, rs1: reg::ZERO });
+    }
     let arm = |a: &mut Asm, p: usize| {
         let a_base = map.a[p].base + core as u32 * map.a[p].row_stride;
         let c_base = map.c[p].base + core as u32 * map.c[p].row_stride;
         cfg(a, 0, SsrField::ReadBase(3), a_base);
         cfg(a, 1, SsrField::ReadBase(3), map.b[p].base);
         cfg(a, 2, SsrField::WriteBase(2), c_base);
+        if let Some(bias) = &map.bias {
+            cfg(a, 3, SsrField::ReadBase(2), bias[p].base);
+        }
     };
     arm(&mut a, 0);
     a.push(Instr::Barrier); // b_0: phase-0 tiles ready
@@ -169,15 +243,15 @@ pub fn compute_program(
             a.push(Instr::Frep {
                 outer: true,
                 iters_reg: reg::T1,
-                n_inst: 23, // 24-instruction body
+                n_inst: (body_ops(epi) - 1) as u8,
             });
-            emit_kernel_body(&mut a, t.k, true);
+            emit_kernel_body(&mut a, t.k, true, epi);
         } else {
             // Software outer loop: addi + bne per iteration (§III-A).
             a.li(reg::T1, outer_iters as u32);
             let loop_top = a.label();
             a.bind(loop_top);
-            emit_kernel_body(&mut a, t.k, false);
+            emit_kernel_body(&mut a, t.k, false, epi);
             a.push(Instr::Addi { rd: reg::T1, rs1: reg::T1, imm: -1 });
             a.bne(reg::T1, reg::ZERO, loop_top);
         }
@@ -281,10 +355,27 @@ pub fn dm_program(t: &Tiling, map: &BufferMap, main: &MainLayout) -> Program {
             t.mt as u32,
         );
     };
+    // Fused-bias epilogue: the per-tile nt-word bias slice rides along
+    // with each B tile load (a single chunk row).
+    let load_bias = |a: &mut Asm, jt: usize, p: usize| {
+        if let Some(bias) = &map.bias {
+            emit_dma3(
+                a,
+                main.bias + (jt * t.nt * 8) as u32,
+                bias[p].base,
+                64,
+                (64, bias[p].chunk_stride),
+                (t.nt / 8) as u32,
+                (0, 0),
+                1,
+            );
+        }
+    };
 
     // Prologue: fill phase 0.
     load_a(&mut a, passes[0].0, 0);
     load_b(&mut a, passes[0].1, 0);
+    load_bias(&mut a, passes[0].1, 0);
     emit_dma_wait(&mut a);
     a.push(Instr::Barrier); // b_0
 
@@ -294,6 +385,7 @@ pub fn dm_program(t: &Tiling, map: &BufferMap, main: &MainLayout) -> Program {
             let (nit, njt) = passes[pass + 1];
             load_a(&mut a, nit, (pass + 1) % 2);
             load_b(&mut a, njt, (pass + 1) % 2);
+            load_bias(&mut a, njt, (pass + 1) % 2);
         }
         if pass >= 1 {
             let (pit, pjt) = passes[pass - 1];
@@ -310,15 +402,25 @@ pub fn dm_program(t: &Tiling, map: &BufferMap, main: &MainLayout) -> Program {
     a.assemble()
 }
 
-/// Build all 9 programs (8 compute + DM) for a problem on a config.
+/// Build all 9 programs (8 compute + DM) for a plain GEMM.
 pub fn build_programs(
     cfg: &ClusterConfig,
     t: &Tiling,
     map: &BufferMap,
 ) -> Vec<Program> {
+    build_programs_fused(cfg, t, map, Epilogue::NONE)
+}
+
+/// Build all 9 programs (8 compute + DM) with a fused epilogue.
+pub fn build_programs_fused(
+    cfg: &ClusterConfig,
+    t: &Tiling,
+    map: &BufferMap,
+    epi: Epilogue,
+) -> Vec<Program> {
     let main = main_layout(t);
     let mut progs: Vec<Program> = (0..N_CORES)
-        .map(|c| compute_program(c, t, map, cfg.zonl))
+        .map(|c| compute_program(c, t, map, cfg.zonl, epi))
         .collect();
     progs.push(dm_program(t, map, &main));
     progs
@@ -343,7 +445,7 @@ mod tests {
     #[test]
     fn baseline_kernel_has_software_loop() {
         let (t, map, _) = setup(ConfigId::Base32Fc, 32, 32, 32);
-        let p = compute_program(0, &t, &map, false);
+        let p = compute_program(0, &t, &map, false, Epilogue::NONE);
         let n_bne = p.instrs.iter()
             .filter(|i| matches!(i, Instr::Bne { .. })).count();
         let n_frep = p.instrs.iter()
@@ -355,7 +457,7 @@ mod tests {
     #[test]
     fn zonl_kernel_has_no_branches() {
         let (t, map, _) = setup(ConfigId::Zonl48Db, 32, 32, 32);
-        let p = compute_program(0, &t, &map, true);
+        let p = compute_program(0, &t, &map, true, Epilogue::NONE);
         assert!(!p.instrs.iter().any(|i| matches!(
             i,
             Instr::Bne { .. } | Instr::Beq { .. } | Instr::Blt { .. }
@@ -368,10 +470,62 @@ mod tests {
     #[test]
     fn fp_op_count_matches_tile_math() {
         let (t, map, _) = setup(ConfigId::Base32Fc, 32, 32, 32);
-        let p = compute_program(0, &t, &map, false);
+        let p = compute_program(0, &t, &map, false, Epilogue::NONE);
         // static FP compute instrs per pass: 24 (peel+body+wb)
         let fp = p.instrs.iter().filter(|i| i.is_fp_compute()).count();
         assert_eq!(fp, 24 * t.passes());
+    }
+
+    #[test]
+    fn fused_bias_costs_no_extra_ops() {
+        use crate::kernels::epilogue::{Activation, Epilogue};
+        let cfg = ConfigId::Zonl48Db.cluster_config();
+        let t = choose_tiling(32, 32, 32, cfg.tcdm_bytes).unwrap();
+        let epi = Epilogue { bias: true, act: None };
+        let map = crate::kernels::layout::plan_buffers_fused(
+            &t,
+            cfg.topology,
+            cfg.tcdm_bytes,
+            crate::kernels::LayoutKind::Grouped,
+            epi,
+        );
+        assert_eq!(body_ops(epi), 24, "bias rides the peeled row");
+        let p = compute_program(0, &t, &map, true, epi);
+        // the peeled row became fmadd-from-ft3: no fmul remains
+        assert!(!p.instrs.iter().any(|i| matches!(i, Instr::FmulD { .. })));
+        let uses_ft3 = p.instrs.iter().any(|i| {
+            matches!(i, Instr::FmaddD { frs3: 3, .. })
+        });
+        assert!(uses_ft3, "bias streams through ft3");
+        // activation adds exactly one 8-wide row
+        let epi2 = Epilogue { bias: true, act: Some(Activation::Relu) };
+        assert_eq!(body_ops(epi2), 32);
+        let p2 = compute_program(0, &t, &map, true, epi2);
+        let n_fmax = p2.instrs.iter()
+            .filter(|i| matches!(i, Instr::FmaxD { .. })).count();
+        assert_eq!(n_fmax, 8 * t.passes());
+    }
+
+    #[test]
+    fn fused_dm_program_loads_bias_per_pass() {
+        use crate::kernels::epilogue::Epilogue;
+        let cfg = ConfigId::Zonl48Db.cluster_config();
+        let t = choose_tiling(64, 64, 64, cfg.tcdm_bytes).unwrap();
+        let epi = Epilogue { bias: true, act: None };
+        let map = crate::kernels::layout::plan_buffers_fused(
+            &t,
+            cfg.topology,
+            cfg.tcdm_bytes,
+            crate::kernels::LayoutKind::Grouped,
+            epi,
+        );
+        let main = main_layout(&t);
+        let p = dm_program(&t, &map, &main);
+        let n_cpy = p.instrs.iter()
+            .filter(|i| matches!(i, Instr::Dmcpy { .. })).count();
+        let passes = t.passes();
+        // loads: 3 per pass (A, B, bias), stores: 1 per pass.
+        assert_eq!(n_cpy, 3 * passes + passes);
     }
 
     #[test]

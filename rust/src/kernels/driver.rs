@@ -1,22 +1,21 @@
 //! End-to-end matmul driver: the public "run a GEMM on a cluster" API.
 //!
-//! Plans the tiling and buffers, generates the 9 programs, and hands
-//! the prepared GEMM to the cycle-accurate backend — the exact flow a
-//! real Snitch-cluster deployment uses (host writes DRAM, cluster
-//! computes, host reads DRAM). The run-to-completion loop itself lives
-//! in `backend::cycle`; batched / multi-backend evaluation goes
-//! through `kernels::service::GemmService`.
-
-use std::sync::Arc;
+//! Plans the tiling and buffers; execution funnels through
+//! `kernels::service::GemmService` (one-shot helpers build a throwaway
+//! cycle-accurate service), so every run path shares the same
+//! plan-and-prepare pipeline. The run-to-completion loop itself lives
+//! in `backend::cycle`; batched / multi-backend evaluation uses a
+//! long-lived `GemmService` directly.
 
 use anyhow::{Context, Result};
 
-use crate::backend::{CycleAccurate, PreparedGemm, SimBackend};
 use crate::cluster::{ClusterConfig, ClusterPerf, ConfigId};
 
-use super::codegen::{build_programs, main_layout, MainLayout, UNROLL};
-use super::layout::{plan_buffers, BufferMap, LayoutKind};
-use super::tiling::{choose_tiling, Tiling};
+use super::codegen::{main_layout, MainLayout, UNROLL};
+use super::epilogue::Epilogue;
+use super::layout::{plan_buffers_fused, BufferMap, LayoutKind};
+use super::service::GemmService;
+use super::tiling::{choose_tiling_for, Tiling};
 
 /// A planned GEMM: everything needed to generate code and place data.
 #[derive(Clone, Copy, Debug)]
@@ -25,6 +24,8 @@ pub struct GemmPlan {
     pub map: BufferMap,
     pub main: MainLayout,
     pub layout: LayoutKind,
+    /// Fused epilogue baked into the generated kernels.
+    pub epi: Epilogue,
 }
 
 /// Result of an evaluated GEMM (any backend).
@@ -67,7 +68,7 @@ pub fn check_dims(m: usize, n: usize, k: usize) -> Result<()> {
     Ok(())
 }
 
-/// Plan a GEMM for a configuration.
+/// Plan a plain GEMM for a configuration.
 pub fn plan_gemm(
     cfg: &ClusterConfig,
     m: usize,
@@ -75,12 +76,31 @@ pub fn plan_gemm(
     k: usize,
     layout: LayoutKind,
 ) -> Result<GemmPlan> {
+    plan_gemm_fused(cfg, m, n, k, layout, Epilogue::NONE)
+}
+
+/// Plan a GEMM with a fused epilogue: the tiling accounts for the
+/// double-buffered bias slice and the buffer map places it.
+pub fn plan_gemm_fused(
+    cfg: &ClusterConfig,
+    m: usize,
+    n: usize,
+    k: usize,
+    layout: LayoutKind,
+    epi: Epilogue,
+) -> Result<GemmPlan> {
     check_dims(m, n, k)?;
-    let tiling = choose_tiling(m, n, k, cfg.tcdm_bytes)
+    let tiling = choose_tiling_for(m, n, k, cfg.tcdm_bytes, epi.bias)
         .with_context(|| format!("no tiling fits {m}x{n}x{k}"))?;
-    let map = plan_buffers(&tiling, cfg.topology, cfg.tcdm_bytes, layout);
+    let map = plan_buffers_fused(
+        &tiling,
+        cfg.topology,
+        cfg.tcdm_bytes,
+        layout,
+        epi,
+    );
     let main = main_layout(&tiling);
-    Ok(GemmPlan { tiling, map, main, layout })
+    Ok(GemmPlan { tiling, map, main, layout, epi })
 }
 
 /// Simulate `C = A x B` on configuration `id`. The main entry point.
@@ -94,11 +114,14 @@ pub fn run_matmul(
 ) -> Result<GemmResult> {
     // The grouped layout is the paper's bank-aware placement (§III-B,
     // footnote 5): each matrix confined to its own superbank, so the
-    // 24 concurrent core requests hit disjoint bank groups.
+    // concurrent core requests hit disjoint bank groups.
     run_matmul_layout(id, m, n, k, a, b, LayoutKind::Grouped)
 }
 
 /// Like [`run_matmul`] with an explicit layout (the layout ablation).
+/// One-shot convenience over a throwaway cycle-accurate service — the
+/// pre-refactor direct codegen path is gone, so this can never bypass
+/// the plan-and-prepare pipeline batched runs use.
 pub fn run_matmul_layout(
     id: ConfigId,
     m: usize,
@@ -108,14 +131,23 @@ pub fn run_matmul_layout(
     b: &[f64],
     layout: LayoutKind,
 ) -> Result<GemmResult> {
-    let cfg = id.cluster_config();
-    let plan = plan_gemm(&cfg, m, n, k, layout)?;
-    let programs = build_programs(&cfg, &plan.tiling, &plan.map)
-        .into_iter()
-        .map(Arc::new)
-        .collect();
-    let prep = PreparedGemm { config: id, plan, programs };
-    CycleAccurate.run(&prep, a, b)
+    GemmService::cycle().run(id, m, n, k, layout, a, b)
+}
+
+/// Simulate `C = epilogue(A x B [+ bias])` with the epilogue fused
+/// into the kernels' writeback pass.
+pub fn run_matmul_fused(
+    id: ConfigId,
+    m: usize,
+    n: usize,
+    k: usize,
+    epi: Epilogue,
+    a: &[f64],
+    b: &[f64],
+    bias: &[f64],
+) -> Result<GemmResult> {
+    GemmService::cycle()
+        .run_fused(id, m, n, k, LayoutKind::Grouped, epi, a, b, bias)
 }
 
 /// Host-side reference with the same FMA association order as the
@@ -123,15 +155,30 @@ pub fn run_matmul_layout(
 /// simulated cluster.
 pub fn host_ref(m: usize, n: usize, k: usize, a: &[f64], b: &[f64])
     -> Vec<f64> {
+    host_ref_fused(m, n, k, Epilogue::NONE, a, b, &[])
+}
+
+/// [`host_ref`] with a fused epilogue: seeds each accumulator exactly
+/// like the kernel's peeled first row (`fmadd(a0, b0, bias)` when the
+/// epilogue carries a bias) and applies the activation last.
+pub fn host_ref_fused(
+    m: usize,
+    n: usize,
+    k: usize,
+    epi: Epilogue,
+    a: &[f64],
+    b: &[f64],
+    bias: &[f64],
+) -> Vec<f64> {
     let mut c = vec![0.0f64; m * n];
     for i in 0..m {
         for j in 0..n {
-            // first iteration is the peeled fmul
-            let mut acc = a[i * k] * b[j];
+            let bj = if epi.bias { bias[j] } else { 0.0 };
+            let mut acc = epi.seed(a[i * k], b[j], bj);
             for kk in 1..k {
                 acc = a[i * k + kk].mul_add(b[kk * n + j], acc);
             }
-            c[i * n + j] = acc;
+            c[i * n + j] = epi.finish(acc);
         }
     }
     c
@@ -144,6 +191,12 @@ pub fn test_matrices(m: usize, n: usize, k: usize, seed: u64)
     let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
     let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
     (a, b)
+}
+
+/// Deterministic test bias vector (decorrelated from the matrices).
+pub fn test_bias(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0xB1A5_B1A5);
+    (0..n).map(|_| rng.normal()).collect()
 }
 
 #[cfg(test)]
@@ -215,5 +268,64 @@ mod tests {
         assert!(check_dims(12, 8, 8).is_err());
         assert!(check_dims(8, 8, 8).is_ok());
         assert!(check_dims(0, 8, 8).is_err());
+    }
+
+    #[test]
+    fn fused_epilogues_bit_exact_vs_host() {
+        use crate::kernels::epilogue::{Activation, Epilogue};
+        let (m, n, k) = (16, 16, 16);
+        let (a, b) = test_matrices(m, n, k, 42);
+        let bias = test_bias(n, 42);
+        for epi in [
+            Epilogue { bias: true, act: None },
+            Epilogue { bias: false, act: Some(Activation::Relu) },
+            Epilogue { bias: true, act: Some(Activation::Relu) },
+            Epilogue { bias: true, act: Some(Activation::Gelu) },
+        ] {
+            let r = run_matmul_fused(
+                ConfigId::Zonl48Db,
+                m,
+                n,
+                k,
+                epi,
+                &a,
+                &b,
+                &bias,
+            )
+            .unwrap();
+            let want = host_ref_fused(m, n, k, epi, &a, &b, &bias);
+            assert_eq!(r.c, want, "bit-exact fused output ({})", epi.name());
+            assert_eq!(
+                r.perf.fpu_ops_total,
+                (m * n * k + m * n * epi.ops_per_elem()) as u64,
+                "{}: one FPU op per MAC + per epilogue element",
+                epi.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fused_relu_clamps_negatives() {
+        use crate::kernels::epilogue::{Activation, Epilogue};
+        let epi = Epilogue { bias: false, act: Some(Activation::Relu) };
+        let (m, n, k) = (8, 8, 8);
+        let (a, b) = test_matrices(m, n, k, 7);
+        let r = run_matmul_fused(
+            ConfigId::Base32Fc,
+            m,
+            n,
+            k,
+            epi,
+            &a,
+            &b,
+            &[],
+        )
+        .unwrap();
+        assert!(r.c.iter().all(|&x| x >= 0.0));
+        let plain = host_ref(m, n, k, &a, &b);
+        assert!(
+            plain.iter().any(|&x| x < 0.0),
+            "test data must exercise the clamp"
+        );
     }
 }

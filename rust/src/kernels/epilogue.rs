@@ -1,0 +1,137 @@
+//! Fused GEMM epilogues — bias add and activation executed inside the
+//! compute cores' C-writeback pass, with zero extra TCDM round-trips.
+//!
+//! Fusion strategy (mirrors what hand-optimized Snitch kernels do):
+//!
+//! * **bias** costs *no* extra issue slots: the peeled first
+//!   k-iteration becomes `fmadd acc, a, b, bias` instead of
+//!   `fmul acc, a, b`, initializing each accumulator with its column's
+//!   bias. The bias operand streams through the 4th SSR (ft3); the DM
+//!   core loads the per-tile bias slice alongside each B tile.
+//! * **activation** costs one extra writeback row (8 ops per outer
+//!   iteration): the last k-iteration accumulates into the register
+//!   file instead of streaming out, and a `fmax.d`/`fgelu.d` row
+//!   writes the activated results through ft2.
+//!
+//! Either way the C tile never leaves the register file between the
+//! GEMM and the elementwise work — no TCDM (let alone main-memory)
+//! round-trip, which is the whole point (see the ROOFLINE/TROOP
+//! motivation in PAPERS.md).
+//!
+//! [`Epilogue::apply`] is the host-side oracle: it performs the exact
+//! FP operations in the exact order the generated kernel issues them,
+//! so cycle-backend outputs stay bit-identical to host references.
+
+/// Elementwise activation applied in the writeback row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Activation {
+    /// `fmax.d(x, 0.0)`.
+    Relu,
+    /// Tanh-approximated GeLU (`isa::gelu`, the `fgelu.d` unit).
+    Gelu,
+}
+
+impl Activation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activation::Relu => "relu",
+            Activation::Gelu => "gelu",
+        }
+    }
+
+    pub fn apply(&self, x: f64) -> f64 {
+        match self {
+            Activation::Relu => x.max(0.0),
+            Activation::Gelu => crate::isa::gelu(x),
+        }
+    }
+}
+
+/// A fused GEMM epilogue: optional bias add + optional activation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct Epilogue {
+    /// Initialize accumulators with the per-column bias vector.
+    pub bias: bool,
+    pub act: Option<Activation>,
+}
+
+impl Epilogue {
+    pub const NONE: Epilogue = Epilogue { bias: false, act: None };
+
+    pub fn is_none(&self) -> bool {
+        !self.bias && self.act.is_none()
+    }
+
+    /// Extra 8-wide writeback rows per outer iteration (bias is free —
+    /// it rides the peeled first k-iteration).
+    pub fn extra_rows(&self) -> usize {
+        usize::from(self.act.is_some())
+    }
+
+    /// Extra FP ops per output element (the analytic model's epilogue
+    /// issue-cost regressor).
+    pub fn ops_per_elem(&self) -> usize {
+        self.extra_rows()
+    }
+
+    /// Host-side oracle for one output element. `acc0` is the first
+    /// k-iteration's product `a0*b0`; callers accumulate the remaining
+    /// k-1 iterations over the returned seed exactly like the kernel
+    /// (fused multiply-add over ascending k), then pass the final
+    /// accumulator through [`Epilogue::finish`].
+    pub fn seed(&self, a0: f64, b0: f64, bias: f64) -> f64 {
+        if self.bias {
+            a0.mul_add(b0, bias)
+        } else {
+            a0 * b0
+        }
+    }
+
+    /// Host-side oracle for the writeback row.
+    pub fn finish(&self, acc: f64) -> f64 {
+        match self.act {
+            None => acc,
+            Some(a) => a.apply(acc),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match (self.bias, self.act) {
+            (false, None) => "none".to_string(),
+            (true, None) => "bias".to_string(),
+            (false, Some(a)) => a.name().to_string(),
+            (true, Some(a)) => format!("bias+{}", a.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_names() {
+        assert_eq!(Epilogue::NONE.extra_rows(), 0);
+        assert!(Epilogue::NONE.is_none());
+        let b = Epilogue { bias: true, act: None };
+        assert_eq!(b.extra_rows(), 0, "bias rides the peeled fmul row");
+        assert_eq!(b.name(), "bias");
+        let br = Epilogue { bias: true, act: Some(Activation::Relu) };
+        assert_eq!(br.extra_rows(), 1);
+        assert_eq!(br.name(), "bias+relu");
+        let g = Epilogue { bias: false, act: Some(Activation::Gelu) };
+        assert_eq!(g.name(), "gelu");
+    }
+
+    #[test]
+    fn oracle_matches_fp_semantics() {
+        let e = Epilogue { bias: true, act: Some(Activation::Relu) };
+        // seed = fmadd(a0, b0, bias), finish = fmax(acc, 0)
+        assert_eq!(e.seed(2.0, 3.0, 0.5), 2.0f64.mul_add(3.0, 0.5));
+        assert_eq!(e.finish(-1.5), 0.0);
+        assert_eq!(e.finish(1.5), 1.5);
+        let plain = Epilogue::NONE;
+        assert_eq!(plain.seed(2.0, 3.0, 99.0), 6.0, "bias ignored");
+        assert_eq!(plain.finish(-1.5), -1.5);
+    }
+}

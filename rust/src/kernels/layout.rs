@@ -20,6 +20,7 @@
 
 use crate::mem::{Topology, BANKS_PER_SUPERBANK, TCDM_BASE};
 
+use super::epilogue::Epilogue;
 use super::tiling::Tiling;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -49,6 +50,9 @@ pub struct BufferMap {
     pub a: [BufDesc; 2],
     pub b: [BufDesc; 2],
     pub c: [BufDesc; 2],
+    /// Per-phase bias slice for fused epilogues (`nt` words, stacked in
+    /// the C tile's bank group); absent for plain GEMMs.
+    pub bias: Option<[BufDesc; 2]>,
 }
 
 fn align64(x: u32) -> u32 {
@@ -61,6 +65,7 @@ fn plan_linear(
     topology: Topology,
     tcdm_bytes: usize,
     pad_words: u32,
+    with_bias: bool,
 ) -> BufferMap {
     let pad = pad_words * 8;
     let a_row = t.k as u32 * 8 + pad;
@@ -69,7 +74,12 @@ fn plan_linear(
     let a_bytes = align64(a_row * t.mt as u32);
     let b_bytes = align64(b_row * t.k as u32);
     let c_bytes = align64(c_row * t.mt as u32);
-    let phase_bytes = a_bytes + b_bytes + c_bytes;
+    let bias_bytes = if with_bias {
+        align64(t.nt as u32 * 8)
+    } else {
+        0
+    };
+    let phase_bytes = a_bytes + b_bytes + c_bytes + bias_bytes;
 
     let phase_base: [u32; 2] = match topology {
         Topology::Fc { .. } => {
@@ -89,6 +99,14 @@ fn plan_linear(
         chunk_stride: 64, // contiguous chunks
         row_stride: row,
     };
+    let bias = if with_bias {
+        Some([
+            d(phase_base[0] + a_bytes + b_bytes + c_bytes, 0),
+            d(phase_base[1] + a_bytes + b_bytes + c_bytes, 0),
+        ])
+    } else {
+        None
+    };
     BufferMap {
         kind: LayoutKind::Linear { pad_words },
         a: [d(phase_base[0], a_row), d(phase_base[1], a_row)],
@@ -100,6 +118,7 @@ fn plan_linear(
             d(phase_base[0] + a_bytes + b_bytes, c_row),
             d(phase_base[1] + a_bytes + b_bytes, c_row),
         ],
+        bias,
     }
 }
 
@@ -128,8 +147,12 @@ pub fn group_assignment(topology: Topology) -> [[usize; 3]; 2] {
 
 /// Grouped placement: buffer base = its group's first bank row; chunks
 /// stride by one hyperbank row.
-fn plan_grouped(t: &Tiling, topology: Topology, tcdm_bytes: usize)
-    -> BufferMap {
+fn plan_grouped(
+    t: &Tiling,
+    topology: Topology,
+    tcdm_bytes: usize,
+    with_bias: bool,
+) -> BufferMap {
     let bph = topology.banks_per_hyperbank();
     let gph = bph / BANKS_PER_SUPERBANK; // groups per hyperbank
     let hyper_bytes = (tcdm_bytes / topology.hyperbanks()) as u32;
@@ -139,14 +162,17 @@ fn plan_grouped(t: &Tiling, topology: Topology, tcdm_bytes: usize)
     // capacity check: a group stores one 64B chunk per hyperbank row.
     let rows = hyper_bytes / chunk_stride;
     let group_cap_bytes = rows * 64;
+    let bias_bytes = if with_bias { t.nt as u32 * 8 } else { 0 };
     let words =
         [t.mt * t.k, t.k * t.nt, t.mt * t.nt].map(|w| w as u32 * 8);
-    // per-group occupancy (groups may be shared on 32-bank configs)
+    // per-group occupancy (groups may be shared on 32-bank configs);
+    // the bias slice stacks in the C group.
     let mut occupancy = vec![0u32; topology.total_banks() / 8];
     for p in 0..2 {
         for (mi, &bytes) in words.iter().enumerate() {
             occupancy[assign[p][mi]] += bytes;
         }
+        occupancy[assign[p][2]] += bias_bytes;
     }
     for (g, &occ) in occupancy.iter().enumerate() {
         assert!(
@@ -185,7 +211,15 @@ fn plan_grouped(t: &Tiling, topology: Topology, tcdm_bytes: usize)
         desc(assign[0][2], t.mt * t.nt, t.nt),
         desc(assign[1][2], t.mt * t.nt, t.nt),
     ];
-    BufferMap { kind: LayoutKind::Grouped, a, b, c }
+    let bias = if with_bias {
+        Some([
+            desc(assign[0][2], t.nt, t.nt),
+            desc(assign[1][2], t.nt, t.nt),
+        ])
+    } else {
+        None
+    };
+    BufferMap { kind: LayoutKind::Grouped, a, b, c, bias }
 }
 
 pub fn plan_buffers(
@@ -194,14 +228,26 @@ pub fn plan_buffers(
     tcdm_bytes: usize,
     kind: LayoutKind,
 ) -> BufferMap {
+    plan_buffers_fused(t, topology, tcdm_bytes, kind, Epilogue::NONE)
+}
+
+/// [`plan_buffers`] with a fused epilogue: bias epilogues additionally
+/// place the double-buffered `nt`-word bias slices.
+pub fn plan_buffers_fused(
+    t: &Tiling,
+    topology: Topology,
+    tcdm_bytes: usize,
+    kind: LayoutKind,
+    epi: Epilogue,
+) -> BufferMap {
     // Grouped layout needs 8-word-aligned rows (chunk granularity).
     match kind {
         LayoutKind::Grouped => {
             assert!(t.k % 8 == 0 && t.nt % 8 == 0);
-            plan_grouped(t, topology, tcdm_bytes)
+            plan_grouped(t, topology, tcdm_bytes, epi.bias)
         }
         LayoutKind::Linear { pad_words } => {
-            plan_linear(t, topology, tcdm_bytes, pad_words)
+            plan_linear(t, topology, tcdm_bytes, pad_words, epi.bias)
         }
     }
 }
@@ -302,6 +348,29 @@ mod tests {
         let t = Tiling { m: 64, n: 64, k: 64, mt: 64, nt: 64 };
         let _ = plan_buffers(&t, Topology::Dobu { banks_per_hyper: 24 },
                              96 * 1024, LayoutKind::Grouped);
+    }
+
+    #[test]
+    fn bias_slice_stacks_in_c_group() {
+        let topo = Topology::Dobu { banks_per_hyper: 24 };
+        let m = plan_buffers_fused(
+            &t32(),
+            topo,
+            96 * 1024,
+            LayoutKind::Grouped,
+            Epilogue { bias: true, act: None },
+        );
+        let tcdm = Tcdm::new(topo, 96 * 1024);
+        let bias = m.bias.expect("bias descriptors present");
+        for p in 0..2 {
+            let group = |b: u32| tcdm.superbank_of_bank(tcdm.bank_of(b));
+            assert_eq!(group(bias[p].base), group(m.c[p].base));
+            assert_ne!(bias[p].base, m.c[p].base, "stacked, not aliased");
+        }
+        // plain plans carry no bias buffers
+        let plain =
+            plan_buffers(&t32(), topo, 96 * 1024, LayoutKind::Grouped);
+        assert!(plain.bias.is_none());
     }
 
     #[test]

@@ -1,18 +1,22 @@
-//! The paper's workload: matmul kernel generation, L1 tiling, TCDM
-//! buffer layout, the end-to-end GEMM driver, and the batched
-//! `GemmService` that memoizes plans across backend runs.
+//! The paper's workload: matmul kernel generation (with fused
+//! bias/activation epilogues), L1 tiling, TCDM buffer layout, the
+//! end-to-end GEMM driver, and the batched `GemmService` that memoizes
+//! plans across backend runs.
 
 pub mod codegen;
 pub mod driver;
+pub mod epilogue;
 pub mod layout;
 pub mod service;
 pub mod tiling;
 
-pub use codegen::{build_programs, N_CORES, UNROLL};
+pub use codegen::{build_programs, build_programs_fused, N_CORES, UNROLL};
 pub use driver::{
-    host_ref, plan_gemm, run_matmul, run_matmul_layout, test_matrices,
+    host_ref, host_ref_fused, plan_gemm, plan_gemm_fused, run_matmul,
+    run_matmul_fused, run_matmul_layout, test_bias, test_matrices,
     GemmPlan, GemmResult,
 };
-pub use layout::{plan_buffers, BufferMap, LayoutKind};
+pub use epilogue::{Activation, Epilogue};
+pub use layout::{plan_buffers, plan_buffers_fused, BufferMap, LayoutKind};
 pub use service::{problem_seed, GemmJob, GemmService, ServiceStats};
-pub use tiling::{choose_tiling, Tiling};
+pub use tiling::{choose_tiling, choose_tiling_for, Tiling};

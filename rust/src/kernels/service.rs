@@ -28,12 +28,13 @@ use crate::backend::{
 use crate::cluster::ConfigId;
 use crate::coordinator::runner;
 
-use super::codegen::build_programs;
-use super::driver::{plan_gemm, test_matrices, GemmResult};
+use super::codegen::build_programs_fused;
+use super::driver::{plan_gemm_fused, test_bias, test_matrices, GemmResult};
+use super::epilogue::Epilogue;
 use super::layout::LayoutKind;
 
 /// Plan-cache key.
-pub type PlanKey = (usize, usize, usize, ConfigId, LayoutKind);
+pub type PlanKey = (usize, usize, usize, ConfigId, LayoutKind, Epilogue);
 
 /// The paper's deterministic operand seed for a problem size (kept
 /// identical across configs so numerics can be cross-checked).
@@ -49,6 +50,8 @@ pub struct GemmJob {
     pub n: usize,
     pub k: usize,
     pub layout: LayoutKind,
+    /// Fused epilogue compiled into the kernels.
+    pub epi: Epilogue,
     /// Seed for operand generation (functional backends only).
     pub seed: u64,
 }
@@ -62,7 +65,27 @@ impl GemmJob {
         k: usize,
         layout: LayoutKind,
     ) -> GemmJob {
-        GemmJob { config, m, n, k, layout, seed: problem_seed(m, n, k) }
+        GemmJob {
+            config,
+            m,
+            n,
+            k,
+            layout,
+            epi: Epilogue::NONE,
+            seed: problem_seed(m, n, k),
+        }
+    }
+
+    /// [`GemmJob::for_problem`] with a fused epilogue.
+    pub fn fused(
+        config: ConfigId,
+        m: usize,
+        n: usize,
+        k: usize,
+        layout: LayoutKind,
+        epi: Epilogue,
+    ) -> GemmJob {
+        GemmJob { epi, ..GemmJob::for_problem(config, m, n, k, layout) }
     }
 }
 
@@ -128,7 +151,7 @@ impl GemmService {
     }
 
     /// Memoized planning: tile selection + buffer placement + code
-    /// generation, keyed by `(M, N, K, config, layout)`.
+    /// generation, keyed by `(M, N, K, config, layout, epilogue)`.
     pub fn prepare(
         &self,
         config: ConfigId,
@@ -137,7 +160,20 @@ impl GemmService {
         k: usize,
         layout: LayoutKind,
     ) -> Result<Arc<PreparedGemm>> {
-        let key: PlanKey = (m, n, k, config, layout);
+        self.prepare_fused(config, m, n, k, layout, Epilogue::NONE)
+    }
+
+    /// [`GemmService::prepare`] with a fused epilogue.
+    pub fn prepare_fused(
+        &self,
+        config: ConfigId,
+        m: usize,
+        n: usize,
+        k: usize,
+        layout: LayoutKind,
+        epi: Epilogue,
+    ) -> Result<Arc<PreparedGemm>> {
+        let key: PlanKey = (m, n, k, config, layout, epi);
         if let Some(p) = self.plans.read().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(p));
@@ -146,9 +182,9 @@ impl GemmService {
         // the first insert wins (plans are deterministic, so either
         // copy is equivalent).
         let cfg = config.cluster_config();
-        let plan = plan_gemm(&cfg, m, n, k, layout)?;
+        let plan = plan_gemm_fused(&cfg, m, n, k, layout, epi)?;
         let programs = if self.backend.needs_programs() {
-            build_programs(&cfg, &plan.tiling, &plan.map)
+            build_programs_fused(&cfg, &plan.tiling, &plan.map, epi)
                 .into_iter()
                 .map(Arc::new)
                 .collect()
@@ -177,14 +213,39 @@ impl GemmService {
         self.backend.run(&prep, a, b)
     }
 
+    /// Evaluate one fused GEMM (`epilogue(A x B [+ bias])`) with
+    /// explicit operands.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_fused(
+        &self,
+        config: ConfigId,
+        m: usize,
+        n: usize,
+        k: usize,
+        layout: LayoutKind,
+        epi: Epilogue,
+        a: &[f64],
+        b: &[f64],
+        bias: &[f64],
+    ) -> Result<GemmResult> {
+        let prep = self.prepare_fused(config, m, n, k, layout, epi)?;
+        self.backend.run_fused(&prep, a, b, bias)
+    }
+
     /// Evaluate one batched job (operands generated from its seed when
     /// the backend is functional).
     pub fn run_job(&self, job: &GemmJob) -> Result<GemmResult> {
-        let prep =
-            self.prepare(job.config, job.m, job.n, job.k, job.layout)?;
+        let prep = self.prepare_fused(
+            job.config, job.m, job.n, job.k, job.layout, job.epi,
+        )?;
         if self.backend.needs_data() {
             let (a, b) = test_matrices(job.m, job.n, job.k, job.seed);
-            self.backend.run(&prep, &a, &b)
+            let bias = if job.epi.bias {
+                test_bias(job.n, job.seed)
+            } else {
+                Vec::new()
+            };
+            self.backend.run_fused(&prep, &a, &b, &bias)
         } else {
             self.backend.run(&prep, &[], &[])
         }
@@ -276,6 +337,50 @@ mod tests {
                 assert!((g - w).abs() <= 1e-9 * w.abs().max(1.0));
             }
         }
+    }
+
+    #[test]
+    fn fused_jobs_cache_separately_and_match_driver() {
+        use crate::kernels::epilogue::{Activation, Epilogue};
+        use crate::kernels::{host_ref_fused, run_matmul_fused, test_bias};
+        let svc = GemmService::cycle();
+        let epi = Epilogue { bias: true, act: Some(Activation::Relu) };
+        let plain = GemmJob::for_problem(
+            ConfigId::Zonl48Db,
+            16,
+            16,
+            16,
+            LayoutKind::Grouped,
+        );
+        let fused = GemmJob::fused(
+            ConfigId::Zonl48Db,
+            16,
+            16,
+            16,
+            LayoutKind::Grouped,
+            epi,
+        );
+        svc.run_job(&plain).unwrap();
+        let r = svc.run_job(&fused).unwrap();
+        // distinct plans: the epilogue is part of the cache key
+        assert_eq!(svc.stats().plan_misses, 2);
+        let (a, b) = test_matrices(16, 16, 16, fused.seed);
+        let bias = test_bias(16, fused.seed);
+        let want = host_ref_fused(16, 16, 16, epi, &a, &b, &bias);
+        assert_eq!(r.c, want, "fused batched job matches the oracle");
+        let via_drv = run_matmul_fused(
+            ConfigId::Zonl48Db,
+            16,
+            16,
+            16,
+            epi,
+            &a,
+            &b,
+            &bias,
+        )
+        .unwrap();
+        assert_eq!(r.c, via_drv.c);
+        assert_eq!(r.cycles, via_drv.cycles);
     }
 
     #[test]

@@ -65,16 +65,31 @@ pub fn choose_tiling(
     k: usize,
     tcdm_bytes: usize,
 ) -> Option<Tiling> {
+    choose_tiling_for(m, n, k, tcdm_bytes, false)
+}
+
+/// [`choose_tiling`] with epilogue awareness: a fused bias epilogue
+/// double-buffers an extra `nt`-word bias slice that shares the C
+/// tile's bank group, tightening both the TCDM budget and the C
+/// group's capacity.
+pub fn choose_tiling_for(
+    m: usize,
+    n: usize,
+    k: usize,
+    tcdm_bytes: usize,
+    bias: bool,
+) -> Option<Tiling> {
     let mut best: Option<(i64, Tiling)> = None;
     for mt in tile_candidates(m) {
         for nt in tile_candidates(n) {
             let t = Tiling { m, n, k, mt, nt };
-            if !t.fits(tcdm_bytes) {
+            let bias_words = if bias { nt } else { 0 };
+            if 2 * (t.phase_bytes() + bias_words * 8) > tcdm_bytes {
                 continue;
             }
             if mt * k > GROUP_WORDS
                 || k * nt > GROUP_WORDS
-                || mt * nt > GROUP_WORDS
+                || mt * nt + bias_words > GROUP_WORDS
             {
                 continue;
             }
@@ -135,6 +150,19 @@ mod tests {
                 assert!(t.k * t.nt <= GROUP_WORDS);
             }
         }
+    }
+
+    #[test]
+    fn bias_budget_tightens_c_group() {
+        // 64x32 tiles put C exactly at the 2048-word group capacity;
+        // a fused bias epilogue must shrink the pick.
+        let plain = choose_tiling_for(64, 64, 8, 128 * 1024, false).unwrap();
+        assert_eq!(plain.mt * plain.nt, 2048);
+        let fused = choose_tiling_for(64, 64, 8, 128 * 1024, true).unwrap();
+        assert!(
+            fused.mt * fused.nt + fused.nt <= GROUP_WORDS,
+            "bias slice must fit the C group: {fused:?}"
+        );
     }
 
     #[test]

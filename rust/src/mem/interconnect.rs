@@ -20,7 +20,7 @@ use super::{Tcdm, BANKS_PER_SUPERBANK};
 /// One 64-bit core-side request (SSR streamer or LSU).
 #[derive(Clone, Copy, Debug)]
 pub struct PortRequest {
-    /// Global requestor id (core * 4 + {ssr0, ssr1, ssr2, lsu}).
+    /// Global requestor id (core * 5 + {ssr0..ssr3, lsu}).
     pub port: u16,
     pub addr: u32,
     pub write: bool,

@@ -1,6 +1,8 @@
 //! Stream Semantic Registers (SSRs) — Snitch's data movers [4].
 //!
-//! Each compute core has three streamers mapped onto ft0/ft1/ft2:
+//! Each compute core has four streamers mapped onto ft0/ft1/ft2/ft3
+//! (ft3 — the fused-epilogue bias stream — is our extension over the
+//! stock three-streamer Snitch):
 //! reads of an enabled stream register pop from the streamer's data
 //! FIFO (filled by a 4-deep affine address generator prefetching from
 //! TCDM), writes push into the write FIFO (drained to TCDM in the

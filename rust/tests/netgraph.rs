@@ -1,0 +1,369 @@
+//! NetGraph layer tests: DAG-scheduling properties (topological order,
+//! no deadlock, shuffled-op robustness), cycle-backend bit-exactness
+//! of network execution against sequential per-layer driver runs
+//! (fused epilogues included), and the analytic-vs-cycle end-to-end
+//! window error bound over the whole model zoo.
+
+use std::collections::HashMap;
+
+use zerostall::backend::{fit_calibration, CalSample};
+use zerostall::cluster::ConfigId;
+use zerostall::coordinator::net::{run_net, tensor_data};
+use zerostall::coordinator::workload::graph::{NetGraph, NetOp, TensorKind};
+use zerostall::coordinator::workload::zoo;
+use zerostall::kernels::{Activation, GemmJob, GemmService, LayoutKind};
+use zerostall::util::prop::{check, Config, Shrink};
+use zerostall::util::rng::Rng;
+
+// ==================================================================
+// Random graph generator: layered MLP-ish DAGs with residual edges
+// ==================================================================
+
+/// Shrinkable carrier: (batch, layer dims, residual flags).
+#[derive(Clone, Debug)]
+struct GraphSpec {
+    batch: usize,
+    dims: Vec<usize>,
+    residuals: Vec<bool>,
+}
+
+impl Shrink for GraphSpec {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.dims.len() > 2 {
+            let mut s = self.clone();
+            s.dims.pop();
+            s.residuals.pop();
+            out.push(s);
+        }
+        out
+    }
+}
+
+fn gen_spec(rng: &mut Rng) -> GraphSpec {
+    let n_layers = rng.range(1, 4);
+    let batch = rng.range(1, 3) * 8;
+    let dims: Vec<usize> =
+        (0..=n_layers).map(|_| rng.range(1, 4) * 8).collect();
+    let residuals = (0..n_layers).map(|_| rng.bool()).collect();
+    GraphSpec { batch, dims, residuals }
+}
+
+fn build_graph(spec: &GraphSpec) -> NetGraph {
+    let mut g = NetGraph::new("prop");
+    let mut x = g.input("x", spec.batch, spec.dims[0]);
+    for (i, win) in spec.dims.windows(2).enumerate() {
+        let w = g.weight(&format!("w{i}"), win[0], win[1]);
+        let b = g.bias(&format!("b{i}"), win[1]);
+        let act = match i % 3 {
+            0 => Some(Activation::Relu),
+            1 => Some(Activation::Gelu),
+            _ => None,
+        };
+        let y = g.gemm(&format!("fc{i}"), x, w, Some(b), act).unwrap();
+        // residual only possible when shapes match
+        x = if spec.residuals[i] && win[0] == win[1] {
+            g.add(&format!("res{i}"), y, x).unwrap()
+        } else {
+            y
+        };
+    }
+    g
+}
+
+/// Deterministically shuffle op order (ids stay valid — the scheduler
+/// must not rely on topological list order).
+fn shuffle_ops(g: &mut NetGraph, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let n = g.ops.len();
+    for i in (1..n).rev() {
+        let j = rng.below(i as u64 + 1) as usize;
+        g.ops.swap(i, j);
+    }
+}
+
+#[test]
+fn prop_dag_schedule_topological_and_deadlock_free() {
+    check(
+        &Config { cases: 40, seed: 0xDA6 },
+        |rng| {
+            let spec = gen_spec(rng);
+            spec
+        },
+        |spec| {
+            let mut g = build_graph(spec);
+            shuffle_ops(&mut g, 0x5EED ^ spec.dims.len() as u64);
+            g.topo_order().map_err(|e| e.to_string())?;
+            let svc = GemmService::analytic();
+            let run = run_net(
+                &svc,
+                &g,
+                ConfigId::Zonl48Db,
+                LayoutKind::Grouped,
+                2,
+                9,
+            )
+            .map_err(|e| e.to_string())?;
+            // every op executed exactly once
+            if run.report.layers.len() != g.ops.len() {
+                return Err(format!(
+                    "{} of {} ops executed",
+                    run.report.layers.len(),
+                    g.ops.len()
+                ));
+            }
+            let mut seen = HashMap::new();
+            for (pos, l) in run.report.layers.iter().enumerate() {
+                if seen.insert(l.name.clone(), pos).is_some() {
+                    return Err(format!("op {} ran twice", l.name));
+                }
+            }
+            // topological order: every op runs after its producers
+            let producer_of: HashMap<usize, &str> = g
+                .ops
+                .iter()
+                .map(|op| (op.out(), op.name()))
+                .collect();
+            for op in &g.ops {
+                let my_pos = seen[op.name()];
+                for t in op.inputs() {
+                    if let Some(p) = producer_of.get(&t) {
+                        let p_pos = seen[*p];
+                        if p_pos >= my_pos {
+                            return Err(format!(
+                                "{} (pos {my_pos}) ran before its \
+                                 producer {} (pos {p_pos})",
+                                op.name(),
+                                p
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ==================================================================
+// Cycle backend: network execution == sequential per-layer driver
+// execution, bit for bit (epilogues included)
+// ==================================================================
+
+/// Sequential reference: execute ops one at a time in topological
+/// order through the *driver* path, materializing tensors host-side.
+fn sequential_reference(
+    g: &NetGraph,
+    config: ConfigId,
+    seed: u64,
+) -> HashMap<String, Vec<f64>> {
+    let mut store: HashMap<usize, Vec<f64>> = HashMap::new();
+    for (tid, t) in g.tensors.iter().enumerate() {
+        if t.kind != TensorKind::Computed {
+            store.insert(tid, tensor_data(seed, tid, t.elems()));
+        }
+    }
+    for &i in &g.topo_order().unwrap() {
+        match &g.ops[i] {
+            NetOp::Gemm { x, w, bias, epi, out, .. } => {
+                let (xt, wt) = (&g.tensors[*x], &g.tensors[*w]);
+                let empty = Vec::new();
+                let bias_data = match bias {
+                    Some(b) => &store[b],
+                    None => &empty,
+                };
+                let r = zerostall::kernels::run_matmul_fused(
+                    config,
+                    xt.rows,
+                    wt.cols,
+                    xt.cols,
+                    *epi,
+                    &store[x],
+                    &store[w],
+                    bias_data,
+                )
+                .unwrap();
+                store.insert(*out, r.c);
+            }
+            NetOp::Add { a, b, out, .. } => {
+                let sum: Vec<f64> = store[a]
+                    .iter()
+                    .zip(store[b].iter())
+                    .map(|(x, y)| x + y)
+                    .collect();
+                store.insert(*out, sum);
+            }
+        }
+    }
+    g.outputs()
+        .into_iter()
+        .map(|tid| {
+            (g.tensors[tid].name.clone(), store.remove(&tid).unwrap())
+        })
+        .collect()
+}
+
+#[test]
+fn prop_cycle_net_matches_sequential_driver_bit_exact() {
+    check(
+        &Config { cases: 5, seed: 0xB17E },
+        |rng| gen_spec(rng),
+        |spec| {
+            let mut g = build_graph(spec);
+            shuffle_ops(&mut g, 0xACE);
+            let seed = 31;
+            let svc = GemmService::cycle();
+            let run = run_net(
+                &svc,
+                &g,
+                ConfigId::Zonl48Db,
+                LayoutKind::Grouped,
+                2,
+                seed,
+            )
+            .map_err(|e| e.to_string())?;
+            let want =
+                sequential_reference(&g, ConfigId::Zonl48Db, seed);
+            if run.outputs.len() != want.len() {
+                return Err("output count mismatch".into());
+            }
+            for (name, got) in &run.outputs {
+                let w = want
+                    .get(name)
+                    .ok_or_else(|| format!("missing output {name}"))?;
+                if got != w {
+                    return Err(format!(
+                        "output {name} differs from sequential driver \
+                         execution"
+                    ));
+                }
+            }
+            // fused layers add zero TCDM round-trips
+            for l in &run.report.layers {
+                if l.kind == "gemm" && l.extra_roundtrips != 0 {
+                    return Err(format!(
+                        "fused layer {} reports {} round-trips",
+                        l.name, l.extra_roundtrips
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn zoo_llm_cycle_net_bit_exact_and_fully_fused() {
+    let g = zoo::build("llm").unwrap();
+    let seed = 2026;
+    let svc = GemmService::cycle();
+    let run = run_net(
+        &svc,
+        &g,
+        ConfigId::Zonl48Db,
+        LayoutKind::Grouped,
+        4,
+        seed,
+    )
+    .unwrap();
+    let want = sequential_reference(&g, ConfigId::Zonl48Db, seed);
+    for (name, got) in &run.outputs {
+        assert_eq!(got, &want[name], "{name} differs");
+    }
+    // every GEMM layer is fused: zero extra round-trips from GEMMs
+    let gemm_trips: u64 = run
+        .report
+        .layers
+        .iter()
+        .filter(|l| l.kind == "gemm")
+        .map(|l| l.extra_roundtrips)
+        .sum();
+    assert_eq!(gemm_trips, 0, "fused epilogues must not round-trip");
+    assert!(run.report.fused_elems > 0);
+    // plan cache: repeated tiles across the batch hit
+    assert_eq!(run.report.layers.len(), g.ops.len());
+}
+
+// ==================================================================
+// Analytic vs cycle: end-to-end window error over the model zoo
+// stays within the calibrated per-GEMM error bound
+// ==================================================================
+
+#[test]
+fn zoo_analytic_tracks_cycle_within_per_gemm_bound() {
+    let config = ConfigId::Zonl48Db;
+    let cycle = GemmService::cycle();
+
+    // Gather the zoo's distinct fused GEMMs with cycle ground truth.
+    let mut jobs: Vec<(String, GemmJob)> = Vec::new();
+    for name in zoo::models() {
+        let g = zoo::build(name).unwrap();
+        for op in &g.ops {
+            if let NetOp::Gemm { x, w, epi, .. } = op {
+                let (xt, wt) = (&g.tensors[*x], &g.tensors[*w]);
+                jobs.push((
+                    name.to_string(),
+                    GemmJob::fused(
+                        config,
+                        xt.rows,
+                        wt.cols,
+                        xt.cols,
+                        LayoutKind::Grouped,
+                        *epi,
+                    ),
+                ));
+            }
+        }
+    }
+    let measured: Vec<_> = jobs
+        .iter()
+        .map(|(_, j)| cycle.run_job(j).unwrap())
+        .collect();
+
+    // Fit (alpha, beta, gamma, epsilon) on those samples.
+    let samples: Vec<CalSample> =
+        measured.iter().map(CalSample::from_result).collect();
+    let cal = fit_calibration(&samples);
+    let ana = GemmService::analytic_with(cal);
+
+    // Per-GEMM error bound of the calibrated model on this set.
+    let mut per_gemm_max = 0.0f64;
+    let mut predicted: Vec<u64> = Vec::new();
+    for ((_, j), r) in jobs.iter().zip(&measured) {
+        let p = ana.run_job(j).unwrap();
+        predicted.push(p.perf.window_cycles);
+        let err = (p.perf.window_cycles as f64
+            - r.perf.window_cycles as f64)
+            .abs()
+            / r.perf.window_cycles as f64;
+        per_gemm_max = per_gemm_max.max(err);
+    }
+    assert!(
+        per_gemm_max < 0.35,
+        "calibrated per-GEMM window error too large: {per_gemm_max:.3}"
+    );
+
+    // End-to-end (per model): summed-window error can never exceed
+    // the worst per-GEMM relative error — and must, in particular,
+    // stay within the calibrated bound.
+    let mut models_seen = 0;
+    for name in zoo::models() {
+        let mut cyc = 0.0f64;
+        let mut pred = 0.0f64;
+        for (i, (model, _)) in jobs.iter().enumerate() {
+            if model == name {
+                cyc += measured[i].perf.window_cycles as f64;
+                pred += predicted[i] as f64;
+            }
+        }
+        assert!(cyc > 0.0, "{name}: no GEMM windows measured");
+        let e2e = (pred - cyc).abs() / cyc;
+        assert!(
+            e2e <= per_gemm_max + 1e-9,
+            "{name}: end-to-end window error {e2e:.3} exceeds the \
+             per-GEMM bound {per_gemm_max:.3}"
+        );
+        models_seen += 1;
+    }
+    assert_eq!(models_seen, zoo::models().len());
+}
