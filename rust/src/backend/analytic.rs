@@ -60,6 +60,13 @@ pub struct ConfigCal {
     /// a fused bias costs nothing — it rides the peeled first
     /// k-iteration). 1.0 = one issue slot per op, the zero-stall bound.
     pub epsilon: f64,
+    /// NoC-contention coefficient for multi-cluster fabrics: the
+    /// fraction of the theoretical round-robin DMA serialization
+    /// (`beats x clusters / link_bandwidth`) that materializes as
+    /// pass-level DMA time. 1.0 = full serialization (fair per-beat
+    /// arbitration hides nothing); calibratable against cycle-fabric
+    /// ground truth with [`fit_delta`].
+    pub delta: f64,
 }
 
 /// The full per-configuration constant table.
@@ -97,8 +104,13 @@ impl Default for Calibration {
     /// row); 32-bank configurations additionally lose ~0.6 cycles per
     /// contested DMA beat at the superbank mux.
     fn default() -> Self {
-        let zonl =
-            ConfigCal { alpha: 24.0, beta: 8.0, gamma: 0.6, epsilon: 1.0 };
+        let zonl = ConfigCal {
+            alpha: 24.0,
+            beta: 8.0,
+            gamma: 0.6,
+            epsilon: 1.0,
+            delta: 1.0,
+        };
         Self {
             entries: [
                 (
@@ -108,6 +120,7 @@ impl Default for Calibration {
                         beta: 35.0,
                         gamma: 0.6,
                         epsilon: 1.0,
+                        delta: 1.0,
                     },
                 ),
                 (ConfigId::Zonl32Fc, zonl),
@@ -205,6 +218,20 @@ pub fn predict_perf(
     config: ConfigId,
     plan: &GemmPlan,
 ) -> ClusterPerf {
+    predict_perf_noc(cal, config, plan, 1.0)
+}
+
+/// [`predict_perf`] for one shard of a multi-cluster fabric run:
+/// `noc_factor = clusters / link_budget` is the theoretical DMA
+/// serialization of the shared NoC (1.0 = private link, the
+/// single-cluster model).
+pub fn predict_perf_noc(
+    cal: &Calibration,
+    config: ConfigId,
+    plan: &GemmPlan,
+    noc_factor: f64,
+) -> ClusterPerf {
+    let noc_factor = noc_factor.max(1.0);
     let t = plan.tiling;
     let cfg = config.cluster_config();
     let cc = cal.get(config);
@@ -227,6 +254,7 @@ pub fn predict_perf(
 
     let mut window = 0.0f64;
     let mut conflict_cycles = 0.0f64;
+    let mut dma_conflict_cycles = 0.0f64;
     let mut dma_wait = 0.0f64;
     for p in 0..passes {
         let mut overlap = 0.0;
@@ -245,13 +273,19 @@ pub fn predict_perf(
             + conf;
         // Contested beats are retried at the superbank mux: the engine
         // sustains roughly 2 cycles per beat while compute is active
-        // on the same group.
-        let dma = overlap * if shared { 2.0 } else { 1.0 };
+        // on the same group. On a multi-cluster fabric the shared NoC
+        // additionally serializes the branches: with C clusters behind
+        // B beats/cycle of link budget the branch sustains B/C beats
+        // per cycle, and `delta` calibrates how much of that
+        // theoretical stretch materializes.
+        let dma_raw = overlap * if shared { 2.0 } else { 1.0 };
+        let dma = dma_raw * (1.0 + cc.delta * (noc_factor - 1.0));
         window += comp.max(dma) + cc.alpha;
         if dma > comp {
             dma_wait += dma - comp;
         }
         conflict_cycles += conf;
+        dma_conflict_cycles += shared_conf;
     }
 
     // Epilogue FP ops count toward issue (and the FPU-op counters),
@@ -292,6 +326,10 @@ pub fn predict_perf(
     let bias_reqs = if plan.epi.bias { (t.m * t.n) as u64 } else { 0 };
     let grants = a_reqs + b_reqs + c_reqs + bias_reqs;
     let conflicts = conflict_cycles.round() as u64;
+    // Disjoint split, mirroring the cycle backend's XbarStats: the
+    // DMA-mux share of the conflicts vs bank-level round-robin losses.
+    let dma_conflicts =
+        (dma_conflict_cycles.round() as u64).min(conflicts);
     let bias_bytes = if plan.epi.bias { t.nt * 8 } else { 0 };
     let dma_bytes = passes as u64
         * ((t.mt * t.k + t.k * t.nt + t.mt * t.nt) * 8 + bias_bytes)
@@ -314,8 +352,8 @@ pub fn predict_perf(
         rb_replays: (rb).round() as u64,
         csr_instrs: 2 * N_CORES as u64 * passes as u64,
         tcdm_core_accesses: grants,
-        tcdm_conflicts: conflicts,
-        tcdm_conflicts_dma: if shared { conflicts } else { 0 },
+        tcdm_conflicts: conflicts - dma_conflicts,
+        tcdm_conflicts_dma: dma_conflicts,
         ssr_requests: grants + conflicts,
         ssr_conflicts: conflicts,
         dma_beats,
@@ -449,10 +487,46 @@ pub fn fit_calibration(samples: &[CalSample]) -> Calibration {
             } else {
                 default.epsilon
             },
+            // Single-cluster samples carry no NoC signal; `delta` is
+            // fitted separately from fabric runs via `fit_delta`.
+            delta: default.delta,
         };
         cal.set(id, fitted);
     }
     cal
+}
+
+/// One NoC-calibration observation: a shard plan evaluated both on a
+/// multi-cluster cycle fabric (`window_measured`) and predicted with
+/// `delta = 0` (`window_free`) / `delta = 1` (`window_serialized`).
+#[derive(Clone, Copy, Debug)]
+pub struct NocSample {
+    pub window_measured: f64,
+    pub window_free: f64,
+    pub window_serialized: f64,
+}
+
+/// Fit the NoC-contention coefficient `delta` from measured fabric
+/// windows: each sample pins where the measurement falls between the
+/// contention-free and fully-serialized predictions; the fit is the
+/// clamped least-squares blend over the samples with a usable spread.
+/// Returns `None` when no sample separates the two predictions (the
+/// samples were all compute-bound — contention never surfaced).
+pub fn fit_delta(samples: &[NocSample]) -> Option<f64> {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for s in samples {
+        let spread = s.window_serialized - s.window_free;
+        if spread > 1.0 {
+            num += (s.window_measured - s.window_free) * spread;
+            den += spread * spread;
+        }
+    }
+    if den > 0.0 {
+        Some((num / den).clamp(0.0, 2.0))
+    } else {
+        None
+    }
 }
 
 /// The analytic backend: [`predict_perf`] behind the `SimBackend`
@@ -504,6 +578,47 @@ impl SimBackend for Analytic {
             perf,
             plan: prep.plan,
             config: prep.config,
+        })
+    }
+
+    /// Predict the sharded run: one per-shard prediction (shards are
+    /// uniform) with the NoC-contention term
+    /// `beats x clusters / link_bandwidth` applied to the DMA side of
+    /// every pass, scaled by the calibrated `delta` constant.
+    fn run_sharded(
+        &self,
+        sh: &crate::backend::ShardedGemm,
+        noc: &crate::fabric::NocConfig,
+        _a: &[f64],
+        _b: &[f64],
+        _bias: &[f64],
+    ) -> anyhow::Result<crate::fabric::FabricResult> {
+        use crate::fabric::{FabricResult, NocStats, ShardRun};
+        let clusters = sh.shards.len().max(1);
+        let factor = (clusters as f64 / noc.budget() as f64).max(1.0);
+        let perf =
+            predict_perf_noc(&self.cal, sh.config, &sh.prep.plan, factor);
+        let beats_total = perf.dma_beats * clusters as u64;
+        let shards: Vec<ShardRun> = sh
+            .shards
+            .iter()
+            .map(|s| ShardRun {
+                shard: *s,
+                cycles: perf.cycles,
+                perf: perf.clone(),
+            })
+            .collect();
+        Ok(FabricResult {
+            c: Vec::new(),
+            cycles: perf.cycles,
+            shards,
+            noc: NocStats {
+                grants: beats_total,
+                denials: (beats_total as f64 * (factor - 1.0)
+                    / factor.max(1.0))
+                    .round() as u64,
+                saturated_cycles: 0,
+            },
         })
     }
 }
@@ -597,8 +712,13 @@ mod tests {
     fn fit_recovers_synthetic_constants() {
         // Generate windows from known constants; the fit must recover
         // them (compute-bound, varied shapes).
-        let truth =
-            ConfigCal { alpha: 50.0, beta: 12.0, gamma: 0.0, epsilon: 1.0 };
+        let truth = ConfigCal {
+            alpha: 50.0,
+            beta: 12.0,
+            gamma: 0.0,
+            epsilon: 1.0,
+            delta: 1.0,
+        };
         let mut samples = Vec::new();
         for (m, n, k) in
             [(16, 16, 16), (32, 32, 32), (32, 16, 48), (48, 48, 32)]
@@ -631,8 +751,13 @@ mod tests {
     fn fit_recovers_epsilon_from_fused_samples() {
         use crate::kernels::epilogue::{Activation, Epilogue};
         use crate::kernels::plan_gemm_fused;
-        let truth =
-            ConfigCal { alpha: 40.0, beta: 9.0, gamma: 0.0, epsilon: 1.4 };
+        let truth = ConfigCal {
+            alpha: 40.0,
+            beta: 9.0,
+            gamma: 0.0,
+            epsilon: 1.4,
+            delta: 1.0,
+        };
         let epi = Epilogue { bias: true, act: Some(Activation::Relu) };
         let mut samples = Vec::new();
         for (m, n, k, fused) in [
@@ -667,6 +792,81 @@ mod tests {
         let got = cal.get(ConfigId::Zonl48Db);
         assert!((got.epsilon - truth.epsilon).abs() < 0.1, "{got:?}");
         assert!((got.alpha - truth.alpha).abs() < 2.0, "{got:?}");
+    }
+
+    #[test]
+    fn noc_factor_one_is_the_single_cluster_model() {
+        let cal = Calibration::default();
+        for id in [ConfigId::Base32Fc, ConfigId::Zonl48Db] {
+            let p = plan(id, 64, 64, 64);
+            let lone = predict_perf(&cal, id, &p);
+            let fab = predict_perf_noc(&cal, id, &p, 1.0);
+            assert_eq!(lone.window_cycles, fab.window_cycles);
+            assert_eq!(lone.cycles, fab.cycles);
+        }
+    }
+
+    #[test]
+    fn noc_contention_only_slows_dma_bound_passes() {
+        let cal = Calibration::default();
+        // Compute-bound shard (long K): contention stays under the
+        // compute roofline, window unchanged.
+        let pc = plan(ConfigId::Zonl48Db, 64, 64, 128);
+        let w1 = predict_perf_noc(&cal, ConfigId::Zonl48Db, &pc, 1.0)
+            .window_cycles;
+        let w2 = predict_perf_noc(&cal, ConfigId::Zonl48Db, &pc, 2.0)
+            .window_cycles;
+        assert_eq!(w1, w2, "compute-bound shard must not stretch");
+        // Thin-K multi-pass shard on a starved NoC (8 branches on one
+        // link): serialization pushes the DMA over the compute
+        // roofline and the window stretches.
+        let pd = plan(ConfigId::Zonl48Db, 128, 128, 8);
+        let d1 = predict_perf_noc(&cal, ConfigId::Zonl48Db, &pd, 1.0)
+            .window_cycles;
+        let d8 = predict_perf_noc(&cal, ConfigId::Zonl48Db, &pd, 8.0)
+            .window_cycles;
+        assert!(
+            d8 > d1,
+            "DMA-bound shard must stretch under NoC contention: \
+             {d8} vs {d1}"
+        );
+    }
+
+    #[test]
+    fn conflict_split_is_disjoint() {
+        // The analytic counters mirror the cycle backend's XbarStats
+        // split: DMA-mux losses and bank-level losses never overlap.
+        let cal = Calibration::default();
+        let p = plan(ConfigId::Base32Fc, 64, 64, 64);
+        let perf = predict_perf(&cal, ConfigId::Base32Fc, &p);
+        assert!(perf.tcdm_conflicts_dma > 0, "32-bank grouped contends");
+        assert_eq!(
+            perf.ssr_conflicts,
+            perf.tcdm_conflicts + perf.tcdm_conflicts_dma,
+            "split must partition the total"
+        );
+    }
+
+    #[test]
+    fn fit_delta_recovers_blend() {
+        // measured = free + 0.6 * (serialized - free)
+        let samples: Vec<NocSample> = [(100.0, 300.0), (80.0, 400.0)]
+            .iter()
+            .map(|&(free, ser)| NocSample {
+                window_measured: free + 0.6 * (ser - free),
+                window_free: free,
+                window_serialized: ser,
+            })
+            .collect();
+        let d = fit_delta(&samples).unwrap();
+        assert!((d - 0.6).abs() < 1e-9, "{d}");
+        // No spread -> no signal.
+        assert!(fit_delta(&[NocSample {
+            window_measured: 50.0,
+            window_free: 50.0,
+            window_serialized: 50.0,
+        }])
+        .is_none());
     }
 
     #[test]

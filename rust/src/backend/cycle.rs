@@ -11,10 +11,13 @@
 use anyhow::{Context, Result};
 
 use crate::cluster::Cluster;
+use crate::fabric::{
+    ClusterFabric, FabricResult, NocConfig, ShardRun,
+};
 use crate::kernels::codegen::N_CORES;
 use crate::kernels::GemmResult;
 
-use super::{BackendKind, PreparedGemm, SimBackend};
+use super::{BackendKind, PreparedGemm, ShardedGemm, SimBackend};
 
 pub struct CycleAccurate;
 
@@ -73,6 +76,85 @@ impl SimBackend for CycleAccurate {
             plan: prep.plan,
             config: prep.config,
         })
+    }
+
+    /// Scatter operand blocks, run every shard's cluster in lockstep
+    /// against the shared NoC arbiter, gather C. Bit-identical to the
+    /// single-cluster driver: K stays shard-local, so each output
+    /// element keeps its exact FMA association order.
+    fn run_sharded(
+        &self,
+        sh: &ShardedGemm,
+        noc: &NocConfig,
+        a: &[f64],
+        b: &[f64],
+        bias: &[f64],
+    ) -> Result<FabricResult> {
+        let (m, n, k) = (sh.m, sh.n, sh.k);
+        anyhow::ensure!(
+            a.len() == m * k && b.len() == k * n,
+            "sharded cycle run needs full operands: A {} (want {}), \
+             B {} (want {})",
+            a.len(),
+            m * k,
+            b.len(),
+            k * n
+        );
+        anyhow::ensure!(
+            !sh.prep.plan.epi.bias || bias.len() == n,
+            "fused bias epilogue needs a length-{n} bias vector \
+             (got {})",
+            bias.len()
+        );
+        let cfg = sh.config.cluster_config();
+        let plan = &sh.prep.plan;
+        let (sm, sn) = (sh.grid.sm, sh.grid.sn);
+        let mut clusters = Vec::with_capacity(sh.shards.len());
+        let mut b_block = vec![0.0f64; k * sn];
+        for s in &sh.shards {
+            let mut cl = Cluster::from_shared(cfg, &sh.prep.programs);
+            // A block: sm contiguous rows of the full A.
+            cl.mem.write_slice_f64(
+                plan.main.a,
+                &a[s.m0 * k..(s.m0 + sm) * k],
+            );
+            // B block: sn columns gathered row by row.
+            for kk in 0..k {
+                let src = kk * n + s.n0;
+                b_block[kk * sn..(kk + 1) * sn]
+                    .copy_from_slice(&b[src..src + sn]);
+            }
+            cl.mem.write_slice_f64(plan.main.b, &b_block);
+            if plan.epi.bias {
+                cl.mem.write_slice_f64(
+                    plan.main.bias,
+                    &bias[s.n0..s.n0 + sn],
+                );
+            }
+            clusters.push(cl);
+        }
+        // NoC serialization can stretch DMA phases by up to the
+        // cluster count, so scale the per-shard deadline with it.
+        let deadline =
+            Self::deadline(sm, sn, k) * sh.shards.len().max(1) as u64;
+        let mut fab = ClusterFabric::new(clusters, *noc);
+        fab.run(deadline).context("fabric run")?;
+        let mut c = vec![0.0f64; m * n];
+        let mut shards = Vec::with_capacity(sh.shards.len());
+        for (s, cl) in sh.shards.iter().zip(&fab.clusters) {
+            let cs = cl.mem.read_vec_f64(plan.main.c, sm * sn);
+            for r in 0..sm {
+                let dst = (s.m0 + r) * n + s.n0;
+                c[dst..dst + sn]
+                    .copy_from_slice(&cs[r * sn..(r + 1) * sn]);
+            }
+            shards.push(ShardRun {
+                shard: *s,
+                cycles: cl.cycle,
+                perf: cl.perf(),
+            });
+        }
+        Ok(FabricResult { c, cycles: fab.cycle, shards, noc: fab.noc })
     }
 }
 

@@ -27,13 +27,18 @@
 pub mod analytic;
 pub mod cycle;
 
-pub use analytic::{fit_calibration, Analytic, CalSample, Calibration, ConfigCal};
+pub use analytic::{
+    fit_calibration, fit_delta, predict_perf_noc, Analytic, CalSample,
+    Calibration, ConfigCal, NocSample,
+};
 pub use cycle::CycleAccurate;
 
 use std::sync::Arc;
 
 use crate::cluster::ConfigId;
+use crate::fabric::{FabricResult, NocConfig};
 use crate::isa::Program;
+use crate::kernels::tiling::{Shard, ShardGrid};
 use crate::kernels::{GemmPlan, GemmResult};
 
 /// Which engine evaluates a GEMM point.
@@ -88,6 +93,24 @@ impl PreparedGemm {
     }
 }
 
+/// A fabric-sharded GEMM: the full problem, the M x N shard grid (K
+/// stays local to every shard), and the *one* prepared per-shard plan
+/// every cluster reuses (shards are uniform by construction, so the
+/// plan cache serves the whole fabric from a single entry).
+#[derive(Clone, Debug)]
+pub struct ShardedGemm {
+    pub config: ConfigId,
+    /// Full-problem dimensions.
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub grid: ShardGrid,
+    /// Row-major shard list (one per busy cluster).
+    pub shards: Vec<Shard>,
+    /// Shared per-shard plan (`grid.sm x grid.sn x k`).
+    pub prep: Arc<PreparedGemm>,
+}
+
 /// A simulation engine.
 ///
 /// Implementations must be `Send + Sync`: the service drains batches
@@ -130,6 +153,20 @@ pub trait SimBackend: Send + Sync {
         b: &[f64],
         bias: &[f64],
     ) -> anyhow::Result<GemmResult>;
+
+    /// Evaluate one sharded GEMM across a multi-cluster fabric behind
+    /// a shared NoC. Operands are the *full* problem's (`a` row-major
+    /// `m x k`, `b` row-major `k x n`, `bias` length `n` when the
+    /// plan fuses one); scatter/gather is the backend's job. Both may
+    /// be empty iff `needs_data()` is false.
+    fn run_sharded(
+        &self,
+        sharded: &ShardedGemm,
+        noc: &NocConfig,
+        a: &[f64],
+        b: &[f64],
+        bias: &[f64],
+    ) -> anyhow::Result<FabricResult>;
 }
 
 #[cfg(test)]

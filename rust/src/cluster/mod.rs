@@ -109,6 +109,15 @@ impl Cluster {
 
     /// Advance one cycle.
     pub fn step(&mut self) {
+        self.step_gated(true);
+    }
+
+    /// Advance one cycle with the fabric NoC's verdict for this
+    /// cluster's DMA branch: when `noc_grant` is false the branch is
+    /// held off the shared links this cycle — no beat reaches the
+    /// TCDM mux, and a pending beat counts a stall. Single-cluster
+    /// runs always pass `true` (a private link is never contended).
+    pub fn step_gated(&mut self, noc_grant: bool) {
         let now = self.cycle;
 
         // ---- phase 1: FP subsystems --------------------------------
@@ -210,7 +219,14 @@ impl Cluster {
             }
         }
 
-        let beat = self.dma.next_beat(&self.mem);
+        let beat = if noc_grant {
+            self.dma.next_beat(&self.mem)
+        } else {
+            if self.dma.busy() {
+                self.dma.stall_cycles += 1;
+            }
+            None
+        };
         if self.dma.busy() {
             self.dma.busy_cycles += 1;
         }
@@ -331,6 +347,87 @@ mod tests {
         let cycles = cl.run(10_000).unwrap();
         assert!(cycles > 100, "must wait for the slow core: {cycles}");
         assert_eq!(cl.barriers_completed, 1);
+    }
+
+    #[test]
+    fn single_barrier_window_excludes_prologue() {
+        // One barrier then work: the compute window must run from the
+        // barrier release to halt, not from cycle 0 (the old fallback
+        // folded the pre-barrier prologue into the denominator).
+        let cfg = ConfigId::Base32Fc.cluster_config();
+        // Core 0: spin 60 cycles (the "prologue"), barrier, spin 40
+        // more, halt. Everyone else: barrier, halt.
+        let spin = |a: &mut Asm, n: u32| {
+            a.li(reg::T0, n);
+            let top = a.label();
+            a.bind(top);
+            a.push(Instr::Addi { rd: reg::T0, rs1: reg::T0, imm: -1 });
+            a.bne(reg::T0, 0, top);
+        };
+        let mut slow = Asm::new();
+        spin(&mut slow, 60);
+        slow.push(Instr::Barrier);
+        spin(&mut slow, 40);
+        slow.push(Instr::Ecall);
+        let mut progs = vec![slow.assemble()];
+        for _ in 1..9 {
+            progs.push(barrier_then_halt());
+        }
+        let mut cl = Cluster::new(cfg, progs);
+        cl.run(100_000).unwrap();
+        assert_eq!(cl.barriers_completed, 1);
+        let perf = cl.perf();
+        assert_eq!(
+            perf.window_cycles,
+            cl.cycle - cl.first_barrier_cycle,
+            "window = first barrier .. halt"
+        );
+        assert!(
+            perf.window_cycles < perf.cycles,
+            "prologue must be excluded: window {} vs cycles {}",
+            perf.window_cycles,
+            perf.cycles
+        );
+    }
+
+    #[test]
+    fn gated_step_defers_dma_beats() {
+        // A cluster stepped with the NoC grant withheld must not move
+        // any DMA data; granting it resumes bit-identical transfers.
+        let cfg = ConfigId::Base32Fc.cluster_config();
+        let mut dm = Asm::new();
+        dm.li(reg::A0, MAIN_MEM_BASE);
+        dm.push(Instr::Dmsrc { rs1: reg::A0 });
+        dm.li(reg::A1, TCDM_BASE);
+        dm.push(Instr::Dmdst { rs1: reg::A1 });
+        dm.li(reg::A2, 16 * 8);
+        dm.push(Instr::Dmcpy { rd: reg::T0, rs1: reg::A2 });
+        let poll = dm.label();
+        dm.bind(poll);
+        dm.push(Instr::Dmstat { rd: reg::T1 });
+        dm.bne(reg::T1, 0, poll);
+        dm.push(Instr::Ecall);
+        let mut progs: Vec<Program> =
+            (0..8).map(|_| empty_prog()).collect();
+        progs.push(dm.assemble());
+        let mut cl = Cluster::new(cfg, progs);
+        let xs: Vec<f64> = (0..16).map(|i| i as f64 + 0.5).collect();
+        cl.mem.write_slice_f64(MAIN_MEM_BASE, &xs);
+        // Hold the NoC closed: no bytes may move.
+        for _ in 0..50 {
+            cl.step_gated(false);
+        }
+        assert_eq!(cl.dma.bytes_moved, 0, "gated branch moved data");
+        assert!(cl.dma.stall_cycles > 0, "pending beats count stalls");
+        // Open it: transfer completes normally.
+        while !cl.all_halted() {
+            cl.step_gated(true);
+            assert!(cl.cycle < 10_000);
+        }
+        assert_eq!(cl.dma.bytes_moved, 16 * 8);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(cl.tcdm.read_f64(TCDM_BASE + (i as u32) * 8), x);
+        }
     }
 
     #[test]

@@ -54,10 +54,14 @@ impl ClusterPerf {
         let fpu_ops_total: u64 = fpu_ops_per_core.iter().sum();
         // All FP work happens between the first and last barrier
         // (prologue = DMA fill, epilogue = DMA drain, both FP-free).
-        let window_cycles = if cl.barriers_completed >= 2 {
-            cl.last_barrier_cycle - cl.first_barrier_cycle
-        } else {
-            cycles
+        // With exactly one release the window runs from that barrier
+        // to halt — folding the DMA prologue in (the old `cycles`
+        // fallback) would underreport utilization on single-pass
+        // problems. Only barrier-free runs measure the whole run.
+        let window_cycles = match cl.barriers_completed {
+            0 => cycles,
+            1 => cycles - cl.first_barrier_cycle,
+            _ => cl.last_barrier_cycle - cl.first_barrier_cycle,
         };
         let utilization = if window_cycles == 0 {
             0.0
@@ -111,6 +115,13 @@ impl ClusterPerf {
         }
     }
 
+    /// All retried core-side TCDM requests: bank-level round-robin
+    /// losses plus DMA-superbank-mux captures (the two counters are a
+    /// disjoint split; mirrors `XbarStats::core_conflicts_total`).
+    pub fn conflicts_total(&self) -> u64 {
+        self.tcdm_conflicts + self.tcdm_conflicts_dma
+    }
+
     /// Fraction of cycles lost to TCDM conflicts (approximate: each
     /// conflict delays one stream element by one cycle).
     pub fn conflict_rate(&self) -> f64 {
@@ -129,7 +140,7 @@ impl ClusterPerf {
             self.cycles,
             self.utilization * 100.0,
             self.fpu_ops_total,
-            self.tcdm_conflicts,
+            self.conflicts_total(),
             self.conflict_rate() * 100.0,
             self.dma_beats,
             self.barriers_completed,

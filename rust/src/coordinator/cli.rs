@@ -34,12 +34,13 @@ pub fn usage() -> &'static str {
      \n\
      COMMANDS:\n\
      \x20 run       --config <name> --m <M> --n <N> --k <K> \
-     [--layout grouped|linear|linear-pad] [--backend cycle|analytic]\n\
+     [--layout grouped|linear|linear-pad] [--backend cycle|analytic] \
+     [--clusters N]\n\
      \x20 net       --model mlp|ffn|qkv|attn|conv|llm \
      [--config <name>] [--backend cycle|analytic] [--threads N] \
-     [--seed S] [--out results]\n\
+     [--seed S] [--clusters N] [--out results]\n\
      \x20 sweep     [--backend analytic|cycle] [--config <name>|all] \
-     [--threads N] [--out results]\n\
+     [--threads N] [--clusters N] [--out results]\n\
      \x20 calibrate [--threads N] [--out results]\n\
      \x20 fig5      [--samples 50] [--seed 42] [--threads N] \
      [--backend cycle|analytic] [--out results]\n\
@@ -147,17 +148,26 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                 flags.get("layout").map(|s| s.as_str()).unwrap_or("grouped"),
             )?;
             let backend = backend_of(&flags, BackendKind::Cycle)?;
+            let clusters = flag(&flags, "clusters", 1usize)?;
             let svc = GemmService::of_kind(backend);
             let p = workload::Problem { m, n, k };
-            let row = experiments::run_point_with(&svc, id, p, layout)?;
+            let fabric = crate::fabric::FabricConfig::new(clusters);
+            let row = if clusters > 1 {
+                experiments::run_point_sharded(
+                    &svc, id, p, layout, &fabric,
+                )?
+            } else {
+                experiments::run_point_with(&svc, id, p, layout)?
+            };
             println!(
-                "{} {} layout={:?} backend={}\n  cycles={} window={} \
-                 util={:.2}% perf={:.2} DPGflop/s power={:.1} mW \
-                 eff={:.2} DPGflop/s/W conflicts={}{}",
+                "{} {} layout={:?} backend={} clusters={}\n  \
+                 cycles={} window={} util={:.2}% perf={:.2} DPGflop/s \
+                 power={:.1} mW eff={:.2} DPGflop/s/W conflicts={}{}",
                 id.name(),
                 p,
                 layout,
                 backend.name(),
+                clusters,
                 row.cycles,
                 row.window_cycles,
                 row.utilization * 100.0,
@@ -171,6 +181,13 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                     ""
                 },
             );
+            if clusters > 1 {
+                println!(
+                    "  (fabric metrics: mean per-cluster utilization, \
+                     throughput x{} clusters, NoC-inclusive power)",
+                    clusters,
+                );
+            }
         }
         "net" => {
             let model = flags
@@ -187,23 +204,25 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             let threads =
                 flag(&flags, "threads", runner::default_threads())?;
             let seed = flag(&flags, "seed", 2026u64)?;
+            let clusters = flag(&flags, "clusters", 1usize)?;
             let g = zoo::build(&model)?;
             eprintln!(
-                "net: `{model}` ({} ops, {} MACs) on {} via `{}` on \
-                 {threads} threads...",
+                "net: `{model}` ({} ops, {} MACs) on {} x{clusters} \
+                 via `{}` on {threads} threads...",
                 g.ops.len(),
                 g.macs(),
                 id.name(),
                 backend.name(),
             );
             let svc = GemmService::of_kind(backend);
-            let run = net::run_net(
+            let run = net::run_net_clustered(
                 &svc,
                 &g,
                 id,
                 LayoutKind::Grouped,
                 threads,
                 seed,
+                &crate::fabric::FabricConfig::new(clusters),
             )?;
             let doc = report::render_net(&run.report);
             println!("{doc}");
@@ -220,6 +239,7 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             let backend = backend_of(&flags, BackendKind::Analytic)?;
             let threads =
                 flag(&flags, "threads", runner::default_threads())?;
+            let clusters = flag(&flags, "clusters", 1usize)?;
             let configs: Vec<ConfigId> = match flags
                 .get("config")
                 .map(|s| s.as_str())
@@ -246,7 +266,12 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             }
             let svc = GemmService::of_kind(backend);
             let t0 = std::time::Instant::now();
-            let rows = experiments::sweep_grid(&svc, &configs, threads)?;
+            let rows = experiments::sweep_grid_on(
+                &svc,
+                &configs,
+                threads,
+                &crate::fabric::FabricConfig::new(clusters),
+            )?;
             let elapsed = t0.elapsed().as_secs_f64();
             let doc = report::render_sweep(&rows, backend.name(), elapsed);
             println!("{doc}");
@@ -488,6 +513,43 @@ mod tests {
     #[test]
     fn unknown_command_errors() {
         assert!(main_with_args(vec!["bogus".into()]).is_err());
+    }
+
+    #[test]
+    fn run_command_sharded_cycle() {
+        main_with_args(vec![
+            "run".into(),
+            "--m".into(),
+            "32".into(),
+            "--n".into(),
+            "32".into(),
+            "--k".into(),
+            "16".into(),
+            "--clusters".into(),
+            "4".into(),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn net_command_clustered_analytic() {
+        let dir = std::env::temp_dir().join("zerostall-net-fabric-test");
+        main_with_args(vec![
+            "net".into(),
+            "--model".into(),
+            "ffn".into(),
+            "--backend".into(),
+            "analytic".into(),
+            "--clusters".into(),
+            "2".into(),
+            "--threads".into(),
+            "2".into(),
+            "--out".into(),
+            dir.display().to_string(),
+        ])
+        .unwrap();
+        assert!(dir.join("net-ffn-analytic.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -5,8 +5,12 @@
 //! the analytic model's constants against cycle-accurate ground truth
 //! and reports the per-configuration error table.
 
-use crate::backend::{fit_calibration, CalSample, Calibration};
+use crate::backend::{
+    fit_calibration, fit_delta, predict_perf_noc, CalSample, Calibration,
+    NocSample,
+};
 use crate::cluster::ConfigId;
+use crate::fabric::{FabricConfig, NocConfig};
 use crate::kernels::{
     test_matrices, Activation, Epilogue, GemmJob, GemmResult,
     GemmService, LayoutKind,
@@ -68,8 +72,35 @@ fn fig5_row(p: Problem, r: &GemmResult) -> Fig5Row {
         gflops_per_w: e.gflops_per_w,
         cycles: r.cycles,
         window_cycles: r.perf.window_cycles,
-        conflicts: r.perf.tcdm_conflicts,
+        conflicts: r.perf.conflicts_total(),
     }
+}
+
+/// Run one (config, problem) point sharded across a cluster fabric.
+/// The row carries fabric-level metrics: mean per-cluster utilization,
+/// fabric throughput (util x 8 x busy clusters), fabric power
+/// including the NoC tax, and end-to-end (slowest-cluster) cycles.
+pub fn run_point_sharded(
+    svc: &GemmService,
+    config: ConfigId,
+    p: Problem,
+    layout: LayoutKind,
+    fabric: &FabricConfig,
+) -> anyhow::Result<Fig5Row> {
+    let job = GemmJob::for_problem(config, p.m, p.n, p.k, layout);
+    let fr = svc.run_sharded_job(&job, fabric)?;
+    let fe = model::fabric_energy(config, &fr.perfs(), fr.cycles);
+    Ok(Fig5Row {
+        config,
+        problem: p,
+        utilization: fr.mean_utilization(),
+        power_mw: fe.power_mw,
+        gflops: fe.gflops,
+        gflops_per_w: fe.gflops_per_w,
+        cycles: fr.cycles,
+        window_cycles: fr.window_cycles(),
+        conflicts: fr.conflicts_total(),
+    })
 }
 
 /// The Fig. 5 experiment: `samples` random sizes on every
@@ -111,6 +142,17 @@ pub fn sweep_grid(
     configs: &[ConfigId],
     threads: usize,
 ) -> anyhow::Result<Vec<Fig5Row>> {
+    sweep_grid_on(svc, configs, threads, &FabricConfig::single())
+}
+
+/// [`sweep_grid`] on an N-cluster fabric: every point is sharded
+/// through `GemmService::run_sharded` (fabric-level rows).
+pub fn sweep_grid_on(
+    svc: &GemmService,
+    configs: &[ConfigId],
+    threads: usize,
+    fabric: &FabricConfig,
+) -> anyhow::Result<Vec<Fig5Row>> {
     let dims = dim_grid();
     let mut jobs: Vec<(ConfigId, Problem)> = Vec::new();
     for &id in configs {
@@ -122,8 +164,13 @@ pub fn sweep_grid(
             }
         }
     }
+    let single = fabric.clusters <= 1;
     runner::parallel_map(&jobs, threads, |&(id, p)| {
-        run_point_with(svc, id, p, LayoutKind::Grouped)
+        if single {
+            run_point_with(svc, id, p, LayoutKind::Grouped)
+        } else {
+            run_point_sharded(svc, id, p, LayoutKind::Grouped, fabric)
+        }
     })
 }
 
@@ -256,7 +303,55 @@ pub fn calibrate_on(
     let measured = svc.run_batch(&jobs, threads)?;
     let samples: Vec<CalSample> =
         measured.iter().map(CalSample::from_result).collect();
-    let calibration = fit_calibration(&samples);
+    let mut calibration = fit_calibration(&samples);
+
+    // NoC-contention calibration: a DMA-bound sharded shape measured
+    // on a deliberately starved cycle fabric (8 branches, 1 beat/cycle
+    // of link budget) pins each config's `delta` between the
+    // contention-free and fully-serialized analytic predictions.
+    // Compute-bound samples carry no signal (the spread is zero) and
+    // leave the shipped default in place.
+    let fabric = FabricConfig {
+        clusters: 8,
+        noc: NocConfig { links: 1, beats_per_link: 1 },
+    };
+    let factor = fabric.noc_factor();
+    let (nm, nn, nk) = (256usize, 256usize, 8usize);
+    for id in ConfigId::all() {
+        let sh = svc.prepare_sharded(
+            id,
+            nm,
+            nn,
+            nk,
+            LayoutKind::Grouped,
+            Epilogue::NONE,
+            fabric.clusters,
+        )?;
+        if sh.grid.used_clusters() < 2 {
+            continue;
+        }
+        let job =
+            GemmJob::for_problem(id, nm, nn, nk, LayoutKind::Grouped);
+        let fr = svc.run_sharded_job(&job, &fabric)?;
+        let predict = |delta: f64| -> f64 {
+            let mut c = calibration.clone();
+            let mut cc = c.get(id);
+            cc.delta = delta;
+            c.set(id, cc);
+            predict_perf_noc(&c, id, &sh.prep.plan, factor)
+                .window_cycles as f64
+        };
+        let sample = NocSample {
+            window_measured: fr.window_cycles() as f64,
+            window_free: predict(0.0),
+            window_serialized: predict(1.0),
+        };
+        if let Some(d) = fit_delta(&[sample]) {
+            let mut cc = calibration.get(id);
+            cc.delta = d;
+            calibration.set(id, cc);
+        }
+    }
     // The error table reports the plain-GEMM points (the paper's
     // evaluation space); fused accuracy is covered by the NetGraph
     // tests and the `net` report.

@@ -16,11 +16,23 @@
 //! output tensor is real, and results are bit-identical to running
 //! each layer sequentially through the one-shot driver. The analytic
 //! backend schedules the same DAG without materializing data.
+//!
+//! On a multi-cluster fabric ([`run_net_clustered`]) the scheduler
+//! exploits both parallelism axes: independent ops of one ready wave
+//! are placed on different clusters round-robin (*layer-parallel* —
+//! the wave takes the busiest cluster's time), and a wave that is one
+//! large GEMM is sharded across the fabric through
+//! `GemmService::run_sharded` (*tensor-parallel* — numerics stay
+//! bit-identical because K is shard-local). The report carries
+//! per-cluster and fabric-level utilization/energy next to the
+//! single-cluster serialization baseline.
 
 use anyhow::{bail, Result};
 
 use crate::backend::BackendKind;
 use crate::cluster::{ClusterPerf, ConfigId};
+use crate::fabric::{FabricConfig, FabricResult};
+use crate::kernels::tiling::choose_shard_grid;
 use crate::kernels::{GemmService, LayoutKind, ServiceStats, N_CORES};
 use crate::model;
 use crate::util::rng::Rng;
@@ -52,6 +64,13 @@ pub struct LayerRow {
     /// TCDM round-trips this layer performs *beyond* the GEMM's own
     /// streaming (unfused elementwise passes). Zero for fused layers.
     pub extra_roundtrips: u64,
+    /// Cluster the wave scheduler placed this layer on
+    /// (layer-parallel assignment; sharded layers span the fabric and
+    /// report cluster 0).
+    pub cluster: usize,
+    /// Clusters a tensor-parallel layer was sharded across (1 = ran
+    /// whole on one cluster).
+    pub shards: usize,
 }
 
 /// Whole-network execution report.
@@ -61,8 +80,9 @@ pub struct NetReport {
     pub config: ConfigId,
     pub backend: BackendKind,
     pub layers: Vec<LayerRow>,
-    /// End-to-end cycles, layers serialized in wave order (one
-    /// cluster executes the whole network).
+    /// End-to-end cycles over the wave schedule: each wave costs its
+    /// busiest cluster's time. On a 1-cluster fabric this equals
+    /// [`NetReport::serial_cycles`].
     pub total_cycles: u64,
     pub total_energy_uj: f64,
     /// End-to-end FPU utilization over the summed compute windows.
@@ -74,6 +94,23 @@ pub struct NetReport {
     pub fused_elems: u64,
     pub extra_roundtrips: u64,
     pub plan_stats: ServiceStats,
+    /// Fabric size the network was scheduled on.
+    pub clusters: usize,
+    /// Serialization baseline: every scheduled work unit — each layer
+    /// and, for tensor-parallel layers, each *shard* — executed back
+    /// to back instead of in parallel. Shard cycles are the ones the
+    /// fabric run measured (NoC contention included), so the ratio to
+    /// [`NetReport::total_cycles`] isolates the *scheduling* gain; it
+    /// is not a contention-free 1-cluster rerun.
+    pub serial_cycles: u64,
+    /// Per-cluster busy cycles over the whole run.
+    pub per_cluster_cycles: Vec<u64>,
+    /// Per-cluster energy share (uJ).
+    pub per_cluster_energy_uj: Vec<f64>,
+    /// Whole-fabric FPU utilization: total FPU ops over end-to-end
+    /// time across *all* clusters' FPUs — idle clusters count against
+    /// it, unlike the compute-window metric above.
+    pub fabric_utilization: f64,
 }
 
 /// A completed network run: the report plus the network's output
@@ -119,6 +156,7 @@ fn add_pass_perf(elems: usize) -> ClusterPerf {
 enum WaveOut {
     Gemm(crate::kernels::GemmResult),
     Add { data: Vec<f64>, elems: usize },
+    Sharded(FabricResult),
 }
 
 /// Execute a network graph on one cluster configuration through a
@@ -131,7 +169,32 @@ pub fn run_net(
     threads: usize,
     seed: u64,
 ) -> Result<NetRun> {
+    run_net_clustered(
+        svc,
+        g,
+        config,
+        layout,
+        threads,
+        seed,
+        &FabricConfig::single(),
+    )
+}
+
+/// [`run_net`] on an N-cluster fabric: independent waves spread
+/// layer-parallel across clusters; a wave that is a single shardable
+/// GEMM runs tensor-parallel through `GemmService::run_sharded`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_net_clustered(
+    svc: &GemmService,
+    g: &NetGraph,
+    config: ConfigId,
+    layout: LayoutKind,
+    threads: usize,
+    seed: u64,
+    fabric: &FabricConfig,
+) -> Result<NetRun> {
     let functional = svc.backend_kind() == BackendKind::Cycle;
+    let n_clusters = fabric.clusters.max(1);
     let nt = g.tensors.len();
 
     // --- dependency structure (derived, not trusted from op order) ---
@@ -163,11 +226,14 @@ pub fn run_net(
     let mut n_done = 0usize;
     let mut layers: Vec<LayerRow> = Vec::new();
     let mut total_cycles = 0u64;
+    let mut serial_cycles = 0u64;
     let mut total_energy = 0.0f64;
     let mut window_sum = 0u64;
     let mut fpu_sum = 0u64;
     let mut fused_elems = 0u64;
     let mut extra_roundtrips = 0u64;
+    let mut per_cluster_cycles = vec![0u64; n_clusters];
+    let mut per_cluster_energy = vec![0.0f64; n_clusters];
 
     while n_done < g.ops.len() {
         let wave: Vec<usize> = (0..g.ops.len())
@@ -180,7 +246,41 @@ pub fn run_net(
                 g.ops.len()
             );
         }
-        let outs: Vec<WaveOut> =
+        // A lone GEMM wave on a multi-cluster fabric goes
+        // tensor-parallel when the partitioner finds a useful grid —
+        // the only way to keep more than one cluster busy.
+        let shard_wave = n_clusters > 1
+            && wave.len() == 1
+            && match &g.ops[wave[0]] {
+                NetOp::Gemm { x, w, .. } => {
+                    let (m, n) =
+                        (g.tensors[*x].rows, g.tensors[*w].cols);
+                    choose_shard_grid(m, n, n_clusters).used_clusters()
+                        > 1
+                }
+                NetOp::Add { .. } => false,
+            };
+        let outs: Vec<WaveOut> = if shard_wave {
+            let NetOp::Gemm { x, w, bias, epi, .. } = &g.ops[wave[0]]
+            else {
+                unreachable!("shard_wave implies a GEMM op")
+            };
+            let (xt, wt) = (&g.tensors[*x], &g.tensors[*w]);
+            let (m, n, k) = (xt.rows, wt.cols, xt.cols);
+            let x_data: &[f64] = store[*x].as_deref().unwrap_or(&[]);
+            let w_data: &[f64] = store[*w].as_deref().unwrap_or(&[]);
+            let bias_data: &[f64] = match bias {
+                Some(b) if functional => {
+                    store[*b].as_deref().unwrap_or(&[])
+                }
+                _ => &[],
+            };
+            let fr = svc.run_sharded(
+                config, m, n, k, layout, *epi, x_data, w_data,
+                bias_data, fabric,
+            )?;
+            vec![WaveOut::Sharded(fr)]
+        } else {
             runner::parallel_map(&wave, threads, |&i| {
                 match &g.ops[i] {
                     NetOp::Gemm { x, w, bias, epi, .. } => {
@@ -224,13 +324,74 @@ pub fn run_net(
                         Ok(WaveOut::Add { data, elems })
                     }
                 }
-            })?;
+            })?
+        };
 
         // Commit the wave: record rows, store outputs, free dead
-        // tensors, release dependents.
-        for (&i, out) in wave.iter().zip(outs) {
+        // tensors, release dependents. Layer-parallel placement:
+        // wave position p lands on cluster p % n_clusters; the wave
+        // costs its busiest cluster's time.
+        let mut wave_busy = vec![0u64; n_clusters];
+        for (pos, (&i, out)) in wave.iter().zip(outs).enumerate() {
+            let assigned = pos % n_clusters;
             let op = &g.ops[i];
+            // Serialization baseline contribution of a sharded layer:
+            // all its shards back to back on one cluster (set in the
+            // Sharded arm; plain layers just use their own cycles).
+            let mut serial_contrib: Option<u64> = None;
             let row = match (op, out) {
+                (
+                    NetOp::Gemm { name, x, w, epi, out, .. },
+                    WaveOut::Sharded(mut fr),
+                ) => {
+                    let fe = model::fabric_energy(
+                        config,
+                        &fr.perfs(),
+                        fr.cycles,
+                    );
+                    let t = &g.tensors[*out];
+                    let fused = (t.elems()
+                        * (usize::from(epi.bias)
+                            + usize::from(epi.act.is_some())))
+                        as u64;
+                    if functional {
+                        store[*out] = Some(std::mem::take(&mut fr.c));
+                    }
+                    live_bytes += t.bytes();
+                    peak_live_bytes = peak_live_bytes.max(live_bytes);
+                    // every shard's cluster is busy for its own run
+                    for (ci, s) in fr.shards.iter().enumerate() {
+                        let slot = ci % n_clusters;
+                        wave_busy[slot] =
+                            wave_busy[slot].max(s.cycles);
+                        per_cluster_energy[slot] +=
+                            fe.per_cluster[ci].energy_uj;
+                    }
+                    serial_contrib = Some(
+                        fr.shards.iter().map(|s| s.cycles).sum(),
+                    );
+                    let (xt, wt) = (&g.tensors[*x], &g.tensors[*w]);
+                    LayerRow {
+                        name: name.clone(),
+                        kind: "gemm",
+                        problem: Some(Problem {
+                            m: xt.rows,
+                            n: wt.cols,
+                            k: xt.cols,
+                        }),
+                        epilogue: epi.name(),
+                        cycles: fr.cycles,
+                        window_cycles: fr.window_cycles(),
+                        utilization: fr.mean_utilization(),
+                        power_mw: fe.power_mw,
+                        energy_uj: fe.total_uj,
+                        fpu_ops: fr.fpu_ops_total(),
+                        fused_elems: fused,
+                        extra_roundtrips: 0,
+                        cluster: 0,
+                        shards: fr.clusters(),
+                    }
+                }
                 (NetOp::Gemm { name, epi, out, .. }, WaveOut::Gemm(r)) => {
                     let e = model::energy(config, &r.perf);
                     let t = &g.tensors[*out];
@@ -262,6 +423,8 @@ pub fn run_net(
                         fpu_ops: r.perf.fpu_ops_total,
                         fused_elems: fused,
                         extra_roundtrips: 0,
+                        cluster: assigned,
+                        shards: 1,
                     }
                 }
                 (
@@ -289,16 +452,25 @@ pub fn run_net(
                         fpu_ops: perf.fpu_ops_total,
                         fused_elems: 0,
                         extra_roundtrips: elems as u64,
+                        cluster: assigned,
+                        shards: 1,
                     }
                 }
                 _ => unreachable!("wave output kind matches its op"),
             };
-            total_cycles += row.cycles;
+            serial_cycles += serial_contrib.unwrap_or(row.cycles);
             total_energy += row.energy_uj;
-            window_sum += row.window_cycles;
+            // A sharded layer's window is per-cluster time but its
+            // fpu_ops span all shards: weight the window by the shard
+            // count so utilization stays a per-FPU fraction (<= 1).
+            window_sum += row.window_cycles * row.shards as u64;
             fpu_sum += row.fpu_ops;
             fused_elems += row.fused_elems;
             extra_roundtrips += row.extra_roundtrips;
+            if row.shards == 1 {
+                wave_busy[assigned] += row.cycles;
+                per_cluster_energy[assigned] += row.energy_uj;
+            }
             layers.push(row);
 
             done[i] = true;
@@ -316,6 +488,12 @@ pub fn run_net(
                 deps[d] -= 1;
             }
         }
+        // the wave ends when its busiest cluster does
+        let elapsed = wave_busy.iter().copied().max().unwrap_or(0);
+        total_cycles += elapsed;
+        for (ci, &busy) in wave_busy.iter().enumerate() {
+            per_cluster_cycles[ci] += busy;
+        }
         peak_live_bytes = peak_live_bytes.max(live_bytes);
     }
 
@@ -331,6 +509,14 @@ pub fn run_net(
         })
         .collect();
 
+    let fabric_utilization = if total_cycles == 0 {
+        0.0
+    } else {
+        fpu_sum as f64
+            / (total_cycles as f64
+                * N_CORES as f64
+                * n_clusters as f64)
+    };
     let report = NetReport {
         model: g.name.clone(),
         config,
@@ -348,6 +534,11 @@ pub fn run_net(
         fused_elems,
         extra_roundtrips,
         plan_stats: svc.stats(),
+        clusters: n_clusters,
+        serial_cycles,
+        per_cluster_cycles,
+        per_cluster_energy_uj: per_cluster_energy,
+        fabric_utilization,
     };
     Ok(NetRun { report, outputs })
 }
@@ -403,6 +594,90 @@ mod tests {
             (16 * 24 * 2 + 16 * 16) as u64,
             "bias+relu on layer 0, bias on layer 1"
         );
+    }
+
+    #[test]
+    fn clustered_net_beats_serialization() {
+        let svc = GemmService::analytic();
+        let g = zoo::build("llm").unwrap();
+        let run = run_net_clustered(
+            &svc,
+            &g,
+            ConfigId::Zonl48Db,
+            LayoutKind::Grouped,
+            2,
+            7,
+            &FabricConfig::new(4),
+        )
+        .unwrap();
+        let r = &run.report;
+        assert_eq!(r.clusters, 4);
+        assert_eq!(r.per_cluster_cycles.len(), 4);
+        assert_eq!(r.per_cluster_energy_uj.len(), 4);
+        assert!(
+            r.total_cycles < r.serial_cycles,
+            "fabric schedule must beat 1-cluster serialization: \
+             {} vs {}",
+            r.total_cycles,
+            r.serial_cycles
+        );
+        assert!(r.fabric_utilization > 0.0);
+        // every large single-GEMM wave went tensor-parallel
+        assert!(
+            r.layers.iter().any(|l| l.shards > 1),
+            "llm waves of one GEMM must shard"
+        );
+        // single-cluster path still reports itself faithfully
+        let lone = run_net(
+            &svc,
+            &g,
+            ConfigId::Zonl48Db,
+            LayoutKind::Grouped,
+            2,
+            7,
+        )
+        .unwrap();
+        assert_eq!(lone.report.clusters, 1);
+        assert_eq!(
+            lone.report.total_cycles, lone.report.serial_cycles,
+            "one cluster: wave schedule == serialization"
+        );
+    }
+
+    #[test]
+    fn clustered_cycle_net_stays_bit_exact() {
+        let g = zoo::mlp(16, &[16, 24, 16]).unwrap();
+        let seed = 11;
+        let svc = GemmService::cycle();
+        let lone = run_net(
+            &svc,
+            &g,
+            ConfigId::Zonl48Db,
+            LayoutKind::Grouped,
+            2,
+            seed,
+        )
+        .unwrap();
+        let fab = run_net_clustered(
+            &svc,
+            &g,
+            ConfigId::Zonl48Db,
+            LayoutKind::Grouped,
+            2,
+            seed,
+            &FabricConfig::new(2),
+        )
+        .unwrap();
+        assert_eq!(lone.outputs.len(), fab.outputs.len());
+        for ((ln, lv), (fn_, fv)) in
+            lone.outputs.iter().zip(&fab.outputs)
+        {
+            assert_eq!(ln, fn_);
+            assert_eq!(
+                lv, fv,
+                "tensor-parallel execution must stay bit-identical"
+            );
+        }
     }
 
     #[test]

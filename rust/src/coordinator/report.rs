@@ -262,17 +262,19 @@ pub fn render_calibration(cal: &Calibration) -> String {
     out.push_str("## Analytic-model calibration constants\n\n");
     out.push_str(
         "| config | alpha (cyc/pass) | beta (cyc/outer-iter) | gamma \
-         (cyc/contested beat) | epsilon (cyc/epilogue op) |\n\
-         |---|---|---|---|---|\n",
+         (cyc/contested beat) | epsilon (cyc/epilogue op) | delta \
+         (NoC serialization frac) |\n\
+         |---|---|---|---|---|---|\n",
     );
     for (id, c) in cal.entries() {
         out.push_str(&format!(
-            "| {} | {} | {} | {} | {} |\n",
+            "| {} | {} | {} | {} | {} | {} |\n",
             id.name(),
             f(c.alpha, 2),
             f(c.beta, 2),
             f(c.gamma, 3),
             f(c.epsilon, 3),
+            f(c.delta, 3),
         ));
     }
     out
@@ -332,22 +334,29 @@ pub fn render_net(r: &crate::coordinator::net::NetReport) -> String {
         r.backend.name(),
     ));
     out.push_str(
-        "| layer | kind | shape | epilogue | cycles | window | util | \
-         power [mW] | energy [uJ] | fused elems | extra TCDM trips |\n\
-         |---|---|---|---|---|---|---|---|---|---|---|\n",
+        "| layer | kind | shape | epilogue | placement | cycles | \
+         window | util | power [mW] | energy [uJ] | fused elems | \
+         extra TCDM trips |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|---|\n",
     );
     for l in &r.layers {
         let shape = match &l.problem {
             Some(p) => p.to_string(),
             None => "-".to_string(),
         };
+        let placement = if l.shards > 1 {
+            format!("sharded x{}", l.shards)
+        } else {
+            format!("cl{}", l.cluster)
+        };
         out.push_str(&format!(
-            "| {} | {} | {} | {} | {} | {} | {:.1}% | {} | {} | {} | \
-             {} |\n",
+            "| {} | {} | {} | {} | {} | {} | {} | {:.1}% | {} | {} | \
+             {} | {} |\n",
             l.name,
             l.kind,
             shape,
             l.epilogue,
+            placement,
             l.cycles,
             l.window_cycles,
             l.utilization * 100.0,
@@ -374,6 +383,32 @@ pub fn render_net(r: &crate::coordinator::net::NetReport) -> String {
         r.plan_stats.plan_hits,
         r.plan_stats.plan_misses,
     ));
+    if r.clusters > 1 {
+        let speedup = r.serial_cycles as f64
+            / (r.total_cycles.max(1)) as f64;
+        out.push_str(&format!(
+            "* fabric: {} clusters, scheduling speedup {:.2}x vs \
+             serialized waves ({} cycles), fabric utilization {:.1}%\n",
+            r.clusters,
+            speedup,
+            r.serial_cycles,
+            r.fabric_utilization * 100.0,
+        ));
+        for (ci, (&cyc, &uj)) in r
+            .per_cluster_cycles
+            .iter()
+            .zip(&r.per_cluster_energy_uj)
+            .enumerate()
+        {
+            out.push_str(&format!(
+                "  * cluster {ci}: busy {} cycles ({:.0}% of \
+                 end-to-end), {} uJ\n",
+                cyc,
+                cyc as f64 / r.total_cycles.max(1) as f64 * 100.0,
+                f(uj, 2),
+            ));
+        }
+    }
     out
 }
 
@@ -385,6 +420,8 @@ pub fn net_csv(r: &crate::coordinator::net::NetReport) -> Csv {
         "n",
         "k",
         "epilogue",
+        "cluster",
+        "shards",
         "cycles",
         "window_cycles",
         "utilization",
@@ -407,6 +444,8 @@ pub fn net_csv(r: &crate::coordinator::net::NetReport) -> Csv {
             n,
             k,
             l.epilogue.clone(),
+            l.cluster.to_string(),
+            l.shards.to_string(),
             l.cycles.to_string(),
             l.window_cycles.to_string(),
             f(l.utilization, 5),

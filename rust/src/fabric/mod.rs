@@ -1,0 +1,373 @@
+//! ClusterFabric — N clusters behind a shared L2 / main-memory model
+//! with a bandwidth-limited NoC.
+//!
+//! The cluster is the unit of replication in Occamy-style many-cluster
+//! SoCs: once per-PE utilization is near-ideal (96–99% in Fig. 5), the
+//! remaining scaling axis is sharding a GEMM — and a NetGraph DAG —
+//! across clusters. This module owns that layer:
+//!
+//! * every cluster keeps its private TCDM, interconnect, and DMA
+//!   branch, exactly as in the single-cluster model;
+//! * the branches meet at a shared NoC into L2: per cycle the links
+//!   sustain a fixed *beat budget* ([`NocConfig::budget`]), and a
+//!   round-robin arbiter rotates grants across the clusters' pending
+//!   DMA beats — branches beyond the budget stall that cycle;
+//! * [`ClusterFabric::step`] advances all clusters in lockstep against
+//!   the arbiter, so cross-cluster timing interference is modeled
+//!   while numerics stay exactly per-cluster (operand blocks are
+//!   scattered into each cluster's main-memory image up front).
+//!
+//! Shard partitioning lives in `kernels::tiling` (`choose_shard_grid`:
+//! 2D M x N grid, K local, uniform blocks); backend-specific sharded
+//! evaluation behind `SimBackend::run_sharded`; `GemmService` fronts
+//! both with `run_sharded` / `prepare_sharded`.
+
+use anyhow::Result;
+
+use crate::cluster::{Cluster, ClusterPerf};
+use crate::kernels::tiling::Shard;
+
+/// Shared-NoC link provisioning: `links` parallel links, each
+/// sustaining `beats_per_link` 512-bit beats per cycle into L2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NocConfig {
+    pub links: usize,
+    pub beats_per_link: usize,
+}
+
+impl NocConfig {
+    /// Total beats the NoC can move per cycle (never 0).
+    pub fn budget(&self) -> usize {
+        (self.links * self.beats_per_link).max(1)
+    }
+}
+
+impl Default for NocConfig {
+    /// Two single-beat links — half a beat per cluster per cycle on
+    /// the 4-cluster fabric, enough to keep double-buffered
+    /// compute-bound GEMMs off the DMA roofline.
+    fn default() -> Self {
+        Self { links: 2, beats_per_link: 1 }
+    }
+}
+
+/// Fabric shape: how many clusters share the NoC.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FabricConfig {
+    pub clusters: usize,
+    pub noc: NocConfig,
+}
+
+impl FabricConfig {
+    pub fn new(clusters: usize) -> Self {
+        Self { clusters: clusters.max(1), noc: NocConfig::default() }
+    }
+
+    /// The degenerate single-cluster fabric (private link semantics).
+    pub fn single() -> Self {
+        Self::new(1)
+    }
+
+    /// Theoretical DMA-branch serialization of this fabric: how many
+    /// cycles the NoC needs per beat-per-cluster, relative to a
+    /// private link (`>= 1`).
+    pub fn noc_factor(&self) -> f64 {
+        (self.clusters as f64 / self.noc.budget() as f64).max(1.0)
+    }
+}
+
+/// Shared-link traffic counters for one fabric run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NocStats {
+    /// Beats granted onto the shared links.
+    pub grants: u64,
+    /// Pending beats deferred because the cycle's budget was spent.
+    pub denials: u64,
+    /// Cycles in which demand exceeded the link budget.
+    pub saturated_cycles: u64,
+}
+
+/// N lockstep clusters behind one NoC arbiter.
+pub struct ClusterFabric {
+    pub clusters: Vec<Cluster>,
+    pub noc_cfg: NocConfig,
+    pub noc: NocStats,
+    pub cycle: u64,
+    /// Round-robin start pointer for the next contested cycle.
+    rr: usize,
+    /// Per-cluster grant scratch (reused every cycle).
+    grants: Vec<bool>,
+}
+
+impl ClusterFabric {
+    pub fn new(clusters: Vec<Cluster>, noc_cfg: NocConfig) -> Self {
+        assert!(!clusters.is_empty(), "fabric needs at least 1 cluster");
+        let n = clusters.len();
+        Self {
+            clusters,
+            noc_cfg,
+            noc: NocStats::default(),
+            cycle: 0,
+            rr: 0,
+            grants: vec![false; n],
+        }
+    }
+
+    pub fn all_halted(&self) -> bool {
+        self.clusters.iter().all(|c| c.all_halted())
+    }
+
+    /// Advance every live cluster one cycle against the shared NoC.
+    ///
+    /// Busy DMA branches contest the cycle's beat budget round-robin;
+    /// idle branches keep their gate open so a transfer enqueued this
+    /// very cycle starts without an artificial bubble (this is what
+    /// makes a 1-cluster fabric cycle-identical to `Cluster::run`).
+    pub fn step(&mut self) {
+        let n = self.clusters.len();
+        let budget = self.noc_cfg.budget();
+        let mut want = 0usize;
+        let mut granted = 0usize;
+        self.grants.iter_mut().for_each(|g| *g = false);
+        for off in 0..n {
+            let i = (self.rr + off) % n;
+            let cl = &self.clusters[i];
+            if cl.all_halted() {
+                continue;
+            }
+            if cl.dma.busy() {
+                want += 1;
+                if granted < budget {
+                    self.grants[i] = true;
+                    granted += 1;
+                }
+            } else {
+                self.grants[i] = true;
+            }
+        }
+        self.noc.grants += granted as u64;
+        self.noc.denials += (want - granted) as u64;
+        if want > budget {
+            self.noc.saturated_cycles += 1;
+        }
+        self.rr = (self.rr + 1) % n;
+        for i in 0..n {
+            if !self.clusters[i].all_halted() {
+                let g = self.grants[i];
+                self.clusters[i].step_gated(g);
+            }
+        }
+        self.cycle += 1;
+    }
+
+    /// Run to completion (every cluster halted). Returns fabric
+    /// end-to-end cycles — the slowest cluster's halt time.
+    pub fn run(&mut self, max_cycles: u64) -> Result<u64> {
+        while !self.all_halted() {
+            self.step();
+            if self.cycle >= max_cycles {
+                anyhow::bail!(
+                    "fabric exceeded {max_cycles} cycles (deadlock?); \
+                     halted={:?}",
+                    self.clusters
+                        .iter()
+                        .map(|c| c.all_halted())
+                        .collect::<Vec<_>>()
+                );
+            }
+        }
+        Ok(self.cycle)
+    }
+
+    /// Per-cluster performance snapshots.
+    pub fn perfs(&self) -> Vec<ClusterPerf> {
+        self.clusters.iter().map(|c| c.perf()).collect()
+    }
+}
+
+/// Per-cluster outcome of a sharded fabric run.
+#[derive(Clone, Debug)]
+pub struct ShardRun {
+    pub shard: Shard,
+    /// This cluster's halt cycle.
+    pub cycles: u64,
+    pub perf: ClusterPerf,
+}
+
+/// Result of evaluating one sharded GEMM on a fabric (any backend).
+#[derive(Clone, Debug)]
+pub struct FabricResult {
+    /// Gathered row-major `M x N` output — empty on non-functional
+    /// backends, bit-identical to the single-cluster result otherwise
+    /// (K stays shard-local, so every element keeps its FMA order).
+    pub c: Vec<f64>,
+    /// Fabric end-to-end cycles (slowest cluster).
+    pub cycles: u64,
+    pub shards: Vec<ShardRun>,
+    pub noc: NocStats,
+}
+
+impl FabricResult {
+    /// Clusters the run kept busy.
+    pub fn clusters(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-cluster performance snapshots in shard order (the shape
+    /// `model::fabric_energy` consumes).
+    pub fn perfs(&self) -> Vec<ClusterPerf> {
+        self.shards.iter().map(|s| s.perf.clone()).collect()
+    }
+
+    /// Mean per-cluster FPU utilization over the compute windows.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.shards.is_empty() {
+            return 0.0;
+        }
+        self.shards.iter().map(|s| s.perf.utilization).sum::<f64>()
+            / self.shards.len() as f64
+    }
+
+    /// Longest per-cluster compute window (the fabric-level window).
+    pub fn window_cycles(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.perf.window_cycles)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total FPU ops across the fabric.
+    pub fn fpu_ops_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.perf.fpu_ops_total).sum()
+    }
+
+    /// Total retried TCDM requests across the fabric (both halves of
+    /// the conflict split).
+    pub fn conflicts_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.perf.conflicts_total()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ConfigId;
+    use crate::isa::asm::Asm;
+    use crate::isa::{reg, Instr, Program};
+    use crate::mem::{MAIN_MEM_BASE, TCDM_BASE};
+
+    fn empty_prog() -> Program {
+        let mut a = Asm::new();
+        a.push(Instr::Ecall);
+        a.assemble()
+    }
+
+    /// A cluster whose DM core streams `words` words in from main
+    /// memory, then halts.
+    fn dma_cluster(words: u32) -> Cluster {
+        let cfg = ConfigId::Base32Fc.cluster_config();
+        let mut dm = Asm::new();
+        dm.li(reg::A0, MAIN_MEM_BASE);
+        dm.push(Instr::Dmsrc { rs1: reg::A0 });
+        dm.li(reg::A1, TCDM_BASE);
+        dm.push(Instr::Dmdst { rs1: reg::A1 });
+        dm.li(reg::A2, words * 8);
+        dm.push(Instr::Dmcpy { rd: reg::T0, rs1: reg::A2 });
+        let poll = dm.label();
+        dm.bind(poll);
+        dm.push(Instr::Dmstat { rd: reg::T1 });
+        dm.bne(reg::T1, 0, poll);
+        dm.push(Instr::Ecall);
+        let mut progs: Vec<Program> =
+            (0..8).map(|_| empty_prog()).collect();
+        progs.push(dm.assemble());
+        let mut cl = Cluster::new(cfg, progs);
+        let xs: Vec<f64> = (0..words).map(|i| i as f64).collect();
+        cl.mem.write_slice_f64(MAIN_MEM_BASE, &xs);
+        cl
+    }
+
+    #[test]
+    fn noc_budget_math() {
+        assert_eq!(NocConfig::default().budget(), 2);
+        assert_eq!(
+            NocConfig { links: 0, beats_per_link: 1 }.budget(),
+            1,
+            "budget never collapses to 0"
+        );
+        let f = FabricConfig::new(4);
+        assert!((f.noc_factor() - 2.0).abs() < 1e-12);
+        assert!((FabricConfig::single().noc_factor() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn saturated_noc_serializes_dma_branches() {
+        // 4 DMA-only clusters behind a 1-beat/cycle NoC: the transfer
+        // phase must stretch ~4x vs a private link, and every beat
+        // still lands (data integrity under arbitration).
+        let words = 64u32;
+        let solo_cycles = {
+            let mut fab = ClusterFabric::new(
+                vec![dma_cluster(words)],
+                NocConfig { links: 1, beats_per_link: 1 },
+            );
+            fab.run(100_000).unwrap()
+        };
+        let mut fab = ClusterFabric::new(
+            (0..4).map(|_| dma_cluster(words)).collect(),
+            NocConfig { links: 1, beats_per_link: 1 },
+        );
+        let cycles = fab.run(100_000).unwrap();
+        // 4x8 beats over one link drain in 32 cycles vs 8 solo; allow
+        // a little poll-loop granularity on the halt edge.
+        assert!(
+            cycles >= solo_cycles + 20,
+            "4 branches over 1 link must serialize: {cycles} vs solo \
+             {solo_cycles}"
+        );
+        assert!(fab.noc.denials > 0);
+        assert!(fab.noc.saturated_cycles > 0);
+        for cl in &fab.clusters {
+            assert_eq!(cl.dma.bytes_moved, words as u64 * 8);
+            for i in 0..words {
+                assert_eq!(
+                    cl.tcdm.read_f64(TCDM_BASE + i * 8),
+                    i as f64,
+                    "beat data must survive arbitration"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_cluster_fabric_matches_plain_run() {
+        // The 1-cluster fabric is cycle-identical to Cluster::run —
+        // the NoC gate must never insert bubbles on a private link.
+        let mut plain = dma_cluster(64);
+        let plain_cycles = plain.run(100_000).unwrap();
+        let mut fab =
+            ClusterFabric::new(vec![dma_cluster(64)], NocConfig::default());
+        let fab_cycles = fab.run(100_000).unwrap();
+        assert_eq!(fab_cycles, plain_cycles);
+        assert_eq!(fab.noc.denials, 0);
+    }
+
+    #[test]
+    fn round_robin_rotates_under_saturation() {
+        // 2 clusters on a 1-beat link: grants must alternate, so both
+        // finish within a beat of each other.
+        let mut fab = ClusterFabric::new(
+            vec![dma_cluster(64), dma_cluster(64)],
+            NocConfig { links: 1, beats_per_link: 1 },
+        );
+        fab.run(100_000).unwrap();
+        let halts: Vec<u64> =
+            fab.clusters.iter().map(|c| c.cycle).collect();
+        let spread = halts.iter().max().unwrap() - halts.iter().min().unwrap();
+        assert!(
+            spread <= 4,
+            "fair round-robin keeps halt times together: {halts:?}"
+        );
+    }
+}

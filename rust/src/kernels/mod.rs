@@ -19,4 +19,7 @@ pub use driver::{
 pub use epilogue::{Activation, Epilogue};
 pub use layout::{plan_buffers, plan_buffers_fused, BufferMap, LayoutKind};
 pub use service::{problem_seed, GemmJob, GemmService, ServiceStats};
-pub use tiling::{choose_tiling, choose_tiling_for, Tiling};
+pub use tiling::{
+    choose_shard_grid, choose_tiling, choose_tiling_for, Shard,
+    ShardGrid, Tiling,
+};

@@ -23,15 +23,19 @@ use anyhow::Result;
 
 use crate::backend::{
     Analytic, BackendKind, Calibration, CycleAccurate, PreparedGemm,
-    SimBackend,
+    ShardedGemm, SimBackend,
 };
 use crate::cluster::ConfigId;
 use crate::coordinator::runner;
+use crate::fabric::{FabricConfig, FabricResult};
 
 use super::codegen::build_programs_fused;
-use super::driver::{plan_gemm_fused, test_bias, test_matrices, GemmResult};
+use super::driver::{
+    check_dims, plan_gemm_fused, test_bias, test_matrices, GemmResult,
+};
 use super::epilogue::Epilogue;
 use super::layout::LayoutKind;
+use super::tiling::choose_shard_grid;
 
 /// Plan-cache key.
 pub type PlanKey = (usize, usize, usize, ConfigId, LayoutKind, Epilogue);
@@ -251,6 +255,97 @@ impl GemmService {
         }
     }
 
+    /// Shard-aware planning: partition M x N across `clusters`
+    /// clusters (K stays shard-local) and prepare the *one* uniform
+    /// per-shard plan through the plan cache — every cluster of the
+    /// fabric reuses the same `PreparedGemm`, so a fabric run costs a
+    /// single plan-cache entry.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prepare_sharded(
+        &self,
+        config: ConfigId,
+        m: usize,
+        n: usize,
+        k: usize,
+        layout: LayoutKind,
+        epi: Epilogue,
+        clusters: usize,
+    ) -> Result<ShardedGemm> {
+        check_dims(m, n, k)?;
+        let grid = choose_shard_grid(m, n, clusters);
+        let prep =
+            self.prepare_fused(config, grid.sm, grid.sn, k, layout, epi)?;
+        Ok(ShardedGemm {
+            config,
+            m,
+            n,
+            k,
+            grid,
+            shards: grid.shards(),
+            prep,
+        })
+    }
+
+    /// Evaluate one GEMM sharded across a cluster fabric: scatter
+    /// operand blocks, run all clusters in lockstep against the
+    /// shared NoC, gather C. On the cycle backend the gathered C is
+    /// bit-identical to the single-cluster run — K stays shard-local,
+    /// so every output element keeps its FMA association order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_sharded(
+        &self,
+        config: ConfigId,
+        m: usize,
+        n: usize,
+        k: usize,
+        layout: LayoutKind,
+        epi: Epilogue,
+        a: &[f64],
+        b: &[f64],
+        bias: &[f64],
+        fabric: &FabricConfig,
+    ) -> Result<FabricResult> {
+        let sh = self.prepare_sharded(
+            config,
+            m,
+            n,
+            k,
+            layout,
+            epi,
+            fabric.clusters,
+        )?;
+        self.backend.run_sharded(&sh, &fabric.noc, a, b, bias)
+    }
+
+    /// [`GemmService::run_sharded`] for a batched job (operands
+    /// generated from its seed when the backend is functional).
+    pub fn run_sharded_job(
+        &self,
+        job: &GemmJob,
+        fabric: &FabricConfig,
+    ) -> Result<FabricResult> {
+        let sh = self.prepare_sharded(
+            job.config,
+            job.m,
+            job.n,
+            job.k,
+            job.layout,
+            job.epi,
+            fabric.clusters,
+        )?;
+        if self.backend.needs_data() {
+            let (a, b) = test_matrices(job.m, job.n, job.k, job.seed);
+            let bias = if job.epi.bias {
+                test_bias(job.n, job.seed)
+            } else {
+                Vec::new()
+            };
+            self.backend.run_sharded(&sh, &fabric.noc, &a, &b, &bias)
+        } else {
+            self.backend.run_sharded(&sh, &fabric.noc, &[], &[], &[])
+        }
+    }
+
     /// Drain a batch across `threads` workers; results preserve the
     /// submission order.
     pub fn run_batch(
@@ -381,6 +476,86 @@ mod tests {
         .unwrap();
         assert_eq!(r.c, via_drv.c);
         assert_eq!(r.cycles, via_drv.cycles);
+    }
+
+    #[test]
+    fn sharded_cycle_matches_single_cluster_bit_exact() {
+        use crate::fabric::FabricConfig;
+        let svc = GemmService::cycle();
+        let (m, n, k) = (32, 32, 16);
+        let (a, b) = test_matrices(m, n, k, 13);
+        let lone = svc
+            .run(ConfigId::Zonl48Db, m, n, k, LayoutKind::Grouped, &a, &b)
+            .unwrap();
+        let fab = svc
+            .run_sharded(
+                ConfigId::Zonl48Db,
+                m,
+                n,
+                k,
+                LayoutKind::Grouped,
+                crate::kernels::Epilogue::NONE,
+                &a,
+                &b,
+                &[],
+                &FabricConfig::new(4),
+            )
+            .unwrap();
+        assert_eq!(fab.clusters(), 4);
+        assert_eq!(fab.c, lone.c, "gathered C must be bit-identical");
+        assert!(fab.cycles < lone.cycles, "4 shards finish sooner");
+    }
+
+    #[test]
+    fn sharded_plans_share_one_cache_entry() {
+        use crate::fabric::FabricConfig;
+        let svc = GemmService::analytic();
+        let job = GemmJob::for_problem(
+            ConfigId::Zonl48Db,
+            64,
+            64,
+            64,
+            LayoutKind::Grouped,
+        );
+        svc.run_sharded_job(&job, &FabricConfig::new(4)).unwrap();
+        let s = svc.stats();
+        assert_eq!(s.plan_misses, 1, "uniform shards = one plan");
+        // Re-running the same sharded job is a pure cache hit.
+        svc.run_sharded_job(&job, &FabricConfig::new(4)).unwrap();
+        let s2 = svc.stats();
+        assert_eq!(s2.plan_misses, 1);
+        assert!(s2.plan_hits >= 1);
+    }
+
+    #[test]
+    fn sharded_single_cluster_fabric_degenerates_cleanly() {
+        use crate::fabric::FabricConfig;
+        let svc = GemmService::cycle();
+        let (m, n, k) = (16, 16, 16);
+        let (a, b) = test_matrices(m, n, k, 5);
+        let lone = svc
+            .run(ConfigId::Zonl48Db, m, n, k, LayoutKind::Grouped, &a, &b)
+            .unwrap();
+        let fab = svc
+            .run_sharded(
+                ConfigId::Zonl48Db,
+                m,
+                n,
+                k,
+                LayoutKind::Grouped,
+                crate::kernels::Epilogue::NONE,
+                &a,
+                &b,
+                &[],
+                &FabricConfig::single(),
+            )
+            .unwrap();
+        assert_eq!(fab.clusters(), 1);
+        assert_eq!(fab.c, lone.c);
+        assert_eq!(
+            fab.cycles, lone.cycles,
+            "1-cluster fabric is cycle-identical to the plain run"
+        );
     }
 
     #[test]

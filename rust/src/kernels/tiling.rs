@@ -104,6 +104,104 @@ pub fn choose_tiling_for(
     best.map(|(_, t)| t)
 }
 
+// ------------------------------------------------------------------
+// Fabric-level sharding (multi-cluster partitioner)
+// ------------------------------------------------------------------
+
+/// One block of the fabric-level M x N shard grid. K stays local to
+/// every shard (complete dot products, like the L1 tiling), so shards
+/// never reduce across clusters and the gathered C is bit-identical
+/// to a single-cluster run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// Grid coordinates (row-major over the `gm x gn` grid).
+    pub row: usize,
+    pub col: usize,
+    /// Element offsets of this block in the full problem.
+    pub m0: usize,
+    pub n0: usize,
+    /// Block shape (uniform across the grid).
+    pub m: usize,
+    pub n: usize,
+}
+
+/// The fabric-level partition: `gm x gn` uniform `sm x sn` blocks.
+///
+/// Invariants (enforced by [`choose_shard_grid`]):
+/// * `gm * sm == m`, `gn * sn == n` — the grid tiles the problem
+///   exactly, no remainder shards;
+/// * `sm % 8 == 0`, `sn % 8 == 0` — every block stays on the
+///   cluster's 8-grid (and `sn` on the UNROLL grid), so each shard is
+///   itself a valid GEMM problem;
+/// * all blocks identical — one `PreparedGemm` (plan-cache entry)
+///   serves every cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardGrid {
+    pub gm: usize,
+    pub gn: usize,
+    pub sm: usize,
+    pub sn: usize,
+}
+
+impl ShardGrid {
+    /// Clusters the grid keeps busy (`<=` the fabric size; the
+    /// partitioner may leave clusters idle on indivisible problems).
+    pub fn used_clusters(&self) -> usize {
+        self.gm * self.gn
+    }
+
+    /// Row-major shard list.
+    pub fn shards(&self) -> Vec<Shard> {
+        let mut v = Vec::with_capacity(self.used_clusters());
+        for row in 0..self.gm {
+            for col in 0..self.gn {
+                v.push(Shard {
+                    row,
+                    col,
+                    m0: row * self.sm,
+                    n0: col * self.sn,
+                    m: self.sm,
+                    n: self.sn,
+                });
+            }
+        }
+        v
+    }
+}
+
+/// Choose the M x N shard grid for `clusters` clusters: maximize the
+/// number of busy clusters, then minimize fabric DMA traffic — a
+/// `gm x gn` grid moves `(m*gn + n*gm) * k` operand words over the
+/// NoC, so skewed problems prefer splitting their long dimension.
+/// Falls back toward fewer clusters (ultimately `1 x 1`) when the
+/// dims don't divide on the 8-grid.
+pub fn choose_shard_grid(m: usize, n: usize, clusters: usize) -> ShardGrid {
+    let clusters = clusters.max(1);
+    let mut best = ShardGrid { gm: 1, gn: 1, sm: m, sn: n };
+    let mut best_used = 1usize;
+    let mut best_traffic = usize::MAX;
+    for gm in 1..=clusters {
+        if gm * 8 > m || m % (gm * 8) != 0 {
+            continue;
+        }
+        for gn in 1..=clusters / gm {
+            if gn * 8 > n || n % (gn * 8) != 0 {
+                continue;
+            }
+            let used = gm * gn;
+            let traffic = m * gn + n * gm;
+            if used > best_used
+                || (used == best_used && traffic < best_traffic)
+            {
+                best_used = used;
+                best_traffic = traffic;
+                best = ShardGrid { gm, gn, sm: m / gm, sn: n / gn };
+            }
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +261,78 @@ mod tests {
             fused.mt * fused.nt + fused.nt <= GROUP_WORDS,
             "bias slice must fit the C group: {fused:?}"
         );
+    }
+
+    #[test]
+    fn shard_grid_uses_all_clusters_when_divisible() {
+        let g = choose_shard_grid(128, 128, 4);
+        assert_eq!(g.used_clusters(), 4);
+        assert_eq!((g.gm * g.sm, g.gn * g.sn), (128, 128));
+        // square problem: balanced 2x2 beats 4x1 / 1x4 on traffic
+        assert_eq!((g.gm, g.gn), (2, 2));
+        let shards = g.shards();
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards[3], Shard {
+            row: 1,
+            col: 1,
+            m0: 64,
+            n0: 64,
+            m: 64,
+            n: 64,
+        });
+    }
+
+    #[test]
+    fn shard_grid_splits_the_long_dimension() {
+        // 256 x 32: splitting N into 4 would leave 8-wide slivers and
+        // cost 256*4 words of A replication; 4x1 over M is cheaper.
+        let g = choose_shard_grid(256, 32, 4);
+        assert_eq!(g.used_clusters(), 4);
+        assert_eq!((g.gm, g.gn), (4, 1));
+        assert_eq!((g.sm, g.sn), (64, 32));
+    }
+
+    #[test]
+    fn shard_grid_degrades_on_indivisible_dims() {
+        // 24 x 24 over 4 clusters: 2x2 fits (12 is not a multiple of
+        // 8, so 2-way splits are illegal) -> 3-way splits work on the
+        // 8-grid; 3x1 or 1x3 uses 3 of the 4 clusters.
+        let g = choose_shard_grid(24, 24, 4);
+        assert_eq!(g.used_clusters(), 3);
+        assert!(g.sm % 8 == 0 && g.sn % 8 == 0);
+        // 8 x 8 cannot split at all.
+        let tiny = choose_shard_grid(8, 8, 4);
+        assert_eq!(tiny.used_clusters(), 1);
+        assert_eq!((tiny.sm, tiny.sn), (8, 8));
+    }
+
+    #[test]
+    fn shard_grid_covers_problem_exactly() {
+        for &(m, n, c) in &[
+            (64, 64, 2),
+            (64, 64, 4),
+            (128, 96, 4),
+            (96, 64, 8),
+            (40, 72, 6),
+        ] {
+            let g = choose_shard_grid(m, n, c);
+            assert!(g.used_clusters() <= c);
+            let mut covered = vec![false; m * n];
+            for s in g.shards() {
+                assert_eq!((s.m, s.n), (g.sm, g.sn), "uniform blocks");
+                for i in s.m0..s.m0 + s.m {
+                    for j in s.n0..s.n0 + s.n {
+                        assert!(!covered[i * n + j], "overlap at {i},{j}");
+                        covered[i * n + j] = true;
+                    }
+                }
+            }
+            assert_eq!(
+                covered.iter().filter(|&&x| x).count(),
+                m * n,
+                "{m}x{n}/{c}: grid must tile the problem exactly"
+            );
+        }
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod core;
 pub mod dma;
+pub mod fabric;
 pub mod isa;
 pub mod kernels;
 pub mod mem;

@@ -40,11 +40,22 @@ pub struct DmaBeat {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct XbarStats {
     pub core_grants: u64,
+    /// Core requests that lost their bank's round-robin to another
+    /// core port (bank-level losses only — disjoint from
+    /// `core_conflicts_dma`).
     pub core_conflicts: u64,
-    /// Core conflicts lost specifically to the DMA superbank mux.
+    /// Core requests whose whole superbank was captured by a granted
+    /// DMA beat, one count per losing port per cycle.
     pub core_conflicts_dma: u64,
     pub dma_grants: u64,
     pub dma_conflicts: u64,
+}
+
+impl XbarStats {
+    /// All denied-and-retried core requests, regardless of cause.
+    pub fn core_conflicts_total(&self) -> u64 {
+        self.core_conflicts + self.core_conflicts_dma
+    }
 }
 
 /// Outcome of one arbitration cycle.
@@ -205,12 +216,24 @@ impl Interconnect {
         }
 
         // ---- stats ----------------------------------------------------
+        // Split the losers by cause: every request whose superbank a
+        // granted DMA beat captured lost to the mux (one count per
+        // port), everything else lost its bank's round-robin.
         self.stats.core_grants += granted as u64;
-        self.stats.core_conflicts += (reqs.len() - granted) as u64;
+        let mut dma_captured = 0u64;
         if dma_granted && core_wants_dma_sb {
-            // at least one of the losers lost to the DMA mux
-            self.stats.core_conflicts_dma += 1;
+            for (i, r) in reqs.iter().enumerate() {
+                if !grants[i]
+                    && tcdm.superbank_of_bank(tcdm.bank_of(r.addr))
+                        == dma_sb.unwrap()
+                {
+                    dma_captured += 1;
+                }
+            }
         }
+        self.stats.core_conflicts_dma += dma_captured;
+        self.stats.core_conflicts +=
+            ((reqs.len() - granted) as u64).saturating_sub(dma_captured);
 
         out
     }
@@ -378,6 +401,66 @@ mod tests {
         }
         assert_eq!(x.stats.core_conflicts, 0);
         assert_eq!(x.stats.dma_conflicts, 0);
+    }
+
+    #[test]
+    fn dma_mux_losers_counted_per_port() {
+        // Acceptance: a cycle with k ports losing to the DMA mux
+        // reports exactly k in the DMA-conflict counter and 0
+        // bank-level conflicts.
+        let mut tcdm = tcdm32();
+        let mut x = Interconnect::new(32, 36);
+        let beat = DmaBeat {
+            addr: TCDM_BASE, // superbank 0 (banks 0..8)
+            n_words: 8,
+            write: true,
+            data: [5; 8],
+        };
+        // k = 3 ports to three *distinct* banks inside superbank 0:
+        // none of them conflicts at the bank level, all lose to the mux.
+        let reqs: Vec<_> =
+            (0..3).map(|p| rd(p, TCDM_BASE + (p as u32) * 8)).collect();
+        let (g, _, o) = run(&mut x, &mut tcdm, &reqs, Some(&beat));
+        assert!(o.dma_granted, "DMA wins the first contested cycle");
+        assert!(g.iter().all(|&gg| !gg), "all ports captured");
+        assert_eq!(x.stats.core_conflicts_dma, 3, "one count per port");
+        assert_eq!(x.stats.core_conflicts, 0, "no bank-level losses");
+    }
+
+    #[test]
+    fn conflict_split_is_disjoint_and_complete() {
+        // Mixed cycle: 2 ports to one bank outside the DMA superbank
+        // (1 bank-level loser) + 2 ports to distinct banks inside it
+        // (2 mux losers).
+        let mut tcdm = tcdm32();
+        let mut x = Interconnect::new(32, 36);
+        let beat = DmaBeat {
+            addr: TCDM_BASE, // superbank 0
+            n_words: 8,
+            write: true,
+            data: [9; 8],
+        };
+        let reqs = vec![
+            rd(0, TCDM_BASE),          // bank 0, captured
+            rd(1, TCDM_BASE + 8),      // bank 1, captured
+            rd(2, TCDM_BASE + 9 * 8),  // bank 9, wins
+            rd(3, TCDM_BASE + 9 * 8),  // bank 9, bank-level loser
+        ];
+        let (g, _, o) = run(&mut x, &mut tcdm, &reqs, Some(&beat));
+        assert!(o.dma_granted);
+        assert_eq!(g, vec![false, false, true, false]);
+        assert_eq!(x.stats.core_conflicts_dma, 2);
+        assert_eq!(x.stats.core_conflicts, 1);
+        assert_eq!(
+            x.stats.core_conflicts_total(),
+            3,
+            "split partitions the losers"
+        );
+        // A denied DMA beat charges nothing to the DMA counter.
+        let (g2, _, o2) = run(&mut x, &mut tcdm, &reqs, Some(&beat));
+        assert!(!o2.dma_granted, "priority flipped to the core side");
+        assert!(g2[0] && g2[1]);
+        assert_eq!(x.stats.core_conflicts_dma, 2, "unchanged");
     }
 
     #[test]

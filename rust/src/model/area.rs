@@ -138,6 +138,37 @@ pub fn table1() -> Vec<AreaBreakdown> {
     ConfigId::all().map(area).to_vec()
 }
 
+/// NoC area constants (MGE), structured like the cluster crossbar
+/// model: each cluster contributes a link switch, plus a shared
+/// L2-side mux that grows with the cluster count.
+mod noc_cal {
+    /// Per-cluster 512-bit link switch + buffering (MGE).
+    pub const LINK_PER_CLUSTER: f64 = 0.045;
+    /// Shared L2-side arbitration/mux tree per cluster port (MGE).
+    pub const L2_MUX_PER_CLUSTER: f64 = 0.018;
+}
+
+/// Fabric area: `clusters` cluster instances plus the shared NoC.
+/// The NoC lands in the interconnect component (it is one), so Table
+/// II-style component splits keep working at fabric scale.
+pub fn fabric_area(id: ConfigId, clusters: usize) -> AreaBreakdown {
+    let clusters = clusters.max(1);
+    let one = area(id);
+    let n = clusters as f64;
+    let noc = n
+        * (noc_cal::LINK_PER_CLUSTER + noc_cal::L2_MUX_PER_CLUSTER);
+    AreaBreakdown {
+        id,
+        cell_mge: one.cell_mge * n + noc,
+        macro_mge: one.macro_mge * n,
+        wire_mm: one.wire_mm * n,
+        compute_mge: one.compute_mge * n,
+        mem_mge: one.mem_mge * n,
+        interco_mge: one.interco_mge * n + noc,
+        ctrl_mge: one.ctrl_mge * n,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,6 +207,27 @@ mod tests {
         assert!(db64 > 8.0 && db64 < 16.0, "db64 {db64:.1}%");
         assert!(db48 > -1.0 && db48 < 3.0, "db48 {db48:.1}%");
         assert!(fc64 > db64 && db64 > db48);
+    }
+
+    #[test]
+    fn fabric_area_scales_with_noc_overhead() {
+        let one = area(ConfigId::Zonl48Db);
+        let fab = fabric_area(ConfigId::Zonl48Db, 4);
+        assert_eq!(fabric_area(ConfigId::Zonl48Db, 1).id, one.id);
+        // 4 clusters cost a bit more than 4x one cluster (the NoC)...
+        assert!(fab.total_mge() > 4.0 * one.total_mge());
+        // ...but the NoC tax stays small (< 2% of the fabric).
+        let noc = fab.total_mge() - 4.0 * one.total_mge();
+        assert!(
+            noc / fab.total_mge() < 0.02,
+            "NoC share {:.3}",
+            noc / fab.total_mge()
+        );
+        let single_fab = fabric_area(ConfigId::Zonl48Db, 1).total_mge();
+        assert!(
+            (single_fab - (one.total_mge() + 0.063)).abs() < 1e-9,
+            "1-cluster fabric = cluster + one NoC port: {single_fab}"
+        );
     }
 
     #[test]

@@ -5,6 +5,6 @@ pub mod area;
 pub mod congestion;
 pub mod power;
 
-pub use area::{area, table1, AreaBreakdown};
+pub use area::{area, fabric_area, table1, AreaBreakdown};
 pub use congestion::{congestion, render_fig4, CongestionReport};
-pub use power::{energy, EnergyReport, PowerBreakdown};
+pub use power::{energy, fabric_energy, EnergyReport, FabricEnergy, PowerBreakdown};

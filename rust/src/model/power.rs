@@ -43,6 +43,10 @@ mod cal {
     /// Instruction re-issue from the FREP ring buffer (pJ) — the
     /// energy win of fetching loop bodies from the RB (§III-A).
     pub const E_RB_REPLAY: f64 = 0.5;
+    /// A 512-bit beat traversing the shared fabric NoC into L2 (pJ):
+    /// long wires + the L2 macro access, on top of the cluster-local
+    /// `E_DMA_BEAT` already charged per beat.
+    pub const E_NOC_BEAT: f64 = 35.0;
     /// Extra ZONL sequencer leakage+clock per core (mW).
     pub const P_SEQ_ZONL: f64 = 0.33;
     /// Integer instruction execute (pJ).
@@ -117,9 +121,13 @@ pub fn energy(id: ConfigId, perf: &ClusterPerf) -> EnergyReport {
         cal::P_MEM_STATIC + to_mw(e_macro(t, cfg.tcdm_bytes) * accesses);
 
     // --- interconnect domain ---
+    // A retried request burns arbitration energy whether it lost its
+    // bank's round-robin or the DMA superbank mux, so both halves of
+    // the conflict split are charged.
+    let retries = perf.conflicts_total() as f64;
     let interco_mw = to_mw(
         e_interconnect(t) * perf.tcdm_core_accesses as f64
-            + cal::E_CONFLICT * perf.tcdm_conflicts as f64
+            + cal::E_CONFLICT * retries
             + cal::E_DMA_BEAT * perf.dma_beats as f64,
     );
 
@@ -143,6 +151,53 @@ pub fn energy(id: ConfigId, perf: &ClusterPerf) -> EnergyReport {
         gflops,
         gflops_per_w: gflops / total_w,
         gflops_per_mm2: gflops / area.total_mm2(),
+    }
+}
+
+/// Fabric-level energy rollup: per-cluster event energy plus the NoC
+/// links' transfer energy, over the fabric's end-to-end time.
+#[derive(Clone, Debug)]
+pub struct FabricEnergy {
+    /// One report per busy cluster, in shard order.
+    pub per_cluster: Vec<EnergyReport>,
+    /// NoC link energy for all beats that crossed it (uJ).
+    pub noc_uj: f64,
+    /// Cluster energies + NoC energy (uJ).
+    pub total_uj: f64,
+    /// Average fabric power over `fabric_cycles` (mW).
+    pub power_mw: f64,
+    /// Fabric throughput: mean per-cluster utilization x 8 DPGflop/s
+    /// x busy clusters (the paper's peak convention, scaled out).
+    pub gflops: f64,
+    pub gflops_per_w: f64,
+}
+
+/// Evaluate the model over a fabric run's per-cluster counters.
+pub fn fabric_energy(
+    id: ConfigId,
+    perfs: &[ClusterPerf],
+    fabric_cycles: u64,
+) -> FabricEnergy {
+    let per_cluster: Vec<EnergyReport> =
+        perfs.iter().map(|p| energy(id, p)).collect();
+    let noc_beats: u64 = perfs.iter().map(|p| p.dma_beats).sum();
+    let noc_uj = cal::E_NOC_BEAT * noc_beats as f64 * 1e-6;
+    let total_uj =
+        per_cluster.iter().map(|e| e.energy_uj).sum::<f64>() + noc_uj;
+    let secs = fabric_cycles.max(1) as f64 * 1e-9;
+    let power_mw = total_uj * 1e-6 / secs * 1e3;
+    let n = perfs.len().max(1) as f64;
+    let mean_util =
+        perfs.iter().map(|p| p.utilization).sum::<f64>() / n;
+    let gflops = mean_util * 8.0 * perfs.len() as f64;
+    let total_w = (power_mw / 1e3).max(1e-12);
+    FabricEnergy {
+        per_cluster,
+        noc_uj,
+        total_uj,
+        power_mw,
+        gflops,
+        gflops_per_w: gflops / total_w,
     }
 }
 
@@ -202,6 +257,33 @@ mod tests {
         // And the Dobu version avoids most of that cost.
         let db64 = run(ConfigId::Zonl64Db);
         assert!(db64.power.interco_mw < 1.2 * z32.power.interco_mw);
+    }
+
+    #[test]
+    fn fabric_energy_rolls_up_clusters_plus_noc() {
+        let (a, b) = test_matrices(32, 32, 32, 3);
+        let r =
+            run_matmul(ConfigId::Zonl48Db, 32, 32, 32, &a, &b).unwrap();
+        let single = energy(ConfigId::Zonl48Db, &r.perf);
+        let perfs = vec![r.perf.clone(); 4];
+        let fe = fabric_energy(
+            ConfigId::Zonl48Db,
+            &perfs,
+            r.perf.window_cycles,
+        );
+        assert_eq!(fe.per_cluster.len(), 4);
+        assert!(fe.noc_uj > 0.0, "NoC beats must cost energy");
+        let want = 4.0 * single.energy_uj + fe.noc_uj;
+        assert!(
+            (fe.total_uj - want).abs() < 1e-9,
+            "{} vs {want}",
+            fe.total_uj
+        );
+        assert!((fe.gflops - 4.0 * single.gflops).abs() < 1e-9);
+        assert!(
+            fe.gflops_per_w < single.gflops_per_w,
+            "the NoC tax makes the fabric slightly less efficient"
+        );
     }
 
     #[test]

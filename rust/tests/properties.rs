@@ -10,7 +10,10 @@ use zerostall::isa::{decode::decode, encode::encode, Instr, SsrField};
 use zerostall::kernels::{
     choose_tiling, plan_buffers, LayoutKind, Tiling,
 };
-use zerostall::mem::{Tcdm, Topology, TCDM_BASE};
+use zerostall::mem::{
+    DmaBeat, Interconnect, PortRequest, Tcdm, Topology,
+    BANKS_PER_SUPERBANK, TCDM_BASE,
+};
 use zerostall::ssr::{oracle_addresses, Streamer};
 use zerostall::util::prop::{check, Config, Shrink};
 use zerostall::util::rng::Rng;
@@ -394,6 +397,115 @@ fn prop_distinct_banks_no_conflicts() {
             } else {
                 Err("conflict among distinct banks".into())
             }
+        },
+    );
+}
+
+// =================================================================
+// Dobu hyperbank-boundary addressing: bank_of / hyperbank_of /
+// superbank_of_bank agree at the seam, and a maximal-width DMA beat
+// ending exactly at the boundary never trips the crosses-superbank
+// debug assert.
+// =================================================================
+
+/// A Dobu geometry (atomic for shrinking — the space is tiny).
+#[derive(Clone, Debug)]
+struct DobuSpec {
+    banks_per_hyper: usize,
+    words_per_bank: usize,
+}
+
+impl Shrink for DobuSpec {
+    fn shrinks(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+#[test]
+fn prop_dobu_hyperbank_boundary_addressing() {
+    check(
+        &cfg(40, 0xD0B0),
+        |rng| DobuSpec {
+            banks_per_hyper: rng.range(1, 5) * 8,
+            words_per_bank: rng.range(1, 8) * 64,
+        },
+        |spec| {
+            let bph = spec.banks_per_hyper;
+            let bytes = 2 * bph * spec.words_per_bank * 8;
+            let mut t = Tcdm::new(
+                Topology::Dobu { banks_per_hyper: bph },
+                bytes,
+            );
+            let half = (bytes / 2) as u32;
+            let last0 = TCDM_BASE + half - 8; // last word of hb 0
+            let first1 = TCDM_BASE + half; // first word of hb 1
+            if t.hyperbank_of(last0) != 0 {
+                return Err("last word left hyperbank 0".into());
+            }
+            if t.hyperbank_of(first1) != 1 {
+                return Err("first word not in hyperbank 1".into());
+            }
+            if t.bank_of(last0) != bph - 1 {
+                return Err(format!(
+                    "last word of hb0 in bank {} (want {})",
+                    t.bank_of(last0),
+                    bph - 1
+                ));
+            }
+            if t.bank_of(first1) != bph {
+                return Err(format!(
+                    "first word of hb1 in bank {} (want {bph})",
+                    t.bank_of(first1)
+                ));
+            }
+            // Superbank view agrees: the seam separates the last
+            // superbank of hb0 from the first of hb1.
+            let sb_last = t.superbank_of_bank(t.bank_of(last0));
+            let sb_first = t.superbank_of_bank(t.bank_of(first1));
+            if sb_last != bph / BANKS_PER_SUPERBANK - 1
+                || sb_first != bph / BANKS_PER_SUPERBANK
+            {
+                return Err(format!(
+                    "superbanks straddle the seam: {sb_last} / \
+                     {sb_first}"
+                ));
+            }
+            // Maximal-width beats hugging the seam from both sides:
+            // neither may trip the crosses-superbank debug assert
+            // inside arbitrate (active in test builds).
+            let mut x = Interconnect::new(2 * bph, 36);
+            let reqs: Vec<PortRequest> = Vec::new();
+            let mut grants: Vec<bool> = Vec::new();
+            let mut data: Vec<u64> = Vec::new();
+            for (addr, tag) in [
+                (TCDM_BASE + half - 64, 7u64), // ends at the seam
+                (first1, 9u64),                // starts at the seam
+            ] {
+                let beat = DmaBeat {
+                    addr,
+                    n_words: 8,
+                    write: true,
+                    data: [tag; 8],
+                };
+                let o = x.arbitrate(
+                    &mut t,
+                    &reqs,
+                    &mut grants,
+                    &mut data,
+                    Some(&beat),
+                );
+                if !o.dma_granted {
+                    return Err("uncontested beat denied".into());
+                }
+                for w in 0..8u32 {
+                    if t.read_u64(addr + w * 8) != tag {
+                        return Err(format!(
+                            "beat word {w} lost at {addr:#x}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
         },
     );
 }
