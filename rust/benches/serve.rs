@@ -1,0 +1,54 @@
+//! Bench: ServeSim throughput — how fast the serving engine drains a
+//! request trace through the analytic backend (the triage
+//! configuration for capacity planning), FIFO vs continuous batching.
+
+use zerostall::coordinator::serve::{serve, Policy, ServeConfig};
+use zerostall::kernels::GemmService;
+use zerostall::util::bench::Bencher;
+
+fn main() {
+    println!("== serve bench: request-level serving engine ==");
+    let b = Bencher::default();
+
+    let mut cfg =
+        ServeConfig::new(vec!["ffn".to_string(), "qkv".to_string()]);
+    cfg.clusters = 4;
+    cfg.requests = 64;
+    cfg.rate_per_mcycle = 50.0;
+    cfg.burst = 0.2;
+    cfg.slo = Some(u64::MAX);
+    cfg.threads = 4;
+    cfg.seed = 42;
+
+    for policy in [Policy::Fifo, Policy::Continuous] {
+        let mut c = cfg.clone();
+        c.policy = policy;
+        // Warm service: steady-state serving is plan-cache hits.
+        let svc = GemmService::analytic();
+        let s = b.run(
+            &format!("serve/analytic_{}_64req_4cl", policy.name()),
+            || serve(&svc, &c).unwrap(),
+        );
+        let run = serve(&svc, &c).unwrap();
+        println!(
+            "    -> {:.0} requests/s engine rate; simulated {:.3} \
+             req/Mcycle sustained, p99 {} cycles, plan cache {:?}",
+            s.throughput(c.requests as f64),
+            run.report.throughput_per_mcycle(),
+            run.report.p99(),
+            run.report.plan_stats,
+        );
+    }
+
+    // Cold-cache serving: every request stream against a fresh
+    // service — the delta is what plan memoization buys a server.
+    let mut c = cfg.clone();
+    c.policy = Policy::Continuous;
+    let s_cold = b.run("serve/analytic_cb_64req_cold_cache", || {
+        serve(&GemmService::analytic(), &c).unwrap()
+    });
+    println!(
+        "    -> {:.0} requests/s cold",
+        s_cold.throughput(c.requests as f64)
+    );
+}

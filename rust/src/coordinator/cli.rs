@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   run       — one GEMM on one configuration, print metrics
 //!   net       — a multi-layer zoo network through the DAG scheduler
+//!   serve     — request-level serving simulation (open-loop arrivals,
+//!               FIFO vs continuous batching, latency percentiles)
 //!   sweep     — the full {8..128}^3 grid through a chosen backend
 //!   calibrate — fit the analytic model vs cycle-accurate ground truth
 //!   fig5      — the random-size sweep (box plots + CSV + headline)
@@ -24,7 +26,9 @@ use std::path::PathBuf;
 use crate::backend::BackendKind;
 use crate::cluster::ConfigId;
 use crate::coordinator::workload::zoo;
-use crate::coordinator::{experiments, net, report, runner, workload};
+use crate::coordinator::{
+    experiments, net, report, runner, serve, workload,
+};
 use crate::kernels::{GemmService, LayoutKind};
 
 pub fn usage() -> &'static str {
@@ -39,6 +43,10 @@ pub fn usage() -> &'static str {
      \x20 net       --model mlp|ffn|qkv|attn|conv|llm \
      [--config <name>] [--backend cycle|analytic] [--threads N] \
      [--seed S] [--clusters N] [--out results]\n\
+     \x20 serve     --model <zoo[,zoo...]> [--rate R] [--burst B] \
+     [--policy fifo|cb] [--clusters N] [--requests N] \
+     [--backend cycle|analytic] [--seed S] [--slo CYCLES] \
+     [--threads N] [--out results]\n\
      \x20 sweep     [--backend analytic|cycle] [--config <name>|all] \
      [--threads N] [--clusters N] [--out results]\n\
      \x20 calibrate [--threads N] [--out results]\n\
@@ -229,6 +237,91 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             let stem = format!("net-{model}-{}", backend.name());
             report::save(&out_dir, &format!("{stem}.md"), &doc)?;
             report::net_csv(&run.report)
+                .write(&out_dir.join(format!("{stem}.csv")))?;
+            eprintln!(
+                "wrote {}/{stem}.{{md,csv}}",
+                out_dir.display()
+            );
+        }
+        "serve" => {
+            let models_s = flags
+                .get("model")
+                .cloned()
+                .unwrap_or_else(|| "ffn".into());
+            let models: Vec<String> = models_s
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            let name = flags
+                .get("config")
+                .cloned()
+                .unwrap_or_else(|| "zonl48db".into());
+            let id = ConfigId::from_name(&name)
+                .ok_or_else(|| anyhow::anyhow!("unknown config {name}"))?;
+            let backend = backend_of(&flags, BackendKind::Analytic)?;
+            let policy_s = flags
+                .get("policy")
+                .cloned()
+                .unwrap_or_else(|| "cb".into());
+            let policy =
+                serve::Policy::from_name(&policy_s).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown policy `{policy_s}` (fifo|cb)"
+                    )
+                })?;
+            let slo = match flags.get("slo") {
+                None => None,
+                Some(v) => Some(v.parse::<u64>().map_err(|_| {
+                    anyhow::anyhow!("bad value for --slo: {v}")
+                })?),
+            };
+            let mut cfg = serve::ServeConfig::new(models);
+            cfg.config = id;
+            cfg.policy = policy;
+            cfg.clusters = flag(&flags, "clusters", 1usize)?;
+            cfg.requests = flag(&flags, "requests", 64usize)?;
+            cfg.rate_per_mcycle = flag(&flags, "rate", 5.0f64)?;
+            anyhow::ensure!(
+                cfg.rate_per_mcycle.is_finite()
+                    && cfg.rate_per_mcycle > 0.0,
+                "--rate must be a positive request rate per Mcycle, \
+                 got {}",
+                cfg.rate_per_mcycle
+            );
+            cfg.burst = flag(&flags, "burst", 0.0f64)?;
+            anyhow::ensure!(
+                (0.0..1.0).contains(&cfg.burst),
+                "--burst is a probability in [0, 1), got {}",
+                cfg.burst
+            );
+            cfg.seed = flag(&flags, "seed", 2026u64)?;
+            cfg.threads =
+                flag(&flags, "threads", runner::default_threads())?;
+            cfg.slo = slo;
+            eprintln!(
+                "serve: {} requests of `{}` at {} req/Mcycle \
+                 (burst {}) on {} x{} via `{}`, policy `{}`...",
+                cfg.requests,
+                cfg.models.join("+"),
+                cfg.rate_per_mcycle,
+                cfg.burst,
+                id.name(),
+                cfg.clusters,
+                backend.name(),
+                policy.name(),
+            );
+            let svc = GemmService::of_kind(backend);
+            let run = serve::serve(&svc, &cfg)?;
+            let doc = report::render_serve(&run.report);
+            println!("{doc}");
+            let stem = format!(
+                "serve-{}-{}",
+                cfg.models.join("+"),
+                policy.name()
+            );
+            report::save(&out_dir, &format!("{stem}.md"), &doc)?;
+            report::serve_csv(&run)
                 .write(&out_dir.join(format!("{stem}.csv")))?;
             eprintln!(
                 "wrote {}/{stem}.{{md,csv}}",
@@ -572,6 +665,92 @@ mod tests {
         assert!(dir.join("net-ffn-cycle.csv").exists());
         assert!(dir.join("net-ffn-analytic.md").exists());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_command_runs_cb_analytic() {
+        let dir = std::env::temp_dir().join("zerostall-serve-cli-test");
+        main_with_args(vec![
+            "serve".into(),
+            "--model".into(),
+            "ffn".into(),
+            "--backend".into(),
+            "analytic".into(),
+            "--policy".into(),
+            "cb".into(),
+            "--clusters".into(),
+            "2".into(),
+            "--requests".into(),
+            "8".into(),
+            "--threads".into(),
+            "2".into(),
+            "--out".into(),
+            dir.display().to_string(),
+        ])
+        .unwrap();
+        assert!(dir.join("serve-ffn-cb.md").exists());
+        assert!(dir.join("serve-ffn-cb.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_command_model_mix_and_fifo() {
+        let dir =
+            std::env::temp_dir().join("zerostall-serve-cli-mix-test");
+        main_with_args(vec![
+            "serve".into(),
+            "--model".into(),
+            "ffn,qkv".into(),
+            "--policy".into(),
+            "fifo".into(),
+            "--requests".into(),
+            "6".into(),
+            "--rate".into(),
+            "2.5".into(),
+            "--burst".into(),
+            "0.25".into(),
+            "--out".into(),
+            dir.display().to_string(),
+        ])
+        .unwrap();
+        assert!(dir.join("serve-ffn+qkv-fifo.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_command_rejects_bad_inputs() {
+        assert!(main_with_args(vec![
+            "serve".into(),
+            "--policy".into(),
+            "lifo".into(),
+        ])
+        .is_err());
+        assert!(main_with_args(vec![
+            "serve".into(),
+            "--model".into(),
+            "resnet9000".into(),
+            "--requests".into(),
+            "1".into(),
+        ])
+        .is_err());
+        assert!(main_with_args(vec![
+            "serve".into(),
+            "--slo".into(),
+            "soon".into(),
+        ])
+        .is_err());
+        assert!(main_with_args(vec![
+            "serve".into(),
+            "--rate".into(),
+            "-3".into(),
+        ])
+        .is_err());
+        assert!(main_with_args(vec![
+            "serve".into(),
+            "--burst".into(),
+            "2".into(),
+        ])
+        .is_err());
     }
 
     #[test]

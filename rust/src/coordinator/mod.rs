@@ -1,10 +1,11 @@
 //! Experiment orchestration: workload sampling, the NetGraph DAG
-//! runner, the multi-threaded sweep runner, report rendering, and the
-//! CLI.
+//! runner, the request-level serving simulator, the multi-threaded
+//! sweep runner, report rendering, and the CLI.
 
 pub mod cli;
 pub mod experiments;
 pub mod net;
 pub mod report;
 pub mod runner;
+pub mod serve;
 pub mod workload;

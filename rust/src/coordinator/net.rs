@@ -130,8 +130,9 @@ pub fn tensor_data(seed: u64, tid: usize, elems: usize) -> Vec<f64> {
 /// Cost model for an unfused elementwise pass over `elems` elements:
 /// the compute cores split the rows, each element is a
 /// load-compute-store round trip through the LSU (3 TCDM accesses),
-/// plus a fixed pass overhead.
-fn add_pass_cycles(elems: usize) -> u64 {
+/// plus a fixed pass overhead. Shared with `coordinator::serve` (and
+/// the serve golden test, which reconstructs expected totals from it).
+pub fn add_pass_cycles(elems: usize) -> u64 {
     (elems as u64).div_ceil(N_CORES as u64) * 3 + 64
 }
 

@@ -458,6 +458,95 @@ pub fn net_csv(r: &crate::coordinator::net::NetReport) -> Csv {
     c
 }
 
+// ------------------------------------------------------------ serve --
+
+pub fn render_serve(r: &crate::coordinator::serve::ServeReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "## Serve `{}` on {} via the `{}` backend — policy `{}`, \
+         {} clusters\n\n",
+        r.model,
+        r.config.name(),
+        r.backend.name(),
+        r.policy.name(),
+        r.clusters,
+    ));
+    out.push_str(&format!(
+        "* offered load: {:.2} req/Mcycle (burst {:.2}), {} requests, \
+         seed {}\n",
+        r.rate_per_mcycle, r.burst, r.requests, r.seed,
+    ));
+    out.push_str(&format!(
+        "* completed: {} in {} cycles -> sustained {:.3} req/Mcycle\n",
+        r.completed,
+        r.makespan_cycles,
+        r.throughput_per_mcycle(),
+    ));
+    out.push_str(&format!(
+        "* latency cycles: p50 {} / p95 {} / p99 {} (mean {:.0}, min \
+         {}, max {})\n",
+        r.p50(),
+        r.p95(),
+        r.p99(),
+        r.latency.mean(),
+        r.latency.min(),
+        r.latency.max(),
+    ));
+    out.push_str(&format!(
+        "* SLO {} cycles: {}/{} attained ({:.1}%) -> {:.3} attained \
+         req/Mcycle\n",
+        r.slo_cycles,
+        r.slo_attained,
+        r.completed,
+        r.slo_attainment() * 100.0,
+        r.slo_attained_throughput(),
+    ));
+    out.push_str(&format!(
+        "* scheduler: {} waves ({} tensor-parallel), {} GEMM \
+         dispatches over {} ops\n",
+        r.waves, r.sharded_waves, r.gemm_ops, r.total_ops,
+    ));
+    out.push_str(&format!(
+        "* plan cache: {} hits / {} misses ({:.1}% hit rate under \
+         churn)\n",
+        r.plan_stats.plan_hits,
+        r.plan_stats.plan_misses,
+        r.plan_stats.hit_rate() * 100.0,
+    ));
+    for (ci, u) in r.cluster_utilization().iter().enumerate() {
+        out.push_str(&format!(
+            "  * cluster {ci}: busy {} cycles ({:.1}% of makespan)\n",
+            r.per_cluster_busy[ci],
+            u * 100.0,
+        ));
+    }
+    out
+}
+
+pub fn serve_csv(run: &crate::coordinator::serve::ServeRun) -> Csv {
+    let mut c = Csv::new(vec![
+        "req",
+        "model",
+        "arrival",
+        "completion",
+        "latency_cycles",
+        "slo_met",
+        "ops",
+    ]);
+    for row in &run.rows {
+        c.row(vec![
+            row.id.to_string(),
+            row.model.clone(),
+            row.arrival.to_string(),
+            row.completion.to_string(),
+            row.latency.to_string(),
+            (row.slo_met as u8).to_string(),
+            row.ops.to_string(),
+        ]);
+    }
+    c
+}
+
 // ------------------------------------------------------------ sweep --
 
 /// Summary of a (possibly full-grid) backend sweep: per-config
@@ -554,6 +643,26 @@ mod tests {
         assert!(doc.contains("end-to-end"));
         let csv = net_csv(&run.report);
         assert_eq!(csv.rows(), run.report.layers.len());
+    }
+
+    #[test]
+    fn serve_report_renders_and_csv_matches_rows() {
+        use crate::coordinator::serve::{serve, Policy, ServeConfig};
+        use crate::kernels::GemmService;
+        let svc = GemmService::analytic();
+        let mut cfg = ServeConfig::new(vec!["ffn".to_string()]);
+        cfg.requests = 4;
+        cfg.clusters = 2;
+        cfg.policy = Policy::Continuous;
+        cfg.slo = Some(u64::MAX);
+        let run = serve(&svc, &cfg).unwrap();
+        let doc = render_serve(&run.report);
+        assert!(doc.contains("## Serve `ffn`"));
+        assert!(doc.contains("latency cycles: p50"));
+        assert!(doc.contains("hit rate under churn"));
+        assert!(doc.contains("cluster 1: busy"));
+        let csv = serve_csv(&run);
+        assert_eq!(csv.rows(), run.report.completed);
     }
 
     #[test]

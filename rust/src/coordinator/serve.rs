@@ -1,0 +1,850 @@
+//! ServeSim — a deterministic request-level serving simulator on top
+//! of `GemmService` + `ClusterFabric`.
+//!
+//! The paper's 96–99% per-cluster utilization only matters at the
+//! system level if the fabric sustains it under realistic traffic, so
+//! this module closes the loop the ROADMAP's "serve heavy traffic"
+//! north star asks for:
+//!
+//! * an **open-loop arrival process** (seeded via [`crate::util::rng`])
+//!   draws NetGraph inference requests from the workload zoo with
+//!   exponential inter-arrival gaps (`rate_per_mcycle`) and an
+//!   optional burstiness knob (`burst` = probability an arrival lands
+//!   on the same cycle as its predecessor);
+//! * a **scheduler with pluggable policies** drives the existing
+//!   backends in virtual time:
+//!   - [`Policy::Fifo`] — the baseline: strict one-request-at-a-time
+//!     service in arrival order; each request's DAG executes wave by
+//!     wave, multi-op waves spreading layer-parallel across clusters,
+//!     but no request ever overlaps another;
+//!   - [`Policy::Continuous`] — continuous batching: every wave pools
+//!     the *ready* ops of **all** in-flight requests, merges the GEMMs
+//!     into one [`GemmService::run_batch`] dispatch, and packs them
+//!     onto the least-loaded clusters; a wave that is a single
+//!     shardable GEMM with idle clusters goes tensor-parallel through
+//!     [`GemmService::run_sharded_job`] instead.
+//! * per-request latency accumulates from **backend cycle counts**
+//!   (cycle-accurate or calibrated-analytic — the same `--backend`
+//!   switch as everywhere else), and the report carries p50/p95/p99
+//!   latency (streaming [`CycleHistogram`] accounting), sustained and
+//!   SLO-attained throughput, plan-cache hit rate under model churn,
+//!   and per-cluster utilization.
+//!
+//! Time advances wave-synchronously: a wave costs its busiest
+//! cluster's assigned cycles, each assigned op finishes at its
+//! cluster-local position inside the wave, and newly arrived requests
+//! join at the next wave boundary. Everything — arrivals, costs,
+//! placement, tie-breaks — is derived from the seed and the backend,
+//! so a serve run is bit-for-bit reproducible across runs and thread
+//! counts (a property test compares whole reports for equality).
+
+use anyhow::{ensure, Result};
+
+use crate::backend::BackendKind;
+use crate::cluster::ConfigId;
+use crate::fabric::FabricConfig;
+use crate::kernels::{
+    choose_shard_grid, problem_seed, GemmJob, GemmService, LayoutKind,
+    ServiceStats,
+};
+use crate::util::prop::Shrink;
+use crate::util::rng::Rng;
+use crate::util::stats::CycleHistogram;
+
+use super::net::add_pass_cycles;
+use super::workload::graph::{NetGraph, NetOp};
+use super::workload::zoo;
+
+/// Scheduling policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// One request at a time, in arrival order (baseline).
+    Fifo,
+    /// Continuous batching across all in-flight requests.
+    Continuous,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::Continuous => "cb",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Policy> {
+        match s {
+            "fifo" => Some(Policy::Fifo),
+            "cb" | "continuous" => Some(Policy::Continuous),
+            _ => None,
+        }
+    }
+}
+
+/// Serving-run parameters.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Zoo model names; each request samples one uniformly.
+    pub models: Vec<String>,
+    pub config: ConfigId,
+    pub layout: LayoutKind,
+    pub policy: Policy,
+    pub clusters: usize,
+    /// Number of requests the arrival process generates.
+    pub requests: usize,
+    /// Mean offered load, requests per million cycles.
+    pub rate_per_mcycle: f64,
+    /// Probability in `[0, 1)` that an arrival shares its
+    /// predecessor's cycle (bursty traffic).
+    pub burst: f64,
+    pub seed: u64,
+    /// Latency SLO in cycles; `None` derives `4 x` the isolated
+    /// (unloaded FIFO) latency of the first model in the mix.
+    pub slo: Option<u64>,
+    /// Host threads for batched backend dispatches (never affects
+    /// results — only wall-clock).
+    pub threads: usize,
+}
+
+impl ServeConfig {
+    /// Defaults: zonl48db / grouped layout, continuous batching on one
+    /// cluster, 32 requests at 5 req/Mcycle, no bursts, auto SLO.
+    pub fn new(models: Vec<String>) -> ServeConfig {
+        ServeConfig {
+            models,
+            config: ConfigId::Zonl48Db,
+            layout: LayoutKind::Grouped,
+            policy: Policy::Continuous,
+            clusters: 1,
+            requests: 32,
+            rate_per_mcycle: 5.0,
+            burst: 0.0,
+            seed: 0xC0FFEE,
+            slo: None,
+            threads: 2,
+        }
+    }
+}
+
+/// One inference request of the arrival trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeRequest {
+    pub id: usize,
+    /// Index into [`ServeConfig::models`].
+    pub model: usize,
+    /// Arrival cycle.
+    pub arrival: u64,
+    /// Per-request operand seed (functional backends).
+    pub seed: u64,
+}
+
+impl Shrink for ServeRequest {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.arrival > 0 {
+            out.push(ServeRequest { arrival: self.arrival / 2, ..*self });
+            out.push(ServeRequest { arrival: 0, ..*self });
+        }
+        if self.model > 0 {
+            out.push(ServeRequest { model: 0, ..*self });
+        }
+        out
+    }
+}
+
+/// A full generated arrival trace. The engine sorts it by arrival
+/// itself, so shrunk (re-timed) traces stay valid inputs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrivalTrace {
+    pub requests: Vec<ServeRequest>,
+}
+
+impl Shrink for ArrivalTrace {
+    fn shrinks(&self) -> Vec<Self> {
+        self.requests
+            .shrinks()
+            .into_iter()
+            .map(|requests| ArrivalTrace { requests })
+            .collect()
+    }
+}
+
+/// Generate the deterministic open-loop arrival trace for a config:
+/// exponential gaps with mean `1e6 / rate_per_mcycle` cycles, each
+/// arrival collapsing onto its predecessor's cycle with probability
+/// `burst`, models sampled uniformly from the mix.
+pub fn gen_arrivals(cfg: &ServeConfig) -> ArrivalTrace {
+    let mut master = Rng::new(cfg.seed);
+    let mut gap_rng = master.fork(1);
+    let mut model_rng = master.fork(2);
+    let mut seed_rng = master.fork(3);
+    let mean_gap = 1.0e6 / cfg.rate_per_mcycle.max(1e-9);
+    let n_models = cfg.models.len().max(1) as u64;
+    let mut t = 0u64;
+    let mut requests = Vec::with_capacity(cfg.requests);
+    for id in 0..cfg.requests {
+        if id > 0 && gap_rng.f64() >= cfg.burst {
+            // -mean * ln(1-u) is >= 0 and finite (u in [0,1)); the
+            // as-cast saturates on absurd rates instead of wrapping.
+            let u = gap_rng.f64();
+            let gap = (-mean_gap * (1.0 - u).ln()).round() as u64;
+            t = t.saturating_add(gap.max(1));
+        }
+        requests.push(ServeRequest {
+            id,
+            model: model_rng.below(n_models) as usize,
+            arrival: t,
+            seed: seed_rng.next_u64(),
+        });
+    }
+    ArrivalTrace { requests }
+}
+
+/// Per-request outcome row (CSV material).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeRow {
+    pub id: usize,
+    pub model: String,
+    pub arrival: u64,
+    pub completion: u64,
+    pub latency: u64,
+    pub slo_met: bool,
+    pub ops: usize,
+}
+
+/// Aggregate serving report. Derives `PartialEq` so the determinism
+/// property can compare entire runs bit for bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeReport {
+    /// `+`-joined model mix.
+    pub model: String,
+    pub config: ConfigId,
+    pub backend: BackendKind,
+    pub policy: Policy,
+    pub clusters: usize,
+    pub rate_per_mcycle: f64,
+    pub burst: f64,
+    pub seed: u64,
+    pub requests: usize,
+    pub completed: usize,
+    /// Last request-completion cycle (0 when nothing completed).
+    pub makespan_cycles: u64,
+    /// Streaming latency histogram (p50/p95/p99 source).
+    pub latency: CycleHistogram,
+    pub slo_cycles: u64,
+    pub slo_attained: usize,
+    /// Plan-cache counters *for this run* (delta over the service's
+    /// totals). Covers every prepare the run triggered: when the SLO
+    /// is derived (`ServeConfig::slo == None`), that includes the
+    /// isolated-latency probe's dispatches, so `plan_hits +
+    /// plan_misses` equals `gemm_ops` only for explicit-SLO runs.
+    pub plan_stats: ServiceStats,
+    pub per_cluster_busy: Vec<u64>,
+    /// Scheduler waves executed.
+    pub waves: u64,
+    /// Waves dispatched tensor-parallel via `run_sharded_job`.
+    pub sharded_waves: u64,
+    /// GEMM ops dispatched (batched + sharded).
+    pub gemm_ops: u64,
+    /// All ops executed (GEMMs + elementwise adds).
+    pub total_ops: u64,
+}
+
+impl ServeReport {
+    pub fn p50(&self) -> u64 {
+        self.latency.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.latency.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.latency.quantile(0.99)
+    }
+
+    /// Completed requests per million cycles of makespan.
+    pub fn throughput_per_mcycle(&self) -> f64 {
+        if self.makespan_cycles == 0 {
+            0.0
+        } else {
+            self.completed as f64 / self.makespan_cycles as f64 * 1.0e6
+        }
+    }
+
+    /// Fraction of completed requests that met the SLO.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.slo_attained as f64 / self.completed as f64
+        }
+    }
+
+    /// SLO-attained requests per million cycles — the serving metric
+    /// the policy comparison is judged on.
+    pub fn slo_attained_throughput(&self) -> f64 {
+        if self.makespan_cycles == 0 {
+            0.0
+        } else {
+            self.slo_attained as f64 / self.makespan_cycles as f64
+                * 1.0e6
+        }
+    }
+
+    /// Per-cluster busy fraction of the makespan.
+    pub fn cluster_utilization(&self) -> Vec<f64> {
+        self.per_cluster_busy
+            .iter()
+            .map(|&b| {
+                if self.makespan_cycles == 0 {
+                    0.0
+                } else {
+                    b as f64 / self.makespan_cycles as f64
+                }
+            })
+            .collect()
+    }
+}
+
+/// A completed serving run: the report plus per-request rows (sorted
+/// by request id).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeRun {
+    pub report: ServeReport,
+    pub rows: Vec<ServeRow>,
+}
+
+/// One zoo model's immutable scheduling skeleton, shared by every
+/// request of that model.
+struct ModelPlan {
+    name: String,
+    graph: NetGraph,
+    deps0: Vec<usize>,
+    dependents: Vec<Vec<usize>>,
+}
+
+fn model_plans(models: &[String]) -> Result<Vec<ModelPlan>> {
+    models
+        .iter()
+        .map(|name| {
+            let graph = zoo::build(name)?;
+            let (_, deps0, dependents) = graph.dependency_structure()?;
+            Ok(ModelPlan { name: name.clone(), graph, deps0, dependents })
+        })
+        .collect()
+}
+
+/// Mutable per-request execution state.
+struct ReqState {
+    model: usize,
+    arrival: u64,
+    seed: u64,
+    deps: Vec<usize>,
+    done: Vec<bool>,
+    remaining: usize,
+    last_finish: u64,
+}
+
+fn gemm_job_of(
+    cfg: &ServeConfig,
+    g: &NetGraph,
+    oi: usize,
+    req_seed: u64,
+) -> GemmJob {
+    let NetOp::Gemm { x, w, epi, .. } = &g.ops[oi] else {
+        unreachable!("gemm_job_of called on a non-GEMM op");
+    };
+    let (m, n, k) =
+        (g.tensors[*x].rows, g.tensors[*w].cols, g.tensors[*x].cols);
+    GemmJob {
+        seed: req_seed ^ problem_seed(m, n, k),
+        ..GemmJob::fused(cfg.config, m, n, k, cfg.layout, *epi)
+    }
+}
+
+/// Latency of one request of `model` served alone on an idle system
+/// under FIFO — the natural SLO / rate reference point for a config.
+pub fn isolated_latency(
+    svc: &GemmService,
+    cfg: &ServeConfig,
+    model: usize,
+) -> Result<u64> {
+    let mut solo = cfg.clone();
+    solo.policy = Policy::Fifo;
+    solo.requests = 1;
+    solo.slo = Some(u64::MAX);
+    let trace = ArrivalTrace {
+        requests: vec![ServeRequest {
+            id: 0,
+            model,
+            arrival: 0,
+            seed: cfg.seed ^ 0x1501A7ED,
+        }],
+    };
+    let run = serve_trace(svc, &solo, &trace)?;
+    Ok(run.report.latency.max())
+}
+
+/// Generate the arrival trace for `cfg` and serve it.
+pub fn serve(svc: &GemmService, cfg: &ServeConfig) -> Result<ServeRun> {
+    let trace = gen_arrivals(cfg);
+    serve_trace(svc, cfg, &trace)
+}
+
+/// Serve an explicit arrival trace (the property tests feed shrunk
+/// traces through this entry point). Requests may arrive unsorted;
+/// the engine orders them by `(arrival, id)` itself.
+pub fn serve_trace(
+    svc: &GemmService,
+    cfg: &ServeConfig,
+    trace: &ArrivalTrace,
+) -> Result<ServeRun> {
+    ensure!(!cfg.models.is_empty(), "serve needs at least one model");
+    let plans = model_plans(&cfg.models)?;
+    for r in &trace.requests {
+        ensure!(
+            r.model < plans.len(),
+            "request {} names model index {} (mix has {})",
+            r.id,
+            r.model,
+            plans.len()
+        );
+    }
+    let n_clusters = cfg.clusters.max(1);
+    // Snapshot plan-cache counters before everything — including the
+    // SLO probe below — so the reported hit rate covers the whole
+    // run's cache behavior, cold start included.
+    let stats0 = svc.stats();
+    let slo = match cfg.slo {
+        Some(s) => s,
+        None => {
+            // 4x the isolated latency of the mix's first model — a
+            // fixed reference, independent of which model the first
+            // arrival happens to sample.
+            isolated_latency(svc, cfg, 0)?.saturating_mul(4)
+        }
+    };
+
+    // Arrival order (stable on same-cycle bursts by id).
+    let mut arrivals: Vec<ServeRequest> = trace.requests.clone();
+    arrivals.sort_by_key(|r| (r.arrival, r.id));
+
+    let mut reqs: Vec<ReqState> = arrivals
+        .iter()
+        .map(|r| {
+            let p = &plans[r.model];
+            ReqState {
+                model: r.model,
+                arrival: r.arrival,
+                seed: r.seed,
+                deps: p.deps0.clone(),
+                done: vec![false; p.graph.ops.len()],
+                remaining: p.graph.ops.len(),
+                last_finish: 0,
+            }
+        })
+        .collect();
+
+    let mut clock = 0u64;
+    let mut next_arr = 0usize;
+    // Admitted, incomplete requests in arrival order.
+    let mut active: Vec<usize> = Vec::new();
+    let mut busy = vec![0u64; n_clusters];
+    let mut hist = CycleHistogram::new();
+    let mut rows: Vec<ServeRow> = Vec::new();
+    let mut slo_attained = 0usize;
+    let mut makespan = 0u64;
+    let mut waves = 0u64;
+    let mut sharded_waves = 0u64;
+    let mut gemm_ops = 0u64;
+    let mut total_ops = 0u64;
+
+    while next_arr < reqs.len() || !active.is_empty() {
+        while next_arr < reqs.len()
+            && arrivals[next_arr].arrival <= clock
+        {
+            active.push(next_arr);
+            next_arr += 1;
+        }
+        if active.is_empty() {
+            // Idle: jump straight to the next arrival.
+            clock = arrivals[next_arr].arrival;
+            continue;
+        }
+
+        // Ready ops of the policy's scheduling pool.
+        let ready: Vec<(usize, usize)> = {
+            let pool: &[usize] = match cfg.policy {
+                Policy::Fifo => &active[..1],
+                Policy::Continuous => &active[..],
+            };
+            let mut v = Vec::new();
+            for &ri in pool {
+                let g = &plans[reqs[ri].model].graph;
+                for oi in 0..g.ops.len() {
+                    if !reqs[ri].done[oi] && reqs[ri].deps[oi] == 0 {
+                        v.push((ri, oi));
+                    }
+                }
+            }
+            v
+        };
+        ensure!(
+            !ready.is_empty(),
+            "serve deadlocked: {} active requests with no ready op",
+            active.len()
+        );
+        waves += 1;
+        let mut finishes: Vec<u64> = vec![0; ready.len()];
+
+        // A lone ready GEMM with idle clusters goes tensor-parallel
+        // (continuous batching only — FIFO is the plain baseline).
+        let single_shardable = cfg.policy == Policy::Continuous
+            && n_clusters > 1
+            && ready.len() == 1
+            && {
+                let (ri, oi) = ready[0];
+                let g = &plans[reqs[ri].model].graph;
+                match &g.ops[oi] {
+                    NetOp::Gemm { x, w, .. } => choose_shard_grid(
+                        g.tensors[*x].rows,
+                        g.tensors[*w].cols,
+                        n_clusters,
+                    )
+                    .used_clusters()
+                        > 1,
+                    NetOp::Add { .. } => false,
+                }
+            };
+
+        if single_shardable {
+            let (ri, oi) = ready[0];
+            let job = gemm_job_of(
+                cfg,
+                &plans[reqs[ri].model].graph,
+                oi,
+                reqs[ri].seed,
+            );
+            let fr = svc
+                .run_sharded_job(&job, &FabricConfig::new(n_clusters))?;
+            sharded_waves += 1;
+            gemm_ops += 1;
+            for (ci, s) in fr.shards.iter().enumerate() {
+                busy[ci % n_clusters] += s.cycles;
+            }
+            finishes[0] = clock + fr.cycles;
+            clock += fr.cycles;
+        } else {
+            // Merge the wave's GEMMs into one batched dispatch.
+            let mut jobs: Vec<GemmJob> = Vec::new();
+            let mut job_of: Vec<Option<usize>> =
+                vec![None; ready.len()];
+            for (ix, &(ri, oi)) in ready.iter().enumerate() {
+                if matches!(
+                    plans[reqs[ri].model].graph.ops[oi],
+                    NetOp::Gemm { .. }
+                ) {
+                    job_of[ix] = Some(jobs.len());
+                    jobs.push(gemm_job_of(
+                        cfg,
+                        &plans[reqs[ri].model].graph,
+                        oi,
+                        reqs[ri].seed,
+                    ));
+                }
+            }
+            gemm_ops += jobs.len() as u64;
+            let results = svc.run_batch(&jobs, cfg.threads)?;
+            let costs: Vec<u64> = ready
+                .iter()
+                .enumerate()
+                .map(|(ix, &(ri, oi))| {
+                    match &plans[reqs[ri].model].graph.ops[oi] {
+                        NetOp::Gemm { .. } => {
+                            results[job_of[ix].unwrap()].cycles
+                        }
+                        NetOp::Add { out, .. } => add_pass_cycles(
+                            plans[reqs[ri].model].graph.tensors[*out]
+                                .elems(),
+                        ),
+                    }
+                })
+                .collect();
+            // Longest-processing-time-first onto the least-loaded
+            // cluster; every tie-break is deterministic.
+            let mut by_cost: Vec<usize> = (0..ready.len()).collect();
+            by_cost.sort_by(|&a, &b| {
+                costs[b].cmp(&costs[a]).then(ready[a].cmp(&ready[b]))
+            });
+            let mut load = vec![0u64; n_clusters];
+            for &ix in &by_cost {
+                let c = (0..n_clusters)
+                    .min_by_key(|&c| (load[c], c))
+                    .unwrap();
+                finishes[ix] = clock + load[c] + costs[ix];
+                load[c] += costs[ix];
+            }
+            let elapsed = load.iter().copied().max().unwrap_or(0);
+            for (ci, &l) in load.iter().enumerate() {
+                busy[ci] += l;
+            }
+            clock += elapsed;
+        }
+
+        // Commit the wave: mark ops done, release dependents.
+        for (&(ri, oi), &fin) in ready.iter().zip(&finishes) {
+            total_ops += 1;
+            let model = reqs[ri].model;
+            reqs[ri].done[oi] = true;
+            reqs[ri].remaining -= 1;
+            reqs[ri].last_finish = reqs[ri].last_finish.max(fin);
+            for &d in &plans[model].dependents[oi] {
+                reqs[ri].deps[d] -= 1;
+            }
+        }
+
+        // Retire completed requests.
+        active.retain(|&ri| {
+            if reqs[ri].remaining > 0 {
+                return true;
+            }
+            let latency =
+                reqs[ri].last_finish.saturating_sub(reqs[ri].arrival);
+            hist.record(latency);
+            if latency <= slo {
+                slo_attained += 1;
+            }
+            makespan = makespan.max(reqs[ri].last_finish);
+            rows.push(ServeRow {
+                id: arrivals[ri].id,
+                model: plans[reqs[ri].model].name.clone(),
+                arrival: reqs[ri].arrival,
+                completion: reqs[ri].last_finish,
+                latency,
+                slo_met: latency <= slo,
+                ops: plans[reqs[ri].model].graph.ops.len(),
+            });
+            false
+        });
+    }
+
+    rows.sort_by_key(|r| r.id);
+    let stats1 = svc.stats();
+    let completed = rows.len();
+    let report = ServeReport {
+        model: cfg.models.join("+"),
+        config: cfg.config,
+        backend: svc.backend_kind(),
+        policy: cfg.policy,
+        clusters: n_clusters,
+        rate_per_mcycle: cfg.rate_per_mcycle,
+        burst: cfg.burst,
+        seed: cfg.seed,
+        requests: trace.requests.len(),
+        completed,
+        makespan_cycles: makespan,
+        latency: hist,
+        slo_cycles: slo,
+        slo_attained,
+        plan_stats: ServiceStats {
+            plan_hits: stats1.plan_hits - stats0.plan_hits,
+            plan_misses: stats1.plan_misses - stats0.plan_misses,
+        },
+        per_cluster_busy: busy,
+        waves,
+        sharded_waves,
+        gemm_ops,
+        total_ops,
+    };
+    Ok(ServeRun { report, rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn analytic() -> GemmService {
+        GemmService::analytic()
+    }
+
+    fn cfg_of(model: &str) -> ServeConfig {
+        let mut c = ServeConfig::new(vec![model.to_string()]);
+        c.slo = Some(u64::MAX);
+        c.seed = 0x5EED;
+        c
+    }
+
+    #[test]
+    fn fifo_single_request_latency_is_the_chain_sum() {
+        // One ffn request on one cluster: strict serialization, so
+        // the latency is exactly the sum of the per-op backend costs.
+        let svc = analytic();
+        let mut cfg = cfg_of("ffn");
+        cfg.policy = Policy::Fifo;
+        cfg.requests = 1;
+        let run = serve(&svc, &cfg).unwrap();
+        let g = zoo::build("ffn").unwrap();
+        let probe = analytic();
+        let mut expect = 0u64;
+        for (oi, op) in g.ops.iter().enumerate() {
+            match op {
+                NetOp::Gemm { .. } => {
+                    let job = gemm_job_of(&cfg, &g, oi, 0);
+                    expect += probe.run_job(&job).unwrap().cycles;
+                }
+                NetOp::Add { out, .. } => {
+                    expect += add_pass_cycles(g.tensors[*out].elems());
+                }
+            }
+        }
+        assert_eq!(run.report.completed, 1);
+        assert_eq!(run.report.makespan_cycles, expect);
+        assert_eq!(run.report.latency.max(), expect);
+        assert_eq!(run.report.p50(), run.report.p99());
+        assert_eq!(run.report.total_ops, g.ops.len() as u64);
+        assert_eq!(run.rows.len(), 1);
+        assert_eq!(run.rows[0].latency, expect);
+    }
+
+    #[test]
+    fn fifo_serializes_but_cb_overlaps_bursts() {
+        // Two requests arriving together: FIFO serves them back to
+        // back; continuous batching on 2 clusters overlaps them.
+        let mut cfg = cfg_of("ffn");
+        cfg.requests = 2;
+        cfg.burst = 1.0; // both arrive on cycle 0
+        cfg.clusters = 2;
+        cfg.policy = Policy::Fifo;
+        let fifo = serve(&analytic(), &cfg).unwrap();
+        cfg.policy = Policy::Continuous;
+        let cb = serve(&analytic(), &cfg).unwrap();
+        assert_eq!(fifo.report.completed, 2);
+        assert_eq!(cb.report.completed, 2);
+        assert!(
+            cb.report.makespan_cycles < fifo.report.makespan_cycles,
+            "cb {} vs fifo {}",
+            cb.report.makespan_cycles,
+            fifo.report.makespan_cycles
+        );
+    }
+
+    #[test]
+    fn cb_shards_lone_gemm_waves() {
+        // A solo ffn request under continuous batching on 4 clusters:
+        // both GEMM waves are alone and shardable, the residual add
+        // is not.
+        let mut cfg = cfg_of("ffn");
+        cfg.requests = 1;
+        cfg.clusters = 4;
+        cfg.policy = Policy::Continuous;
+        let run = serve(&analytic(), &cfg).unwrap();
+        assert_eq!(run.report.sharded_waves, 2);
+        assert_eq!(run.report.gemm_ops, 2);
+        assert_eq!(run.report.total_ops, 3);
+        // FIFO never shards.
+        cfg.policy = Policy::Fifo;
+        let fifo = serve(&analytic(), &cfg).unwrap();
+        assert_eq!(fifo.report.sharded_waves, 0);
+        assert!(
+            run.report.makespan_cycles < fifo.report.makespan_cycles,
+            "tensor-parallel solo service must be faster"
+        );
+    }
+
+    #[test]
+    fn arrivals_are_deterministic_and_bursty() {
+        let mut cfg = cfg_of("ffn");
+        cfg.requests = 16;
+        let a = gen_arrivals(&cfg);
+        let b = gen_arrivals(&cfg);
+        assert_eq!(a, b);
+        assert!(a
+            .requests
+            .windows(2)
+            .all(|w| w[0].arrival <= w[1].arrival));
+        cfg.seed ^= 1;
+        assert_ne!(gen_arrivals(&cfg), a, "seed changes the trace");
+        cfg.burst = 1.0;
+        let burst = gen_arrivals(&cfg);
+        assert!(
+            burst.requests.iter().all(|r| r.arrival == 0),
+            "burst=1 collapses every arrival onto cycle 0"
+        );
+    }
+
+    #[test]
+    fn plan_stats_are_run_local_deltas() {
+        let svc = analytic();
+        let mut cfg = cfg_of("ffn");
+        cfg.requests = 4;
+        let first = serve(&svc, &cfg).unwrap();
+        assert!(first.report.plan_stats.plan_misses > 0);
+        // A second run on the same warm service sees only hits.
+        let second = serve(&svc, &cfg).unwrap();
+        assert_eq!(second.report.plan_stats.plan_misses, 0);
+        assert!(second.report.plan_stats.plan_hits > 0);
+        assert!((second.report.plan_stats.hit_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_invalid_inputs() {
+        let svc = analytic();
+        let mut cfg = cfg_of("ffn");
+        cfg.requests = 0;
+        let run = serve(&svc, &cfg).unwrap();
+        assert_eq!(run.report.completed, 0);
+        assert_eq!(run.report.makespan_cycles, 0);
+        assert_eq!(run.report.throughput_per_mcycle(), 0.0);
+
+        let bad = ServeConfig::new(vec!["resnet9000".to_string()]);
+        assert!(serve(&svc, &bad).is_err());
+        let none = ServeConfig::new(Vec::new());
+        assert!(serve(&svc, &none).is_err());
+
+        // Trace referencing a model outside the mix is rejected.
+        let trace = ArrivalTrace {
+            requests: vec![ServeRequest {
+                id: 0,
+                model: 7,
+                arrival: 0,
+                seed: 1,
+            }],
+        };
+        assert!(serve_trace(&svc, &cfg, &trace).is_err());
+    }
+
+    #[test]
+    fn shrinking_produces_valid_smaller_traces() {
+        let mut cfg = cfg_of("ffn");
+        cfg.requests = 6;
+        let trace = gen_arrivals(&cfg);
+        let shrinks = trace.shrinks();
+        assert!(!shrinks.is_empty());
+        let svc = analytic();
+        for s in shrinks.iter().take(6) {
+            assert!(s.requests.len() <= trace.requests.len());
+            // Every shrunk trace must still serve cleanly.
+            let run = serve_trace(&svc, &cfg, s).unwrap();
+            assert_eq!(run.report.completed, s.requests.len());
+        }
+        // Request-level shrinking lowers arrivals toward 0.
+        let r = ServeRequest { id: 0, model: 1, arrival: 100, seed: 9 };
+        assert!(r
+            .shrinks()
+            .iter()
+            .all(|s| s.arrival <= r.arrival && s.model <= r.model));
+    }
+
+    #[test]
+    fn isolated_latency_matches_solo_fifo_run() {
+        let svc = analytic();
+        let mut cfg = cfg_of("qkv");
+        cfg.policy = Policy::Fifo;
+        cfg.requests = 1;
+        let iso = isolated_latency(&svc, &cfg, 0).unwrap();
+        let run = serve(&svc, &cfg).unwrap();
+        assert_eq!(iso, run.report.latency.max());
+        assert!(iso > 0);
+    }
+}

@@ -15,6 +15,7 @@
 //! how the CLI's `--backend {cycle,analytic}` flag and the
 //! calibration flow are wired.
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
@@ -94,7 +95,16 @@ impl GemmJob {
 }
 
 /// Plan-cache counters (snapshot).
-#[derive(Clone, Copy, Debug, Default)]
+///
+/// Accounting is *exact* even under concurrent `run_batch` first
+/// touches: every `prepare` counts exactly one hit or one miss, and a
+/// miss is counted only by the racer whose plan actually entered the
+/// cache — so `plan_misses` always equals the number of distinct
+/// cached plans, independent of thread count. The serving simulator
+/// reports these numbers directly (and its determinism property
+/// compares them bit for bit), which is why they must not wobble with
+/// scheduling.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ServiceStats {
     pub plan_hits: u64,
     pub plan_misses: u64,
@@ -184,7 +194,10 @@ impl GemmService {
         }
         // Build outside the write lock; racing misses both build and
         // the first insert wins (plans are deterministic, so either
-        // copy is equivalent).
+        // copy is equivalent). Only the inserting winner counts a
+        // miss — losers found the entry present at insert time and
+        // count hits — so the hit/miss split is exact regardless of
+        // how many workers raced the first touch.
         let cfg = config.cluster_config();
         let plan = plan_gemm_fused(&cfg, m, n, k, layout, epi)?;
         let programs = if self.backend.needs_programs() {
@@ -196,10 +209,17 @@ impl GemmService {
             Vec::new()
         };
         let prep = Arc::new(PreparedGemm { config, plan, programs });
-        self.misses.fetch_add(1, Ordering::Relaxed);
         let mut w = self.plans.write().unwrap();
-        let entry = w.entry(key).or_insert(prep);
-        Ok(Arc::clone(entry))
+        match w.entry(key) {
+            Entry::Occupied(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Ok(Arc::clone(e.get()))
+            }
+            Entry::Vacant(v) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Ok(Arc::clone(v.insert(prep)))
+            }
+        }
     }
 
     /// Evaluate one GEMM with explicit operands.
@@ -591,16 +611,44 @@ mod tests {
         }
         let rows = svc.run_batch(&jobs, 4).unwrap();
         assert_eq!(rows.len(), 8);
-        // Two distinct plans; concurrent first-touch racers may each
-        // count a miss, so bound rather than pin the split.
+        // Two distinct plans; the exact accounting pins the split
+        // even though first touches raced across 4 workers.
         let s = svc.stats();
         assert_eq!(s.plan_hits + s.plan_misses, 8);
-        assert!(s.plan_misses >= 2, "{s:?}");
+        assert_eq!(s.plan_misses, 2, "{s:?}");
+        assert_eq!(s.plan_hits, 6, "{s:?}");
         // A sequential replay is served entirely from the cache.
         let before = svc.stats();
         svc.run_batch(&jobs, 1).unwrap();
         let after = svc.stats();
         assert_eq!(after.plan_hits, before.plan_hits + 8);
         assert_eq!(after.plan_misses, before.plan_misses);
+    }
+
+    #[test]
+    fn concurrent_first_touch_accounting_is_exact() {
+        // Regression: 16 identical jobs racing on 8 workers used to
+        // count several misses for the single distinct plan, skewing
+        // hit_rate(). Exactly one miss must be recorded no matter how
+        // the first touches interleave.
+        for round in 0..4 {
+            let svc = GemmService::analytic();
+            let jobs: Vec<GemmJob> = (0..16)
+                .map(|_| {
+                    GemmJob::for_problem(
+                        ConfigId::Zonl48Db,
+                        32,
+                        32,
+                        32,
+                        LayoutKind::Grouped,
+                    )
+                })
+                .collect();
+            svc.run_batch(&jobs, 8).unwrap();
+            let s = svc.stats();
+            assert_eq!(s.plan_misses, 1, "round {round}: {s:?}");
+            assert_eq!(s.plan_hits, 15, "round {round}: {s:?}");
+            assert!((s.hit_rate() - 15.0 / 16.0).abs() < 1e-12);
+        }
     }
 }

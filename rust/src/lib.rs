@@ -14,7 +14,11 @@
 //! Evaluation runs through two [`backend`] engines behind one
 //! `SimBackend` trait — the cycle-accurate machine model and a
 //! calibrated first-order analytic model — fronted by the batched,
-//! plan-memoizing `kernels::GemmService`.
+//! plan-memoizing `kernels::GemmService`. Above that sit the
+//! NetGraph DAG scheduler (`coordinator::net`), the multi-cluster
+//! `fabric`, and ServeSim (`coordinator::serve`), a deterministic
+//! request-level serving simulator with FIFO and continuous-batching
+//! policies.
 //!
 //! See DESIGN.md for the system inventory and architecture notes.
 

@@ -1,4 +1,6 @@
-//! Descriptive statistics for experiment reporting (Fig. 5 box plots).
+//! Descriptive statistics for experiment reporting (Fig. 5 box
+//! plots) and streaming percentile accounting for the serving
+//! simulator ([`CycleHistogram`]).
 
 /// Five-number summary plus mean — exactly what a box plot needs.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -91,6 +93,146 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
+// ------------------------------------------- streaming percentiles --
+
+/// Sub-buckets per power of two: 32 means values above the linear
+/// range land in buckets at most `1/32` (~3.1%) wide relative to
+/// their value.
+const SUB: usize = 32;
+const SUB_SHIFT: u32 = 5;
+/// Index space covering all of `u64` (60 octave rows of 32).
+const NUM_BUCKETS: usize = (64 - SUB_SHIFT as usize + 1) * SUB;
+
+/// Streaming cycle histogram — the serving engine's percentile
+/// accountant (HDR-style).
+///
+/// Values below 32 are counted exactly; larger values fall into
+/// log2-octave rows split into 32 sub-buckets, bounding the relative
+/// quantile error at ~3.1%. `record` is O(1) with no allocation,
+/// histograms merge bucket-wise, and the whole structure is
+/// bit-for-bit deterministic — `ServeReport` equality (the serve
+/// determinism property) compares it directly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CycleHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for CycleHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CycleHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; NUM_BUCKETS],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Bucket index of a value (exact below 32, then
+    /// `32 + 32*octave + sub`).
+    pub fn bucket_index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros() as usize;
+        let shift = msb - SUB_SHIFT as usize;
+        SUB + shift * SUB + ((v >> shift) as usize & (SUB - 1))
+    }
+
+    /// Inclusive `[lo, hi]` value range of a bucket.
+    pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+        if idx < SUB {
+            return (idx as u64, idx as u64);
+        }
+        let shift = ((idx - SUB) / SUB) as u32;
+        let sub = ((idx - SUB) % SUB) as u64;
+        let lo = (1u64 << (shift + SUB_SHIFT)) + (sub << shift);
+        (lo, lo + ((1u64 << shift) - 1))
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_index(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Value at or above fraction `q` of recorded samples (upper
+    /// bucket bound, clamped to the observed min/max). `q` outside
+    /// `[0, 1]` is clamped; an empty histogram reports 0.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.total as f64).ceil() as u64)
+            .clamp(1, self.total);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            acc += c;
+            if acc >= target {
+                let (_, hi) = Self::bucket_bounds(i);
+                return hi.min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one (bucket-wise; min/max
+    /// and mean stay exact).
+    pub fn merge(&mut self, other: &CycleHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +283,91 @@ mod tests {
     #[test]
     fn stddev_constant_is_zero() {
         assert_eq!(stddev(&[5.0, 5.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn histogram_buckets_tile_u64_contiguously() {
+        // Every sampled value maps into a bucket whose bounds contain
+        // it, and bucket boundaries are seamless at the octave edges.
+        for v in (0u64..200)
+            .chain([1023, 1024, 1025, u32::MAX as u64, u64::MAX / 2])
+        {
+            let i = CycleHistogram::bucket_index(v);
+            let (lo, hi) = CycleHistogram::bucket_bounds(i);
+            assert!(lo <= v && v <= hi, "v={v} i={i} [{lo},{hi}]");
+        }
+        for i in 0..500usize {
+            let (_, hi) = CycleHistogram::bucket_bounds(i);
+            let (lo2, _) = CycleHistogram::bucket_bounds(i + 1);
+            assert_eq!(hi + 1, lo2, "gap between buckets {i}/{}", i + 1);
+        }
+        assert!(CycleHistogram::bucket_index(u64::MAX) < NUM_BUCKETS);
+    }
+
+    #[test]
+    fn histogram_exact_below_linear_range() {
+        let mut h = CycleHistogram::new();
+        for v in [1u64, 2, 3, 4, 5] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 5);
+        assert_eq!(h.quantile(0.0), 1);
+        assert_eq!(h.quantile(0.5), 3);
+        assert_eq!(h.quantile(1.0), 5);
+        assert!((h.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_relative_error_bounded() {
+        // ~3.1% bucket width: quantiles of a large-value stream stay
+        // within the bound of the exact order statistic.
+        let mut h = CycleHistogram::new();
+        let xs: Vec<u64> = (0..1000).map(|i| 10_000 + 37 * i).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        for q in [0.5, 0.95, 0.99] {
+            let exact =
+                xs[((q * xs.len() as f64).ceil() as usize - 1)
+                    .min(xs.len() - 1)];
+            let got = h.quantile(q);
+            let err =
+                (got as f64 - exact as f64).abs() / exact as f64;
+            assert!(
+                err <= 1.0 / 32.0 + 1e-9,
+                "q={q}: got {got}, exact {exact}, err {err:.4}"
+            );
+            assert!(got >= exact, "upper-bound semantics");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_matches_single_stream() {
+        let mut a = CycleHistogram::new();
+        let mut b = CycleHistogram::new();
+        let mut all = CycleHistogram::new();
+        for i in 0..500u64 {
+            let v = 100 + i * 13;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, all, "merge is exact");
+    }
+
+    #[test]
+    fn histogram_empty_is_benign() {
+        let h = CycleHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
     }
 }

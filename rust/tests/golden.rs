@@ -1,97 +1,239 @@
-//! E8 — end-to-end golden validation: the cycle-accurate cluster's
-//! functional output vs the AOT-compiled JAX/Pallas model executed
-//! through PJRT (rust `xla` crate, CPU client).
+//! Golden tests.
 //!
-//! Compiled only with `--features xla` (the `xla` crate is unavailable
-//! offline), and each test skips gracefully — with a message — when
-//! the AOT artifacts have not been built (`make artifacts`).
-#![cfg(feature = "xla")]
+//! * [`serve_golden`] — always-on: pins the ServeSim summary for one
+//!   small zoo model at a fixed seed (request count, total cycles,
+//!   p99 bucket, CSV schema, report phrasing) against an
+//!   *independent reconstruction* of the expected accounting, so
+//!   report-format or accounting drift is caught without a committed
+//!   snapshot going stale.
+//! * [`pjrt`] — E8, the original end-to-end functional golden: the
+//!   cycle-accurate cluster vs the AOT-compiled JAX/Pallas model
+//!   executed through PJRT. Compiled only with `--features xla` (the
+//!   `xla` crate is unavailable offline), and each test skips
+//!   gracefully — with a message — when the AOT artifacts have not
+//!   been built (`make artifacts`).
 
-use zerostall::cluster::ConfigId;
-use zerostall::kernels::{run_matmul, test_matrices};
-use zerostall::runtime::{golden_matmul, max_rel_error, Runtime};
+mod serve_golden {
+    use zerostall::coordinator::net::add_pass_cycles;
+    use zerostall::coordinator::report;
+    use zerostall::coordinator::serve::{
+        gen_arrivals, serve, Policy, ServeConfig,
+    };
+    use zerostall::coordinator::workload::{zoo, NetOp};
+    use zerostall::kernels::{GemmJob, GemmService, LayoutKind};
+    use zerostall::util::stats::CycleHistogram;
 
-/// `None` (= skip the test) when the artifacts are absent.
-fn runtime() -> Option<Runtime> {
-    let dir = Runtime::default_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!(
-            "skipping golden test: artifacts not built (run `make \
-             artifacts`; looked in {})",
-            dir.display()
+    /// The pinned scenario: one `ffn` request, FIFO, one cluster,
+    /// analytic backend, fixed seed.
+    fn pinned_cfg() -> ServeConfig {
+        let mut cfg = ServeConfig::new(vec!["ffn".to_string()]);
+        cfg.policy = Policy::Fifo;
+        cfg.clusters = 1;
+        cfg.requests = 1;
+        cfg.seed = 0x60D5;
+        cfg.slo = Some(u64::MAX);
+        cfg.threads = 1;
+        cfg
+    }
+
+    #[test]
+    fn serve_summary_matches_independent_reconstruction() {
+        let cfg = pinned_cfg();
+        let svc = GemmService::analytic();
+        let run = serve(&svc, &cfg).unwrap();
+        let r = &run.report;
+
+        // Request count pinned.
+        assert_eq!(r.requests, 1);
+        assert_eq!(r.completed, 1);
+        let trace = gen_arrivals(&cfg);
+        assert_eq!(trace.requests.len(), 1);
+        assert_eq!(
+            trace.requests[0].arrival, 0,
+            "the first arrival is always cycle 0"
         );
-        return None;
+
+        // Total cycles pinned against an independent reconstruction:
+        // FIFO on one cluster serializes the ffn chain, so the
+        // makespan is exactly the sum of the per-op backend costs —
+        // any double counting, dropped op, or cost-model drift in the
+        // serve accounting breaks this equality.
+        let g = zoo::build("ffn").unwrap();
+        let probe = GemmService::analytic();
+        let mut expect = 0u64;
+        for op in &g.ops {
+            match op {
+                NetOp::Gemm { x, w, epi, .. } => {
+                    let (xt, wt) = (&g.tensors[*x], &g.tensors[*w]);
+                    let job = GemmJob::fused(
+                        cfg.config,
+                        xt.rows,
+                        wt.cols,
+                        xt.cols,
+                        LayoutKind::Grouped,
+                        *epi,
+                    );
+                    expect += probe.run_job(&job).unwrap().cycles;
+                }
+                NetOp::Add { out, .. } => {
+                    expect += add_pass_cycles(g.tensors[*out].elems());
+                }
+            }
+        }
+        assert!(expect > 0);
+        assert_eq!(
+            r.makespan_cycles, expect,
+            "total-cycle accounting drifted"
+        );
+        assert_eq!(r.latency.max(), expect);
+        assert_eq!(r.p50(), r.p99(), "one request: p50 == p99");
+
+        // p99 bucket pinned: the reported percentile must land in the
+        // same histogram bucket as the reconstructed latency.
+        assert_eq!(
+            CycleHistogram::bucket_index(r.p99()),
+            CycleHistogram::bucket_index(expect),
+            "p99 bucket drifted (p99 {}, expected latency {expect})",
+            r.p99()
+        );
+
+        // Per-cluster accounting: one cluster, busy the whole chain.
+        assert_eq!(r.per_cluster_busy, vec![expect]);
+        assert_eq!(r.slo_attained, 1);
+
+        // CSV schema pinned.
+        assert_eq!(run.rows.len(), 1);
+        let csv = report::serve_csv(&run).to_string();
+        assert!(
+            csv.starts_with(
+                "req,model,arrival,completion,latency_cycles,slo_met,ops\n"
+            ),
+            "CSV schema drifted:\n{csv}"
+        );
+        assert!(csv.contains(&format!("0,ffn,0,{expect},{expect},1,3")));
+
+        // Report phrasing pinned (format drift).
+        let doc = report::render_serve(r);
+        for needle in [
+            "## Serve `ffn`",
+            "policy `fifo`",
+            "sustained",
+            "latency cycles: p50",
+            "SLO",
+            "attained",
+            "plan cache:",
+            "hit rate under churn",
+        ] {
+            assert!(
+                doc.contains(needle),
+                "report format drifted; missing `{needle}` in:\n{doc}"
+            );
+        }
     }
-    Some(Runtime::new(dir).expect("PJRT runtime init"))
+
+    #[test]
+    fn serve_golden_is_stable_across_reruns() {
+        // The pinned scenario replays bit-for-bit on fresh services.
+        let cfg = pinned_cfg();
+        let a = serve(&GemmService::analytic(), &cfg).unwrap();
+        let b = serve(&GemmService::analytic(), &cfg).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(
+            report::render_serve(&a.report),
+            report::render_serve(&b.report)
+        );
+    }
 }
 
-#[test]
-fn golden_cube_sizes() {
-    let Some(rt) = runtime() else { return };
-    for s in [8usize, 16, 32, 64] {
-        let (a, b) = test_matrices(s, s, s, 21);
-        let sim =
-            run_matmul(ConfigId::Zonl48Db, s, s, s, &a, &b).unwrap();
-        let gold = golden_matmul(&rt, s, s, s, &a, &b).unwrap();
-        let err = max_rel_error(&sim.c, &gold);
-        assert!(err < 1e-9, "{s}^3: rel err {err:.2e}");
-    }
-}
+#[cfg(feature = "xla")]
+mod pjrt {
+    use zerostall::cluster::ConfigId;
+    use zerostall::kernels::{run_matmul, test_matrices};
+    use zerostall::runtime::{golden_matmul, max_rel_error, Runtime};
 
-#[test]
-fn golden_rectangular_padded() {
-    // Sizes that are not multiples of the 32-wide golden tile: the
-    // zero-padding composition path.
-    let Some(rt) = runtime() else { return };
-    for (m, n, k) in [(24, 40, 8), (8, 8, 72), (56, 16, 48)] {
-        let (a, b) = test_matrices(m, n, k, 22);
-        let sim =
-            run_matmul(ConfigId::Zonl64Db, m, n, k, &a, &b).unwrap();
+    /// `None` (= skip the test) when the artifacts are absent.
+    fn runtime() -> Option<Runtime> {
+        let dir = Runtime::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!(
+                "skipping golden test: artifacts not built (run `make \
+                 artifacts`; looked in {})",
+                dir.display()
+            );
+            return None;
+        }
+        Some(Runtime::new(dir).expect("PJRT runtime init"))
+    }
+
+    #[test]
+    fn golden_cube_sizes() {
+        let Some(rt) = runtime() else { return };
+        for s in [8usize, 16, 32, 64] {
+            let (a, b) = test_matrices(s, s, s, 21);
+            let sim =
+                run_matmul(ConfigId::Zonl48Db, s, s, s, &a, &b).unwrap();
+            let gold = golden_matmul(&rt, s, s, s, &a, &b).unwrap();
+            let err = max_rel_error(&sim.c, &gold);
+            assert!(err < 1e-9, "{s}^3: rel err {err:.2e}");
+        }
+    }
+
+    #[test]
+    fn golden_rectangular_padded() {
+        // Sizes that are not multiples of the 32-wide golden tile: the
+        // zero-padding composition path.
+        let Some(rt) = runtime() else { return };
+        for (m, n, k) in [(24, 40, 8), (8, 8, 72), (56, 16, 48)] {
+            let (a, b) = test_matrices(m, n, k, 22);
+            let sim =
+                run_matmul(ConfigId::Zonl64Db, m, n, k, &a, &b).unwrap();
+            let gold = golden_matmul(&rt, m, n, k, &a, &b).unwrap();
+            let err = max_rel_error(&sim.c, &gold);
+            assert!(err < 1e-9, "{m}x{n}x{k}: rel err {err:.2e}");
+        }
+    }
+
+    #[test]
+    fn golden_all_configs_agree() {
+        let Some(rt) = runtime() else { return };
+        let (m, n, k) = (32, 32, 32);
+        let (a, b) = test_matrices(m, n, k, 23);
         let gold = golden_matmul(&rt, m, n, k, &a, &b).unwrap();
-        let err = max_rel_error(&sim.c, &gold);
-        assert!(err < 1e-9, "{m}x{n}x{k}: rel err {err:.2e}");
+        for id in ConfigId::all() {
+            let sim = run_matmul(id, m, n, k, &a, &b).unwrap();
+            let err = max_rel_error(&sim.c, &gold);
+            assert!(err < 1e-9, "{}: rel err {err:.2e}", id.name());
+        }
     }
-}
 
-#[test]
-fn golden_all_configs_agree() {
-    let Some(rt) = runtime() else { return };
-    let (m, n, k) = (32, 32, 32);
-    let (a, b) = test_matrices(m, n, k, 23);
-    let gold = golden_matmul(&rt, m, n, k, &a, &b).unwrap();
-    for id in ConfigId::all() {
-        let sim = run_matmul(id, m, n, k, &a, &b).unwrap();
-        let err = max_rel_error(&sim.c, &gold);
-        assert!(err < 1e-9, "{}: rel err {err:.2e}", id.name());
+    #[test]
+    fn plain_artifact_executes() {
+        // The non-accumulating 32^3 artifact (quickstart path).
+        let Some(rt) = runtime() else { return };
+        let art = rt.load("matmul_32").unwrap();
+        let (a, b) = test_matrices(32, 32, 32, 24);
+        let c = art
+            .run_f64(&[(&a, &[32, 32]), (&b, &[32, 32])])
+            .unwrap();
+        // sanity vs golden composition
+        let gold = golden_matmul(&rt, 32, 32, 32, &a, &b).unwrap();
+        let err = max_rel_error(&c, &gold);
+        assert!(err < 1e-12, "artifact mismatch {err:.2e}");
     }
-}
 
-#[test]
-fn plain_artifact_executes() {
-    // The non-accumulating 32^3 artifact (quickstart path).
-    let Some(rt) = runtime() else { return };
-    let art = rt.load("matmul_32").unwrap();
-    let (a, b) = test_matrices(32, 32, 32, 24);
-    let c = art
-        .run_f64(&[(&a, &[32, 32]), (&b, &[32, 32])])
-        .unwrap();
-    // sanity vs golden composition
-    let gold = golden_matmul(&rt, 32, 32, 32, &a, &b).unwrap();
-    let err = max_rel_error(&c, &gold);
-    assert!(err < 1e-12, "artifact mismatch {err:.2e}");
-}
-
-#[test]
-fn pallas_lowered_full_size_artifact() {
-    // matmul_128 is the Pallas-tiled (L1 kernel) lowering: proves the
-    // pallas kernel + jax grid compose into one executable module.
-    let Some(rt) = runtime() else { return };
-    let art = rt.load("matmul_128").unwrap();
-    let (a, b) = test_matrices(128, 128, 128, 25);
-    let c = art
-        .run_f64(&[(&a, &[128, 128]), (&b, &[128, 128])])
-        .unwrap();
-    let gold = golden_matmul(&rt, 128, 128, 128, &a, &b).unwrap();
-    let err = max_rel_error(&c, &gold);
-    assert!(err < 1e-11, "pallas artifact mismatch {err:.2e}");
+    #[test]
+    fn pallas_lowered_full_size_artifact() {
+        // matmul_128 is the Pallas-tiled (L1 kernel) lowering: proves
+        // the pallas kernel + jax grid compose into one executable
+        // module.
+        let Some(rt) = runtime() else { return };
+        let art = rt.load("matmul_128").unwrap();
+        let (a, b) = test_matrices(128, 128, 128, 25);
+        let c = art
+            .run_f64(&[(&a, &[128, 128]), (&b, &[128, 128])])
+            .unwrap();
+        let gold = golden_matmul(&rt, 128, 128, 128, &a, &b).unwrap();
+        let err = max_rel_error(&c, &gold);
+        assert!(err < 1e-11, "pallas artifact mismatch {err:.2e}");
+    }
 }
