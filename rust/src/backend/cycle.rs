@@ -28,20 +28,26 @@ impl CycleAccurate {
         let ideal = (m * n * k) as u64 / (N_CORES as u64);
         100_000 + ideal * 64
     }
-}
 
-impl SimBackend for CycleAccurate {
-    fn kind(&self) -> BackendKind {
-        BackendKind::Cycle
+    /// Deadline for a sharded fabric run: NoC serialization can
+    /// stretch DMA phases by up to the cluster count, so the
+    /// per-shard deadline scales with it. Shared by `run_sharded` and
+    /// the StallScope profiler so the two can never desynchronize.
+    pub fn shard_deadline(sh: &ShardedGemm) -> u64 {
+        Self::deadline(sh.grid.sm, sh.grid.sn, sh.k)
+            * sh.shards.len().max(1) as u64
     }
 
-    fn run_fused(
-        &self,
+    /// Build the cluster for one prepared GEMM with operands loaded
+    /// into simulated main memory — the run-ready machine, exposed so
+    /// callers (the StallScope profiler) can attach trace collectors
+    /// before stepping it.
+    pub fn build_cluster(
         prep: &PreparedGemm,
         a: &[f64],
         b: &[f64],
         bias: &[f64],
-    ) -> Result<GemmResult> {
+    ) -> Result<Cluster> {
         let t = prep.plan.tiling;
         anyhow::ensure!(
             a.len() == t.m * t.k && b.len() == t.k * t.n,
@@ -65,31 +71,30 @@ impl SimBackend for CycleAccurate {
         if prep.plan.epi.bias {
             cl.mem.write_slice_f64(prep.plan.main.bias, bias);
         }
-        let cycles = cl
-            .run(Self::deadline(t.m, t.n, t.k))
-            .context("cluster run")?;
+        Ok(cl)
+    }
+
+    /// Extract the result from a halted cluster.
+    pub fn collect(prep: &PreparedGemm, cl: &Cluster) -> GemmResult {
+        let t = prep.plan.tiling;
         let c = cl.mem.read_vec_f64(prep.plan.main.c, t.m * t.n);
-        Ok(GemmResult {
+        GemmResult {
             c,
-            cycles,
+            cycles: cl.cycle,
             perf: cl.perf(),
             plan: prep.plan,
             config: prep.config,
-        })
+        }
     }
 
-    /// Scatter operand blocks, run every shard's cluster in lockstep
-    /// against the shared NoC arbiter, gather C. Bit-identical to the
-    /// single-cluster driver: K stays shard-local, so each output
-    /// element keeps its exact FMA association order.
-    fn run_sharded(
-        &self,
+    /// Build one scatter-loaded cluster per shard (run-ready; callers
+    /// assemble them into a [`ClusterFabric`]).
+    pub fn build_shard_clusters(
         sh: &ShardedGemm,
-        noc: &NocConfig,
         a: &[f64],
         b: &[f64],
         bias: &[f64],
-    ) -> Result<FabricResult> {
+    ) -> Result<Vec<Cluster>> {
         let (m, n, k) = (sh.m, sh.n, sh.k);
         anyhow::ensure!(
             a.len() == m * k && b.len() == k * n,
@@ -133,12 +138,14 @@ impl SimBackend for CycleAccurate {
             }
             clusters.push(cl);
         }
-        // NoC serialization can stretch DMA phases by up to the
-        // cluster count, so scale the per-shard deadline with it.
-        let deadline =
-            Self::deadline(sm, sn, k) * sh.shards.len().max(1) as u64;
-        let mut fab = ClusterFabric::new(clusters, *noc);
-        fab.run(deadline).context("fabric run")?;
+        Ok(clusters)
+    }
+
+    /// Gather the sharded result from a halted fabric.
+    pub fn gather(sh: &ShardedGemm, fab: &ClusterFabric) -> FabricResult {
+        let (m, n) = (sh.m, sh.n);
+        let plan = &sh.prep.plan;
+        let (sm, sn) = (sh.grid.sm, sh.grid.sn);
         let mut c = vec![0.0f64; m * n];
         let mut shards = Vec::with_capacity(sh.shards.len());
         for (s, cl) in sh.shards.iter().zip(&fab.clusters) {
@@ -154,7 +161,46 @@ impl SimBackend for CycleAccurate {
                 perf: cl.perf(),
             });
         }
-        Ok(FabricResult { c, cycles: fab.cycle, shards, noc: fab.noc })
+        FabricResult { c, cycles: fab.cycle, shards, noc: fab.noc }
+    }
+}
+
+impl SimBackend for CycleAccurate {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Cycle
+    }
+
+    fn run_fused(
+        &self,
+        prep: &PreparedGemm,
+        a: &[f64],
+        b: &[f64],
+        bias: &[f64],
+    ) -> Result<GemmResult> {
+        let t = prep.plan.tiling;
+        let mut cl = Self::build_cluster(prep, a, b, bias)?;
+        cl.run(Self::deadline(t.m, t.n, t.k))
+            .context("cluster run")?;
+        Ok(Self::collect(prep, &cl))
+    }
+
+    /// Scatter operand blocks, run every shard's cluster in lockstep
+    /// against the shared NoC arbiter, gather C. Bit-identical to the
+    /// single-cluster driver: K stays shard-local, so each output
+    /// element keeps its exact FMA association order.
+    fn run_sharded(
+        &self,
+        sh: &ShardedGemm,
+        noc: &NocConfig,
+        a: &[f64],
+        b: &[f64],
+        bias: &[f64],
+    ) -> Result<FabricResult> {
+        let clusters = Self::build_shard_clusters(sh, a, b, bias)?;
+        let deadline = Self::shard_deadline(sh);
+        let mut fab = ClusterFabric::new(clusters, *noc);
+        fab.run(deadline).context("fabric run")?;
+        Ok(Self::gather(sh, &fab))
     }
 }
 

@@ -28,6 +28,7 @@ use crate::isa::Program;
 use crate::mem::{
     Interconnect, MainMemory, PortRequest, Tcdm,
 };
+use crate::profile::{trace, FpEvent, FrontPhase, StallClass, TraceBuf};
 use crate::ssr::SsrMode;
 
 /// Which unit of a core issued a request (for grant routing).
@@ -51,6 +52,11 @@ pub struct Cluster {
     pub first_barrier_cycle: u64,
     /// Cycle of the most recent barrier release (compute-window end).
     pub last_barrier_cycle: u64,
+    /// Optional StallScope Chrome-trace collector. The per-cycle
+    /// classifier always runs (it fills the `CorePerf::stalls`
+    /// buckets); attaching a buffer additionally records per-core
+    /// stall spans, a DMA track, and barrier markers.
+    pub trace: Option<Box<TraceBuf>>,
     // reusable per-cycle scratch
     reqs: Vec<PortRequest>,
     owners: Vec<Owner>,
@@ -91,6 +97,7 @@ impl Cluster {
             barriers_completed: 0,
             first_barrier_cycle: 0,
             last_barrier_cycle: 0,
+            trace: None,
             reqs: Vec::with_capacity(cap),
             owners: Vec::with_capacity(cap),
             grants: vec![false; cap],
@@ -143,6 +150,9 @@ impl Cluster {
                 self.first_barrier_cycle = now;
             }
             self.last_barrier_cycle = now;
+            if let Some(t) = self.trace.as_mut() {
+                t.instant("barrier", now);
+            }
         }
 
         // ---- phase 2b: frontends ------------------------------------
@@ -224,10 +234,12 @@ impl Cluster {
         } else {
             if self.dma.busy() {
                 self.dma.stall_cycles += 1;
+                self.dma.noc_gated_cycles += 1;
             }
             None
         };
-        if self.dma.busy() {
+        let dma_busy = self.dma.busy();
+        if dma_busy {
             self.dma.busy_cycles += 1;
         }
 
@@ -263,18 +275,116 @@ impl Cluster {
                         }
                     } else {
                         s.conflicts += 1;
+                        s.note_denied(now);
                     }
                 }
                 Owner::Lsu { core } => {
                     if self.grants[i] {
                         self.cores[core as usize]
                             .lsu_granted(self.rdata[i]);
+                    } else {
+                        self.cores[core as usize].note_lsu_denied(now);
                     }
                 }
             }
         }
 
+        // ---- phase 5: StallScope attribution -------------------------
+        self.attribute_cycle(now, noc_grant, dma_busy);
+
         self.cycle += 1;
+    }
+
+    /// Attribute this cycle to exactly one stall class per active
+    /// core (the StallScope classifier). Runs after arbitration so
+    /// TCDM denials of the same cycle can explain operand waits;
+    /// every core that ticked this cycle gets exactly one bucket
+    /// incremented, which is what makes the conservation invariant
+    /// `stalls.sum() == cycles` hold per core.
+    fn attribute_cycle(&mut self, now: u64, noc_grant: bool, dma_busy: bool) {
+        let dm = self.dm_core_id();
+        let mut trace_buf = self.trace.take();
+        for ci in 0..self.cores.len() {
+            let c = &mut self.cores[ci];
+            let ev = match c.take_fp_event() {
+                Some(ev) => ev,
+                None => {
+                    // Halted before this cycle: never ticked. Mark the
+                    // track idle so the core's last open span is
+                    // flushed at its true end instead of stretching to
+                    // the cluster's halt cycle.
+                    if let Some(t) = trace_buf.as_mut() {
+                        t.record(ci, now, trace::CODE_IDLE);
+                    }
+                    continue;
+                }
+            };
+            let class = match ev {
+                FpEvent::Issued => StallClass::Useful,
+                FpEvent::RawHazard | FpEvent::FpuFull => {
+                    StallClass::RawHazard
+                }
+                FpEvent::SsrEmpty | FpEvent::WFifoFull => {
+                    if c.ssr_denied_at(now) {
+                        StallClass::BankConflict
+                    } else {
+                        StallClass::SsrOperandWait
+                    }
+                }
+                FpEvent::NoInstr(phase) => match phase {
+                    FrontPhase::Drain => StallClass::Drain,
+                    FrontPhase::Barrier => {
+                        if dma_busy {
+                            if noc_grant {
+                                StallClass::DmaWait
+                            } else {
+                                StallClass::NocGated
+                            }
+                        } else {
+                            StallClass::Barrier
+                        }
+                    }
+                    FrontPhase::Lsu => {
+                        if c.lsu_denied_at(now) {
+                            StallClass::BankConflict
+                        } else {
+                            StallClass::ControlOverhead
+                        }
+                    }
+                    FrontPhase::Running => {
+                        // The DM core spinning on `dmstat` while the
+                        // engine moves data is waiting on the DMA,
+                        // not doing control work.
+                        if ci == dm && dma_busy {
+                            if noc_grant {
+                                StallClass::DmaWait
+                            } else {
+                                StallClass::NocGated
+                            }
+                        } else {
+                            StallClass::ControlOverhead
+                        }
+                    }
+                },
+            };
+            c.perf.stalls[class as usize] += 1;
+            if let Some(t) = trace_buf.as_mut() {
+                if t.record(ci, now, class as u8) {
+                    t.counter(ci, now, c.seq.occupancy() as u64);
+                }
+            }
+        }
+        if let Some(t) = trace_buf.as_mut() {
+            let code = if !dma_busy {
+                trace::CODE_IDLE
+            } else if noc_grant {
+                trace::CODE_DMA_BUSY
+            } else {
+                trace::CODE_DMA_GATED
+            };
+            t.record(self.cores.len(), now, code);
+        }
+        self.trace = trace_buf;
     }
 
     /// Run to completion (all cores halted). Returns total cycles.
@@ -295,6 +405,27 @@ impl Cluster {
     /// Aggregate performance summary.
     pub fn perf(&self) -> ClusterPerf {
         ClusterPerf::collect(self)
+    }
+
+    /// Attach a StallScope Chrome-trace collector: one track per core
+    /// plus the DMA track, on a timeline offset by `t0` (so multiple
+    /// layers / clusters stitch onto one trace).
+    pub fn attach_trace(&mut self, pid: u32, t0: u64) {
+        self.trace = Some(Box::new(TraceBuf::new(
+            pid,
+            self.cores.len() + 1,
+            t0,
+        )));
+    }
+
+    /// Detach the trace collector, closing all open spans at the
+    /// current cycle.
+    pub fn take_trace(&mut self) -> Option<Box<TraceBuf>> {
+        let mut t = self.trace.take();
+        if let Some(b) = t.as_mut() {
+            b.finish(self.cycle);
+        }
+        t
     }
 }
 
@@ -428,6 +559,61 @@ mod tests {
         for (i, &x) in xs.iter().enumerate() {
             assert_eq!(cl.tcdm.read_f64(TCDM_BASE + (i as u32) * 8), x);
         }
+    }
+
+    #[test]
+    fn stall_attribution_conserves_every_cycle() {
+        // Every active core-cycle lands in exactly one StallScope
+        // bucket — on a run mixing spins, barriers, and DMA waits.
+        let cfg = ConfigId::Base32Fc.cluster_config();
+        let mut slow = Asm::new();
+        slow.li(reg::T0, 50);
+        let top = slow.label();
+        slow.bind(top);
+        slow.push(Instr::Addi { rd: reg::T0, rs1: reg::T0, imm: -1 });
+        slow.bne(reg::T0, 0, top);
+        slow.push(Instr::Barrier);
+        slow.push(Instr::Ecall);
+        let mut progs = vec![slow.assemble()];
+        for _ in 1..8 {
+            progs.push(barrier_then_halt());
+        }
+        let mut dm = Asm::new();
+        dm.li(reg::A0, MAIN_MEM_BASE);
+        dm.push(Instr::Dmsrc { rs1: reg::A0 });
+        dm.li(reg::A1, TCDM_BASE);
+        dm.push(Instr::Dmdst { rs1: reg::A1 });
+        dm.li(reg::A2, 32 * 8);
+        dm.push(Instr::Dmcpy { rd: reg::T0, rs1: reg::A2 });
+        let poll = dm.label();
+        dm.bind(poll);
+        dm.push(Instr::Dmstat { rd: reg::T1 });
+        dm.bne(reg::T1, 0, poll);
+        dm.push(Instr::Barrier);
+        dm.push(Instr::Ecall);
+        progs.push(dm.assemble());
+        let mut cl = Cluster::new(cfg, progs);
+        cl.attach_trace(0, 0);
+        cl.run(100_000).unwrap();
+        let perf = cl.perf();
+        perf.stalls.check_conservation().unwrap();
+        // The slow core burned ControlOverhead; waiters sat in
+        // Barrier/DmaWait; the DM core saw DmaWait while polling.
+        let totals = perf.stalls.totals();
+        assert!(totals[StallClass::ControlOverhead as usize] > 0);
+        assert!(
+            totals[StallClass::Barrier as usize]
+                + totals[StallClass::DmaWait as usize]
+                > 0
+        );
+        let dm_core = perf.stalls.dm_cores()[0];
+        assert!(
+            dm_core.counts[StallClass::DmaWait as usize] > 0,
+            "DM core polling a busy engine must count DmaWait"
+        );
+        // The trace collector saw the same run.
+        let t = cl.take_trace().unwrap();
+        assert!(!t.events.is_empty());
     }
 
     #[test]

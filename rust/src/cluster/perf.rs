@@ -1,6 +1,9 @@
 //! Aggregated cluster performance counters — the raw material for the
 //! utilization metric (Fig. 5) and the event-based energy model.
 
+use crate::profile::{CoreStalls, StallProfile};
+use crate::util::stats::ratio;
+
 use super::Cluster;
 
 /// Snapshot of everything the experiments and the power model need.
@@ -41,7 +44,17 @@ pub struct ClusterPerf {
     pub dma_bytes: u64,
     pub dma_busy_cycles: u64,
     pub dma_stall_cycles: u64,
+    /// Subset of `dma_stall_cycles` gated by the fabric NoC.
+    pub dma_noc_gated_cycles: u64,
+    /// Cycles with at least one denied core-side TCDM request.
+    pub tcdm_conflict_cycles: u64,
     pub barriers_completed: u64,
+    /// StallScope attribution: per-core per-cycle stall classes over
+    /// the run (measured by the cycle backend, *predicted* by the
+    /// analytic backend). `stalls.utilization()` equals
+    /// [`ClusterPerf::utilization`] on measured runs — `Useful`
+    /// counts exactly the `fpu_ops` events over the same window.
+    pub stalls: StallProfile,
 }
 
 impl ClusterPerf {
@@ -63,10 +76,22 @@ impl ClusterPerf {
             1 => cycles - cl.first_barrier_cycle,
             _ => cl.last_barrier_cycle - cl.first_barrier_cycle,
         };
-        let utilization = if window_cycles == 0 {
-            0.0
-        } else {
-            fpu_ops_total as f64 / (window_cycles as f64 * n as f64)
+        let utilization = ratio(
+            fpu_ops_total as f64,
+            window_cycles as f64 * n as f64,
+        );
+        let stalls = StallProfile {
+            per_core: cl
+                .cores
+                .iter()
+                .map(|c| CoreStalls {
+                    cycles: c.perf.cycles,
+                    counts: c.perf.stalls,
+                })
+                .collect(),
+            n_compute: n,
+            window_cycles,
+            window_core_cycles: window_cycles * n as u64,
         };
         let sum = |f: fn(&crate::core::CorePerf) -> u64| -> u64 {
             compute.iter().map(|c| f(&c.perf)).sum()
@@ -111,7 +136,10 @@ impl ClusterPerf {
             dma_bytes: cl.dma.bytes_moved,
             dma_busy_cycles: cl.dma.busy_cycles,
             dma_stall_cycles: cl.dma.stall_cycles,
+            dma_noc_gated_cycles: cl.dma.noc_gated_cycles,
+            tcdm_conflict_cycles: cl.xbar.stats.conflict_cycles,
             barriers_completed: cl.barriers_completed,
+            stalls,
         }
     }
 
@@ -123,13 +151,10 @@ impl ClusterPerf {
     }
 
     /// Fraction of cycles lost to TCDM conflicts (approximate: each
-    /// conflict delays one stream element by one cycle).
+    /// conflict delays one stream element by one cycle). Guarded
+    /// against empty windows — zero-cycle runs report 0, never NaN.
     pub fn conflict_rate(&self) -> f64 {
-        if self.ssr_requests == 0 {
-            0.0
-        } else {
-            self.ssr_conflicts as f64 / self.ssr_requests as f64
-        }
+        ratio(self.ssr_conflicts as f64, self.ssr_requests as f64)
     }
 
     /// One-line human summary.

@@ -5,6 +5,9 @@
 //!   net       — a multi-layer zoo network through the DAG scheduler
 //!   serve     — request-level serving simulation (open-loop arrivals,
 //!               FIFO vs continuous batching, latency percentiles)
+//!   profile   — StallScope: cycle-accurate per-cycle stall
+//!               attribution of a zoo model, with roofline placement
+//!               and optional Chrome-trace export (`--trace f.json`)
 //!   sweep     — the full {8..128}^3 grid through a chosen backend
 //!   calibrate — fit the analytic model vs cycle-accurate ground truth
 //!   fig5      — the random-size sweep (box plots + CSV + headline)
@@ -27,7 +30,7 @@ use crate::backend::BackendKind;
 use crate::cluster::ConfigId;
 use crate::coordinator::workload::zoo;
 use crate::coordinator::{
-    experiments, net, report, runner, serve, workload,
+    experiments, net, profile, report, runner, serve, workload,
 };
 use crate::kernels::{GemmService, LayoutKind};
 
@@ -39,14 +42,17 @@ pub fn usage() -> &'static str {
      COMMANDS:\n\
      \x20 run       --config <name> --m <M> --n <N> --k <K> \
      [--layout grouped|linear|linear-pad] [--backend cycle|analytic] \
-     [--clusters N]\n\
+     [--clusters N] [--profile true]\n\
      \x20 net       --model mlp|ffn|qkv|attn|conv|llm \
      [--config <name>] [--backend cycle|analytic] [--threads N] \
-     [--seed S] [--clusters N] [--out results]\n\
+     [--seed S] [--clusters N] [--profile true] [--out results]\n\
      \x20 serve     --model <zoo[,zoo...]> [--rate R] [--burst B] \
      [--policy fifo|cb] [--clusters N] [--requests N] \
      [--backend cycle|analytic] [--seed S] [--slo CYCLES] \
-     [--threads N] [--out results]\n\
+     [--threads N] [--profile true] [--out results]\n\
+     \x20 profile   --model mlp|ffn|qkv|attn|conv|llm \
+     [--config <name>] [--clusters N] [--trace out.json] \
+     [--out results]\n\
      \x20 sweep     [--backend analytic|cycle] [--config <name>|all] \
      [--threads N] [--clusters N] [--out results]\n\
      \x20 calibrate [--threads N] [--out results]\n\
@@ -157,15 +163,16 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             )?;
             let backend = backend_of(&flags, BackendKind::Cycle)?;
             let clusters = flag(&flags, "clusters", 1usize)?;
+            let profile_on = flag(&flags, "profile", false)?;
             let svc = GemmService::of_kind(backend);
             let p = workload::Problem { m, n, k };
             let fabric = crate::fabric::FabricConfig::new(clusters);
-            let row = if clusters > 1 {
-                experiments::run_point_sharded(
+            let (row, stalls) = if clusters > 1 {
+                experiments::profile_point_sharded(
                     &svc, id, p, layout, &fabric,
                 )?
             } else {
-                experiments::run_point_with(&svc, id, p, layout)?
+                experiments::profile_point(&svc, id, p, layout)?
             };
             println!(
                 "{} {} layout={:?} backend={} clusters={}\n  \
@@ -196,6 +203,65 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                     clusters,
                 );
             }
+            if profile_on {
+                println!("\n{}", report::render_stall_breakdown(&stalls));
+                if backend == BackendKind::Analytic {
+                    println!(
+                        "  (analytic backend: *predicted* breakdown \
+                         from the calibrated terms, quantized to \
+                         conserve — not a measurement)"
+                    );
+                }
+            }
+        }
+        "profile" => {
+            let model = flags
+                .get("model")
+                .cloned()
+                .unwrap_or_else(|| "ffn".into());
+            let name = flags
+                .get("config")
+                .cloned()
+                .unwrap_or_else(|| "zonl48db".into());
+            let id = ConfigId::from_name(&name)
+                .ok_or_else(|| anyhow::anyhow!("unknown config {name}"))?;
+            let clusters = flag(&flags, "clusters", 1usize)?;
+            let trace_path = flags.get("trace").map(PathBuf::from);
+            let mut opts = profile::ProfileOpts::new(&model);
+            opts.config = id;
+            opts.clusters = clusters;
+            opts.trace = trace_path.is_some();
+            eprintln!(
+                "profile: `{model}` on {} x{clusters}, cycle-accurate \
+                 StallScope{}...",
+                id.name(),
+                if opts.trace { " + Chrome trace" } else { "" },
+            );
+            let (rep, trace) = profile::run_profile(&opts)?;
+            let doc = report::render_profile(&rep);
+            println!("{doc}");
+            let stem = format!("profile-{model}-{}", id.name());
+            report::save(&out_dir, &format!("{stem}.md"), &doc)?;
+            report::stall_csv(&rep)
+                .write(&out_dir.join(format!("{stem}-stalls.csv")))?;
+            let points: Vec<_> =
+                rep.layers.iter().map(|l| l.roofline.clone()).collect();
+            report::roofline_csv(&points)
+                .write(&out_dir.join(format!("{stem}-roofline.csv")))?;
+            eprintln!(
+                "wrote {}/{stem}.md, {stem}-stalls.csv, \
+                 {stem}-roofline.csv",
+                out_dir.display()
+            );
+            if let (Some(path), Some(tr)) = (trace_path, trace) {
+                tr.write(&path)?;
+                eprintln!(
+                    "wrote Chrome trace {} ({} events) — load in \
+                     chrome://tracing or Perfetto",
+                    path.display(),
+                    tr.events.len()
+                );
+            }
         }
         "net" => {
             let model = flags
@@ -222,6 +288,7 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                 id.name(),
                 backend.name(),
             );
+            let profile_on = flag(&flags, "profile", false)?;
             let svc = GemmService::of_kind(backend);
             let run = net::run_net_clustered(
                 &svc,
@@ -232,7 +299,11 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                 seed,
                 &crate::fabric::FabricConfig::new(clusters),
             )?;
-            let doc = report::render_net(&run.report);
+            let mut doc = report::render_net(&run.report);
+            if profile_on {
+                doc.push('\n');
+                doc.push_str(&report::render_net_profile(&run.report));
+            }
             println!("{doc}");
             let stem = format!("net-{model}-{}", backend.name());
             report::save(&out_dir, &format!("{stem}.md"), &doc)?;
@@ -311,9 +382,14 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                 backend.name(),
                 policy.name(),
             );
+            let profile_on = flag(&flags, "profile", false)?;
             let svc = GemmService::of_kind(backend);
             let run = serve::serve(&svc, &cfg)?;
-            let doc = report::render_serve(&run.report);
+            let mut doc = report::render_serve(&run.report);
+            if profile_on {
+                doc.push('\n');
+                doc.push_str(&report::render_serve_profile(&run.report));
+            }
             println!("{doc}");
             let stem = format!(
                 "serve-{}-{}",
@@ -749,6 +825,55 @@ mod tests {
             "serve".into(),
             "--burst".into(),
             "2".into(),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn run_command_with_profile_breakdown() {
+        main_with_args(vec![
+            "run".into(),
+            "--m".into(),
+            "16".into(),
+            "--n".into(),
+            "16".into(),
+            "--k".into(),
+            "16".into(),
+            "--profile".into(),
+            "true".into(),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn profile_command_writes_artifacts_and_trace() {
+        let dir = std::env::temp_dir().join("zerostall-profile-cli-test");
+        let trace = dir.join("trace.json");
+        main_with_args(vec![
+            "profile".into(),
+            "--model".into(),
+            "qkv".into(),
+            "--trace".into(),
+            trace.display().to_string(),
+            "--out".into(),
+            dir.display().to_string(),
+        ])
+        .unwrap();
+        assert!(dir.join("profile-qkv-zonl48db.md").exists());
+        assert!(dir.join("profile-qkv-zonl48db-stalls.csv").exists());
+        assert!(dir.join("profile-qkv-zonl48db-roofline.csv").exists());
+        let json = std::fs::read_to_string(&trace).unwrap();
+        assert!(json.contains("traceEvents"));
+        assert!(json.contains("Useful"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn profile_command_rejects_unknown_model() {
+        assert!(main_with_args(vec![
+            "profile".into(),
+            "--model".into(),
+            "resnet9000".into(),
         ])
         .is_err());
     }

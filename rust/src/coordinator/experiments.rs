@@ -56,9 +56,7 @@ pub fn run_point_with(
     p: Problem,
     layout: LayoutKind,
 ) -> anyhow::Result<Fig5Row> {
-    let job = GemmJob::for_problem(config, p.m, p.n, p.k, layout);
-    let r = svc.run_job(&job)?;
-    Ok(fig5_row(p, &r))
+    profile_point(svc, config, p, layout).map(|(row, _)| row)
 }
 
 fn fig5_row(p: Problem, r: &GemmResult) -> Fig5Row {
@@ -76,6 +74,45 @@ fn fig5_row(p: Problem, r: &GemmResult) -> Fig5Row {
     }
 }
 
+/// [`run_point_with`] plus the point's StallScope breakdown (measured
+/// on the cycle backend, predicted on the analytic one) — the CLI's
+/// `run --profile true` path, one simulation for both outputs.
+pub fn profile_point(
+    svc: &GemmService,
+    config: ConfigId,
+    p: Problem,
+    layout: LayoutKind,
+) -> anyhow::Result<(Fig5Row, crate::profile::StallProfile)> {
+    let job = GemmJob::for_problem(config, p.m, p.n, p.k, layout);
+    let r = svc.run_job(&job)?;
+    Ok((fig5_row(p, &r), r.perf.stalls))
+}
+
+/// [`run_point_sharded`] plus the fabric-merged StallScope breakdown.
+pub fn profile_point_sharded(
+    svc: &GemmService,
+    config: ConfigId,
+    p: Problem,
+    layout: LayoutKind,
+    fabric: &FabricConfig,
+) -> anyhow::Result<(Fig5Row, crate::profile::StallProfile)> {
+    let job = GemmJob::for_problem(config, p.m, p.n, p.k, layout);
+    let fr = svc.run_sharded_job(&job, fabric)?;
+    let fe = model::fabric_energy(config, &fr.perfs(), fr.cycles);
+    let row = Fig5Row {
+        config,
+        problem: p,
+        utilization: fr.mean_utilization(),
+        power_mw: fe.power_mw,
+        gflops: fe.gflops,
+        gflops_per_w: fe.gflops_per_w,
+        cycles: fr.cycles,
+        window_cycles: fr.window_cycles(),
+        conflicts: fr.conflicts_total(),
+    };
+    Ok((row, fr.stall_profile()))
+}
+
 /// Run one (config, problem) point sharded across a cluster fabric.
 /// The row carries fabric-level metrics: mean per-cluster utilization,
 /// fabric throughput (util x 8 x busy clusters), fabric power
@@ -87,20 +124,8 @@ pub fn run_point_sharded(
     layout: LayoutKind,
     fabric: &FabricConfig,
 ) -> anyhow::Result<Fig5Row> {
-    let job = GemmJob::for_problem(config, p.m, p.n, p.k, layout);
-    let fr = svc.run_sharded_job(&job, fabric)?;
-    let fe = model::fabric_energy(config, &fr.perfs(), fr.cycles);
-    Ok(Fig5Row {
-        config,
-        problem: p,
-        utilization: fr.mean_utilization(),
-        power_mw: fe.power_mw,
-        gflops: fe.gflops,
-        gflops_per_w: fe.gflops_per_w,
-        cycles: fr.cycles,
-        window_cycles: fr.window_cycles(),
-        conflicts: fr.conflicts_total(),
-    })
+    profile_point_sharded(svc, config, p, layout, fabric)
+        .map(|(row, _)| row)
 }
 
 /// The Fig. 5 experiment: `samples` random sizes on every

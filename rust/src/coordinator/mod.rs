@@ -5,6 +5,7 @@
 pub mod cli;
 pub mod experiments;
 pub mod net;
+pub mod profile;
 pub mod report;
 pub mod runner;
 pub mod serve;

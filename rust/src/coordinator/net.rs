@@ -35,7 +35,10 @@ use crate::fabric::{FabricConfig, FabricResult};
 use crate::kernels::tiling::choose_shard_grid;
 use crate::kernels::{GemmService, LayoutKind, ServiceStats, N_CORES};
 use crate::model;
+use crate::profile::roofline::{self, Ceilings, RooflinePoint};
+use crate::profile::N_CLASSES;
 use crate::util::rng::Rng;
+use crate::util::stats::ratio;
 
 use super::runner;
 use super::workload::graph::{NetGraph, NetOp, TensorKind};
@@ -111,6 +114,13 @@ pub struct NetReport {
     /// time across *all* clusters' FPUs — idle clusters count against
     /// it, unlike the compute-window metric above.
     pub fabric_utilization: f64,
+    /// StallScope class totals summed over every GEMM layer's compute
+    /// cores (measured on the cycle backend, predicted on the
+    /// analytic one). Indexed by `profile::StallClass as usize`.
+    pub stall_totals: [u64; N_CLASSES],
+    /// Per-GEMM-layer roofline placement (ops/byte vs the compute,
+    /// L1, and NoC ceilings of the fabric this net ran on).
+    pub rooflines: Vec<RooflinePoint>,
 }
 
 /// A completed network run: the report plus the network's output
@@ -235,6 +245,14 @@ pub fn run_net_clustered(
     let mut extra_roundtrips = 0u64;
     let mut per_cluster_cycles = vec![0u64; n_clusters];
     let mut per_cluster_energy = vec![0.0f64; n_clusters];
+    // Roofline ceilings must match where a layer actually ran: a
+    // layer-parallel GEMM occupies one cluster (8 op/cyc, private
+    // link), only tensor-parallel layers see the aggregate fabric
+    // ceilings — otherwise a near-peak single-cluster layer would
+    // print ~1/N attainment against roofs it never had.
+    let lone_ceilings = Ceilings::new(1, &fabric.noc);
+    let mut stall_totals = [0u64; N_CLASSES];
+    let mut rooflines: Vec<RooflinePoint> = Vec::new();
 
     while n_done < g.ops.len() {
         let wave: Vec<usize> = (0..g.ops.len())
@@ -345,6 +363,24 @@ pub fn run_net_clustered(
                     NetOp::Gemm { name, x, w, epi, out, .. },
                     WaveOut::Sharded(mut fr),
                 ) => {
+                    let sp = fr.stall_profile();
+                    for (t, v) in
+                        stall_totals.iter_mut().zip(sp.totals())
+                    {
+                        *t += v;
+                    }
+                    let layer_bytes: u64 = fr
+                        .shards
+                        .iter()
+                        .map(|s| s.perf.dma_bytes)
+                        .sum();
+                    rooflines.push(roofline::point(
+                        name.clone(),
+                        fr.fpu_ops_total(),
+                        layer_bytes,
+                        fr.window_cycles(),
+                        &Ceilings::new(fr.clusters(), &fabric.noc),
+                    ));
                     let fe = model::fabric_energy(
                         config,
                         &fr.perfs(),
@@ -394,6 +430,18 @@ pub fn run_net_clustered(
                     }
                 }
                 (NetOp::Gemm { name, epi, out, .. }, WaveOut::Gemm(r)) => {
+                    for (t, v) in
+                        stall_totals.iter_mut().zip(r.perf.stalls.totals())
+                    {
+                        *t += v;
+                    }
+                    rooflines.push(roofline::point(
+                        name.clone(),
+                        r.perf.fpu_ops_total,
+                        r.perf.dma_bytes,
+                        r.perf.window_cycles,
+                        &lone_ceilings,
+                    ));
                     let e = model::energy(config, &r.perf);
                     let t = &g.tensors[*out];
                     let fused =
@@ -510,14 +558,10 @@ pub fn run_net_clustered(
         })
         .collect();
 
-    let fabric_utilization = if total_cycles == 0 {
-        0.0
-    } else {
-        fpu_sum as f64
-            / (total_cycles as f64
-                * N_CORES as f64
-                * n_clusters as f64)
-    };
+    let fabric_utilization = ratio(
+        fpu_sum as f64,
+        total_cycles as f64 * N_CORES as f64 * n_clusters as f64,
+    );
     let report = NetReport {
         model: g.name.clone(),
         config,
@@ -525,11 +569,10 @@ pub fn run_net_clustered(
         layers,
         total_cycles,
         total_energy_uj: total_energy,
-        utilization: if window_sum == 0 {
-            0.0
-        } else {
-            fpu_sum as f64 / (window_sum as f64 * N_CORES as f64)
-        },
+        utilization: ratio(
+            fpu_sum as f64,
+            window_sum as f64 * N_CORES as f64,
+        ),
         total_macs: g.macs(),
         peak_live_bytes,
         fused_elems,
@@ -540,6 +583,8 @@ pub fn run_net_clustered(
         per_cluster_cycles,
         per_cluster_energy_uj: per_cluster_energy,
         fabric_utilization,
+        stall_totals,
+        rooflines,
     };
     Ok(NetRun { report, outputs })
 }
@@ -569,6 +614,38 @@ mod tests {
         // both GEMMs fused: only the residual add pays round-trips
         assert_eq!(run.report.extra_roundtrips, 64 * 64);
         assert!(run.report.fused_elems > 0);
+    }
+
+    #[test]
+    fn net_report_carries_stallscope_and_rooflines() {
+        use crate::profile::StallClass;
+        // Analytic: predicted breakdown; cycle: measured — both must
+        // populate the report with one roofline per GEMM layer and a
+        // nonzero Useful total.
+        for svc in [GemmService::analytic(), GemmService::cycle()] {
+            let g = zoo::mlp(16, &[16, 24, 16]).unwrap();
+            let run = run_net(
+                &svc,
+                &g,
+                ConfigId::Zonl48Db,
+                LayoutKind::Grouped,
+                2,
+                5,
+            )
+            .unwrap();
+            let r = &run.report;
+            let gemms = r.layers.iter().filter(|l| l.kind == "gemm");
+            assert_eq!(r.rooflines.len(), gemms.count());
+            assert!(
+                r.stall_totals[StallClass::Useful as usize] > 0,
+                "{:?}",
+                r.stall_totals
+            );
+            for p in &r.rooflines {
+                assert!(p.ops > 0 && p.bytes > 0);
+                assert!(p.roof_ops_per_cycle > 0.0);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! The `zerostall profile` runner: cycle-accurate StallScope profiling
+//! of a zoo model, layer by layer.
+//!
+//! Each GEMM layer of the model runs through the shared `GemmService`
+//! plan cache on the cycle backend — on one cluster, or sharded
+//! across a fabric when `--clusters N` and the partitioner finds a
+//! useful grid — with the per-cycle stall classifier always on and an
+//! optional Chrome-trace collector attached. Layers execute
+//! sequentially on one stitched timeline (layer `i+1` starts at layer
+//! `i`'s halt cycle), so the exported trace shows the whole model.
+//!
+//! The run *fails* if any layer violates the stall-conservation
+//! invariant `useful + Σstalls == cycles` on any core — this is the
+//! check the CI smoke step leans on.
+//!
+//! Unfused elementwise ops (residual adds) have no kernel to profile;
+//! they are skipped and reported, with their fused counterparts
+//! visible inside the GEMM layers' epilogues.
+
+use anyhow::{Context, Result};
+
+use crate::backend::CycleAccurate;
+use crate::cluster::ConfigId;
+use crate::fabric::{ClusterFabric, FabricConfig};
+use crate::kernels::{
+    choose_shard_grid, problem_seed, test_bias, test_matrices,
+    Epilogue, GemmService, LayoutKind,
+};
+use crate::profile::roofline::{self, Ceilings, RooflinePoint};
+use crate::profile::{ChromeTrace, StallProfile};
+
+use super::workload::graph::NetOp;
+use super::workload::{zoo, Problem};
+
+/// Profiling-run parameters.
+#[derive(Clone, Debug)]
+pub struct ProfileOpts {
+    pub model: String,
+    pub config: ConfigId,
+    pub clusters: usize,
+    pub layout: LayoutKind,
+    /// Collect a Chrome trace (costs memory proportional to the
+    /// number of stall-class transitions).
+    pub trace: bool,
+}
+
+impl ProfileOpts {
+    pub fn new(model: &str) -> ProfileOpts {
+        ProfileOpts {
+            model: model.to_string(),
+            config: ConfigId::Zonl48Db,
+            clusters: 1,
+            layout: LayoutKind::Grouped,
+            trace: false,
+        }
+    }
+}
+
+/// One profiled GEMM layer.
+#[derive(Clone, Debug)]
+pub struct LayerProfile {
+    pub name: String,
+    pub problem: Problem,
+    pub epilogue: String,
+    /// Clusters the layer actually ran on (1 = whole on one cluster).
+    pub shards: usize,
+    /// End-to-end layer cycles (slowest cluster on sharded layers).
+    pub cycles: u64,
+    pub stalls: StallProfile,
+    pub roofline: RooflinePoint,
+}
+
+/// The whole profiling run.
+#[derive(Clone, Debug)]
+pub struct ProfileReport {
+    pub model: String,
+    pub config: ConfigId,
+    pub clusters: usize,
+    pub layers: Vec<LayerProfile>,
+    /// Layer-serial merge of every layer's profile (per-core counters
+    /// add, windows add): the model-level breakdown.
+    pub merged: StallProfile,
+    pub total_cycles: u64,
+    /// Elementwise ops skipped (no kernel to profile).
+    pub skipped_adds: usize,
+    pub ceilings: Ceilings,
+}
+
+/// Run the profiler. Returns the report plus the Chrome trace when
+/// `opts.trace` is set.
+pub fn run_profile(
+    opts: &ProfileOpts,
+) -> Result<(ProfileReport, Option<ChromeTrace>)> {
+    let g = zoo::build(&opts.model)?;
+    let order = g.topo_order()?;
+    let clusters = opts.clusters.max(1);
+    let fabric = FabricConfig::new(clusters);
+    let ceilings = Ceilings::new(clusters, &fabric.noc);
+    let svc = GemmService::cycle();
+
+    let mut chrome = if opts.trace {
+        let mut t = ChromeTrace::default();
+        let n_compute = opts.config.cluster_config().n_compute;
+        for pid in 0..clusters as u32 {
+            t.label_cluster(pid, n_compute);
+        }
+        Some(t)
+    } else {
+        None
+    };
+
+    let mut layers = Vec::new();
+    let mut t_off = 0u64;
+    let mut skipped_adds = 0usize;
+    for &oi in &order {
+        let NetOp::Gemm { name, x, w, epi, .. } = &g.ops[oi] else {
+            skipped_adds += 1;
+            continue;
+        };
+        let (xt, wt) = (&g.tensors[*x], &g.tensors[*w]);
+        let p = Problem { m: xt.rows, n: wt.cols, k: xt.cols };
+        let seed = problem_seed(p.m, p.n, p.k);
+        let (a, b) = test_matrices(p.m, p.n, p.k, seed);
+        let bias = if epi.bias {
+            test_bias(p.n, seed)
+        } else {
+            Vec::new()
+        };
+
+        let grid = choose_shard_grid(p.m, p.n, clusters);
+        let (cycles, stalls, shards, ops, bytes, window) =
+            if clusters > 1 && grid.used_clusters() > 1 {
+                run_layer_sharded(
+                    &svc, opts, p, *epi, &a, &b, &bias, &fabric,
+                    chrome.as_mut(), t_off, name,
+                )?
+            } else {
+                run_layer_single(
+                    &svc, opts, p, *epi, &a, &b, &bias,
+                    chrome.as_mut(), t_off, name,
+                )?
+            };
+
+        stalls.check_conservation().map_err(|e| {
+            anyhow::anyhow!("layer `{name}`: {e}")
+        })?;
+        // Place the point against the ceilings of where it actually
+        // ran: unsharded layers occupy one cluster, never the fabric
+        // aggregate.
+        let roof = roofline::point(
+            name.clone(),
+            ops,
+            bytes,
+            window,
+            &Ceilings::new(shards, &fabric.noc),
+        );
+        layers.push(LayerProfile {
+            name: name.clone(),
+            problem: p,
+            epilogue: epi.name(),
+            shards,
+            cycles,
+            stalls,
+            roofline: roof,
+        });
+        t_off += cycles;
+    }
+
+    let mut merged = StallProfile::default();
+    for l in &layers {
+        merged.merge_serial(&l.stalls);
+    }
+    merged
+        .check_conservation()
+        .map_err(|e| anyhow::anyhow!("merged profile: {e}"))?;
+
+    let report = ProfileReport {
+        model: opts.model.clone(),
+        config: opts.config,
+        clusters,
+        layers,
+        merged,
+        total_cycles: t_off,
+        skipped_adds,
+        ceilings,
+    };
+    Ok((report, chrome))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_layer_single(
+    svc: &GemmService,
+    opts: &ProfileOpts,
+    p: Problem,
+    epi: Epilogue,
+    a: &[f64],
+    b: &[f64],
+    bias: &[f64],
+    chrome: Option<&mut ChromeTrace>,
+    t_off: u64,
+    name: &str,
+) -> Result<(u64, StallProfile, usize, u64, u64, u64)> {
+    let prep = svc.prepare_fused(
+        opts.config, p.m, p.n, p.k, opts.layout, epi,
+    )?;
+    let mut cl = CycleAccurate::build_cluster(&prep, a, b, bias)?;
+    if chrome.is_some() {
+        cl.attach_trace(0, t_off);
+        if let Some(t) = cl.trace.as_mut() {
+            t.instant(format!("layer:{name}"), 0);
+        }
+    }
+    cl.run(CycleAccurate::deadline(p.m, p.n, p.k))
+        .with_context(|| format!("layer `{name}`"))?;
+    let perf = cl.perf();
+    if let (Some(t), Some(buf)) = (chrome, cl.take_trace()) {
+        t.push(*buf);
+    }
+    Ok((
+        cl.cycle,
+        perf.stalls.clone(),
+        1,
+        perf.fpu_ops_total,
+        perf.dma_bytes,
+        perf.window_cycles,
+    ))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_layer_sharded(
+    svc: &GemmService,
+    opts: &ProfileOpts,
+    p: Problem,
+    epi: Epilogue,
+    a: &[f64],
+    b: &[f64],
+    bias: &[f64],
+    fabric: &FabricConfig,
+    chrome: Option<&mut ChromeTrace>,
+    t_off: u64,
+    name: &str,
+) -> Result<(u64, StallProfile, usize, u64, u64, u64)> {
+    let sh = svc.prepare_sharded(
+        opts.config,
+        p.m,
+        p.n,
+        p.k,
+        opts.layout,
+        epi,
+        fabric.clusters,
+    )?;
+    let mut clusters =
+        CycleAccurate::build_shard_clusters(&sh, a, b, bias)?;
+    if chrome.is_some() {
+        for (ci, cl) in clusters.iter_mut().enumerate() {
+            cl.attach_trace(ci as u32, t_off);
+        }
+        if let Some(t) = clusters[0].trace.as_mut() {
+            t.instant(format!("layer:{name}"), 0);
+        }
+    }
+    let deadline = CycleAccurate::shard_deadline(&sh);
+    let mut fab = ClusterFabric::new(clusters, fabric.noc);
+    fab.run(deadline).with_context(|| format!("layer `{name}`"))?;
+    let fr = CycleAccurate::gather(&sh, &fab);
+    if let Some(t) = chrome {
+        for cl in fab.clusters.iter_mut() {
+            if let Some(buf) = cl.take_trace() {
+                t.push(*buf);
+            }
+        }
+    }
+    let bytes: u64 = fr.shards.iter().map(|s| s.perf.dma_bytes).sum();
+    Ok((
+        fr.cycles,
+        fr.stall_profile(),
+        fr.clusters(),
+        fr.fpu_ops_total(),
+        bytes,
+        fr.window_cycles(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::StallClass;
+
+    #[test]
+    fn profile_ffn_conserves_and_matches_utilization() {
+        let opts = ProfileOpts::new("ffn");
+        let (rep, trace) = run_profile(&opts).unwrap();
+        assert!(trace.is_none(), "trace off by default");
+        assert_eq!(rep.skipped_adds, 1, "ffn has one residual add");
+        assert_eq!(rep.layers.len(), 2);
+        assert!(rep.total_cycles > 0);
+        rep.merged.check_conservation().unwrap();
+        for l in &rep.layers {
+            // Useful share over the window == ClusterPerf utilization
+            // convention; near-peak on the Dobu config.
+            assert!(
+                l.stalls.utilization() > 0.5,
+                "{}: util {}",
+                l.name,
+                l.stalls.utilization()
+            );
+            assert!(l.roofline.ops > 0);
+            assert!(l.roofline.bytes > 0);
+        }
+        // Dobu: ~no bank conflicts (the paper's zero-conflict claim).
+        let shares = rep.merged.shares();
+        assert!(
+            shares[StallClass::BankConflict as usize] < 0.05,
+            "Dobu bank-conflict share {}",
+            shares[StallClass::BankConflict as usize]
+        );
+    }
+
+    #[test]
+    fn profile_sharded_with_trace_stitches_clusters() {
+        let mut opts = ProfileOpts::new("qkv");
+        opts.clusters = 2;
+        opts.trace = true;
+        let (rep, trace) = run_profile(&opts).unwrap();
+        let trace = trace.unwrap();
+        assert_eq!(rep.clusters, 2);
+        assert!(rep.layers.iter().any(|l| l.shards > 1));
+        assert!(!trace.events.is_empty());
+        assert!(trace.processes.len() >= 2, "both clusters labeled");
+        let json = trace.to_json();
+        assert!(json.contains("layer:qkv_proj"));
+        assert!(json.contains("Useful"));
+    }
+
+    #[test]
+    fn profile_rejects_unknown_model() {
+        assert!(run_profile(&ProfileOpts::new("resnet9000")).is_err());
+    }
+}

@@ -5,8 +5,9 @@ use std::path::Path;
 
 use crate::cluster::ConfigId;
 use crate::model::congestion;
+use crate::profile::{RooflinePoint, StallClass, StallProfile, N_CLASSES};
 use crate::util::csv::{f, Csv};
-use crate::util::stats::BoxStats;
+use crate::util::stats::{box_stats, ratio, BoxStats};
 
 use super::experiments::{
     AblationRow, ErrorRow, Fig5Row, Fig5Summary, Headline, Table2Row,
@@ -547,6 +548,279 @@ pub fn serve_csv(run: &crate::coordinator::serve::ServeRun) -> Csv {
     c
 }
 
+// -------------------------------------------------- StallScope --
+
+/// Markdown table of class totals (shares of all attributed cycles).
+fn stall_table(totals: &[u64; N_CLASSES]) -> String {
+    let all: u64 = totals.iter().sum();
+    let mut out = String::new();
+    out.push_str("| class | cycles | share |\n|---|---|---|\n");
+    for c in StallClass::all() {
+        let t = totals[c as usize];
+        out.push_str(&format!(
+            "| {} | {} | {:.2}% |\n",
+            c.label(),
+            t,
+            ratio(t as f64, all as f64) * 100.0,
+        ));
+    }
+    out
+}
+
+/// One cluster/fabric run's breakdown (the `run --profile` section).
+pub fn render_stall_breakdown(p: &StallProfile) -> String {
+    let mut out = String::new();
+    out.push_str("### StallScope breakdown (compute cores)\n\n");
+    out.push_str(&stall_table(&p.totals()));
+    let conservation = match p.check_conservation() {
+        Ok(()) => "OK".to_string(),
+        Err(e) => format!("VIOLATED — {e}"),
+    };
+    out.push_str(&format!(
+        "\n* StallScope utilization {:.2}% over a {}-cycle window; \
+         conservation {} across {} cores\n",
+        p.utilization() * 100.0,
+        p.window_cycles,
+        conservation,
+        p.per_core.len(),
+    ));
+    // Per-core spread of the Useful share (reuses the Fig. 5 stats
+    // machinery) — skew here means load imbalance, not overhead.
+    let useful: Vec<f64> = p.per_core[..p.n_compute.min(p.per_core.len())]
+        .iter()
+        .map(|c| ratio(c.useful() as f64, c.total().max(1) as f64))
+        .collect();
+    if !useful.is_empty() {
+        let s = box_stats(&useful);
+        out.push_str(&format!(
+            "* per-core Useful share: min {:.3} / median {:.3} / max \
+             {:.3}\n",
+            s.min, s.median, s.max,
+        ));
+    }
+    out
+}
+
+fn roofline_table(points: &[RooflinePoint]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "| layer | ops | bytes | OI [op/B] | attained [op/cyc] | \
+         roof [op/cyc] | attainment | bound |\n\
+         |---|---|---|---|---|---|---|---|\n",
+    );
+    for p in points {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {:.1}% | {} |\n",
+            p.name,
+            p.ops,
+            p.bytes,
+            f(p.oi, 3),
+            f(p.attained_ops_per_cycle, 3),
+            f(p.roof_ops_per_cycle, 3),
+            p.attainment() * 100.0,
+            p.bound.name(),
+        ));
+    }
+    out
+}
+
+/// The `zerostall profile` report.
+pub fn render_profile(
+    r: &crate::coordinator::profile::ProfileReport,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "## StallScope profile — `{}` on {} x{} (cycle backend)\n\n",
+        r.model,
+        r.config.name(),
+        r.clusters,
+    ));
+    out.push_str(
+        "| layer | shape | epilogue | placement | cycles | util | \
+         top stall |\n|---|---|---|---|---|---|---|\n",
+    );
+    for l in &r.layers {
+        let totals = l.stalls.totals();
+        let top = StallClass::all()
+            .into_iter()
+            .skip(1) // Useful is not a stall
+            .max_by_key(|c| totals[*c as usize])
+            .unwrap();
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {:.1}% | {} ({:.1}%) |\n",
+            l.name,
+            l.problem,
+            l.epilogue,
+            if l.shards > 1 {
+                format!("sharded x{}", l.shards)
+            } else {
+                "1 cluster".to_string()
+            },
+            l.cycles,
+            l.stalls.utilization() * 100.0,
+            top.label(),
+            ratio(
+                totals[top as usize] as f64,
+                l.stalls.cycles_total() as f64
+            ) * 100.0,
+        ));
+    }
+    out.push_str(&format!(
+        "\n* end-to-end: {} cycles over {} GEMM layers ({} unfused \
+         elementwise ops excluded)\n\n",
+        r.total_cycles,
+        r.layers.len(),
+        r.skipped_adds,
+    ));
+    out.push_str("### Merged stall breakdown\n\n");
+    out.push_str(&stall_table(&r.merged.totals()));
+    out.push_str(&format!(
+        "\n* conservation: {} ({} profiled cores x {} layers)\n\n",
+        match r.merged.check_conservation() {
+            Ok(()) => "OK".to_string(),
+            Err(e) => format!("VIOLATED — {e}"),
+        },
+        r.merged.per_core.len(),
+        r.layers.len(),
+    ));
+    out.push_str("### Roofline\n\n");
+    out.push_str(&roofline_table(
+        &r.layers.iter().map(|l| l.roofline.clone()).collect::<Vec<_>>(),
+    ));
+    out.push_str(&format!(
+        "\n* fabric ceilings: compute {} op/cyc, L1 {} B/cyc{} — each \
+         layer is placed against the roofs of the clusters it \
+         actually occupied\n",
+        f(r.ceilings.compute_ops_per_cycle, 1),
+        f(r.ceilings.l1_bytes_per_cycle, 1),
+        if r.ceilings.noc_bytes_per_cycle.is_finite() {
+            format!(", NoC {} B/cyc", f(r.ceilings.noc_bytes_per_cycle, 1))
+        } else {
+            ", private NoC link".to_string()
+        },
+    ));
+    out
+}
+
+/// Per-layer, per-core stall counters (schema pinned by the golden
+/// test — extend only by appending columns).
+pub fn stall_csv(
+    r: &crate::coordinator::profile::ProfileReport,
+) -> Csv {
+    let mut header =
+        vec!["layer".to_string(), "core".to_string(), "cycles".to_string()];
+    for c in StallClass::all() {
+        header.push(c.name().to_string());
+    }
+    let mut csv = Csv::new(header);
+    for l in &r.layers {
+        for (ci, core) in l.stalls.per_core.iter().enumerate() {
+            let n = l.stalls.n_compute;
+            let label = if ci < n {
+                format!("c{ci}")
+            } else {
+                format!("dm{}", ci - n)
+            };
+            let mut row =
+                vec![l.name.clone(), label, core.cycles.to_string()];
+            for c in StallClass::all() {
+                row.push(core.counts[c as usize].to_string());
+            }
+            csv.row(row);
+        }
+    }
+    csv
+}
+
+/// Roofline points (schema pinned by the golden test).
+pub fn roofline_csv(points: &[RooflinePoint]) -> Csv {
+    let mut csv = Csv::new(vec![
+        "layer",
+        "ops",
+        "bytes",
+        "oi_ops_per_byte",
+        "attained_ops_per_cycle",
+        "roof_ops_per_cycle",
+        "attainment",
+        "bound",
+    ]);
+    for p in points {
+        csv.row(vec![
+            p.name.clone(),
+            p.ops.to_string(),
+            p.bytes.to_string(),
+            f(p.oi, 5),
+            f(p.attained_ops_per_cycle, 4),
+            f(p.roof_ops_per_cycle, 4),
+            f(p.attainment(), 4),
+            p.bound.name().to_string(),
+        ]);
+    }
+    csv
+}
+
+/// StallScope appendix for `net --profile true`.
+pub fn render_net_profile(
+    r: &crate::coordinator::net::NetReport,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "### StallScope ({} backend{})\n\n",
+        r.backend.name(),
+        if r.backend == crate::backend::BackendKind::Analytic {
+            " — predicted breakdown"
+        } else {
+            ""
+        },
+    ));
+    out.push_str(&stall_table(&r.stall_totals));
+    out.push_str("\n### Roofline (per GEMM layer)\n\n");
+    out.push_str(&roofline_table(&r.rooflines));
+    out
+}
+
+/// StallScope appendix for `serve --profile true`: the aggregate
+/// breakdown plus one roofline point per model of the mix.
+pub fn render_serve_profile(
+    r: &crate::coordinator::serve::ServeReport,
+) -> String {
+    use crate::profile::roofline;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "### StallScope ({} backend{})\n\n",
+        r.backend.name(),
+        if r.backend == crate::backend::BackendKind::Analytic {
+            " — predicted breakdown"
+        } else {
+            ""
+        },
+    ));
+    out.push_str(&stall_table(&r.stall_totals));
+    // MixAccum is per-cluster normalized (every cluster's window is
+    // summed), so every point places against one cluster's roofs —
+    // never the fabric aggregate a batched dispatch can't reach.
+    let ceilings = roofline::Ceilings::new(1, &r.noc);
+    let points: Vec<RooflinePoint> = r
+        .mix
+        .iter()
+        .filter(|m| m.gemm_ops > 0)
+        .map(|m| {
+            roofline::point(
+                m.model.clone(),
+                m.flops,
+                m.dma_bytes,
+                m.window_cycles,
+                &ceilings,
+            )
+        })
+        .collect();
+    if !points.is_empty() {
+        out.push_str("\n### Roofline (per request mix)\n\n");
+        out.push_str(&roofline_table(&points));
+    }
+    out
+}
+
 // ------------------------------------------------------------ sweep --
 
 /// Summary of a (possibly full-grid) backend sweep: per-config
@@ -663,6 +937,49 @@ mod tests {
         assert!(doc.contains("cluster 1: busy"));
         let csv = serve_csv(&run);
         assert_eq!(csv.rows(), run.report.completed);
+    }
+
+    #[test]
+    fn stall_breakdown_renders_shares_and_conservation() {
+        use crate::profile::{CoreStalls, StallClass, N_CLASSES};
+        let mut counts = [0u64; N_CLASSES];
+        counts[StallClass::Useful as usize] = 90;
+        counts[StallClass::Barrier as usize] = 10;
+        let p = StallProfile {
+            per_core: vec![CoreStalls { cycles: 100, counts }; 2],
+            n_compute: 2,
+            window_cycles: 100,
+            window_core_cycles: 200,
+        };
+        let doc = render_stall_breakdown(&p);
+        assert!(doc.contains("Useful"));
+        assert!(doc.contains("90.00%"));
+        assert!(doc.contains("conservation OK"));
+        assert!(doc.contains("per-core Useful share"));
+        assert!(!doc.contains("NaN"));
+    }
+
+    #[test]
+    fn net_profile_section_renders() {
+        use crate::coordinator::net::run_net;
+        use crate::coordinator::workload::zoo;
+        use crate::kernels::{GemmService, LayoutKind};
+        let svc = GemmService::analytic();
+        let g = zoo::build("ffn").unwrap();
+        let run = run_net(
+            &svc,
+            &g,
+            ConfigId::Zonl48Db,
+            LayoutKind::Grouped,
+            1,
+            3,
+        )
+        .unwrap();
+        let doc = render_net_profile(&run.report);
+        assert!(doc.contains("StallScope"));
+        assert!(doc.contains("predicted breakdown"));
+        assert!(doc.contains("Roofline"));
+        assert!(doc.contains("mlp_up"));
     }
 
     #[test]

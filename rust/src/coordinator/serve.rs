@@ -42,14 +42,15 @@ use anyhow::{ensure, Result};
 
 use crate::backend::BackendKind;
 use crate::cluster::ConfigId;
-use crate::fabric::FabricConfig;
+use crate::fabric::{FabricConfig, NocConfig};
 use crate::kernels::{
     choose_shard_grid, problem_seed, GemmJob, GemmService, LayoutKind,
     ServiceStats,
 };
+use crate::profile::N_CLASSES;
 use crate::util::prop::Shrink;
 use crate::util::rng::Rng;
-use crate::util::stats::CycleHistogram;
+use crate::util::stats::{ratio, CycleHistogram};
 
 use super::net::add_pass_cycles;
 use super::workload::graph::{NetGraph, NetOp};
@@ -248,6 +249,36 @@ pub struct ServeReport {
     pub gemm_ops: u64,
     /// All ops executed (GEMMs + elementwise adds).
     pub total_ops: u64,
+    /// NoC provisioning of the fabric the run scheduled onto (the
+    /// `--profile` roofline ceilings derive from this, never from a
+    /// renderer-side assumption).
+    pub noc: NocConfig,
+    /// StallScope class totals summed over every dispatched GEMM's
+    /// compute cores (measured or predicted, per the backend).
+    pub stall_totals: [u64; N_CLASSES],
+    /// Per-model roofline accumulators over the request mix (the
+    /// `--profile` report derives per-mix roofline points from these).
+    pub mix: Vec<MixAccum>,
+}
+
+/// Roofline raw material for one model of the serve mix: totals over
+/// every GEMM dispatched on behalf of that model's requests.
+///
+/// All quantities are *per-cluster normalized*: `window_cycles` sums
+/// the compute window of every cluster that worked on the model
+/// (each shard of a tensor-parallel dispatch contributes its own
+/// window), so `flops / window_cycles` is bounded by one cluster's
+/// 8 op/cycle peak regardless of fabric size — batched and sharded
+/// dispatches land in the same normalization.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MixAccum {
+    pub model: String,
+    pub gemm_ops: u64,
+    /// FPU ops (MACs + fused-epilogue ops).
+    pub flops: u64,
+    pub dma_bytes: u64,
+    /// Summed per-cluster compute windows the ops were issued over.
+    pub window_cycles: u64,
 }
 
 impl ServeReport {
@@ -263,46 +294,30 @@ impl ServeReport {
         self.latency.quantile(0.99)
     }
 
-    /// Completed requests per million cycles of makespan.
+    /// Completed requests per million cycles of makespan (0 on
+    /// zero-cycle runs — ratios are NaN-guarded).
     pub fn throughput_per_mcycle(&self) -> f64 {
-        if self.makespan_cycles == 0 {
-            0.0
-        } else {
-            self.completed as f64 / self.makespan_cycles as f64 * 1.0e6
-        }
+        ratio(self.completed as f64, self.makespan_cycles as f64)
+            * 1.0e6
     }
 
     /// Fraction of completed requests that met the SLO.
     pub fn slo_attainment(&self) -> f64 {
-        if self.completed == 0 {
-            0.0
-        } else {
-            self.slo_attained as f64 / self.completed as f64
-        }
+        ratio(self.slo_attained as f64, self.completed as f64)
     }
 
     /// SLO-attained requests per million cycles — the serving metric
     /// the policy comparison is judged on.
     pub fn slo_attained_throughput(&self) -> f64 {
-        if self.makespan_cycles == 0 {
-            0.0
-        } else {
-            self.slo_attained as f64 / self.makespan_cycles as f64
-                * 1.0e6
-        }
+        ratio(self.slo_attained as f64, self.makespan_cycles as f64)
+            * 1.0e6
     }
 
     /// Per-cluster busy fraction of the makespan.
     pub fn cluster_utilization(&self) -> Vec<f64> {
         self.per_cluster_busy
             .iter()
-            .map(|&b| {
-                if self.makespan_cycles == 0 {
-                    0.0
-                } else {
-                    b as f64 / self.makespan_cycles as f64
-                }
-            })
+            .map(|&b| ratio(b as f64, self.makespan_cycles as f64))
             .collect()
     }
 }
@@ -412,6 +427,7 @@ pub fn serve_trace(
         );
     }
     let n_clusters = cfg.clusters.max(1);
+    let fabric = FabricConfig::new(n_clusters);
     // Snapshot plan-cache counters before everything — including the
     // SLO probe below — so the reported hit rate covers the whole
     // run's cache behavior, cold start included.
@@ -459,6 +475,17 @@ pub fn serve_trace(
     let mut sharded_waves = 0u64;
     let mut gemm_ops = 0u64;
     let mut total_ops = 0u64;
+    let mut stall_totals = [0u64; N_CLASSES];
+    let mut mix: Vec<MixAccum> = plans
+        .iter()
+        .map(|p| MixAccum {
+            model: p.name.clone(),
+            gemm_ops: 0,
+            flops: 0,
+            dma_bytes: 0,
+            window_cycles: 0,
+        })
+        .collect();
 
     while next_arr < reqs.len() || !active.is_empty() {
         while next_arr < reqs.len()
@@ -526,13 +553,29 @@ pub fn serve_trace(
                 oi,
                 reqs[ri].seed,
             );
-            let fr = svc
-                .run_sharded_job(&job, &FabricConfig::new(n_clusters))?;
+            let fr = svc.run_sharded_job(&job, &fabric)?;
             sharded_waves += 1;
             gemm_ops += 1;
             for (ci, s) in fr.shards.iter().enumerate() {
                 busy[ci % n_clusters] += s.cycles;
             }
+            for (t, v) in stall_totals
+                .iter_mut()
+                .zip(fr.stall_profile().totals())
+            {
+                *t += v;
+            }
+            let acc = &mut mix[reqs[ri].model];
+            acc.gemm_ops += 1;
+            acc.flops += fr.fpu_ops_total();
+            acc.dma_bytes +=
+                fr.shards.iter().map(|s| s.perf.dma_bytes).sum::<u64>();
+            // Per-cluster normalization: every shard's window counts.
+            acc.window_cycles += fr
+                .shards
+                .iter()
+                .map(|s| s.perf.window_cycles)
+                .sum::<u64>();
             finishes[0] = clock + fr.cycles;
             clock += fr.cycles;
         } else {
@@ -556,6 +599,20 @@ pub fn serve_trace(
             }
             gemm_ops += jobs.len() as u64;
             let results = svc.run_batch(&jobs, cfg.threads)?;
+            for (ix, &(ri, _)) in ready.iter().enumerate() {
+                let Some(ji) = job_of[ix] else { continue };
+                let perf = &results[ji].perf;
+                for (t, v) in
+                    stall_totals.iter_mut().zip(perf.stalls.totals())
+                {
+                    *t += v;
+                }
+                let acc = &mut mix[reqs[ri].model];
+                acc.gemm_ops += 1;
+                acc.flops += perf.fpu_ops_total;
+                acc.dma_bytes += perf.dma_bytes;
+                acc.window_cycles += perf.window_cycles;
+            }
             let costs: Vec<u64> = ready
                 .iter()
                 .enumerate()
@@ -656,6 +713,9 @@ pub fn serve_trace(
         sharded_waves,
         gemm_ops,
         total_ops,
+        noc: fabric.noc,
+        stall_totals,
+        mix,
     };
     Ok(ServeRun { report, rows })
 }
@@ -750,6 +810,30 @@ mod tests {
             run.report.makespan_cycles < fifo.report.makespan_cycles,
             "tensor-parallel solo service must be faster"
         );
+    }
+
+    #[test]
+    fn serve_accumulates_stallscope_and_mix_rooflines() {
+        let svc = analytic();
+        let mut cfg = cfg_of("ffn");
+        cfg.requests = 3;
+        let run = serve(&svc, &cfg).unwrap();
+        let r = &run.report;
+        assert_eq!(r.mix.len(), 1);
+        assert_eq!(r.mix[0].model, "ffn");
+        // One cluster, one model: every dispatched GEMM is ffn's.
+        assert_eq!(r.mix[0].gemm_ops, r.gemm_ops);
+        assert!(r.mix[0].flops > 0);
+        assert!(r.mix[0].dma_bytes > 0);
+        assert!(r.mix[0].window_cycles > 0);
+        assert!(r.stall_totals.iter().sum::<u64>() > 0);
+        // Sharded dispatches accumulate too.
+        let mut cfg4 = cfg_of("ffn");
+        cfg4.requests = 1;
+        cfg4.clusters = 4;
+        let run4 = serve(&analytic(), &cfg4).unwrap();
+        assert!(run4.report.sharded_waves > 0);
+        assert!(run4.report.mix[0].flops > 0);
     }
 
     #[test]

@@ -131,8 +131,10 @@ impl Sequencer {
         }
     }
 
-    /// Number of live RB entries.
-    fn occupancy(&self) -> usize {
+    /// Number of live RB entries (public: StallScope's Chrome trace
+    /// samples it as a counter track at every stall-class transition,
+    /// which makes frontend-starvation vs backpressure visible).
+    pub fn occupancy(&self) -> usize {
         (self.wseq - self.tail) as usize
     }
 

@@ -23,6 +23,7 @@ use std::sync::Arc;
 
 use crate::dma::DmaDesc;
 use crate::isa::{csr, Instr, Program};
+use crate::profile::{FpEvent, FrontPhase, N_CLASSES};
 use crate::ssr::{SsrMode, Streamer};
 
 use super::fpu::{Fpu, FpuConfig, Writeback};
@@ -56,7 +57,14 @@ impl CoreConfig {
 /// Per-core performance counters (the stall taxonomy of DESIGN.md §5).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CorePerf {
+    /// Active cycles: incremented once per `fp_tick` (i.e. per cycle
+    /// the core was stepped before halting). The StallScope invariant
+    /// `stalls.sum() == cycles` is checked against this counter.
     pub cycles: u64,
+    /// StallScope attribution buckets, indexed by
+    /// `profile::StallClass as usize`; the cluster classifier
+    /// increments exactly one per active cycle.
+    pub stalls: [u64; N_CLASSES],
     pub fpu_ops: u64,
     pub fpu_idle_no_instr: u64,
     pub stall_ssr_empty: u64,
@@ -142,6 +150,12 @@ pub struct Core {
     dm_reps2: u32,
     dm_txid: u32,
     pub perf: CorePerf,
+    /// What the FP subsystem did this cycle — set by `fp_tick`,
+    /// consumed exactly once by the cluster's StallScope classifier.
+    last_fp_event: Option<FpEvent>,
+    /// Cycle of the most recent LSU arbitration loss (StallScope
+    /// bank-conflict attribution for frontend LSU waits).
+    lsu_denied_cycle: u64,
     wb_scratch: Vec<Writeback>,
 }
 
@@ -175,7 +189,40 @@ impl Core {
             dm_reps2: 1,
             dm_txid: 0,
             perf: CorePerf::default(),
+            last_fp_event: None,
+            lsu_denied_cycle: u64::MAX,
             wb_scratch: Vec::with_capacity(4),
+        }
+    }
+
+    /// Take this cycle's FP event (None iff the core was halted and
+    /// never ticked). The classifier's one-bucket-per-cycle guarantee
+    /// rests on the take: each event is attributed exactly once.
+    pub fn take_fp_event(&mut self) -> Option<FpEvent> {
+        self.last_fp_event.take()
+    }
+
+    /// Did any of this core's SSR streams lose TCDM arbitration on
+    /// cycle `now`?
+    pub fn ssr_denied_at(&self, now: u64) -> bool {
+        self.ssrs.iter().any(|s| s.denied_at(now))
+    }
+
+    pub fn note_lsu_denied(&mut self, now: u64) {
+        self.lsu_denied_cycle = now;
+    }
+
+    pub fn lsu_denied_at(&self, now: u64) -> bool {
+        self.lsu_denied_cycle == now
+    }
+
+    /// Frontend state snapshot for stall attribution.
+    fn front_phase(&self) -> FrontPhase {
+        match self.state {
+            State::BarrierWait => FrontPhase::Barrier,
+            State::DrainWait => FrontPhase::Drain,
+            State::LsuWait { .. } => FrontPhase::Lsu,
+            _ => FrontPhase::Running,
         }
     }
 
@@ -216,7 +263,15 @@ impl Core {
     // FP subsystem tick
     // ============================================================
 
+    /// One FP-subsystem cycle: counts the active cycle and records the
+    /// issue/stall event StallScope attributes at end of cluster step.
     pub fn fp_tick(&mut self, now: u64) {
+        self.perf.cycles += 1;
+        let ev = self.fp_tick_inner(now);
+        self.last_fp_event = Some(ev);
+    }
+
+    fn fp_tick_inner(&mut self, now: u64) -> FpEvent {
         // 1. FPU writebacks (SSR-bound results feed the write streamer).
         self.wb_scratch.clear();
         self.fpu.tick(now, &mut self.wb_scratch);
@@ -230,11 +285,11 @@ impl Core {
             if self.state != State::Halted {
                 self.perf.fpu_idle_no_instr += 1;
             }
-            return;
+            return FpEvent::NoInstr(self.front_phase());
         };
         if !self.fpu.can_issue() {
             self.perf.stall_fpu_full += 1;
-            return;
+            return FpEvent::FpuFull;
         }
 
         // Fast path: fmadd/fmul (the kernel hot loop). Checks and
@@ -250,19 +305,19 @@ impl Core {
                     && (!s3 || self.ssrs[frs3 as usize].can_pop());
                 if !ready {
                     self.perf.stall_ssr_empty += 1;
-                    return;
+                    return FpEvent::SsrEmpty;
                 }
                 if (!s1 && self.fpu.reg_busy(frs1))
                     || (!s2 && self.fpu.reg_busy(frs2))
                     || (!s3 && self.fpu.reg_busy(frs3))
                 {
                     self.perf.stall_raw += 1;
-                    return;
+                    return FpEvent::RawHazard;
                 }
                 let ssr_dest = self.ssr_write(frd);
                 if ssr_dest && !self.ssrs[frd as usize].can_reserve() {
                     self.perf.stall_wfifo += 1;
-                    return;
+                    return FpEvent::WFifoFull;
                 }
                 let a = if s1 {
                     self.ssrs[frs1 as usize].pop()
@@ -294,7 +349,7 @@ impl Core {
                     self.perf.rb_replays += 1;
                 }
                 self.perf.fpu_ops += 1;
-                return;
+                return FpEvent::Issued;
             }
             Instr::FmulD { frd, frs1, frs2 } => {
                 let s1 = self.ssr_read(frs1);
@@ -303,18 +358,18 @@ impl Core {
                     || (s2 && !self.ssrs[frs2 as usize].can_pop())
                 {
                     self.perf.stall_ssr_empty += 1;
-                    return;
+                    return FpEvent::SsrEmpty;
                 }
                 if (!s1 && self.fpu.reg_busy(frs1))
                     || (!s2 && self.fpu.reg_busy(frs2))
                 {
                     self.perf.stall_raw += 1;
-                    return;
+                    return FpEvent::RawHazard;
                 }
                 let ssr_dest = self.ssr_write(frd);
                 if ssr_dest && !self.ssrs[frd as usize].can_reserve() {
                     self.perf.stall_wfifo += 1;
-                    return;
+                    return FpEvent::WFifoFull;
                 }
                 let a = if s1 {
                     self.ssrs[frs1 as usize].pop()
@@ -337,7 +392,7 @@ impl Core {
                     self.perf.rb_replays += 1;
                 }
                 self.perf.fpu_ops += 1;
-                return;
+                return FpEvent::Issued;
             }
             _ => {}
         }
@@ -349,18 +404,18 @@ impl Core {
             if self.ssr_read(*src) {
                 if !self.ssrs[*src as usize].can_pop() {
                     self.perf.stall_ssr_empty += 1;
-                    return;
+                    return FpEvent::SsrEmpty;
                 }
             } else if self.fpu.reg_busy(*src) {
                 self.perf.stall_raw += 1;
-                return;
+                return FpEvent::RawHazard;
             }
         }
         let dest = instr.fp_dest().expect("compute op has a dest");
         let ssr_dest = self.ssr_write(dest);
         if ssr_dest && !self.ssrs[dest as usize].can_reserve() {
             self.perf.stall_wfifo += 1;
-            return;
+            return FpEvent::WFifoFull;
         }
 
         // Commit: pop SSR operands per source *occurrence*.
@@ -382,6 +437,7 @@ impl Core {
             self.perf.rb_replays += 1;
         }
         self.perf.fpu_ops += 1;
+        FpEvent::Issued
     }
 
     // ============================================================

@@ -75,6 +75,10 @@ pub struct Dma {
     pub stall_cycles: u64,
     pub bytes_moved: u64,
     pub busy_cycles: u64,
+    /// Subset of `stall_cycles` where the *fabric NoC* withheld the
+    /// grant (vs the TCDM superbank mux) — StallScope's NocGated
+    /// evidence at the engine level.
+    pub noc_gated_cycles: u64,
 }
 
 impl Dma {
@@ -87,6 +91,7 @@ impl Dma {
             stall_cycles: 0,
             bytes_moved: 0,
             busy_cycles: 0,
+            noc_gated_cycles: 0,
         }
     }
 

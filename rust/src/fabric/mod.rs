@@ -26,6 +26,7 @@ use anyhow::Result;
 
 use crate::cluster::{Cluster, ClusterPerf};
 use crate::kernels::tiling::Shard;
+use crate::profile::StallProfile;
 
 /// Shared-NoC link provisioning: `links` parallel links, each
 /// sustaining `beats_per_link` 512-bit beats per cycle into L2.
@@ -246,6 +247,18 @@ impl FabricResult {
     /// the conflict split).
     pub fn conflicts_total(&self) -> u64 {
         self.shards.iter().map(|s| s.perf.conflicts_total()).sum()
+    }
+
+    /// Fabric-level StallScope profile: every cluster's per-core
+    /// attribution merged side by side (clusters ran in lockstep, so
+    /// the window is the longest shard's).
+    pub fn stall_profile(&self) -> StallProfile {
+        let profiles: Vec<StallProfile> = self
+            .shards
+            .iter()
+            .map(|s| s.perf.stalls.clone())
+            .collect();
+        StallProfile::merge_parallel(&profiles)
     }
 }
 

@@ -33,6 +33,7 @@ pub mod kernels;
 pub mod mem;
 pub mod model;
 pub mod opengemm;
+pub mod profile;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod ssr;

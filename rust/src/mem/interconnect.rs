@@ -49,6 +49,10 @@ pub struct XbarStats {
     pub core_conflicts_dma: u64,
     pub dma_grants: u64,
     pub dma_conflicts: u64,
+    /// Cycles in which at least one core request was denied — the
+    /// per-cycle contention footprint StallScope's report quotes next
+    /// to the per-request counters above.
+    pub conflict_cycles: u64,
 }
 
 impl XbarStats {
@@ -234,6 +238,9 @@ impl Interconnect {
         self.stats.core_conflicts_dma += dma_captured;
         self.stats.core_conflicts +=
             ((reqs.len() - granted) as u64).saturating_sub(dma_captured);
+        if reqs.len() > granted {
+            self.stats.conflict_cycles += 1;
+        }
 
         out
     }

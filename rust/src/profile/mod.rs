@@ -1,0 +1,521 @@
+//! StallScope — per-cycle stall attribution for the cluster model.
+//!
+//! The paper's headline (96.1–99.4% utilization via zero-overhead loop
+//! nests and a zero-conflict memory subsystem) is a claim about *where
+//! the residual stall cycles go*. This module makes the simulator a
+//! diagnosable instrument:
+//!
+//! * a nine-class **taxonomy** ([`StallClass`]) covering every cycle of
+//!   every core: each active cycle is attributed to exactly one class
+//!   by the cluster's classifier (`Cluster::attribute_cycle`), so the
+//!   **conservation invariant** `useful + Σ stalls == cycles` holds
+//!   bit-exactly per core by construction — and is still *checked*
+//!   ([`CoreStalls::check`]) because the cycle counter and the class
+//!   buckets are incremented at different sites;
+//! * a **mergeable aggregate** ([`StallProfile`]): per-core counters
+//!   roll up core → cluster ([`StallProfile::totals`]) → fabric
+//!   ([`StallProfile::merge_parallel`]) → multi-layer run
+//!   ([`StallProfile::merge_serial`]), and
+//!   [`StallProfile::utilization`] decomposes the existing
+//!   `ClusterPerf` utilization exactly (`Useful` counts the same
+//!   events as `fpu_ops`, over the same compute window);
+//! * a **Chrome `trace_event` exporter** ([`trace`]) with per-core
+//!   stall tracks, a DMA track, and barrier markers — load the JSON in
+//!   `chrome://tracing` / Perfetto;
+//! * a **roofline** module ([`roofline`]) placing measured layers
+//!   against the compute, L1-DMA, and NoC bandwidth ceilings.
+//!
+//! The cycle backend fills profiles from measurement; the analytic
+//! backend fills the same structure from its calibrated terms
+//! (`backend::analytic::predict_perf_noc`), which is what the
+//! cycle-vs-analytic breakdown differential tests compare.
+
+pub mod roofline;
+pub mod trace;
+
+pub use roofline::{Bound, Ceilings, RooflinePoint};
+pub use trace::{ChromeTrace, TraceBuf};
+
+/// Number of attribution classes (the full taxonomy).
+pub const N_CLASSES: usize = 9;
+
+/// Where one core-cycle went. Every active cycle of every core lands
+/// in exactly one class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum StallClass {
+    /// The FPU issued one op this cycle (a MAC or an epilogue op).
+    Useful = 0,
+    /// Frontend busy with non-FP work while the sequencer was empty:
+    /// loop management, address arithmetic, CSR toggles, SSR re-arm,
+    /// scalar LSU traffic — the paper's §III-A control overhead.
+    ControlOverhead = 1,
+    /// An SSR operand (or write-FIFO slot) was not ready and no TCDM
+    /// denial explains it: stream start-up / pipeline latency.
+    SsrOperandWait = 2,
+    /// Register-file RAW hazard or a full FPU pipeline.
+    RawHazard = 3,
+    /// A TCDM request of this core (SSR stream or LSU) lost
+    /// arbitration this cycle — bank round-robin or the DMA superbank
+    /// mux. The paper's "zero-conflict" claim is about this bucket.
+    BankConflict = 4,
+    /// Parked at a barrier (or the DM core polling `dmstat`) while the
+    /// cluster DMA engine still moves data: double-buffer fill/drain
+    /// on the critical path.
+    DmaWait = 5,
+    /// Parked at a barrier waiting for *peer cores* (DMA idle).
+    Barrier = 6,
+    /// Waiting on DMA whose branch the fabric NoC gated off the shared
+    /// links this cycle (multi-cluster contention).
+    NocGated = 7,
+    /// Frontend parked on an in-order drain point (fsd ordering, SSR
+    /// disable): the FP subsystem empties before control continues.
+    Drain = 8,
+}
+
+impl StallClass {
+    pub fn all() -> [StallClass; N_CLASSES] {
+        [
+            StallClass::Useful,
+            StallClass::ControlOverhead,
+            StallClass::SsrOperandWait,
+            StallClass::RawHazard,
+            StallClass::BankConflict,
+            StallClass::DmaWait,
+            StallClass::Barrier,
+            StallClass::NocGated,
+            StallClass::Drain,
+        ]
+    }
+
+    /// Stable machine-readable name (CSV column headers).
+    pub fn name(&self) -> &'static str {
+        match self {
+            StallClass::Useful => "useful",
+            StallClass::ControlOverhead => "control_overhead",
+            StallClass::SsrOperandWait => "ssr_operand_wait",
+            StallClass::RawHazard => "raw_hazard",
+            StallClass::BankConflict => "bank_conflict",
+            StallClass::DmaWait => "dma_wait",
+            StallClass::Barrier => "barrier",
+            StallClass::NocGated => "noc_gated",
+            StallClass::Drain => "drain",
+        }
+    }
+
+    /// Human label (trace spans, report tables).
+    pub fn label(&self) -> &'static str {
+        match self {
+            StallClass::Useful => "Useful",
+            StallClass::ControlOverhead => "ControlOverhead",
+            StallClass::SsrOperandWait => "SsrOperandWait",
+            StallClass::RawHazard => "RawHazard",
+            StallClass::BankConflict => "BankConflict",
+            StallClass::DmaWait => "DmaWait",
+            StallClass::Barrier => "Barrier",
+            StallClass::NocGated => "NocGated",
+            StallClass::Drain => "Drain",
+        }
+    }
+}
+
+/// Frontend state snapshot at FP-tick time — the raw material the
+/// classifier turns into a [`StallClass`] when the sequencer had
+/// nothing to issue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrontPhase {
+    /// Executing integer/control instructions (or fetch bubbles).
+    Running,
+    /// Waiting for a TCDM LSU grant.
+    Lsu,
+    /// Parked on an in-order drain point.
+    Drain,
+    /// Parked at a barrier.
+    Barrier,
+}
+
+/// What one core's FP subsystem did in one cycle. Recorded by
+/// `Core::fp_tick`, consumed (exactly once) by the cluster classifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FpEvent {
+    /// One op issued to the FPU.
+    Issued,
+    /// Blocked on an empty SSR read FIFO.
+    SsrEmpty,
+    /// Blocked reserving a write-FIFO slot.
+    WFifoFull,
+    /// Blocked on a register-file RAW hazard.
+    RawHazard,
+    /// The FPU pipeline could not accept an issue.
+    FpuFull,
+    /// The sequencer had nothing to issue; carries the frontend state.
+    NoInstr(FrontPhase),
+}
+
+/// One core's attribution counters. Invariant:
+/// `counts.iter().sum() == cycles` (checked, not assumed).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CoreStalls {
+    /// Active cycles (cycles the core was stepped before halting).
+    pub cycles: u64,
+    /// Per-class cycle counts, indexed by `StallClass as usize`.
+    pub counts: [u64; N_CLASSES],
+}
+
+impl CoreStalls {
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn useful(&self) -> u64 {
+        self.counts[StallClass::Useful as usize]
+    }
+
+    /// The conservation invariant for this core.
+    pub fn check(&self) -> Result<(), String> {
+        let t = self.total();
+        if t == self.cycles {
+            Ok(())
+        } else {
+            Err(format!(
+                "stall conservation violated: classes sum to {t}, core \
+                 was active {} cycles ({:?})",
+                self.cycles, self.counts
+            ))
+        }
+    }
+
+    fn add(&mut self, o: &CoreStalls) {
+        self.cycles += o.cycles;
+        for (a, b) in self.counts.iter_mut().zip(&o.counts) {
+            *a += b;
+        }
+    }
+}
+
+/// The mergeable stall-attribution aggregate: per-core counters for
+/// one cluster run (compute cores first, the DM core last), plus the
+/// compute window the utilization decomposition is measured over.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StallProfile {
+    /// `per_core[..n_compute]` are compute cores; any trailing entries
+    /// are DM cores (one per merged cluster).
+    pub per_core: Vec<CoreStalls>,
+    pub n_compute: usize,
+    /// Compute-window length (same window `ClusterPerf` measures
+    /// utilization over). `merge_serial` sums windows;
+    /// `merge_parallel` keeps the longest.
+    pub window_cycles: u64,
+    /// Utilization denominator: compute-core-cycles of window
+    /// (`window_cycles x n_compute` for a single run, summed across
+    /// merges). Tracked separately so merging profiles of *different*
+    /// core counts (sharded + unsharded layers) keeps the weighted
+    /// mean exact instead of charging every window to every core.
+    pub window_core_cycles: u64,
+}
+
+impl StallProfile {
+    pub fn is_empty(&self) -> bool {
+        self.per_core.is_empty()
+    }
+
+    fn compute_cores(&self) -> &[CoreStalls] {
+        &self.per_core[..self.n_compute.min(self.per_core.len())]
+    }
+
+    /// DM-core entries (everything past the compute cores).
+    pub fn dm_cores(&self) -> &[CoreStalls] {
+        let n = self.n_compute.min(self.per_core.len());
+        &self.per_core[n..]
+    }
+
+    /// Class totals over the *compute* cores — the decomposition of
+    /// the utilization metric. (DM cores are profiled too, but they
+    /// have no FPU and would dilute the shares.)
+    pub fn totals(&self) -> [u64; N_CLASSES] {
+        let mut t = [0u64; N_CLASSES];
+        for c in self.compute_cores() {
+            for (a, b) in t.iter_mut().zip(&c.counts) {
+                *a += b;
+            }
+        }
+        t
+    }
+
+    pub fn useful_total(&self) -> u64 {
+        self.totals()[StallClass::Useful as usize]
+    }
+
+    /// Total attributed compute-core cycles.
+    pub fn cycles_total(&self) -> u64 {
+        self.compute_cores().iter().map(|c| c.cycles).sum()
+    }
+
+    /// FPU utilization as the decomposition reports it: useful cycles
+    /// over the compute-core-cycles of window. On the cycle backend a
+    /// single-run profile equals `ClusterPerf::utilization` bit for
+    /// bit — `Useful` increments on precisely the events `fpu_ops`
+    /// counts, and `window_core_cycles == window_cycles * n_compute`
+    /// (exact in f64: both factors and the product are integers well
+    /// below 2^53). Merged profiles report the window-weighted mean.
+    pub fn utilization(&self) -> f64 {
+        crate::util::stats::ratio(
+            self.useful_total() as f64,
+            self.window_core_cycles as f64,
+        )
+    }
+
+    /// Per-class share of all attributed compute-core cycles.
+    pub fn shares(&self) -> [f64; N_CLASSES] {
+        let totals = self.totals();
+        let all = self.cycles_total() as f64;
+        let mut s = [0.0f64; N_CLASSES];
+        for (out, &t) in s.iter_mut().zip(&totals) {
+            *out = crate::util::stats::ratio(t as f64, all);
+        }
+        s
+    }
+
+    /// The conservation invariant over every profiled core.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        for (i, c) in self.per_core.iter().enumerate() {
+            c.check().map_err(|e| format!("core {i}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Merge profiles of runs that happened *in sequence on the same
+    /// cores* (e.g. the layers of a network): counters add index-wise,
+    /// windows add. Profiles of different shapes (or empty ones, as
+    /// the analytic elementwise-pass stub produces) concatenate /
+    /// pass through instead.
+    pub fn merge_serial(&mut self, other: &StallProfile) {
+        if other.is_empty() {
+            return;
+        }
+        if self.is_empty() {
+            *self = other.clone();
+            return;
+        }
+        if self.per_core.len() == other.per_core.len()
+            && self.n_compute == other.n_compute
+        {
+            for (a, b) in self.per_core.iter_mut().zip(&other.per_core) {
+                a.add(b);
+            }
+        } else {
+            // Shape change mid-sequence (e.g. a layer sharded across a
+            // different cluster count): fall back to concatenation so
+            // no cycle is ever dropped.
+            let dm: Vec<CoreStalls> = self.dm_cores().to_vec();
+            let n = self.n_compute.min(self.per_core.len());
+            self.per_core.truncate(n);
+            self.per_core.extend(other.compute_cores());
+            self.per_core.extend(dm);
+            self.per_core.extend(other.dm_cores());
+            self.n_compute += other.n_compute;
+        }
+        self.window_cycles += other.window_cycles;
+        self.window_core_cycles += other.window_core_cycles;
+    }
+
+    /// Merge profiles of clusters that ran *in parallel* (a fabric):
+    /// compute cores concatenate, DM cores follow, the window is the
+    /// longest cluster's (lockstep semantics).
+    pub fn merge_parallel(profiles: &[StallProfile]) -> StallProfile {
+        let mut out = StallProfile::default();
+        let mut dms: Vec<CoreStalls> = Vec::new();
+        for p in profiles {
+            out.per_core.extend(p.compute_cores());
+            dms.extend(p.dm_cores());
+            out.n_compute += p.n_compute.min(p.per_core.len());
+            out.window_cycles = out.window_cycles.max(p.window_cycles);
+            out.window_core_cycles += p.window_core_cycles;
+        }
+        out.per_core.extend(dms);
+        out
+    }
+}
+
+/// Distribute fractional per-class cycle predictions onto integer
+/// buckets that sum to `total` exactly (largest-remainder rounding) —
+/// how the analytic backend keeps its *predicted* profile on the same
+/// conservation invariant as the measured one.
+pub fn quantize(buckets: &[f64; N_CLASSES], total: u64) -> [u64; N_CLASSES] {
+    let mut out = [0u64; N_CLASSES];
+    let mut fracs: Vec<(usize, f64)> = Vec::with_capacity(N_CLASSES);
+    let mut floor_sum = 0u64;
+    for (i, &b) in buckets.iter().enumerate() {
+        let b = if b.is_finite() && b > 0.0 { b } else { 0.0 };
+        let f = b.floor();
+        out[i] = f as u64;
+        floor_sum += out[i];
+        fracs.push((i, b - f));
+    }
+    if floor_sum > total {
+        // Numeric overshoot: trim from the largest buckets.
+        let mut excess = floor_sum - total;
+        let mut order: Vec<usize> = (0..N_CLASSES).collect();
+        order.sort_by(|&a, &b| out[b].cmp(&out[a]).then(a.cmp(&b)));
+        for i in order {
+            let take = excess.min(out[i]);
+            out[i] -= take;
+            excess -= take;
+            if excess == 0 {
+                break;
+            }
+        }
+        return out;
+    }
+    // Hand the remainder to the largest fractional parts
+    // (deterministic tie-break on index).
+    let mut rem = total - floor_sum;
+    fracs.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+    });
+    let mut i = 0;
+    while rem > 0 {
+        out[fracs[i % N_CLASSES].0] += 1;
+        rem -= 1;
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn core(cycles: u64, useful: u64) -> CoreStalls {
+        let mut c = CoreStalls { cycles, counts: [0; N_CLASSES] };
+        c.counts[StallClass::Useful as usize] = useful;
+        c.counts[StallClass::Barrier as usize] = cycles - useful;
+        c
+    }
+
+    #[test]
+    fn class_names_are_unique_and_ordered() {
+        let all = StallClass::all();
+        assert_eq!(all.len(), N_CLASSES);
+        for (i, c) in all.iter().enumerate() {
+            assert_eq!(*c as usize, i);
+        }
+        let names: std::collections::HashSet<_> =
+            all.iter().map(|c| c.name()).collect();
+        assert_eq!(names.len(), N_CLASSES);
+    }
+
+    #[test]
+    fn conservation_check_catches_leaks() {
+        let ok = core(10, 7);
+        assert!(ok.check().is_ok());
+        let mut bad = ok;
+        bad.counts[StallClass::Drain as usize] += 1;
+        assert!(bad.check().is_err());
+    }
+
+    #[test]
+    fn utilization_decomposes_and_guards_zero_window() {
+        let p = StallProfile {
+            per_core: vec![core(100, 90), core(100, 80)],
+            n_compute: 2,
+            window_cycles: 100,
+            window_core_cycles: 200,
+        };
+        assert!((p.utilization() - 0.85).abs() < 1e-12);
+        let shares = p.shares();
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        let z = StallProfile::default();
+        assert_eq!(z.utilization(), 0.0, "zero window must not NaN");
+    }
+
+    #[test]
+    fn serial_merge_adds_parallel_merge_concats() {
+        let a = StallProfile {
+            per_core: vec![core(10, 8), core(4, 0)],
+            n_compute: 1,
+            window_cycles: 10,
+            window_core_cycles: 10,
+        };
+        let mut s = a.clone();
+        s.merge_serial(&a);
+        assert_eq!(s.per_core[0].cycles, 20);
+        assert_eq!(s.window_cycles, 20);
+        assert_eq!(s.window_core_cycles, 20);
+        assert_eq!(s.n_compute, 1);
+        assert!((s.utilization() - 0.8).abs() < 1e-12);
+        s.check_conservation().unwrap();
+
+        let p = StallProfile::merge_parallel(&[a.clone(), a.clone()]);
+        assert_eq!(p.n_compute, 2);
+        assert_eq!(p.per_core.len(), 4, "2 compute + 2 DM");
+        assert_eq!(p.window_cycles, 10);
+        assert_eq!(p.window_core_cycles, 20);
+        assert_eq!(p.dm_cores().len(), 2);
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn heterogeneous_serial_merge_keeps_weighted_utilization() {
+        // A 1-compute-core layer at 100% followed by a 2-core layer
+        // at 100% must merge to 100%, not get each window charged to
+        // every core (the old `window * total_cores` denominator).
+        let one = StallProfile {
+            per_core: vec![core(10, 10)],
+            n_compute: 1,
+            window_cycles: 10,
+            window_core_cycles: 10,
+        };
+        let two = StallProfile {
+            per_core: vec![core(5, 5), core(5, 5)],
+            n_compute: 2,
+            window_cycles: 5,
+            window_core_cycles: 10,
+        };
+        let mut m = one.clone();
+        m.merge_serial(&two);
+        assert_eq!(m.n_compute, 3);
+        assert_eq!(m.window_core_cycles, 20);
+        assert!((m.utilization() - 1.0).abs() < 1e-12, "{}", m.utilization());
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn serial_merge_with_empty_is_identity() {
+        let a = StallProfile {
+            per_core: vec![core(10, 8)],
+            n_compute: 1,
+            window_cycles: 10,
+            window_core_cycles: 10,
+        };
+        let mut s = StallProfile::default();
+        s.merge_serial(&a);
+        assert_eq!(s, a);
+        let mut s2 = a.clone();
+        s2.merge_serial(&StallProfile::default());
+        assert_eq!(s2, a);
+    }
+
+    #[test]
+    fn quantize_conserves_exactly() {
+        let mut b = [0.0f64; N_CLASSES];
+        b[0] = 10.4;
+        b[1] = 3.3;
+        b[5] = 7.3;
+        let q = quantize(&b, 21);
+        assert_eq!(q.iter().sum::<u64>(), 21);
+        // Largest remainder (.4 on bucket 0) takes the spare cycle.
+        assert_eq!(q[0], 11);
+        assert_eq!(q[1], 3);
+        assert_eq!(q[5], 7);
+        // Overshoot path trims instead of panicking.
+        let q2 = quantize(&b, 15);
+        assert_eq!(q2.iter().sum::<u64>(), 15);
+        // NaN / negative inputs are treated as zero.
+        b[2] = f64::NAN;
+        b[3] = -4.0;
+        let q3 = quantize(&b, 21);
+        assert_eq!(q3.iter().sum::<u64>(), 21);
+        assert_eq!(q3[3], 0);
+    }
+}

@@ -1,0 +1,190 @@
+//! Roofline placement for measured (or predicted) GEMM layers.
+//!
+//! Operational intensity is FPU ops per DMA byte (the repo's flop
+//! convention: one op per issued FMA, matching `GemmResult::gflops`),
+//! attained performance is ops per compute-window cycle, and three
+//! ceilings bound it:
+//!
+//! * **compute** — 8 ops/cycle per cluster (8 single-issue FPUs);
+//! * **L1 DMA** — one 512-bit beat per cycle per cluster (64 B/cycle)
+//!   feeding the double-buffered tiles;
+//! * **NoC** — on a multi-cluster fabric the shared links sustain
+//!   `budget x 64` B/cycle *total*, which can sit below the aggregate
+//!   L1 ceiling.
+//!
+//! A layer is *memory-* or *NoC-bound* when its intensity puts the
+//! bandwidth roof below the compute roof — the diagnostic that tells
+//! the next optimization where to aim (TROOP / know-your-rooflines).
+
+use crate::fabric::NocConfig;
+use crate::util::stats::ratio;
+
+/// Bytes one DMA beat moves (512-bit engine).
+pub const BEAT_BYTES: f64 = 64.0;
+/// Peak FPU ops per cycle per cluster (8 cores x 1 op).
+pub const CLUSTER_OPS_PER_CYCLE: f64 = 8.0;
+
+/// The three ceilings for a fabric of `clusters` clusters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Ceilings {
+    pub clusters: usize,
+    /// Aggregate compute roof (ops/cycle).
+    pub compute_ops_per_cycle: f64,
+    /// Aggregate L1 DMA bandwidth (bytes/cycle).
+    pub l1_bytes_per_cycle: f64,
+    /// Shared NoC bandwidth (bytes/cycle); `f64::INFINITY` on a
+    /// single cluster (private link).
+    pub noc_bytes_per_cycle: f64,
+}
+
+impl Ceilings {
+    pub fn new(clusters: usize, noc: &NocConfig) -> Self {
+        let clusters = clusters.max(1);
+        Self {
+            clusters,
+            compute_ops_per_cycle: CLUSTER_OPS_PER_CYCLE
+                * clusters as f64,
+            l1_bytes_per_cycle: BEAT_BYTES * clusters as f64,
+            noc_bytes_per_cycle: if clusters > 1 {
+                BEAT_BYTES * noc.budget() as f64
+            } else {
+                f64::INFINITY
+            },
+        }
+    }
+}
+
+/// Which roof caps a point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bound {
+    Compute,
+    Memory,
+    Noc,
+}
+
+impl Bound {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Bound::Compute => "compute",
+            Bound::Memory => "memory",
+            Bound::Noc => "noc",
+        }
+    }
+}
+
+/// One layer (or request-mix) placed on the roofline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RooflinePoint {
+    pub name: String,
+    /// Total FPU ops (MACs + fused-epilogue ops).
+    pub ops: u64,
+    /// Total DMA bytes moved.
+    pub bytes: u64,
+    /// Operational intensity (ops/byte).
+    pub oi: f64,
+    /// Attained ops/cycle over the compute window.
+    pub attained_ops_per_cycle: f64,
+    /// `min(compute, oi x l1_bw, oi x noc_bw)` — the roof above this
+    /// point.
+    pub roof_ops_per_cycle: f64,
+    pub bound: Bound,
+}
+
+impl RooflinePoint {
+    /// Fraction of the governing roof actually attained.
+    pub fn attainment(&self) -> f64 {
+        ratio(self.attained_ops_per_cycle, self.roof_ops_per_cycle)
+    }
+}
+
+/// Place one measured point. `window_cycles` is the compute window the
+/// ops were issued over (fabric runs pass the longest shard window and
+/// aggregate ops/bytes, so attained is fabric-level).
+pub fn point(
+    name: impl Into<String>,
+    ops: u64,
+    bytes: u64,
+    window_cycles: u64,
+    ceil: &Ceilings,
+) -> RooflinePoint {
+    let oi = ratio(ops as f64, bytes as f64);
+    let mem_roof = oi * ceil.l1_bytes_per_cycle;
+    let noc_roof = if ceil.noc_bytes_per_cycle.is_finite() {
+        oi * ceil.noc_bytes_per_cycle
+    } else {
+        f64::INFINITY
+    };
+    let mut roof = ceil.compute_ops_per_cycle;
+    let mut bound = Bound::Compute;
+    if mem_roof < roof && bytes > 0 {
+        roof = mem_roof;
+        bound = Bound::Memory;
+    }
+    if noc_roof < roof && bytes > 0 {
+        roof = noc_roof;
+        bound = Bound::Noc;
+    }
+    RooflinePoint {
+        name: name.into(),
+        ops,
+        bytes,
+        oi,
+        attained_ops_per_cycle: ratio(
+            ops as f64,
+            window_cycles as f64,
+        ),
+        roof_ops_per_cycle: roof,
+        bound,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_bound_at_high_intensity() {
+        let c = Ceilings::new(1, &NocConfig::default());
+        // 1 op/byte >> 8/64: the compute roof governs.
+        let p = point("hot", 64_000, 64_000, 10_000, &c);
+        assert_eq!(p.bound, Bound::Compute);
+        assert_eq!(p.roof_ops_per_cycle, 8.0);
+        assert!((p.attained_ops_per_cycle - 6.4).abs() < 1e-12);
+        assert!(p.attainment() > 0.7 && p.attainment() < 0.9);
+    }
+
+    #[test]
+    fn memory_bound_at_low_intensity() {
+        let c = Ceilings::new(1, &NocConfig::default());
+        // 1 op per 16 bytes: mem roof = 64/16 = 4 < 8.
+        let p = point("thin", 1000, 16_000, 1000, &c);
+        assert_eq!(p.bound, Bound::Memory);
+        assert!((p.roof_ops_per_cycle - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noc_roof_kicks_in_on_starved_fabrics() {
+        // 4 clusters behind a 1-beat NoC: noc bw 64 < l1 bw 256.
+        let noc = NocConfig { links: 1, beats_per_link: 1 };
+        let c = Ceilings::new(4, &noc);
+        assert_eq!(c.compute_ops_per_cycle, 32.0);
+        assert_eq!(c.l1_bytes_per_cycle, 256.0);
+        assert_eq!(c.noc_bytes_per_cycle, 64.0);
+        let p = point("sharded", 1000, 16_000, 1000, &c);
+        assert_eq!(p.bound, Bound::Noc);
+        assert!((p.roof_ops_per_cycle - 4.0).abs() < 1e-12);
+        // Single cluster never reports a NoC bound.
+        let c1 = Ceilings::new(1, &noc);
+        assert!(c1.noc_bytes_per_cycle.is_infinite());
+        assert_ne!(point("s", 1000, 16_000, 1000, &c1).bound, Bound::Noc);
+    }
+
+    #[test]
+    fn zero_denominators_stay_finite() {
+        let c = Ceilings::new(1, &NocConfig::default());
+        let p = point("empty", 0, 0, 0, &c);
+        assert_eq!(p.oi, 0.0);
+        assert_eq!(p.attained_ops_per_cycle, 0.0);
+        assert!(p.attainment().is_finite());
+    }
+}

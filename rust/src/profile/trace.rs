@@ -1,0 +1,315 @@
+//! Chrome `trace_event` export for StallScope.
+//!
+//! Per-cycle class attributions are run-length encoded into complete
+//! ("ph":"X") spans — one track per core plus a DMA track per cluster
+//! — with barrier instants and sequencer-occupancy counter samples at
+//! span transitions. The JSON loads directly in `chrome://tracing` or
+//! Perfetto (`ts`/`dur` are cycles, displayed as microseconds).
+//!
+//! A `TraceBuf` is attached to one `Cluster` (`Cluster::trace`) for
+//! one run; `ChromeTrace` stitches many buffers (layers of a network,
+//! clusters of a fabric) onto one timeline via each buffer's `t0`
+//! offset.
+
+use std::io;
+use std::path::Path;
+
+use super::{StallClass, N_CLASSES};
+
+/// Track-state code space: `0..N_CLASSES` are stall classes, then the
+/// DMA-track states.
+pub const CODE_DMA_BUSY: u8 = N_CLASSES as u8;
+pub const CODE_DMA_GATED: u8 = N_CLASSES as u8 + 1;
+/// Idle runs are tracked for RLE correctness but emit no span.
+pub const CODE_IDLE: u8 = u8::MAX;
+
+fn code_label(code: u8) -> &'static str {
+    if (code as usize) < N_CLASSES {
+        StallClass::all()[code as usize].label()
+    } else if code == CODE_DMA_BUSY {
+        "DmaBusy"
+    } else if code == CODE_DMA_GATED {
+        "DmaGated(NoC)"
+    } else {
+        "Idle"
+    }
+}
+
+/// One exportable event (pid already resolved).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    Span { pid: u32, tid: u32, name: &'static str, ts: u64, dur: u64 },
+    Instant { pid: u32, name: String, ts: u64 },
+    Counter { pid: u32, name: String, ts: u64, value: u64 },
+}
+
+/// Per-cluster trace collector: `n_tracks` run-length-encoded state
+/// tracks (cores 0..n, DMA last) on a timeline starting at `t0`.
+#[derive(Clone, Debug)]
+pub struct TraceBuf {
+    pid: u32,
+    t0: u64,
+    /// Open run per track: (code, start cycle — already t0-shifted).
+    open: Vec<Option<(u8, u64)>>,
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceBuf {
+    pub fn new(pid: u32, n_tracks: usize, t0: u64) -> Self {
+        Self {
+            pid,
+            t0,
+            open: vec![None; n_tracks],
+            events: Vec::new(),
+        }
+    }
+
+    pub fn pid(&self) -> u32 {
+        self.pid
+    }
+
+    fn flush(&mut self, track: usize, end_ts: u64) {
+        if let Some((code, start)) = self.open[track].take() {
+            if code != CODE_IDLE && end_ts > start {
+                self.events.push(TraceEvent::Span {
+                    pid: self.pid,
+                    tid: track as u32,
+                    name: code_label(code),
+                    ts: start,
+                    dur: end_ts - start,
+                });
+            }
+        }
+    }
+
+    /// Record `track`'s state for `cycle`. Returns true when this
+    /// started a new run (a state transition) — callers hang counter
+    /// samples off transitions to bound trace size.
+    pub fn record(&mut self, track: usize, cycle: u64, code: u8) -> bool {
+        let ts = self.t0 + cycle;
+        match self.open[track] {
+            Some((open_code, _)) if open_code == code => false,
+            _ => {
+                self.flush(track, ts);
+                self.open[track] = Some((code, ts));
+                true
+            }
+        }
+    }
+
+    /// Process-scoped instant marker (barrier releases, layer starts).
+    pub fn instant(&mut self, name: impl Into<String>, cycle: u64) {
+        self.events.push(TraceEvent::Instant {
+            pid: self.pid,
+            name: name.into(),
+            ts: self.t0 + cycle,
+        });
+    }
+
+    /// Counter sample (e.g. sequencer ring-buffer occupancy).
+    pub fn counter(&mut self, track: usize, cycle: u64, value: u64) {
+        self.events.push(TraceEvent::Counter {
+            pid: self.pid,
+            name: format!("rb_occupancy.core{track}"),
+            ts: self.t0 + cycle,
+            value,
+        });
+    }
+
+    /// Close every open run at `end_cycle` (cluster halt).
+    pub fn finish(&mut self, end_cycle: u64) {
+        let ts = self.t0 + end_cycle;
+        for track in 0..self.open.len() {
+            self.flush(track, ts);
+        }
+    }
+}
+
+/// A complete exportable trace: stitched buffers plus track labels.
+#[derive(Clone, Debug, Default)]
+pub struct ChromeTrace {
+    pub events: Vec<TraceEvent>,
+    /// `(pid, tid, label)` thread-name metadata.
+    pub tracks: Vec<(u32, u32, String)>,
+    /// `(pid, label)` process-name metadata.
+    pub processes: Vec<(u32, String)>,
+}
+
+impl ChromeTrace {
+    /// Absorb one finished buffer.
+    pub fn push(&mut self, buf: TraceBuf) {
+        self.events.extend(buf.events);
+    }
+
+    /// Register a process (cluster) and its track labels once.
+    pub fn label_cluster(&mut self, pid: u32, n_compute: usize) {
+        if self.processes.iter().any(|(p, _)| *p == pid) {
+            return;
+        }
+        self.processes.push((pid, format!("cluster {pid}")));
+        for c in 0..n_compute {
+            self.tracks.push((pid, c as u32, format!("core {c}")));
+        }
+        self.tracks.push((pid, n_compute as u32, "dm core".into()));
+        self.tracks.push((pid, n_compute as u32 + 1, "dma".into()));
+    }
+
+    /// Serialize to Chrome trace-event JSON. Names come from fixed
+    /// palettes or `format!` of plain identifiers, so no JSON string
+    /// escaping is needed beyond what we generate.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(64 + self.events.len() * 96);
+        out.push_str("{\"traceEvents\":[");
+        let mut first = true;
+        let mut sep = |out: &mut String| {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push('\n');
+        };
+        for (pid, name) in &self.processes {
+            sep(&mut out);
+            out.push_str(&format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\
+                 \"tid\":0,\"args\":{{\"name\":\"{name}\"}}}}"
+            ));
+        }
+        for (pid, tid, name) in &self.tracks {
+            sep(&mut out);
+            out.push_str(&format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\
+                 \"tid\":{tid},\"args\":{{\"name\":\"{name}\"}}}}"
+            ));
+        }
+        for e in &self.events {
+            sep(&mut out);
+            match e {
+                TraceEvent::Span { pid, tid, name, ts, dur } => {
+                    out.push_str(&format!(
+                        "{{\"name\":\"{name}\",\"cat\":\"stall\",\
+                         \"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\
+                         \"ts\":{ts},\"dur\":{dur}}}"
+                    ));
+                }
+                TraceEvent::Instant { pid, name, ts } => {
+                    out.push_str(&format!(
+                        "{{\"name\":\"{name}\",\"cat\":\"sync\",\
+                         \"ph\":\"i\",\"s\":\"p\",\"pid\":{pid},\
+                         \"tid\":0,\"ts\":{ts}}}"
+                    ));
+                }
+                TraceEvent::Counter { pid, name, ts, value } => {
+                    out.push_str(&format!(
+                        "{{\"name\":\"{name}\",\"ph\":\"C\",\
+                         \"pid\":{pid},\"tid\":0,\"ts\":{ts},\
+                         \"args\":{{\"value\":{value}}}}}"
+                    ));
+                }
+            }
+        }
+        out.push_str("\n],\"displayTimeUnit\":\"ns\",\"otherData\":\
+                      {\"tool\":\"zerostall StallScope\",\
+                      \"time_unit\":\"cycles\"}}");
+        out
+    }
+
+    pub fn write(&self, path: &Path) -> io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rle_merges_runs_and_reports_transitions() {
+        let mut b = TraceBuf::new(0, 2, 0);
+        assert!(b.record(0, 0, 0), "first record opens a run");
+        assert!(!b.record(0, 1, 0), "same state extends");
+        assert!(!b.record(0, 2, 0));
+        assert!(b.record(0, 3, 6), "state change flushes");
+        b.finish(5);
+        assert_eq!(
+            b.events,
+            vec![
+                TraceEvent::Span {
+                    pid: 0,
+                    tid: 0,
+                    name: "Useful",
+                    ts: 0,
+                    dur: 3
+                },
+                TraceEvent::Span {
+                    pid: 0,
+                    tid: 0,
+                    name: "Barrier",
+                    ts: 3,
+                    dur: 2
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn idle_runs_emit_no_span() {
+        let mut b = TraceBuf::new(1, 1, 0);
+        b.record(0, 0, CODE_IDLE);
+        b.record(0, 5, CODE_DMA_BUSY);
+        b.finish(8);
+        assert_eq!(b.events.len(), 1);
+        assert!(matches!(
+            &b.events[0],
+            TraceEvent::Span { name: "DmaBusy", ts: 5, dur: 3, .. }
+        ));
+    }
+
+    #[test]
+    fn t0_offsets_the_timeline() {
+        let mut b = TraceBuf::new(0, 1, 1000);
+        b.record(0, 0, 0);
+        b.finish(4);
+        assert!(matches!(
+            &b.events[0],
+            TraceEvent::Span { ts: 1000, dur: 4, .. }
+        ));
+    }
+
+    #[test]
+    fn json_is_structurally_sound() {
+        let mut t = ChromeTrace::default();
+        t.label_cluster(0, 2);
+        let mut b = TraceBuf::new(0, 4, 0);
+        b.record(0, 0, 0);
+        b.record(0, 4, 4);
+        b.instant("barrier", 4);
+        b.counter(0, 4, 17);
+        b.finish(9);
+        t.push(b);
+        let j = t.to_json();
+        assert!(j.starts_with("{\"traceEvents\":["));
+        assert!(j.contains("\"ph\":\"X\""));
+        assert!(j.contains("\"ph\":\"i\""));
+        assert!(j.contains("\"ph\":\"C\""));
+        assert!(j.contains("\"ph\":\"M\""));
+        assert!(j.contains("BankConflict"));
+        assert!(j.contains("thread_name"));
+        assert!(j.ends_with("}"));
+        // Balanced braces/brackets (no escapes or strings with braces
+        // are ever emitted, so raw counting is sound).
+        let opens = j.matches('{').count();
+        let closes = j.matches('}').count();
+        assert_eq!(opens, closes, "unbalanced JSON braces");
+        assert_eq!(
+            j.matches('[').count(),
+            j.matches(']').count(),
+            "unbalanced JSON brackets"
+        );
+    }
+}

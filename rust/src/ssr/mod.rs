@@ -59,6 +59,9 @@ pub struct Streamer {
     // --- statistics ---
     pub total_requests: u64,
     pub conflicts: u64,
+    /// Cycle of the most recent arbitration loss (StallScope's
+    /// bank-conflict attribution probes this with `denied_at`).
+    last_denied: u64,
 }
 
 impl Default for Streamer {
@@ -86,7 +89,18 @@ impl Streamer {
             reserved: 0,
             total_requests: 0,
             conflicts: 0,
+            last_denied: u64::MAX,
         }
+    }
+
+    /// This stream's TCDM request lost arbitration on cycle `now`.
+    pub fn note_denied(&mut self, now: u64) {
+        self.last_denied = now;
+    }
+
+    /// Did this stream lose arbitration on cycle `now`?
+    pub fn denied_at(&self, now: u64) -> bool {
+        self.last_denied == now
     }
 
     /// Apply a `scfgw` config write.

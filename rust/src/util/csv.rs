@@ -36,8 +36,11 @@ impl Csv {
         self.rows.len()
     }
 
+    /// RFC-4180 quoting: cells containing separators, quotes, or
+    /// *any* line break (LF or CR — bare CR corrupted columns before)
+    /// are wrapped in quotes with embedded quotes doubled.
     fn escape(cell: &str) -> String {
-        if cell.contains([',', '"', '\n']) {
+        if cell.contains([',', '"', '\n', '\r']) {
             format!("\"{}\"", cell.replace('"', "\"\""))
         } else {
             cell.to_string()
@@ -80,6 +83,24 @@ mod tests {
         c.row(vec!["1", "2"]).row(vec!["x,y", "q\"z"]);
         let s = c.to_string();
         assert_eq!(s, "a,b\n1,2\n\"x,y\",\"q\"\"z\"\n");
+    }
+
+    #[test]
+    fn rfc4180_quotes_all_breaking_cells() {
+        // Regression: stall-taxonomy labels / trace paths carrying
+        // commas, quotes, CR, or LF must survive a round trip intact.
+        let mut c = Csv::new(vec!["label", "path"]);
+        c.row(vec!["a,b", "C:\\x \"y\""])
+            .row(vec!["line1\nline2", "cr\rcell"]);
+        let s = c.to_string();
+        assert_eq!(
+            s,
+            "label,path\n\
+             \"a,b\",\"C:\\x \"\"y\"\"\"\n\
+             \"line1\nline2\",\"cr\rcell\"\n"
+        );
+        // Every risky cell is quoted; quotes are doubled.
+        assert!(s.contains("\"cr\rcell\""), "bare CR must be quoted");
     }
 
     #[test]

@@ -93,6 +93,18 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
+/// `num / den`, defined as 0.0 when the denominator is zero — the
+/// guard every report-facing ratio (utilization, conflict rate, hit
+/// rate, throughput) funnels through so zero-cycle windows can never
+/// print `NaN`/`inf`.
+pub fn ratio(num: f64, den: f64) -> f64 {
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
 // ------------------------------------------- streaming percentiles --
 
 /// Sub-buckets per power of two: 32 means values above the linear
@@ -283,6 +295,14 @@ mod tests {
     #[test]
     fn stddev_constant_is_zero() {
         assert_eq!(stddev(&[5.0, 5.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn ratio_guards_zero_denominator() {
+        assert_eq!(ratio(3.0, 4.0), 0.75);
+        assert_eq!(ratio(3.0, 0.0), 0.0);
+        assert_eq!(ratio(0.0, 0.0), 0.0);
+        assert!(ratio(1.0, 0.0).is_finite());
     }
 
     #[test]

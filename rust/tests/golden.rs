@@ -145,6 +145,75 @@ mod serve_golden {
     }
 }
 
+mod stallscope_golden {
+    use zerostall::coordinator::profile::{run_profile, ProfileOpts};
+    use zerostall::coordinator::report;
+
+    /// Pins the StallScope artifact schemas (stall-breakdown and
+    /// roofline CSVs) and the conservation invariant on one small
+    /// pinned scenario — schema drift breaks downstream tooling
+    /// silently, so it must break here loudly instead.
+    #[test]
+    fn profile_csv_schemas_are_pinned() {
+        let opts = ProfileOpts::new("qkv");
+        let (rep, _) = run_profile(&opts).unwrap();
+        rep.merged.check_conservation().unwrap();
+
+        let stalls = report::stall_csv(&rep).to_string();
+        assert!(
+            stalls.starts_with(
+                "layer,core,cycles,useful,control_overhead,\
+                 ssr_operand_wait,raw_hazard,bank_conflict,dma_wait,\
+                 barrier,noc_gated,drain\n"
+            ),
+            "stall CSV schema drifted:\n{stalls}"
+        );
+        // One row per profiled core per layer (8 compute + 1 DM).
+        assert_eq!(
+            stalls.lines().count(),
+            1 + rep.layers.len() * 9,
+            "row count drifted:\n{stalls}"
+        );
+        assert!(stalls.contains("qkv_proj,c0,"));
+        assert!(stalls.contains("qkv_proj,dm0,"));
+
+        let points: Vec<_> =
+            rep.layers.iter().map(|l| l.roofline.clone()).collect();
+        let roof = report::roofline_csv(&points).to_string();
+        assert!(
+            roof.starts_with(
+                "layer,ops,bytes,oi_ops_per_byte,\
+                 attained_ops_per_cycle,roof_ops_per_cycle,\
+                 attainment,bound\n"
+            ),
+            "roofline CSV schema drifted:\n{roof}"
+        );
+        assert_eq!(roof.lines().count(), 1 + rep.layers.len());
+        // The qkv projection is a dense compute-bound GEMM.
+        assert!(roof.contains("qkv_proj"));
+        assert!(
+            roof.trim_end().ends_with("compute"),
+            "qkv must place compute-bound:\n{roof}"
+        );
+
+        // Report phrasing pinned.
+        let doc = report::render_profile(&rep);
+        for needle in [
+            "## StallScope profile",
+            "Merged stall breakdown",
+            "conservation: OK",
+            "### Roofline",
+            "| Useful |",
+            "| BankConflict |",
+        ] {
+            assert!(
+                doc.contains(needle),
+                "profile report drifted; missing `{needle}` in:\n{doc}"
+            );
+        }
+    }
+}
+
 #[cfg(feature = "xla")]
 mod pjrt {
     use zerostall::cluster::ConfigId;

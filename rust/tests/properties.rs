@@ -969,6 +969,106 @@ fn prop_analytic_tracks_cycle_on_random_fused_sharded_jobs() {
     );
 }
 
+// =================================================================
+// StallScope: the conservation invariant `useful + Σstalls == cycles`
+// holds bit-exactly per core on random fused + sharded jobs across
+// the evaluation space, and the Useful bucket always equals the FPU
+// op count (so the decomposition can never drift from the headline
+// utilization metric). Failures shrink to a minimal job spec and the
+// panic carries the replay seed (PROP_SEED) and case index.
+// =================================================================
+
+#[test]
+fn prop_stallscope_conservation_on_random_fused_sharded_jobs() {
+    use zerostall::fabric::FabricConfig;
+    use zerostall::kernels::{
+        Activation, Epilogue, GemmJob, GemmService,
+    };
+    use zerostall::profile::StallProfile;
+
+    let cycle = GemmService::cycle();
+    let epis = [
+        Epilogue::NONE,
+        Epilogue { bias: true, act: None },
+        Epilogue { bias: true, act: Some(Activation::Relu) },
+        Epilogue { bias: true, act: Some(Activation::Gelu) },
+    ];
+    // Cycle-accurate cases are expensive; scale down from PROP_CASES
+    // like the analytic differential above.
+    let base = Config::default();
+    let cases = (base.cases / 8).max(6);
+    check(
+        &cfg(cases, base.seed ^ 0x57A11),
+        |rng| {
+            vec![
+                rng.range(1, 5), // m/8
+                rng.range(1, 5), // n/8
+                rng.range(1, 5), // k/8
+                rng.range(0, 4), // epilogue selector
+                rng.range(0, 3), // fabric selector
+                rng.range(0, 5), // config selector
+            ]
+        },
+        |v| {
+            if v.len() < 6 {
+                return Ok(());
+            }
+            let clusters = [1usize, 2, 4][v[4] % 3];
+            let m = 8 * v[0].clamp(1, 5);
+            let n = 8 * v[1].clamp(1, 5);
+            let k = 8 * v[2].clamp(1, 5);
+            let epi = epis[v[3] % epis.len()];
+            let id = ConfigId::all()[v[5] % 5];
+            let job =
+                GemmJob::fused(id, m, n, k, LayoutKind::Grouped, epi);
+            let check_profile = |s: &StallProfile,
+                                 fpu_ops: u64,
+                                 what: &str|
+             -> Result<(), String> {
+                s.check_conservation().map_err(|e| {
+                    format!("{what} {m}x{n}x{k} on {}: {e}", id.name())
+                })?;
+                if s.useful_total() != fpu_ops {
+                    return Err(format!(
+                        "{what} {m}x{n}x{k} on {}: useful {} != \
+                         fpu_ops {fpu_ops}",
+                        id.name(),
+                        s.useful_total()
+                    ));
+                }
+                Ok(())
+            };
+            if clusters == 1 {
+                let r =
+                    cycle.run_job(&job).map_err(|e| e.to_string())?;
+                check_profile(
+                    &r.perf.stalls,
+                    r.perf.fpu_ops_total,
+                    "job",
+                )?;
+            } else {
+                let fr = cycle
+                    .run_sharded_job(&job, &FabricConfig::new(clusters))
+                    .map_err(|e| e.to_string())?;
+                for (si, s) in fr.shards.iter().enumerate() {
+                    check_profile(
+                        &s.perf.stalls,
+                        s.perf.fpu_ops_total,
+                        &format!("shard {si} of {clusters}"),
+                    )?;
+                }
+                let merged = fr.stall_profile();
+                check_profile(
+                    &merged,
+                    fr.fpu_ops_total(),
+                    "merged fabric",
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
 // Tiling type needs Debug for failures; silence unused warnings.
 #[allow(dead_code)]
 fn _t(_: Tiling) {}
