@@ -1,45 +1,82 @@
-//! Bench: NetGraph DAG execution throughput — layers/sec through the
-//! DAG scheduler with a warm plan cache, on both backends.
+//! Bench: NetGraph DAG execution throughput across the cycle-engine
+//! tiers (naive / FastPath / replay) and the analytic backend.
+//!
+//! Emits `BENCH_netgraph.json` (wall time, simulated cycles/sec,
+//! speedup vs naive stepping); CI uploads it as an artifact. The
+//! cycle tiers are pinned bit-identical on total cycles before
+//! timing. `BENCH_QUICK` shortens the measurement budget for CI.
+
+use std::path::Path;
 
 use zerostall::cluster::ConfigId;
 use zerostall::coordinator::net::run_net;
 use zerostall::coordinator::workload::zoo;
 use zerostall::kernels::{GemmService, LayoutKind};
-use zerostall::util::bench::Bencher;
+use zerostall::util::bench::{write_json, Bencher, JsonRow};
 
 fn main() {
-    println!("== netgraph bench: DAG-scheduled network execution ==");
-    let b = Bencher::default();
+    println!(
+        "== netgraph bench: DAG execution (naive / fastpath / replay) =="
+    );
+    let b = if std::env::var("BENCH_QUICK").is_ok() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
     let g = zoo::build("ffn").unwrap();
     let layers = g.ops.len() as f64;
-
-    // Analytic backend: pure scheduling + model evaluation rate.
-    let ana = GemmService::analytic();
-    // warm the plan cache outside the timed region
-    run_net(&ana, &g, ConfigId::Zonl48Db, LayoutKind::Grouped, 2, 1)
-        .unwrap();
-    let s = b.run("net/ffn/analytic_warm", || {
-        run_net(&ana, &g, ConfigId::Zonl48Db, LayoutKind::Grouped, 2, 1)
+    let exec = |svc: &GemmService| {
+        run_net(svc, &g, ConfigId::Zonl48Db, LayoutKind::Grouped, 2, 1)
             .unwrap()
+    };
+
+    // Equivalence pin across tiers.
+    let naive = exec(&GemmService::cycle_naive());
+    let fast = exec(&GemmService::cycle());
+    let replay = exec(&GemmService::replay());
+    assert_eq!(
+        naive.report.total_cycles, fast.report.total_cycles,
+        "fastpath total cycles deviate from naive stepping"
+    );
+    assert_eq!(
+        naive.report.total_cycles, replay.report.total_cycles,
+        "replay total cycles deviate from naive stepping"
+    );
+    let sim_cycles = naive.report.total_cycles;
+
+    let s_naive = b.run("net/ffn/cycle_naive", || {
+        exec(&GemmService::cycle_naive())
     });
+    let s_fast =
+        b.run("net/ffn/cycle_fastpath", || exec(&GemmService::cycle()));
+    let s_replay =
+        b.run("net/ffn/replay", || exec(&GemmService::replay()));
+    let s_ana =
+        b.run("net/ffn/analytic", || exec(&GemmService::analytic()));
     println!(
-        "    -> {:.0} layers/s analytic (plan cache {:?})",
-        s.throughput(layers),
-        ana.stats(),
+        "    -> {:.2} layers/s naive, {:.2} fastpath, {:.2} replay",
+        s_naive.throughput(layers),
+        s_fast.throughput(layers),
+        s_replay.throughput(layers),
     );
 
-    // Cycle backend: functional network execution with fused
-    // epilogues, warm plan cache (programs Arc-shared across runs).
-    let cyc = GemmService::cycle();
-    run_net(&cyc, &g, ConfigId::Zonl48Db, LayoutKind::Grouped, 2, 1)
-        .unwrap();
-    let s2 = b.run("net/ffn/cycle_warm", || {
-        run_net(&cyc, &g, ConfigId::Zonl48Db, LayoutKind::Grouped, 2, 1)
-            .unwrap()
-    });
-    println!(
-        "    -> {:.2} layers/s cycle-accurate (plan cache {:?})",
-        s2.throughput(layers),
-        cyc.stats(),
-    );
+    let rows = vec![
+        JsonRow::new("net/ffn/cycle_naive", &s_naive, sim_cycles, None),
+        JsonRow::new(
+            "net/ffn/cycle_fastpath",
+            &s_fast,
+            sim_cycles,
+            Some(&s_naive),
+        ),
+        JsonRow::new("net/ffn/replay", &s_replay, sim_cycles, Some(&s_naive)),
+        JsonRow::new("net/ffn/analytic", &s_ana, sim_cycles, Some(&s_naive)),
+    ];
+    for r in &rows {
+        println!(
+            "    -> {:<22} {:>12.0} sim cycles/s  ({:.2}x vs naive)",
+            r.name, r.sim_cycles_per_sec, r.speedup_vs_naive
+        );
+    }
+    write_json(Path::new("BENCH_netgraph.json"), &rows).unwrap();
+    println!("wrote BENCH_netgraph.json ({} rows)", rows.len());
 }

@@ -1,54 +1,109 @@
-//! Bench: ServeSim throughput — how fast the serving engine drains a
-//! request trace through the analytic backend (the triage
-//! configuration for capacity planning), FIFO vs continuous batching.
+//! Bench: ServeSim throughput across the cycle-engine tiers — naive
+//! per-cycle stepping vs FastPath vs the replay/memo backend — plus
+//! the analytic triage configuration for context.
+//!
+//! Emits `BENCH_serve.json` (wall time, simulated cycles/sec, speedup
+//! vs naive stepping) so the perf trajectory is tracked across PRs;
+//! CI uploads it as an artifact. Before timing anything, the three
+//! cycle tiers are pinned bit-identical on the trace's observables.
+//!
+//! Knobs: `BENCH_REQUESTS` scales the trace (default 24),
+//! `BENCH_QUICK` shortens the measurement budget for CI.
+
+use std::path::Path;
 
 use zerostall::coordinator::serve::{serve, Policy, ServeConfig};
 use zerostall::kernels::GemmService;
-use zerostall::util::bench::Bencher;
+use zerostall::util::bench::{write_json, Bencher, JsonRow};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
 
 fn main() {
-    println!("== serve bench: request-level serving engine ==");
-    let b = Bencher::default();
+    println!(
+        "== serve bench: cycle tiers (naive / fastpath / replay) =="
+    );
+    let b = if std::env::var("BENCH_QUICK").is_ok() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let requests = env_usize("BENCH_REQUESTS", 24);
 
     let mut cfg =
         ServeConfig::new(vec!["ffn".to_string(), "qkv".to_string()]);
     cfg.clusters = 4;
-    cfg.requests = 64;
+    cfg.requests = requests;
     cfg.rate_per_mcycle = 50.0;
     cfg.burst = 0.2;
+    cfg.policy = Policy::Continuous;
     cfg.slo = Some(u64::MAX);
     cfg.threads = 4;
     cfg.seed = 42;
 
-    for policy in [Policy::Fifo, Policy::Continuous] {
-        let mut c = cfg.clone();
-        c.policy = policy;
-        // Warm service: steady-state serving is plan-cache hits.
-        let svc = GemmService::analytic();
-        let s = b.run(
-            &format!("serve/analytic_{}_64req_4cl", policy.name()),
-            || serve(&svc, &c).unwrap(),
+    // Equivalence pin: all three tiers must report the same simulated
+    // trace before their wall times mean anything.
+    let naive = serve(&GemmService::cycle_naive(), &cfg).unwrap();
+    let fast = serve(&GemmService::cycle(), &cfg).unwrap();
+    let replay = serve(&GemmService::replay(), &cfg).unwrap();
+    for (tier, run) in [("fastpath", &fast), ("replay", &replay)] {
+        assert_eq!(
+            naive.report.makespan_cycles, run.report.makespan_cycles,
+            "{tier} makespan deviates from naive stepping"
         );
-        let run = serve(&svc, &c).unwrap();
-        println!(
-            "    -> {:.0} requests/s engine rate; simulated {:.3} \
-             req/Mcycle sustained, p99 {} cycles, plan cache {:?}",
-            s.throughput(c.requests as f64),
-            run.report.throughput_per_mcycle(),
+        assert_eq!(
+            naive.report.completed, run.report.completed,
+            "{tier} completion count deviates"
+        );
+        assert_eq!(
+            naive.report.p99(),
             run.report.p99(),
-            run.report.plan_stats,
+            "{tier} p99 latency deviates"
         );
     }
+    let sim_cycles = naive.report.makespan_cycles;
 
-    // Cold-cache serving: every request stream against a fresh
-    // service — the delta is what plan memoization buys a server.
-    let mut c = cfg.clone();
-    c.policy = Policy::Continuous;
-    let s_cold = b.run("serve/analytic_cb_64req_cold_cache", || {
-        serve(&GemmService::analytic(), &c).unwrap()
+    // Fresh service per iteration: every tier pays planning + its own
+    // stepping, so the ratio isolates the engine.
+    let tag = format!("{requests}req_4cl");
+    let s_naive = b.run(&format!("serve/cycle_naive_{tag}"), || {
+        serve(&GemmService::cycle_naive(), &cfg).unwrap()
     });
+    let s_fast = b.run(&format!("serve/cycle_fastpath_{tag}"), || {
+        serve(&GemmService::cycle(), &cfg).unwrap()
+    });
+    let s_replay = b.run(&format!("serve/replay_{tag}"), || {
+        serve(&GemmService::replay(), &cfg).unwrap()
+    });
+    let s_ana = b.run(&format!("serve/analytic_{tag}"), || {
+        serve(&GemmService::analytic(), &cfg).unwrap()
+    });
+
+    let rows = vec![
+        JsonRow::new("serve/cycle_naive", &s_naive, sim_cycles, None),
+        JsonRow::new(
+            "serve/cycle_fastpath",
+            &s_fast,
+            sim_cycles,
+            Some(&s_naive),
+        ),
+        JsonRow::new("serve/replay", &s_replay, sim_cycles, Some(&s_naive)),
+        JsonRow::new("serve/analytic", &s_ana, sim_cycles, Some(&s_naive)),
+    ];
+    for r in &rows {
+        println!(
+            "    -> {:<22} {:>12.0} sim cycles/s  ({:.2}x vs naive)",
+            r.name, r.sim_cycles_per_sec, r.speedup_vs_naive
+        );
+    }
+    write_json(Path::new("BENCH_serve.json"), &rows).unwrap();
     println!(
-        "    -> {:.0} requests/s cold",
-        s_cold.throughput(c.requests as f64)
+        "wrote BENCH_serve.json ({} rows, {} simulated cycles/run)",
+        rows.len(),
+        sim_cycles
     );
 }

@@ -19,9 +19,33 @@ use crate::kernels::GemmResult;
 
 use super::{BackendKind, PreparedGemm, ShardedGemm, SimBackend};
 
-pub struct CycleAccurate;
+/// Cycle-engine configuration. `fast_forward` (on by default) routes
+/// runs through the FastPath steppers — quiescent DMA regions advance
+/// with closed-form bookkeeping and fabric shards step on threads —
+/// which is bit-identical to naive per-cycle stepping (see DESIGN.md
+/// §11). `threads` bounds the fabric's parallel shard stepping
+/// (0 = machine parallelism); it affects wall time only, never
+/// results.
+#[derive(Clone, Copy, Debug)]
+pub struct CycleAccurate {
+    pub fast_forward: bool,
+    pub threads: usize,
+}
+
+impl Default for CycleAccurate {
+    fn default() -> Self {
+        CycleAccurate { fast_forward: true, threads: 0 }
+    }
+}
 
 impl CycleAccurate {
+    /// The pre-FastPath stepper: every core ticked every cycle,
+    /// serial fabric. The differential baseline for the equivalence
+    /// tests and benches.
+    pub fn naive() -> Self {
+        CycleAccurate { fast_forward: false, threads: 1 }
+    }
+
     /// Simulation deadline: ideal cycles x 64 + fixed slack (the
     /// deadlock detector's budget; generous by construction).
     pub fn deadline(m: usize, n: usize, k: usize) -> u64 {
@@ -179,8 +203,13 @@ impl SimBackend for CycleAccurate {
     ) -> Result<GemmResult> {
         let t = prep.plan.tiling;
         let mut cl = Self::build_cluster(prep, a, b, bias)?;
-        cl.run(Self::deadline(t.m, t.n, t.k))
-            .context("cluster run")?;
+        let deadline = Self::deadline(t.m, t.n, t.k);
+        if self.fast_forward {
+            cl.run_fast(deadline)
+        } else {
+            cl.run(deadline)
+        }
+        .context("cluster run")?;
         Ok(Self::collect(prep, &cl))
     }
 
@@ -199,7 +228,12 @@ impl SimBackend for CycleAccurate {
         let clusters = Self::build_shard_clusters(sh, a, b, bias)?;
         let deadline = Self::shard_deadline(sh);
         let mut fab = ClusterFabric::new(clusters, *noc);
-        fab.run(deadline).context("fabric run")?;
+        if self.fast_forward {
+            fab.run_fast(deadline, self.threads)
+        } else {
+            fab.run(deadline)
+        }
+        .context("fabric run")?;
         Ok(Self::gather(sh, &fab))
     }
 }
@@ -236,6 +270,6 @@ mod tests {
                 crate::kernels::LayoutKind::Grouped,
             )
             .unwrap();
-        assert!(CycleAccurate.run(&prep, &[], &[]).is_err());
+        assert!(CycleAccurate::default().run(&prep, &[], &[]).is_err());
     }
 }

@@ -9,12 +9,22 @@
 //!   `kernels::service::GemmService` caches it per
 //!   `(M, N, K, config, layout, epilogue)` key.
 //! * evaluation (this module) turns a prepared GEMM into a
-//!   `GemmResult`. Two engines implement the [`SimBackend`] trait:
+//!   `GemmResult`. Three engines implement the [`SimBackend`] trait:
 //!
 //!   - [`CycleAccurate`] steps the full `Cluster` machine model to
 //!     completion — bit-exact numerics plus the complete perf-counter
 //!     taxonomy. This is the ground truth (and the pre-refactor
-//!     behaviour of `kernels::driver`).
+//!     behaviour of `kernels::driver`). Its FastPath mode
+//!     (`fast_forward`, on by default) fast-forwards quiescent DMA
+//!     regions and steps fabric shards in parallel — bit-identical
+//!     results, roughly an order of magnitude faster on
+//!     DMA-phase-heavy runs.
+//!   - [`Replay`] memoizes the cycle engine per
+//!     `(shape, config, layout, epilogue[, grid, NoC])` key: the
+//!     first evaluation of a shape runs the machine model, repeats
+//!     replay the cached timing and recompute C functionally (the
+//!     cycle kernel is bit-exact against the host oracle, so the
+//!     replayed result is indistinguishable from a fresh run).
 //!   - [`Analytic`] predicts cycles / utilization / conflicts from
 //!     the tiling, the congestion proxy, and the paper's Section-IV
 //!     overhead structure without stepping the machine — ~1000x
@@ -26,12 +36,14 @@
 
 pub mod analytic;
 pub mod cycle;
+pub mod replay;
 
 pub use analytic::{
     fit_calibration, fit_delta, predict_perf_noc, Analytic, CalSample,
     Calibration, ConfigCal, NocSample,
 };
 pub use cycle::CycleAccurate;
+pub use replay::{Replay, ReplayStats};
 
 use std::sync::Arc;
 
@@ -48,17 +60,21 @@ pub enum BackendKind {
     Cycle,
     /// First-order performance model (no functional simulation).
     Analytic,
+    /// Memoized cycle engine: first run per shape is cycle-accurate,
+    /// repeats replay the cached timing (C recomputed functionally).
+    Replay,
 }
 
 impl BackendKind {
-    pub fn all() -> [BackendKind; 2] {
-        [BackendKind::Cycle, BackendKind::Analytic]
+    pub fn all() -> [BackendKind; 3] {
+        [BackendKind::Cycle, BackendKind::Analytic, BackendKind::Replay]
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             BackendKind::Cycle => "cycle",
             BackendKind::Analytic => "analytic",
+            BackendKind::Replay => "replay",
         }
     }
 
@@ -167,6 +183,13 @@ pub trait SimBackend: Send + Sync {
         b: &[f64],
         bias: &[f64],
     ) -> anyhow::Result<FabricResult>;
+
+    /// Memo-tier hit/miss counters, for backends that cache timing
+    /// per shape ([`Replay`]). `None` for engines that simulate every
+    /// submission.
+    fn memo_stats(&self) -> Option<ReplayStats> {
+        None
+    }
 }
 
 #[cfg(test)]

@@ -24,7 +24,7 @@ use std::sync::Arc;
 use crate::core::snitch::CoreRequest;
 use crate::core::Core;
 use crate::dma::Dma;
-use crate::isa::Program;
+use crate::isa::{csr, Instr, Program};
 use crate::mem::{
     Interconnect, MainMemory, PortRequest, Tcdm,
 };
@@ -62,6 +62,95 @@ pub struct Cluster {
     owners: Vec<Owner>,
     grants: Vec<bool>,
     rdata: Vec<u64>,
+    /// Memoized region-safety verdict for the DM core's program
+    /// (programs are immutable once a cluster is built).
+    dm_region_safe: Option<bool>,
+}
+
+/// Map one core's FP event to its StallScope bucket. Shared by the
+/// per-cycle classifier ([`Cluster::attribute_cycle`]) and the
+/// fast-forward region step, so the two paths cannot drift.
+fn classify(
+    ev: FpEvent,
+    ci: usize,
+    dm: usize,
+    c: &Core,
+    now: u64,
+    noc_grant: bool,
+    dma_busy: bool,
+) -> StallClass {
+    match ev {
+        FpEvent::Issued => StallClass::Useful,
+        FpEvent::RawHazard | FpEvent::FpuFull => StallClass::RawHazard,
+        FpEvent::SsrEmpty | FpEvent::WFifoFull => {
+            if c.ssr_denied_at(now) {
+                StallClass::BankConflict
+            } else {
+                StallClass::SsrOperandWait
+            }
+        }
+        FpEvent::NoInstr(phase) => match phase {
+            FrontPhase::Drain => StallClass::Drain,
+            FrontPhase::Barrier => {
+                if dma_busy {
+                    if noc_grant {
+                        StallClass::DmaWait
+                    } else {
+                        StallClass::NocGated
+                    }
+                } else {
+                    StallClass::Barrier
+                }
+            }
+            FrontPhase::Lsu => {
+                if c.lsu_denied_at(now) {
+                    StallClass::BankConflict
+                } else {
+                    StallClass::ControlOverhead
+                }
+            }
+            FrontPhase::Running => {
+                // The DM core spinning on `dmstat` while the engine
+                // moves data is waiting on the DMA, not doing control
+                // work.
+                if ci == dm && dma_busy {
+                    if noc_grant {
+                        StallClass::DmaWait
+                    } else {
+                        StallClass::NocGated
+                    }
+                } else {
+                    StallClass::ControlOverhead
+                }
+            }
+        },
+    }
+}
+
+/// A DM-core program is *region-safe* when it can never touch the FP
+/// subsystem or the SSR streamers: no FP compute, no FREP, no FP
+/// loads/stores or converts, no SSR configuration, no SSR-enable CSR
+/// toggles. Such a program's only TCDM traffic is its integer LSU,
+/// which the region step arbitrates for real — so specializing the
+/// compute cores away cannot change any arbitration outcome.
+fn dm_prog_region_safe(p: &Program) -> bool {
+    p.instrs.iter().all(|i| {
+        if i.is_fp_compute() {
+            return false;
+        }
+        match i {
+            Instr::Frep { .. }
+            | Instr::Fld { .. }
+            | Instr::Fsd { .. }
+            | Instr::FcvtDW { .. }
+            | Instr::SsrCfgW { .. } => false,
+            Instr::Csrrw { csr: c, .. }
+            | Instr::Csrrs { csr: c, .. }
+            | Instr::Csrrsi { csr: c, .. }
+            | Instr::Csrrci { csr: c, .. } => *c != csr::SSR_ENABLE,
+            _ => true,
+        }
+    })
 }
 
 impl Cluster {
@@ -102,6 +191,7 @@ impl Cluster {
             owners: Vec::with_capacity(cap),
             grants: vec![false; cap],
             rdata: vec![0u64; cap],
+            dm_region_safe: None,
             cfg,
         }
     }
@@ -303,9 +393,12 @@ impl Cluster {
     /// `stalls.sum() == cycles` hold per core.
     fn attribute_cycle(&mut self, now: u64, noc_grant: bool, dma_busy: bool) {
         let dm = self.dm_core_id();
-        let mut trace_buf = self.trace.take();
-        for ci in 0..self.cores.len() {
-            let c = &mut self.cores[ci];
+        // Split borrow: cores and the trace buffer are disjoint
+        // fields, so the per-cycle `Option::take`/put shuffle of the
+        // trace box is unnecessary.
+        let Self { cores, trace, .. } = self;
+        let mut trace_buf = trace.as_deref_mut();
+        for (ci, c) in cores.iter_mut().enumerate() {
             let ev = match c.take_fp_event() {
                 Some(ev) => ev,
                 None => {
@@ -313,68 +406,21 @@ impl Cluster {
                     // track idle so the core's last open span is
                     // flushed at its true end instead of stretching to
                     // the cluster's halt cycle.
-                    if let Some(t) = trace_buf.as_mut() {
+                    if let Some(t) = trace_buf.as_deref_mut() {
                         t.record(ci, now, trace::CODE_IDLE);
                     }
                     continue;
                 }
             };
-            let class = match ev {
-                FpEvent::Issued => StallClass::Useful,
-                FpEvent::RawHazard | FpEvent::FpuFull => {
-                    StallClass::RawHazard
-                }
-                FpEvent::SsrEmpty | FpEvent::WFifoFull => {
-                    if c.ssr_denied_at(now) {
-                        StallClass::BankConflict
-                    } else {
-                        StallClass::SsrOperandWait
-                    }
-                }
-                FpEvent::NoInstr(phase) => match phase {
-                    FrontPhase::Drain => StallClass::Drain,
-                    FrontPhase::Barrier => {
-                        if dma_busy {
-                            if noc_grant {
-                                StallClass::DmaWait
-                            } else {
-                                StallClass::NocGated
-                            }
-                        } else {
-                            StallClass::Barrier
-                        }
-                    }
-                    FrontPhase::Lsu => {
-                        if c.lsu_denied_at(now) {
-                            StallClass::BankConflict
-                        } else {
-                            StallClass::ControlOverhead
-                        }
-                    }
-                    FrontPhase::Running => {
-                        // The DM core spinning on `dmstat` while the
-                        // engine moves data is waiting on the DMA,
-                        // not doing control work.
-                        if ci == dm && dma_busy {
-                            if noc_grant {
-                                StallClass::DmaWait
-                            } else {
-                                StallClass::NocGated
-                            }
-                        } else {
-                            StallClass::ControlOverhead
-                        }
-                    }
-                },
-            };
+            let class = classify(ev, ci, dm, c, now, noc_grant, dma_busy);
             c.perf.stalls[class as usize] += 1;
-            if let Some(t) = trace_buf.as_mut() {
+            if let Some(t) = trace_buf.as_deref_mut() {
                 if t.record(ci, now, class as u8) {
                     t.counter(ci, now, c.seq.occupancy() as u64);
                 }
             }
         }
-        if let Some(t) = trace_buf.as_mut() {
+        if let Some(t) = trace_buf {
             let code = if !dma_busy {
                 trace::CODE_IDLE
             } else if noc_grant {
@@ -382,9 +428,8 @@ impl Cluster {
             } else {
                 trace::CODE_DMA_GATED
             };
-            t.record(self.cores.len(), now, code);
+            t.record(cores.len(), now, code);
         }
-        self.trace = trace_buf;
     }
 
     /// Run to completion (all cores halted). Returns total cycles.
@@ -400,6 +445,245 @@ impl Cluster {
             }
         }
         Ok(self.cycle)
+    }
+
+    // ============================================================
+    // FastPath: quiescent-region specialized stepping
+    // ============================================================
+
+    /// Do the fast-forward preconditions hold at this cycle boundary?
+    ///
+    /// A *quiescent region* needs: no trace collector attached (the
+    /// Chrome trace wants per-cycle spans); every compute core halted
+    /// or parked at the barrier with quiescent streamers (no TCDM
+    /// requests now — and, as [`Core::mem_quiescent`] argues, for the
+    /// whole region); and a DM core that is neither halted nor at the
+    /// barrier, running a region-safe program. Parked compute cores
+    /// cannot change state while the DM core stays away from the
+    /// barrier (release needs *all* cores arrived), so this scan
+    /// holds on every subsequent cycle until the DM core halts or
+    /// arrives — the region exit condition checked in
+    /// [`Cluster::step_fast`].
+    fn fast_region_ok(&mut self) -> bool {
+        if self.trace.is_some() {
+            return false;
+        }
+        let dm = self.dm_core_id();
+        {
+            let c = &self.cores[dm];
+            if c.halted() || c.at_barrier() {
+                return false;
+            }
+        }
+        for c in &self.cores[..dm] {
+            if !(c.halted() || c.at_barrier()) || !c.mem_quiescent() {
+                return false;
+            }
+        }
+        let safe = match self.dm_region_safe {
+            Some(s) => s,
+            None => {
+                let s = dm_prog_region_safe(self.cores[dm].program());
+                self.dm_region_safe = Some(s);
+                s
+            }
+        };
+        if !safe {
+            return false;
+        }
+        // Region-safe programs can never arm a streamer.
+        debug_assert!(self.cores[dm].mem_quiescent());
+        true
+    }
+
+    /// One specialized cycle inside a quiescent region
+    /// ([`Cluster::fast_region_ok`]): the DM core, the DMA engine,
+    /// and the interconnect run the *real* per-cycle machinery (the
+    /// interconnect must arbitrate even DMA-only cycles — its
+    /// round-robin rotors and stats advance), while each parked
+    /// compute core gets the closed form of its tick: `fp_tick` on an
+    /// empty sequencer counts `cycles`/`fpu_idle_no_instr`, the
+    /// `BarrierWait` frontend counts `barrier_cycles`, and the
+    /// classifier books exactly one Barrier/DmaWait/NocGated stall.
+    /// Halted cores are untouched, exactly as in the naive step.
+    fn step_region(&mut self, noc_grant: bool) {
+        let now = self.cycle;
+        let dm = self.dm_core_id();
+
+        // Phases 1 + 2b for the DM core. Phase 2a cannot fire: the
+        // DM core is not at the barrier, so `all_at_barrier` is false.
+        self.cores[dm].fp_tick(now);
+        let dma_ready = self.dma.can_push();
+        let dma_inflight = self.dma.in_flight();
+        {
+            let c = &mut self.cores[dm];
+            if !c.try_dmstat(dma_inflight) {
+                match c.frontend_tick(now, dma_ready) {
+                    CoreRequest::None => {}
+                    CoreRequest::DmaPush(desc) => {
+                        let ok = self.dma.push(desc);
+                        debug_assert!(ok, "frontend checked dma_ready");
+                    }
+                }
+            }
+        }
+
+        // Phase 3: the DM core's LSU is the only possible TCDM
+        // requester (compute cores are quiescent, DM streams idle).
+        self.reqs.clear();
+        if let Some((addr, write, data)) = self.cores[dm].lsu_request() {
+            debug_assert!(
+                self.tcdm.contains(addr),
+                "LSU outside TCDM unsupported: {addr:#x}"
+            );
+            self.reqs.push(PortRequest {
+                port: (dm * 5 + 4) as u16,
+                addr,
+                write,
+                data,
+            });
+        }
+        let beat = if noc_grant {
+            self.dma.next_beat(&self.mem)
+        } else {
+            if self.dma.busy() {
+                self.dma.stall_cycles += 1;
+                self.dma.noc_gated_cycles += 1;
+            }
+            None
+        };
+        let dma_busy = self.dma.busy();
+        if dma_busy {
+            self.dma.busy_cycles += 1;
+        }
+
+        // Phase 4: arbitration + commit.
+        let n = self.reqs.len();
+        self.grants[..n].fill(false);
+        let outcome = self.xbar.arbitrate(
+            &mut self.tcdm,
+            &self.reqs[..n],
+            &mut self.grants[..n],
+            &mut self.rdata[..n],
+            beat.as_ref(),
+        );
+        if let Some(b) = &beat {
+            if outcome.dma_granted {
+                self.dma.beat_granted(b, &outcome.dma_read, &mut self.mem);
+            } else {
+                self.dma.beat_denied();
+            }
+        }
+        if n > 0 {
+            if self.grants[0] {
+                self.cores[dm].lsu_granted(self.rdata[0]);
+            } else {
+                self.cores[dm].note_lsu_denied(now);
+            }
+        }
+
+        // Phase 5: attribution. Parked compute cores all land in the
+        // same bucket this cycle; the DM core goes through the shared
+        // classifier on its real event.
+        let parked = if dma_busy {
+            if noc_grant {
+                StallClass::DmaWait
+            } else {
+                StallClass::NocGated
+            }
+        } else {
+            StallClass::Barrier
+        };
+        for c in self.cores[..dm].iter_mut() {
+            if c.halted() {
+                continue;
+            }
+            c.perf.cycles += 1;
+            c.perf.fpu_idle_no_instr += 1;
+            c.perf.barrier_cycles += 1;
+            c.perf.stalls[parked as usize] += 1;
+        }
+        let c = &mut self.cores[dm];
+        if let Some(ev) = c.take_fp_event() {
+            let class = classify(ev, dm, dm, c, now, noc_grant, dma_busy);
+            c.perf.stalls[class as usize] += 1;
+        }
+
+        self.cycle += 1;
+    }
+
+    /// One cycle, choosing the specialized region step when its
+    /// preconditions hold. `region` caches the precondition scan
+    /// across consecutive cycles: inside a region only the DM core
+    /// can change the machine shape, so after a region cycle the full
+    /// scan reduces to the DM exit check.
+    pub(crate) fn step_fast(&mut self, region: &mut bool, noc_grant: bool) {
+        if !*region {
+            if !self.fast_region_ok() {
+                self.step_gated(noc_grant);
+                return;
+            }
+            *region = true;
+        }
+        self.step_region(noc_grant);
+        let c = &self.cores[self.dm_core_id()];
+        if c.halted() || c.at_barrier() {
+            *region = false;
+        }
+    }
+
+    /// [`Cluster::run`] through the FastPath stepper: bit-identical
+    /// machine evolution (C, cycles, every counter, the full stall
+    /// profile), reached by specializing provably quiescent DMA-phase
+    /// regions instead of ticking all nine cores and scanning all 45
+    /// ports every cycle.
+    pub fn run_fast(&mut self, max_cycles: u64) -> anyhow::Result<u64> {
+        let mut region = false;
+        while !self.all_halted() {
+            self.step_fast(&mut region, true);
+            if self.cycle >= max_cycles {
+                anyhow::bail!(
+                    "cluster exceeded {max_cycles} cycles (deadlock?); \
+                     pcs={:?}",
+                    self.cores.iter().map(|c| c.halted()).collect::<Vec<_>>()
+                );
+            }
+        }
+        Ok(self.cycle)
+    }
+
+    /// Fabric free-run helper: advance with the NoC grant held open
+    /// while this cluster's DMA branch is idle — an idle branch never
+    /// competes for the shared links, so the fabric arbiter grants it
+    /// unconditionally and uncounted. Pauses at the first cycle
+    /// boundary where the engine has work queued (the cycle *after*
+    /// the `dmcpy` push, matching the per-cycle fabric's phase-start
+    /// busy check), or when the cluster halts or reaches `max_cycles`.
+    pub(crate) fn advance_free(&mut self, max_cycles: u64) {
+        let mut region = false;
+        while !self.all_halted()
+            && !self.dma.busy()
+            && self.cycle < max_cycles
+        {
+            self.step_fast(&mut region, true);
+        }
+    }
+
+    /// Fabric uncontested-batch helper: advance to absolute cycle
+    /// `until` with the NoC grant held open, returning how many
+    /// stepped cycles *began* with the DMA branch busy — the fabric
+    /// books one NoC grant for each, exactly as its per-cycle arbiter
+    /// would. Stops early when the cluster halts.
+    pub(crate) fn advance_granted(&mut self, until: u64) -> u64 {
+        let mut region = false;
+        let mut granted = 0;
+        while !self.all_halted() && self.cycle < until {
+            if self.dma.busy() {
+                granted += 1;
+            }
+            self.step_fast(&mut region, true);
+        }
+        granted
     }
 
     /// Aggregate performance summary.

@@ -18,10 +18,14 @@
 //!   validate  — simulator vs PJRT golden model (needs --features xla)
 //!   seqdemo   — FREP sequencer demo trace
 //!
-//! `run`, `net`, `sweep`, and `fig5` accept `--backend
-//! {cycle,analytic}`: `cycle` steps the full machine model, `analytic`
-//! evaluates the calibrated first-order model (~1000x faster, no
-//! numerics).
+//! `run`, `net`, `serve`, `sweep`, and `fig5` accept `--backend
+//! {cycle,analytic,replay}`: `cycle` steps the full machine model,
+//! `analytic` evaluates the calibrated first-order model (~1000x
+//! faster, no numerics), `replay` memoizes the cycle engine per shape
+//! (first run simulates, repeats replay cached timing — bit-identical
+//! results). `--fast-forward false` drops the cycle engine back to
+//! naive per-cycle stepping (the differential baseline; results are
+//! bit-identical either way).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -41,18 +45,21 @@ pub fn usage() -> &'static str {
      \n\
      COMMANDS:\n\
      \x20 run       --config <name> --m <M> --n <N> --k <K> \
-     [--layout grouped|linear|linear-pad] [--backend cycle|analytic] \
+     [--layout grouped|linear|linear-pad] \
+     [--backend cycle|analytic|replay] [--fast-forward true|false] \
      [--clusters N] [--profile true]\n\
      \x20 net       --model mlp|ffn|qkv|attn|conv|llm \
-     [--config <name>] [--backend cycle|analytic] [--threads N] \
+     [--config <name>] [--backend cycle|analytic|replay] \
+     [--fast-forward true|false] [--threads N] \
      [--seed S] [--clusters N] [--profile true] [--out results]\n\
      \x20 serve     --model <zoo[,zoo...]> [--rate R] [--burst B] \
      [--policy fifo|cb] [--clusters N] [--requests N] \
-     [--backend cycle|analytic] [--seed S] [--slo CYCLES] \
+     [--backend cycle|analytic|replay] [--fast-forward true|false] \
+     [--seed S] [--slo CYCLES] \
      [--threads N] [--profile true] [--out results]\n\
      \x20 profile   --model mlp|ffn|qkv|attn|conv|llm \
      [--config <name>] [--clusters N] [--trace out.json] \
-     [--out results]\n\
+     [--fast-forward true|false] [--out results]\n\
      \x20 sweep     [--backend analytic|cycle] [--config <name>|all] \
      [--threads N] [--clusters N] [--out results]\n\
      \x20 calibrate [--threads N] [--out results]\n\
@@ -118,7 +125,9 @@ fn backend_of(
     match flags.get("backend") {
         None => Ok(default),
         Some(s) => BackendKind::from_name(s).ok_or_else(|| {
-            anyhow::anyhow!("unknown backend `{s}` (cycle|analytic)")
+            anyhow::anyhow!(
+                "unknown backend `{s}` (cycle|analytic|replay)"
+            )
         }),
     }
 }
@@ -162,9 +171,10 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                 flags.get("layout").map(|s| s.as_str()).unwrap_or("grouped"),
             )?;
             let backend = backend_of(&flags, BackendKind::Cycle)?;
+            let ff = flag(&flags, "fast-forward", true)?;
             let clusters = flag(&flags, "clusters", 1usize)?;
             let profile_on = flag(&flags, "profile", false)?;
-            let svc = GemmService::of_kind(backend);
+            let svc = GemmService::of_kind_ff(backend, ff);
             let p = workload::Problem { m, n, k };
             let fabric = crate::fabric::FabricConfig::new(clusters);
             let (row, stalls) = if clusters > 1 {
@@ -231,6 +241,7 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             opts.config = id;
             opts.clusters = clusters;
             opts.trace = trace_path.is_some();
+            opts.fast_forward = flag(&flags, "fast-forward", true)?;
             eprintln!(
                 "profile: `{model}` on {} x{clusters}, cycle-accurate \
                  StallScope{}...",
@@ -289,7 +300,8 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                 backend.name(),
             );
             let profile_on = flag(&flags, "profile", false)?;
-            let svc = GemmService::of_kind(backend);
+            let ff = flag(&flags, "fast-forward", true)?;
+            let svc = GemmService::of_kind_ff(backend, ff);
             let run = net::run_net_clustered(
                 &svc,
                 &g,
@@ -383,8 +395,17 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                 policy.name(),
             );
             let profile_on = flag(&flags, "profile", false)?;
-            let svc = GemmService::of_kind(backend);
+            let ff = flag(&flags, "fast-forward", true)?;
+            let svc = GemmService::of_kind_ff(backend, ff);
             let run = serve::serve(&svc, &cfg)?;
+            if let Some(ms) = svc.memo_stats() {
+                eprintln!(
+                    "memo tier: {} hits / {} misses ({:.0}% replayed)",
+                    ms.hits,
+                    ms.misses,
+                    ms.hit_rate() * 100.0,
+                );
+            }
             let mut doc = report::render_serve(&run.report);
             if profile_on {
                 doc.push('\n');
@@ -643,8 +664,41 @@ mod tests {
             backend_of(&f, BackendKind::Cycle).unwrap(),
             BackendKind::Analytic
         );
+        f.insert("backend".to_string(), "replay".to_string());
+        assert_eq!(
+            backend_of(&f, BackendKind::Cycle).unwrap(),
+            BackendKind::Replay
+        );
         f.insert("backend".to_string(), "rtl".to_string());
         assert!(backend_of(&f, BackendKind::Cycle).is_err());
+    }
+
+    #[test]
+    fn run_command_replay_backend_and_naive_stepping() {
+        main_with_args(vec![
+            "run".into(),
+            "--backend".into(),
+            "replay".into(),
+            "--m".into(),
+            "16".into(),
+            "--n".into(),
+            "16".into(),
+            "--k".into(),
+            "16".into(),
+        ])
+        .unwrap();
+        main_with_args(vec![
+            "run".into(),
+            "--fast-forward".into(),
+            "false".into(),
+            "--m".into(),
+            "16".into(),
+            "--n".into(),
+            "16".into(),
+            "--k".into(),
+            "16".into(),
+        ])
+        .unwrap();
     }
 
     #[test]

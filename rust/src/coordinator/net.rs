@@ -204,7 +204,7 @@ pub fn run_net_clustered(
     seed: u64,
     fabric: &FabricConfig,
 ) -> Result<NetRun> {
-    let functional = svc.backend_kind() == BackendKind::Cycle;
+    let functional = svc.needs_data();
     let n_clusters = fabric.clusters.max(1);
     let nt = g.tensors.len();
 

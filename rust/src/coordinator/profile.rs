@@ -42,6 +42,9 @@ pub struct ProfileOpts {
     /// Collect a Chrome trace (costs memory proportional to the
     /// number of stall-class transitions).
     pub trace: bool,
+    /// FastPath stepping (bit-identical; regions auto-disable while a
+    /// trace collector is attached, so `--trace` runs stay exact too).
+    pub fast_forward: bool,
 }
 
 impl ProfileOpts {
@@ -52,6 +55,7 @@ impl ProfileOpts {
             clusters: 1,
             layout: LayoutKind::Grouped,
             trace: false,
+            fast_forward: true,
         }
     }
 }
@@ -210,8 +214,13 @@ fn run_layer_single(
             t.instant(format!("layer:{name}"), 0);
         }
     }
-    cl.run(CycleAccurate::deadline(p.m, p.n, p.k))
-        .with_context(|| format!("layer `{name}`"))?;
+    let deadline = CycleAccurate::deadline(p.m, p.n, p.k);
+    if opts.fast_forward {
+        cl.run_fast(deadline)
+    } else {
+        cl.run(deadline)
+    }
+    .with_context(|| format!("layer `{name}`"))?;
     let perf = cl.perf();
     if let (Some(t), Some(buf)) = (chrome, cl.take_trace()) {
         t.push(*buf);
@@ -261,7 +270,12 @@ fn run_layer_sharded(
     }
     let deadline = CycleAccurate::shard_deadline(&sh);
     let mut fab = ClusterFabric::new(clusters, fabric.noc);
-    fab.run(deadline).with_context(|| format!("layer `{name}`"))?;
+    if opts.fast_forward {
+        fab.run_fast(deadline, 0)
+    } else {
+        fab.run(deadline)
+    }
+    .with_context(|| format!("layer `{name}`"))?;
     let fr = CycleAccurate::gather(&sh, &fab);
     if let Some(t) = chrome {
         for cl in fab.clusters.iter_mut() {

@@ -230,6 +230,27 @@ impl Core {
         self.state == State::Halted
     }
 
+    /// The program this core executes (fast-path safety scans).
+    pub fn program(&self) -> &Program {
+        &self.prog
+    }
+
+    /// True when no streamer of this core can issue a TCDM request
+    /// this cycle. For a core that is halted or parked at a barrier
+    /// this is also *stable*: nothing pushes or pops stream FIFOs
+    /// while the frontend and FP subsystem are quiet, so a quiescent
+    /// parked core stays off the interconnect until released — the
+    /// precondition the cluster's fast-forward region relies on.
+    pub fn mem_quiescent(&self) -> bool {
+        self.ssrs.iter().all(|s| match s.mode {
+            SsrMode::Read => {
+                !self.ssr_enable || s.read_request().is_none()
+            }
+            SsrMode::Write => s.write_request().is_none(),
+            SsrMode::Idle => true,
+        })
+    }
+
     /// Arrived at a barrier and fully drained?
     pub fn at_barrier(&self) -> bool {
         self.state == State::BarrierWait && self.barrier_arrived

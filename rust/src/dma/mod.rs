@@ -70,6 +70,12 @@ pub struct Dma {
     queue: VecDeque<DmaDesc>,
     active: Option<Active>,
     queue_depth: usize,
+    /// Beat computed for the current cycle and retried after an
+    /// arbitration loss. A denied beat is presented again unchanged,
+    /// so recomputing it (including the eager main-memory read of up
+    /// to 8 words) on every retry was pure hot-loop waste; the cache
+    /// is invalidated exactly when the beat commits.
+    pending: Option<DmaBeat>,
     // --- statistics ---
     pub beats: u64,
     pub stall_cycles: u64,
@@ -87,6 +93,7 @@ impl Dma {
             queue: VecDeque::with_capacity(queue_depth),
             active: None,
             queue_depth,
+            pending: None,
             beats: 0,
             stall_cycles: 0,
             bytes_moved: 0,
@@ -141,8 +148,14 @@ impl Dma {
     }
 
     /// Compute this cycle's beat, reading main-memory data eagerly for
-    /// TCDM-write beats. Returns `None` when idle.
+    /// TCDM-write beats. Returns `None` when idle. A beat denied by
+    /// arbitration is re-presented from the `pending` cache — the
+    /// transfer state does not advance on a denial, so the retried
+    /// beat is identical by construction.
     pub fn next_beat(&mut self, mem: &MainMemory) -> Option<DmaBeat> {
+        if let Some(b) = self.pending {
+            return Some(b);
+        }
         self.activate();
         let a = self.active.as_ref()?;
         let d = &a.desc;
@@ -167,7 +180,9 @@ impl Dma {
                 data[w] = mem.read_u64(src_addr + (w as u32) * 8);
             }
         }
-        Some(DmaBeat { addr: tcdm_addr, n_words, write, data })
+        let beat = DmaBeat { addr: tcdm_addr, n_words, write, data };
+        self.pending = Some(beat);
+        Some(beat)
     }
 
     /// The interconnect granted this cycle's beat: commit the
@@ -179,6 +194,7 @@ impl Dma {
         tcdm_read: &[u64; 8],
         mem: &mut MainMemory,
     ) {
+        self.pending = None;
         let a = self.active.as_mut().expect("no active transfer");
         let d = a.desc;
         if !beat.write {

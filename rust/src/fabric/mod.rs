@@ -24,9 +24,57 @@
 
 use anyhow::Result;
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
 use crate::cluster::{Cluster, ClusterPerf};
 use crate::kernels::tiling::Shard;
 use crate::profile::StallProfile;
+
+fn auto_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Run `f` over every target cluster on up to `threads` workers and
+/// sum the returned counts. Work is handed out by atomic index, each
+/// cluster is touched by exactly one worker, every cluster's own
+/// evolution is deterministic, and the sum is order-independent — so
+/// the machine state and all statistics are bit-identical for every
+/// thread count.
+fn par_each<F>(targets: Vec<&mut Cluster>, threads: usize, f: F) -> u64
+where
+    F: Fn(&mut Cluster) -> u64 + Sync,
+{
+    if threads <= 1 || targets.len() <= 1 {
+        let mut total = 0;
+        for cl in targets {
+            total += f(cl);
+        }
+        return total;
+    }
+    let slots: Vec<Mutex<Option<&mut Cluster>>> =
+        targets.into_iter().map(|c| Mutex::new(Some(c))).collect();
+    let next = AtomicUsize::new(0);
+    let total = AtomicU64::new(0);
+    let workers = threads.min(slots.len());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= slots.len() {
+                    break;
+                }
+                let mut guard = slots[i].lock().unwrap();
+                if let Some(cl) = guard.as_deref_mut() {
+                    total.fetch_add(f(cl), Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    total.into_inner()
+}
 
 /// Shared-NoC link provisioning: `links` parallel links, each
 /// sustaining `beats_per_link` 512-bit beats per cycle into L2.
@@ -183,6 +231,168 @@ impl ClusterFabric {
     /// Per-cluster performance snapshots.
     pub fn perfs(&self) -> Vec<ClusterPerf> {
         self.clusters.iter().map(|c| c.perf()).collect()
+    }
+
+    /// [`ClusterFabric::run`] through the FastPath stepper:
+    /// bit-identical machine evolution and NoC statistics, without
+    /// per-cycle lockstep.
+    ///
+    /// The naive fabric advances every cluster one cycle at a time so
+    /// the arbiter can referee each cycle. But arbitration only
+    /// *matters* on cycles where more busy DMA branches contest the
+    /// links than the beat budget covers. This driver splits time into
+    /// three exactly-equivalent regimes:
+    ///
+    /// 1. **Free-run** — a cluster whose DMA branch is idle never
+    ///    competes for the shared links; the naive arbiter grants it
+    ///    unconditionally and uncounted. Such clusters advance
+    ///    independently (in parallel across `threads` workers) until
+    ///    their branch wakes up.
+    /// 2. **Uncontested batch** — when the busy clusters at the
+    ///    earliest pending cycle `t` fit inside the beat budget, every
+    ///    one of them is granted on every cycle until the next cluster
+    ///    ahead could possibly join (`t2`): they advance independently
+    ///    (again in parallel), each counting one NoC grant per cycle
+    ///    its branch began busy — exactly what the per-cycle arbiter
+    ///    would have booked. Demand can only shrink inside the window,
+    ///    so no denial or saturation is missed.
+    /// 3. **Contested lockstep** — when demand exceeds the budget, one
+    ///    cycle is arbitrated exactly like [`ClusterFabric::step`],
+    ///    with the round-robin pointer reconstructed as `t % n` (the
+    ///    naive pointer increments once per cycle from 0).
+    ///
+    /// Soundness of the asynchronous advance: any live cluster whose
+    /// local cycle is ahead of the global minimum was idle for the
+    /// whole gap (free-run pauses *at* busy-onset), so it cannot have
+    /// contended during the cycles the trailing clusters are about to
+    /// simulate. `threads = 0` picks the machine's parallelism; all
+    /// grant decisions are independent of worker scheduling, so every
+    /// thread count produces the same bits.
+    pub fn run_fast(
+        &mut self,
+        max_cycles: u64,
+        threads: usize,
+    ) -> Result<u64> {
+        if self.all_halted() {
+            return Ok(self.cycle);
+        }
+        let n = self.clusters.len();
+        let budget = self.noc_cfg.budget();
+        let threads =
+            if threads == 0 { auto_threads().min(n) } else { threads.min(n) };
+        loop {
+            // ---- regime 1: free-run idle branches --------------------
+            let targets: Vec<&mut Cluster> = self
+                .clusters
+                .iter_mut()
+                .filter(|c| {
+                    !c.all_halted()
+                        && !c.dma.busy()
+                        && c.cycle < max_cycles
+                })
+                .collect();
+            if !targets.is_empty() {
+                par_each(targets, threads, |cl| {
+                    cl.advance_free(max_cycles);
+                    0
+                });
+            }
+            // Every live cluster below the deadline is now paused on a
+            // busy DMA branch.
+            let t = match self
+                .clusters
+                .iter()
+                .filter(|c| !c.all_halted() && c.cycle < max_cycles)
+                .map(|c| c.cycle)
+                .min()
+            {
+                Some(t) => t,
+                None => break,
+            };
+            let members = self
+                .clusters
+                .iter()
+                .filter(|c| !c.all_halted() && c.cycle == t)
+                .count();
+            debug_assert!(members > 0);
+            if members <= budget {
+                // ---- regime 2: uncontested batch ---------------------
+                let t2 = self
+                    .clusters
+                    .iter()
+                    .filter(|c| !c.all_halted() && c.cycle > t)
+                    .map(|c| c.cycle)
+                    .min()
+                    .unwrap_or(max_cycles);
+                let until = t2.min(max_cycles);
+                let targets: Vec<&mut Cluster> = self
+                    .clusters
+                    .iter_mut()
+                    .filter(|c| !c.all_halted() && c.cycle == t)
+                    .collect();
+                let granted =
+                    par_each(targets, threads, |cl| cl.advance_granted(until));
+                self.noc.grants += granted;
+            } else {
+                // ---- regime 3: contested lockstep cycle at `t` -------
+                let rr = (t % n as u64) as usize;
+                let mut want = 0usize;
+                let mut granted = 0usize;
+                self.grants.iter_mut().for_each(|g| *g = false);
+                for off in 0..n {
+                    let i = (rr + off) % n;
+                    let cl = &self.clusters[i];
+                    if cl.all_halted() || cl.cycle != t {
+                        continue;
+                    }
+                    if cl.dma.busy() {
+                        want += 1;
+                        if granted < budget {
+                            self.grants[i] = true;
+                            granted += 1;
+                        }
+                    } else {
+                        self.grants[i] = true;
+                    }
+                }
+                self.noc.grants += granted as u64;
+                self.noc.denials += (want - granted) as u64;
+                if want > budget {
+                    self.noc.saturated_cycles += 1;
+                }
+                for i in 0..n {
+                    if self.clusters[i].all_halted()
+                        || self.clusters[i].cycle != t
+                    {
+                        continue;
+                    }
+                    let g = self.grants[i];
+                    let mut region = false;
+                    self.clusters[i].step_fast(&mut region, g);
+                }
+            }
+        }
+        // Fabric time is the slowest cluster's halt cycle, exactly the
+        // lockstep driver's count; the rotor position matches its
+        // one-increment-per-cycle evolution.
+        self.cycle = self
+            .clusters
+            .iter()
+            .map(|c| c.cycle)
+            .max()
+            .unwrap_or(self.cycle);
+        self.rr = (self.cycle % n as u64) as usize;
+        if self.cycle >= max_cycles {
+            anyhow::bail!(
+                "fabric exceeded {max_cycles} cycles (deadlock?); \
+                 halted={:?}",
+                self.clusters
+                    .iter()
+                    .map(|c| c.all_halted())
+                    .collect::<Vec<_>>()
+            );
+        }
+        Ok(self.cycle)
     }
 }
 

@@ -24,7 +24,7 @@ use anyhow::Result;
 
 use crate::backend::{
     Analytic, BackendKind, Calibration, CycleAccurate, PreparedGemm,
-    ShardedGemm, SimBackend,
+    Replay, ShardedGemm, SimBackend,
 };
 use crate::cluster::ConfigId;
 use crate::coordinator::runner;
@@ -138,9 +138,21 @@ impl GemmService {
         }
     }
 
-    /// Cycle-accurate service (ground truth).
+    /// Cycle-accurate service (ground truth; FastPath stepping).
     pub fn cycle() -> Self {
-        Self::new(Box::new(CycleAccurate))
+        Self::new(Box::new(CycleAccurate::default()))
+    }
+
+    /// Cycle-accurate service on the pre-FastPath per-cycle stepper —
+    /// the differential baseline for equivalence tests and benches.
+    pub fn cycle_naive() -> Self {
+        Self::new(Box::new(CycleAccurate::naive()))
+    }
+
+    /// Replay/memo tier over the cycle engine: first run per shape
+    /// simulates, repeats replay cached timing.
+    pub fn replay() -> Self {
+        Self::new(Box::new(Replay::default()))
     }
 
     /// Analytic service with the shipped default calibration.
@@ -157,11 +169,37 @@ impl GemmService {
         match kind {
             BackendKind::Cycle => Self::cycle(),
             BackendKind::Analytic => Self::analytic(),
+            BackendKind::Replay => Self::replay(),
+        }
+    }
+
+    /// [`GemmService::of_kind`] with the FastPath toggle threaded
+    /// through (the analytic model has no stepper and ignores it).
+    pub fn of_kind_ff(kind: BackendKind, fast_forward: bool) -> Self {
+        let cyc = CycleAccurate { fast_forward, threads: 0 };
+        match kind {
+            BackendKind::Cycle => Self::new(Box::new(cyc)),
+            BackendKind::Replay => {
+                Self::new(Box::new(Replay::with(cyc)))
+            }
+            BackendKind::Analytic => Self::analytic(),
         }
     }
 
     pub fn backend_kind(&self) -> BackendKind {
         self.backend.kind()
+    }
+
+    /// Whether the backend consumes operand data (functional
+    /// simulation). True for the cycle and replay tiers.
+    pub fn needs_data(&self) -> bool {
+        self.backend.needs_data()
+    }
+
+    /// Memo-tier hit/miss counters when the backend replays timing
+    /// (`None` for engines that simulate every submission).
+    pub fn memo_stats(&self) -> Option<crate::backend::ReplayStats> {
+        self.backend.memo_stats()
     }
 
     /// Memoized planning: tile selection + buffer placement + code

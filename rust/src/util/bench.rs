@@ -123,9 +123,107 @@ impl Bencher {
     }
 }
 
+/// One machine-readable bench row for the `BENCH_*.json` artifacts
+/// CI uploads — wall time, simulated cycles/sec, and speedup vs the
+/// naive-stepping baseline, so the perf trajectory is tracked across
+/// PRs.
+#[derive(Clone, Debug)]
+pub struct JsonRow {
+    pub name: String,
+    pub wall_s: f64,
+    pub sim_cycles: u64,
+    pub sim_cycles_per_sec: f64,
+    pub speedup_vs_naive: f64,
+}
+
+impl JsonRow {
+    /// Build a row from a measured sample. `naive` is the baseline
+    /// sample the speedup is computed against (the row *is* the
+    /// baseline when `None`).
+    pub fn new(
+        name: &str,
+        sample: &Sample,
+        sim_cycles: u64,
+        naive: Option<&Sample>,
+    ) -> JsonRow {
+        let wall = sample.median.as_secs_f64().max(1e-12);
+        JsonRow {
+            name: name.to_string(),
+            wall_s: wall,
+            sim_cycles,
+            sim_cycles_per_sec: sim_cycles as f64 / wall,
+            speedup_vs_naive: naive
+                .map(|n| n.median.as_secs_f64() / wall)
+                .unwrap_or(1.0),
+        }
+    }
+}
+
+/// Write rows as a JSON array (hand-rolled; serde is unavailable
+/// offline). Names are bench identifiers — no escaping needed beyond
+/// rejecting quotes/backslashes outright.
+pub fn write_json(
+    path: &std::path::Path,
+    rows: &[JsonRow],
+) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        assert!(
+            !r.name.contains('"') && !r.name.contains('\\'),
+            "bench name must not need JSON escaping: {}",
+            r.name
+        );
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"wall_s\": {:.6}, \
+             \"sim_cycles\": {}, \"sim_cycles_per_sec\": {:.1}, \
+             \"speedup_vs_naive\": {:.3}}}{}\n",
+            r.name,
+            r.wall_s,
+            r.sim_cycles,
+            r.sim_cycles_per_sec,
+            r.speedup_vs_naive,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    std::fs::write(path, s)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_rows_roundtrip_shape() {
+        let dir = std::env::temp_dir().join("zerostall-bench-json-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let s = Sample {
+            name: "x".into(),
+            iters: 1,
+            median: Duration::from_millis(10),
+            mad: Duration::ZERO,
+            mean: Duration::from_millis(10),
+        };
+        let fast = Sample {
+            name: "x".into(),
+            iters: 1,
+            median: Duration::from_millis(1),
+            mad: Duration::ZERO,
+            mean: Duration::from_millis(1),
+        };
+        let rows = vec![
+            JsonRow::new("naive", &s, 1_000_000, None),
+            JsonRow::new("fast", &fast, 1_000_000, Some(&s)),
+        ];
+        assert!(rows[1].speedup_vs_naive > 9.0);
+        let path = dir.join("BENCH_test.json");
+        write_json(&path, &rows).unwrap();
+        let txt = std::fs::read_to_string(&path).unwrap();
+        assert!(txt.starts_with("[\n"));
+        assert!(txt.contains("\"speedup_vs_naive\""));
+        assert!(txt.trim_end().ends_with(']'));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 
     #[test]
     fn measures_something() {

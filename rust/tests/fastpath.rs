@@ -1,0 +1,357 @@
+//! FastPath equivalence suite: fast-forwarded, thread-stepped, and
+//! memoized runs must be bit-identical to naive per-cycle stepping —
+//! C matrix, total cycles, the full StallProfile breakdown, and every
+//! perf counter — across random fused and sharded jobs, thread
+//! counts, and repeated serve traces.
+//!
+//! These are the hard acceptance gates for the FastPath rework: any
+//! observable drift between the tiers is a bug in the fast path, not
+//! an accuracy tradeoff.
+
+use zerostall::backend::CycleAccurate;
+use zerostall::cluster::{ClusterPerf, ConfigId};
+use zerostall::coordinator::serve::{serve, Policy, ServeConfig};
+use zerostall::fabric::FabricConfig;
+use zerostall::kernels::{
+    problem_seed, test_bias, test_matrices, Activation, Epilogue,
+    GemmJob, GemmService, LayoutKind,
+};
+use zerostall::util::prop::{check, Config};
+
+fn cfg(seed: u64) -> Config {
+    // Cycle-accurate property: a fraction of the default budget.
+    let base = Config::default();
+    Config { cases: (base.cases / 8).max(6), seed }
+}
+
+fn epi_of(code: usize) -> Epilogue {
+    match code % 6 {
+        0 => Epilogue::NONE,
+        1 => Epilogue { bias: true, act: None },
+        2 => Epilogue { bias: false, act: Some(Activation::Relu) },
+        3 => Epilogue { bias: true, act: Some(Activation::Relu) },
+        4 => Epilogue { bias: false, act: Some(Activation::Gelu) },
+        _ => Epilogue { bias: true, act: Some(Activation::Gelu) },
+    }
+}
+
+/// Compare every observable of two cluster-perf snapshots; `Err`
+/// names the first field that drifts.
+fn perf_eq(tag: &str, a: &ClusterPerf, b: &ClusterPerf) -> Result<(), String> {
+    macro_rules! cmp {
+        ($($f:ident),+ $(,)?) => {
+            $(
+                if a.$f != b.$f {
+                    return Err(format!(
+                        "{tag}: perf.{} differs: {:?} vs {:?}",
+                        stringify!($f), a.$f, b.$f
+                    ));
+                }
+            )+
+        };
+    }
+    cmp!(
+        cycles,
+        window_cycles,
+        fpu_ops_per_core,
+        fpu_ops_total,
+        stall_ssr_empty,
+        stall_wfifo,
+        stall_raw,
+        stall_fpu_full,
+        fpu_idle_no_instr,
+        offload_stalls,
+        branch_bubbles,
+        barrier_cycles,
+        lsu_stalls,
+        int_instrs,
+        icache_fetches,
+        rb_replays,
+        csr_instrs,
+        tcdm_core_accesses,
+        tcdm_conflicts,
+        tcdm_conflicts_dma,
+        ssr_requests,
+        ssr_conflicts,
+        dma_beats,
+        dma_bytes,
+        dma_busy_cycles,
+        dma_stall_cycles,
+        dma_noc_gated_cycles,
+        tcdm_conflict_cycles,
+        barriers_completed,
+        stalls,
+    );
+    if a.utilization.to_bits() != b.utilization.to_bits() {
+        return Err(format!(
+            "{tag}: utilization differs: {} vs {}",
+            a.utilization, b.utilization
+        ));
+    }
+    Ok(())
+}
+
+fn svc_threads(fast_forward: bool, threads: usize) -> GemmService {
+    GemmService::new(Box::new(CycleAccurate { fast_forward, threads }))
+}
+
+#[test]
+fn prop_fastforward_fused_bit_identical() {
+    let naive = GemmService::cycle_naive();
+    let fast = GemmService::cycle();
+    check(
+        &cfg(0xFA57_0001),
+        |rng| {
+            vec![
+                rng.range(1, 5) * 8, // m
+                rng.range(1, 5) * 8, // n
+                rng.range(1, 5) * 8, // k
+                rng.range(0, 5),     // config index
+                rng.range(0, 6),     // epilogue code
+            ]
+        },
+        |v| {
+            if v.len() < 5 {
+                return Ok(());
+            }
+            // Round shrunk values back onto the planner's 8-grid.
+            let m = (v[0].max(8) / 8) * 8;
+            let n = (v[1].max(8) / 8) * 8;
+            let k = (v[2].max(8) / 8) * 8;
+            let id = ConfigId::all()[v[3] % 5];
+            let epi = epi_of(v[4]);
+            let tag = format!("{m}x{n}x{k} {} {:?}", id.name(), epi);
+            let seed = problem_seed(m, n, k);
+            let (a, b) = test_matrices(m, n, k, seed);
+            let bias =
+                if epi.bias { test_bias(n, seed) } else { Vec::new() };
+            let slow = naive
+                .run_fused(
+                    id,
+                    m,
+                    n,
+                    k,
+                    LayoutKind::Grouped,
+                    epi,
+                    &a,
+                    &b,
+                    &bias,
+                )
+                .map_err(|e| format!("{tag}: naive: {e}"))?;
+            let quick = fast
+                .run_fused(
+                    id,
+                    m,
+                    n,
+                    k,
+                    LayoutKind::Grouped,
+                    epi,
+                    &a,
+                    &b,
+                    &bias,
+                )
+                .map_err(|e| format!("{tag}: fastpath: {e}"))?;
+            if quick.c != slow.c {
+                return Err(format!("{tag}: C differs"));
+            }
+            if quick.cycles != slow.cycles {
+                return Err(format!(
+                    "{tag}: cycles differ: {} vs {}",
+                    quick.cycles, slow.cycles
+                ));
+            }
+            perf_eq(&tag, &quick.perf, &slow.perf)
+        },
+    );
+}
+
+#[test]
+fn prop_fastforward_sharded_bit_identical_across_threads() {
+    let naive = GemmService::cycle_naive();
+    // Two fast services with different fabric thread counts: results
+    // must not depend on host parallelism.
+    let fast1 = svc_threads(true, 1);
+    let fast3 = svc_threads(true, 3);
+    let fabric = FabricConfig::new(4);
+    check(
+        &cfg(0xFA57_0002),
+        |rng| {
+            vec![
+                rng.range(1, 4) * 16, // m (shardable)
+                rng.range(1, 4) * 16, // n
+                rng.range(1, 4) * 8,  // k
+                rng.range(0, 5),      // config index
+                rng.range(0, 6),      // epilogue code
+            ]
+        },
+        |v| {
+            if v.len() < 5 {
+                return Ok(());
+            }
+            let m = (v[0].max(16) / 8) * 8;
+            let n = (v[1].max(16) / 8) * 8;
+            let k = (v[2].max(8) / 8) * 8;
+            let id = ConfigId::all()[v[3] % 5];
+            let epi = epi_of(v[4]);
+            let tag =
+                format!("sharded {m}x{n}x{k} {} {:?}", id.name(), epi);
+            let seed = problem_seed(m, n, k);
+            let (a, b) = test_matrices(m, n, k, seed);
+            let bias =
+                if epi.bias { test_bias(n, seed) } else { Vec::new() };
+            let run = |svc: &GemmService| {
+                svc.run_sharded(
+                    id,
+                    m,
+                    n,
+                    k,
+                    LayoutKind::Grouped,
+                    epi,
+                    &a,
+                    &b,
+                    &bias,
+                    &fabric,
+                )
+            };
+            let slow = run(&naive)
+                .map_err(|e| format!("{tag}: naive: {e}"))?;
+            for (name, svc) in
+                [("threads=1", &fast1), ("threads=3", &fast3)]
+            {
+                let quick = run(svc)
+                    .map_err(|e| format!("{tag}: {name}: {e}"))?;
+                if quick.c != slow.c {
+                    return Err(format!("{tag}: {name}: C differs"));
+                }
+                if quick.cycles != slow.cycles {
+                    return Err(format!(
+                        "{tag}: {name}: fabric cycles differ: {} vs {}",
+                        quick.cycles, slow.cycles
+                    ));
+                }
+                if quick.noc.grants != slow.noc.grants
+                    || quick.noc.denials != slow.noc.denials
+                    || quick.noc.saturated_cycles
+                        != slow.noc.saturated_cycles
+                {
+                    return Err(format!(
+                        "{tag}: {name}: NoC stats differ: {:?} vs {:?}",
+                        quick.noc, slow.noc
+                    ));
+                }
+                if quick.shards.len() != slow.shards.len() {
+                    return Err(format!(
+                        "{tag}: {name}: shard count differs"
+                    ));
+                }
+                for (i, (q, s)) in
+                    quick.shards.iter().zip(&slow.shards).enumerate()
+                {
+                    if q.cycles != s.cycles {
+                        return Err(format!(
+                            "{tag}: {name}: shard {i} cycles differ"
+                        ));
+                    }
+                    perf_eq(
+                        &format!("{tag}: {name}: shard {i}"),
+                        &q.perf,
+                        &s.perf,
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn memo_tier_pins_hit_counts_on_repeated_jobs() {
+    // Deterministic golden: one shape submitted five times costs one
+    // simulation and four replays — and the replays are bit-identical
+    // to the simulated first run.
+    let svc = GemmService::replay();
+    let job = GemmJob::fused(
+        ConfigId::Zonl48Db,
+        16,
+        16,
+        16,
+        LayoutKind::Grouped,
+        Epilogue { bias: true, act: Some(Activation::Relu) },
+    );
+    let first = svc.run_job(&job).unwrap();
+    for _ in 0..4 {
+        let again = svc.run_job(&job).unwrap();
+        assert_eq!(again.c, first.c);
+        assert_eq!(again.cycles, first.cycles);
+        perf_eq("memo repeat", &again.perf, &first.perf).unwrap();
+    }
+    let stats = svc.memo_stats().unwrap();
+    assert_eq!(
+        (stats.hits, stats.misses),
+        (4, 1),
+        "memo golden: exactly one simulation, four replays"
+    );
+    // A different shape is a new key.
+    let other = GemmJob::for_problem(
+        ConfigId::Zonl48Db,
+        24,
+        16,
+        16,
+        LayoutKind::Grouped,
+    );
+    svc.run_job(&other).unwrap();
+    let stats = svc.memo_stats().unwrap();
+    assert_eq!((stats.hits, stats.misses), (4, 2));
+}
+
+#[test]
+fn memo_tier_matches_cycle_on_repeated_shape_serve_trace() {
+    // A short bursty trace over a two-model mix on a 2-cluster
+    // fabric: the replay tier must reproduce the cycle backend's
+    // serve report bit for bit (identical makespan, latency rows,
+    // stall totals, plan stats), while serving most submissions from
+    // the memo.
+    let mut cfg = ServeConfig::new(vec!["ffn".to_string()]);
+    cfg.clusters = 2;
+    cfg.requests = 6;
+    cfg.rate_per_mcycle = 20.0;
+    cfg.burst = 0.25;
+    cfg.policy = Policy::Continuous;
+    cfg.seed = 7;
+    cfg.threads = 2;
+
+    let cyc_svc = GemmService::cycle();
+    let rep_svc = GemmService::replay();
+    let cyc = serve(&cyc_svc, &cfg).unwrap();
+    let rep = serve(&rep_svc, &cfg).unwrap();
+
+    assert_eq!(rep.rows, cyc.rows, "per-request rows must replay");
+    let mut rep_report = rep.report.clone();
+    rep_report.backend = cyc.report.backend;
+    assert_eq!(
+        rep_report, cyc.report,
+        "serve report identical modulo the backend label"
+    );
+
+    // Memo accounting golden: a repeated-shape trace replays most
+    // submissions; a second identical trace replays *all* of them.
+    let s1 = rep_svc.memo_stats().unwrap();
+    let total = s1.hits + s1.misses;
+    assert!(s1.misses > 0, "first trace must simulate each new shape");
+    assert!(
+        s1.hits > s1.misses,
+        "repeated-shape trace should mostly hit: {s1:?}"
+    );
+    let rep2 = serve(&rep_svc, &cfg).unwrap();
+    assert_eq!(rep2.rows, rep.rows, "same service, same trace");
+    let s2 = rep_svc.memo_stats().unwrap();
+    assert_eq!(
+        s2.misses, s1.misses,
+        "second trace must not simulate anything new"
+    );
+    assert_eq!(
+        s2.hits,
+        s1.hits + total,
+        "every submission of the second trace replays"
+    );
+}
