@@ -1,18 +1,18 @@
 //! Bench: NetGraph DAG execution throughput across the cycle-engine
 //! tiers (naive / FastPath / replay) and the analytic backend.
 //!
-//! Emits `BENCH_netgraph.json` (wall time, simulated cycles/sec,
-//! speedup vs naive stepping); CI uploads it as an artifact. The
-//! cycle tiers are pinned bit-identical on total cycles before
-//! timing. `BENCH_QUICK` shortens the measurement budget for CI.
-
-use std::path::Path;
+//! Emits `BENCH_netgraph.json` at the repo root (wall time, simulated
+//! cycles/sec, speedup vs naive stepping, layers/sec). The file is
+//! committed; CI re-runs the bench and diffs against the baseline via
+//! `scripts/check_bench.py`. The cycle tiers are pinned bit-identical
+//! on total cycles before timing. `BENCH_QUICK` shortens the
+//! measurement budget for CI.
 
 use zerostall::cluster::ConfigId;
 use zerostall::coordinator::net::run_net;
 use zerostall::coordinator::workload::zoo;
 use zerostall::kernels::{GemmService, LayoutKind};
-use zerostall::util::bench::{write_json, Bencher, JsonRow};
+use zerostall::util::bench::{repo_root, write_json, Bencher, JsonRow};
 
 fn main() {
     println!(
@@ -61,15 +61,19 @@ fn main() {
     );
 
     let rows = vec![
-        JsonRow::new("net/ffn/cycle_naive", &s_naive, sim_cycles, None),
+        JsonRow::new("net/ffn/cycle_naive", &s_naive, sim_cycles, None)
+            .with_items_per_sec(s_naive.throughput(layers)),
         JsonRow::new(
             "net/ffn/cycle_fastpath",
             &s_fast,
             sim_cycles,
             Some(&s_naive),
-        ),
-        JsonRow::new("net/ffn/replay", &s_replay, sim_cycles, Some(&s_naive)),
-        JsonRow::new("net/ffn/analytic", &s_ana, sim_cycles, Some(&s_naive)),
+        )
+        .with_items_per_sec(s_fast.throughput(layers)),
+        JsonRow::new("net/ffn/replay", &s_replay, sim_cycles, Some(&s_naive))
+            .with_items_per_sec(s_replay.throughput(layers)),
+        JsonRow::new("net/ffn/analytic", &s_ana, sim_cycles, Some(&s_naive))
+            .with_items_per_sec(s_ana.throughput(layers)),
     ];
     for r in &rows {
         println!(
@@ -77,6 +81,7 @@ fn main() {
             r.name, r.sim_cycles_per_sec, r.speedup_vs_naive
         );
     }
-    write_json(Path::new("BENCH_netgraph.json"), &rows).unwrap();
-    println!("wrote BENCH_netgraph.json ({} rows)", rows.len());
+    let path = repo_root().join("BENCH_netgraph.json");
+    write_json(&path, &rows).unwrap();
+    println!("wrote {} ({} rows)", path.display(), rows.len());
 }

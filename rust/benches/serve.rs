@@ -1,20 +1,26 @@
 //! Bench: ServeSim throughput across the cycle-engine tiers — naive
 //! per-cycle stepping vs FastPath vs the replay/memo backend — plus
-//! the analytic triage configuration for context.
+//! the analytic triage configuration for context, and the MegaServe
+//! event core vs the wave-synchronous legacy serve loop.
 //!
-//! Emits `BENCH_serve.json` (wall time, simulated cycles/sec, speedup
-//! vs naive stepping) so the perf trajectory is tracked across PRs;
-//! CI uploads it as an artifact. Before timing anything, the three
-//! cycle tiers are pinned bit-identical on the trace's observables.
+//! Emits `BENCH_serve.json` at the repo root (wall time, simulated
+//! cycles/sec, speedup vs the relevant baseline, requests/sec). The
+//! file is *committed*: CI re-runs the bench and fails on a >20%
+//! throughput regression against the committed baseline
+//! (`scripts/check_bench.py`). Before timing anything, the cycle
+//! tiers are pinned bit-identical on the trace's observables, and the
+//! two serve engines are pinned bit-identical on report + rows.
 //!
-//! Knobs: `BENCH_REQUESTS` scales the trace (default 24),
-//! `BENCH_QUICK` shortens the measurement budget for CI.
+//! Knobs: `BENCH_REQUESTS` scales the tier trace (default 24),
+//! `BENCH_ENGINE_REQUESTS` the engine trace (default 512; the event
+//! core's advantage grows with trace length), `BENCH_QUICK` shortens
+//! the measurement budget for CI.
 
-use std::path::Path;
-
-use zerostall::coordinator::serve::{serve, Policy, ServeConfig};
+use zerostall::coordinator::serve::{
+    serve, Policy, ServeConfig, ServeEngine,
+};
 use zerostall::kernels::GemmService;
-use zerostall::util::bench::{write_json, Bencher, JsonRow};
+use zerostall::util::bench::{repo_root, write_json, Bencher, JsonRow};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key)
@@ -27,11 +33,8 @@ fn main() {
     println!(
         "== serve bench: cycle tiers (naive / fastpath / replay) =="
     );
-    let b = if std::env::var("BENCH_QUICK").is_ok() {
-        Bencher::quick()
-    } else {
-        Bencher::default()
-    };
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
     let requests = env_usize("BENCH_REQUESTS", 24);
 
     let mut cfg =
@@ -83,6 +86,37 @@ fn main() {
         serve(&GemmService::analytic(), &cfg).unwrap()
     });
 
+    // MegaServe vs the wave-synchronous loop, analytic backend: the
+    // long-trace regime the event core exists for. Equivalence is
+    // asserted on the full run before timing.
+    println!("== serve bench: event core vs legacy wave loop ==");
+    let engine_requests = env_usize(
+        "BENCH_ENGINE_REQUESTS",
+        if quick { 64 } else { 512 },
+    );
+    let mut ecfg = cfg.clone();
+    ecfg.requests = engine_requests;
+    ecfg.engine = ServeEngine::Event;
+    let ev = serve(&GemmService::analytic(), &ecfg).unwrap();
+    let mut lcfg = ecfg.clone();
+    lcfg.engine = ServeEngine::Legacy;
+    let lg = serve(&GemmService::analytic(), &lcfg).unwrap();
+    assert_eq!(
+        ev.report, lg.report,
+        "event core report deviates from the wave-synchronous loop"
+    );
+    assert_eq!(ev.rows, lg.rows, "event core rows deviate");
+    let engine_sim_cycles = ev.report.makespan_cycles;
+
+    let etag = format!("{engine_requests}req_4cl");
+    let s_legacy = b.run(&format!("serve/engine_legacy_{etag}"), || {
+        serve(&GemmService::analytic(), &lcfg).unwrap()
+    });
+    let s_event = b.run(&format!("serve/engine_event_{etag}"), || {
+        serve(&GemmService::analytic(), &ecfg).unwrap()
+    });
+
+    let reqs = engine_requests as f64;
     let rows = vec![
         JsonRow::new("serve/cycle_naive", &s_naive, sim_cycles, None),
         JsonRow::new(
@@ -93,16 +127,34 @@ fn main() {
         ),
         JsonRow::new("serve/replay", &s_replay, sim_cycles, Some(&s_naive)),
         JsonRow::new("serve/analytic", &s_ana, sim_cycles, Some(&s_naive)),
+        // Engine rows: speedup is event-vs-legacy (the acceptance
+        // metric), items_per_sec is requests drained per wall second.
+        JsonRow::new(
+            "serve/engine_legacy",
+            &s_legacy,
+            engine_sim_cycles,
+            None,
+        )
+        .with_items_per_sec(s_legacy.throughput(reqs)),
+        JsonRow::new(
+            "serve/engine_event",
+            &s_event,
+            engine_sim_cycles,
+            Some(&s_legacy),
+        )
+        .with_items_per_sec(s_event.throughput(reqs)),
     ];
     for r in &rows {
         println!(
-            "    -> {:<22} {:>12.0} sim cycles/s  ({:.2}x vs naive)",
+            "    -> {:<22} {:>12.0} sim cycles/s  ({:.2}x vs baseline)",
             r.name, r.sim_cycles_per_sec, r.speedup_vs_naive
         );
     }
-    write_json(Path::new("BENCH_serve.json"), &rows).unwrap();
+    let path = repo_root().join("BENCH_serve.json");
+    write_json(&path, &rows).unwrap();
     println!(
-        "wrote BENCH_serve.json ({} rows, {} simulated cycles/run)",
+        "wrote {} ({} rows, {} simulated cycles/run)",
+        path.display(),
         rows.len(),
         sim_cycles
     );

@@ -55,7 +55,7 @@ pub fn usage() -> &'static str {
      \x20 serve     --model <zoo[,zoo...]> [--rate R] [--burst B] \
      [--policy fifo|cb] [--clusters N] [--requests N] \
      [--backend cycle|analytic|replay] [--fast-forward true|false] \
-     [--seed S] [--slo CYCLES] \
+     [--seed S] [--slo CYCLES] [--serve-engine event|legacy] \
      [--threads N] [--profile true] [--out results]\n\
      \x20 profile   --model mlp|ffn|qkv|attn|conv|llm \
      [--config <name>] [--clusters N] [--trace out.json] \
@@ -382,6 +382,17 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             cfg.threads =
                 flag(&flags, "threads", runner::default_threads())?;
             cfg.slo = slo;
+            let engine_s = flags
+                .get("serve-engine")
+                .cloned()
+                .unwrap_or_else(|| "event".into());
+            cfg.engine = serve::ServeEngine::from_name(&engine_s)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown serve engine `{engine_s}` \
+                         (event|legacy)"
+                    )
+                })?;
             eprintln!(
                 "serve: {} requests of `{}` at {} req/Mcycle \
                  (burst {}) on {} x{} via `{}`, policy `{}`...",
@@ -398,6 +409,14 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             let ff = flag(&flags, "fast-forward", true)?;
             let svc = GemmService::of_kind_ff(backend, ff);
             let run = serve::serve(&svc, &cfg)?;
+            if cfg.engine == serve::ServeEngine::Event {
+                let es = run.engine_stats;
+                eprintln!(
+                    "event core: {} events, dispatch memo {} hits / \
+                     {} misses",
+                    es.events, es.memo_hits, es.memo_misses,
+                );
+            }
             if let Some(ms) = svc.memo_stats() {
                 eprintln!(
                     "memo tier: {} hits / {} misses ({:.0}% replayed)",
@@ -881,6 +900,32 @@ mod tests {
             "2".into(),
         ])
         .is_err());
+        assert!(main_with_args(vec![
+            "serve".into(),
+            "--serve-engine".into(),
+            "waveish".into(),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn serve_command_legacy_engine() {
+        let dir = std::env::temp_dir()
+            .join("zerostall-serve-cli-legacy-test");
+        main_with_args(vec![
+            "serve".into(),
+            "--model".into(),
+            "ffn".into(),
+            "--serve-engine".into(),
+            "legacy".into(),
+            "--requests".into(),
+            "4".into(),
+            "--out".into(),
+            dir.display().to_string(),
+        ])
+        .unwrap();
+        assert!(dir.join("serve-ffn-cb.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -537,7 +537,7 @@ pub fn serve_csv(run: &crate::coordinator::serve::ServeRun) -> Csv {
     for row in &run.rows {
         c.row(vec![
             row.id.to_string(),
-            row.model.clone(),
+            run.models[row.model].clone(),
             row.arrival.to_string(),
             row.completion.to_string(),
             row.latency.to_string(),

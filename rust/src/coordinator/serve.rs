@@ -30,7 +30,27 @@
 //!   SLO-attained throughput, plan-cache hit rate under model churn,
 //!   and per-cluster utilization.
 //!
-//! Time advances wave-synchronously: a wave costs its busiest
+//! Two engines implement the identical scheduling semantics (see
+//! DESIGN.md §12 for the equivalence argument):
+//!
+//! * [`ServeEngine::Event`] (default) — MegaServe: a binary-heap
+//!   event queue over request arrivals and wave completions, flat
+//!   per-request state arenas (no per-wave allocation), and a per-run
+//!   **shape-memo table** that serves every repeated
+//!   `(shape, epilogue, placement)` dispatch from a hash lookup
+//!   instead of a backend call — timing and perf counters are
+//!   data-oblivious (DESIGN.md §11), so the memoization is bit-exact.
+//!   Unseen shapes of a wave are deduplicated and evaluated in
+//!   parallel on the host pool; latency accumulates into per-model
+//!   [`CycleHistogram`] shards merged at the end. A 10^6-request
+//!   analytic trace drains in seconds.
+//! * [`ServeEngine::Legacy`] — the original wave-synchronous loop
+//!   that re-scans all in-flight requests each wave and dispatches
+//!   every op instance to the backend. It is kept as the differential
+//!   baseline: a shrinkable property pins both engines bit-identical
+//!   on random traces, gating its eventual removal.
+//!
+//! Time advances wave-synchronously in both: a wave costs its busiest
 //! cluster's assigned cycles, each assigned op finishes at its
 //! cluster-local position inside the wave, and newly arrived requests
 //! join at the next wave boundary. Everything — arrivals, costs,
@@ -38,14 +58,18 @@
 //! so a serve run is bit-for-bit reproducible across runs and thread
 //! counts (a property test compares whole reports for equality).
 
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, BinaryHeap, HashMap};
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
 use crate::backend::BackendKind;
 use crate::cluster::ConfigId;
 use crate::fabric::{FabricConfig, NocConfig};
 use crate::kernels::{
-    choose_shard_grid, problem_seed, GemmJob, GemmService, LayoutKind,
-    ServiceStats,
+    choose_shard_grid, problem_seed, Epilogue, GemmJob, GemmService,
+    LayoutKind, ServiceStats,
 };
 use crate::profile::N_CLASSES;
 use crate::util::prop::Shrink;
@@ -82,6 +106,35 @@ impl Policy {
     }
 }
 
+/// Which serve core executes the trace. Both produce bit-identical
+/// `ServeRun`s (a shrinkable differential property enforces it); the
+/// event core is the shipping default, the wave-synchronous one the
+/// baseline it is diffed against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeEngine {
+    /// Event-queue core with shape-memoized dispatch (MegaServe).
+    Event,
+    /// Original wave-synchronous re-scan loop.
+    Legacy,
+}
+
+impl ServeEngine {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeEngine::Event => "event",
+            ServeEngine::Legacy => "legacy",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ServeEngine> {
+        match s {
+            "event" => Some(ServeEngine::Event),
+            "legacy" => Some(ServeEngine::Legacy),
+            _ => None,
+        }
+    }
+}
+
 /// Serving-run parameters.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -105,11 +158,15 @@ pub struct ServeConfig {
     /// Host threads for batched backend dispatches (never affects
     /// results — only wall-clock).
     pub threads: usize,
+    /// Serve core (event-driven by default; `Legacy` keeps the
+    /// wave-synchronous loop for the differential property).
+    pub engine: ServeEngine,
 }
 
 impl ServeConfig {
     /// Defaults: zonl48db / grouped layout, continuous batching on one
-    /// cluster, 32 requests at 5 req/Mcycle, no bursts, auto SLO.
+    /// cluster, 32 requests at 5 req/Mcycle, no bursts, auto SLO,
+    /// event-driven core.
     pub fn new(models: Vec<String>) -> ServeConfig {
         ServeConfig {
             models,
@@ -123,6 +180,7 @@ impl ServeConfig {
             seed: 0xC0FFEE,
             slo: None,
             threads: 2,
+            engine: ServeEngine::Event,
         }
     }
 }
@@ -202,10 +260,12 @@ pub fn gen_arrivals(cfg: &ServeConfig) -> ArrivalTrace {
 }
 
 /// Per-request outcome row (CSV material).
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ServeRow {
     pub id: usize,
-    pub model: String,
+    /// Index into [`ServeRun::models`] — resolved to the zoo name at
+    /// render time so a million rows cost no string clones.
+    pub model: usize,
     pub arrival: u64,
     pub completion: u64,
     pub latency: u64,
@@ -239,6 +299,9 @@ pub struct ServeReport {
     /// is derived (`ServeConfig::slo == None`), that includes the
     /// isolated-latency probe's dispatches, so `plan_hits +
     /// plan_misses` equals `gemm_ops` only for explicit-SLO runs.
+    /// The event core reports the same numbers the wave-synchronous
+    /// loop would: each shape-memo hit stands in for the plan-cache
+    /// hit its skipped re-prepare would have recorded.
     pub plan_stats: ServiceStats,
     pub per_cluster_busy: Vec<u64>,
     /// Scheduler waves executed.
@@ -322,18 +385,38 @@ impl ServeReport {
     }
 }
 
+/// Event-core bookkeeping: how hard the heap and the shape memo
+/// worked. Informational — `memo_hits` dispatches never touched the
+/// backend. Deterministic across runs and thread counts (whole-run
+/// equality in the determinism property covers it); all-zero for the
+/// legacy engine.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Heap events processed (arrival batches + wave completions).
+    pub events: u64,
+    /// GEMM dispatches served from the shape memo (hash lookup, no
+    /// backend call).
+    pub memo_hits: u64,
+    /// GEMM dispatches that reached the backend (first touch of a
+    /// `(shape, epilogue, placement)` key).
+    pub memo_misses: u64,
+}
+
 /// A completed serving run: the report plus per-request rows (sorted
 /// by request id).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeRun {
     pub report: ServeReport,
+    /// Model-name table `ServeRow::model` indexes (the config's mix).
+    pub models: Vec<String>,
+    /// Event-core counters (zero under the legacy engine).
+    pub engine_stats: EngineStats,
     pub rows: Vec<ServeRow>,
 }
 
 /// One zoo model's immutable scheduling skeleton, shared by every
-/// request of that model.
+/// request of that model (legacy engine).
 struct ModelPlan {
-    name: String,
     graph: NetGraph,
     deps0: Vec<usize>,
     dependents: Vec<Vec<usize>>,
@@ -345,12 +428,12 @@ fn model_plans(models: &[String]) -> Result<Vec<ModelPlan>> {
         .map(|name| {
             let graph = zoo::build(name)?;
             let (_, deps0, dependents) = graph.dependency_structure()?;
-            Ok(ModelPlan { name: name.clone(), graph, deps0, dependents })
+            Ok(ModelPlan { graph, deps0, dependents })
         })
         .collect()
 }
 
-/// Mutable per-request execution state.
+/// Mutable per-request execution state (legacy engine).
 struct ReqState {
     model: usize,
     arrival: u64,
@@ -416,6 +499,22 @@ pub fn serve_trace(
     trace: &ArrivalTrace,
 ) -> Result<ServeRun> {
     ensure!(!cfg.models.is_empty(), "serve needs at least one model");
+    match cfg.engine {
+        ServeEngine::Legacy => serve_trace_legacy(svc, cfg, trace),
+        ServeEngine::Event => {
+            let plans = Arc::new(event_plans(cfg)?);
+            serve_trace_event(svc, cfg, trace, &plans)
+        }
+    }
+}
+
+/// The original wave-synchronous serve loop, kept bit-identical to
+/// the event core (differential property) until its removal is gated.
+fn serve_trace_legacy(
+    svc: &GemmService,
+    cfg: &ServeConfig,
+    trace: &ArrivalTrace,
+) -> Result<ServeRun> {
     let plans = model_plans(&cfg.models)?;
     for r in &trace.requests {
         ensure!(
@@ -476,10 +575,11 @@ pub fn serve_trace(
     let mut gemm_ops = 0u64;
     let mut total_ops = 0u64;
     let mut stall_totals = [0u64; N_CLASSES];
-    let mut mix: Vec<MixAccum> = plans
+    let mut mix: Vec<MixAccum> = cfg
+        .models
         .iter()
-        .map(|p| MixAccum {
-            model: p.name.clone(),
+        .map(|name| MixAccum {
+            model: name.clone(),
             gemm_ops: 0,
             flops: 0,
             dma_bytes: 0,
@@ -675,7 +775,7 @@ pub fn serve_trace(
             makespan = makespan.max(reqs[ri].last_finish);
             rows.push(ServeRow {
                 id: arrivals[ri].id,
-                model: plans[reqs[ri].model].name.clone(),
+                model: reqs[ri].model,
                 arrival: reqs[ri].arrival,
                 completion: reqs[ri].last_finish,
                 latency,
@@ -704,10 +804,7 @@ pub fn serve_trace(
         latency: hist,
         slo_cycles: slo,
         slo_attained,
-        plan_stats: ServiceStats {
-            plan_hits: stats1.plan_hits - stats0.plan_hits,
-            plan_misses: stats1.plan_misses - stats0.plan_misses,
-        },
+        plan_stats: stats1.delta_since(&stats0),
         per_cluster_busy: busy,
         waves,
         sharded_waves,
@@ -717,7 +814,620 @@ pub fn serve_trace(
         stall_totals,
         mix,
     };
-    Ok(ServeRun { report, rows })
+    Ok(ServeRun {
+        report,
+        models: cfg.models.clone(),
+        engine_stats: EngineStats::default(),
+        rows,
+    })
+}
+
+// ------------------------------------------------ event-driven core --
+
+/// Maximum ops per model graph the event core's `u64` ready-bitmask
+/// supports. Every zoo model is far below this; the legacy engine has
+/// no such cap.
+const MAX_EVENT_OPS: usize = 64;
+
+/// Precomputed dispatch recipe for one op: shape, epilogue and
+/// shardability for GEMMs, the closed-form cost for elementwise adds.
+/// Resolved once per model instead of re-derived every wave.
+#[derive(Clone, Copy)]
+enum OpSpec {
+    Gemm {
+        m: usize,
+        n: usize,
+        k: usize,
+        epi: Epilogue,
+        /// `choose_shard_grid(m, n, clusters).used_clusters() > 1`,
+        /// precomputed for the run's fabric size.
+        shardable: bool,
+    },
+    Add {
+        cycles: u64,
+    },
+}
+
+/// One zoo model's immutable scheduling skeleton for the event core:
+/// dependency arenas sized for flat `u8` fan-in counters and a `u64`
+/// ready bitmask. Shared across requests (and with the SLO probe)
+/// behind one `Arc`.
+struct EventPlan {
+    ops: usize,
+    deps0: Vec<u8>,
+    dependents: Vec<Vec<u32>>,
+    specs: Vec<OpSpec>,
+    /// Bit `oi` set when op `oi` has no producers (ready at admit).
+    roots: u64,
+}
+
+fn event_plans(cfg: &ServeConfig) -> Result<Vec<EventPlan>> {
+    let n_clusters = cfg.clusters.max(1);
+    cfg.models
+        .iter()
+        .map(|name| {
+            let graph = zoo::build(name)?;
+            let (_, deps0, dependents) = graph.dependency_structure()?;
+            let ops = graph.ops.len();
+            ensure!(
+                ops <= MAX_EVENT_OPS,
+                "event engine caps model graphs at {MAX_EVENT_OPS} \
+                 ops (`{name}` has {ops}); use --serve-engine legacy"
+            );
+            let specs = graph
+                .ops
+                .iter()
+                .map(|op| match op {
+                    NetOp::Gemm { x, w, epi, .. } => {
+                        let (m, n, k) = (
+                            graph.tensors[*x].rows,
+                            graph.tensors[*w].cols,
+                            graph.tensors[*x].cols,
+                        );
+                        OpSpec::Gemm {
+                            m,
+                            n,
+                            k,
+                            epi: *epi,
+                            shardable: n_clusters > 1
+                                && choose_shard_grid(m, n, n_clusters)
+                                    .used_clusters()
+                                    > 1,
+                        }
+                    }
+                    NetOp::Add { out, .. } => OpSpec::Add {
+                        cycles: add_pass_cycles(
+                            graph.tensors[*out].elems(),
+                        ),
+                    },
+                })
+                .collect();
+            let mut roots = 0u64;
+            let mut deps = Vec::with_capacity(ops);
+            for (oi, &d) in deps0.iter().enumerate() {
+                ensure!(
+                    d <= u8::MAX as usize,
+                    "op fan-in {d} exceeds the event engine's u8 arena"
+                );
+                deps.push(d as u8);
+                if d == 0 {
+                    roots |= 1u64 << oi;
+                }
+            }
+            let dependents = dependents
+                .into_iter()
+                .map(|v| v.into_iter().map(|d| d as u32).collect())
+                .collect();
+            Ok(EventPlan { ops, deps0: deps, dependents, specs, roots })
+        })
+        .collect()
+}
+
+/// How a dispatch was placed — part of the shape-memo key: a packed
+/// (batched) dispatch and a tensor-parallel one of the same shape
+/// have different timing.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+enum Placement {
+    Packed,
+    Sharded,
+}
+
+/// Shape-memo key. Config, layout and the shard grid are fixed for a
+/// run, so `(m, n, k, epilogue, placement)` pins the dispatch.
+type DispatchKey = (usize, usize, usize, Epilogue, Placement);
+
+/// Memoized observables of one GEMM dispatch. Timing and perf are
+/// data-oblivious (DESIGN.md §11's theorem), so every repeat of the
+/// same key replays them bit for bit.
+struct DispatchMemo {
+    cycles: u64,
+    stalls: [u64; N_CLASSES],
+    flops: u64,
+    dma_bytes: u64,
+    window_cycles: u64,
+    /// Per-shard busy cycles (sharded placements; empty for packed).
+    shard_cycles: Vec<u64>,
+}
+
+/// Append the set bits of `mask` as `(ri, oi)` pool entries, in
+/// ascending op order — the same order the legacy pool scan produces.
+#[inline]
+fn collect_ready(mask: u64, ri: u32, pool: &mut Vec<(u32, u32)>) {
+    let mut m = mask;
+    while m != 0 {
+        pool.push((ri, m.trailing_zeros()));
+        m &= m - 1;
+    }
+}
+
+/// Event kinds, in tie-break order at equal virtual time: arrivals
+/// admit before a co-temporal wave completion commits — both orders
+/// leave the same state (admission only grows the active set, commit
+/// only touches per-request progress), and the next wave dispatches
+/// only after the instant fully drains, so the choice is free; it is
+/// fixed here so runs are reproducible byte for byte.
+const EV_ARRIVE: u8 = 0;
+const EV_WAVE: u8 = 1;
+
+/// MegaServe: the event-driven serve core. Semantics are identical to
+/// [`serve_trace_legacy`] — waves are still serial scheduling quanta —
+/// but the hot loop is allocation-free, repeated dispatches are
+/// served from the shape memo, and only deduplicated *unseen* shapes
+/// reach the backend (in one parallel batch per wave).
+fn serve_trace_event(
+    svc: &GemmService,
+    cfg: &ServeConfig,
+    trace: &ArrivalTrace,
+    plans: &Arc<Vec<EventPlan>>,
+) -> Result<ServeRun> {
+    for r in &trace.requests {
+        ensure!(
+            r.model < plans.len(),
+            "request {} names model index {} (mix has {})",
+            r.id,
+            r.model,
+            plans.len()
+        );
+    }
+    let n_clusters = cfg.clusters.max(1);
+    let fabric = FabricConfig::new(n_clusters);
+    // Snapshot plan-cache counters before everything — including the
+    // SLO probe — exactly like the legacy engine; the memo-hit
+    // synthesis below reconstructs the skipped re-prepares.
+    let stats0 = svc.stats();
+    let mut probe_stats = EngineStats::default();
+    let slo = match cfg.slo {
+        Some(s) => s,
+        None => {
+            // 4x the isolated latency of the mix's first model. The
+            // probe reuses the same Arc'd plans instead of rebuilding.
+            let mut solo = cfg.clone();
+            solo.policy = Policy::Fifo;
+            solo.requests = 1;
+            solo.slo = Some(u64::MAX);
+            let ptrace = ArrivalTrace {
+                requests: vec![ServeRequest {
+                    id: 0,
+                    model: 0,
+                    arrival: 0,
+                    seed: cfg.seed ^ 0x1501A7ED,
+                }],
+            };
+            let probe = serve_trace_event(svc, &solo, &ptrace, plans)?;
+            probe_stats = probe.engine_stats;
+            probe.report.latency.max().saturating_mul(4)
+        }
+    };
+
+    // Arrival order (stable on same-cycle bursts by id). Request
+    // index == position in this order everywhere below.
+    let mut arrivals: Vec<ServeRequest> = trace.requests.clone();
+    arrivals.sort_by_key(|r| (r.arrival, r.id));
+    let n = arrivals.len();
+
+    // Flat per-request state arenas: fan-in counters live in one u8
+    // slab addressed by `off`, readiness is a bitmask per request.
+    let mut off = Vec::with_capacity(n + 1);
+    off.push(0u32);
+    for r in &arrivals {
+        off.push(off.last().unwrap() + plans[r.model].ops as u32);
+    }
+    let mut deps = vec![0u8; *off.last().unwrap() as usize];
+    for (ri, r) in arrivals.iter().enumerate() {
+        deps[off[ri] as usize..off[ri + 1] as usize]
+            .copy_from_slice(&plans[r.model].deps0);
+    }
+    let mut ready_mask: Vec<u64> =
+        arrivals.iter().map(|r| plans[r.model].roots).collect();
+    let mut remaining: Vec<u32> =
+        arrivals.iter().map(|r| plans[r.model].ops as u32).collect();
+    let mut last_finish = vec![0u64; n];
+
+    // Report accumulators. Latency lands in per-model histogram
+    // shards, merged (bit-exactly) into one at the end.
+    let mut busy = vec![0u64; n_clusters];
+    let mut hist_shards: Vec<CycleHistogram> =
+        (0..plans.len()).map(|_| CycleHistogram::new()).collect();
+    let mut rows: Vec<ServeRow> = Vec::with_capacity(n);
+    let mut slo_attained = 0usize;
+    let mut makespan = 0u64;
+    let mut waves = 0u64;
+    let mut sharded_waves = 0u64;
+    let mut gemm_ops = 0u64;
+    let mut total_ops = 0u64;
+    let mut stall_totals = [0u64; N_CLASSES];
+    let mut mix: Vec<MixAccum> = cfg
+        .models
+        .iter()
+        .map(|name| MixAccum {
+            model: name.clone(),
+            gemm_ops: 0,
+            flops: 0,
+            dma_bytes: 0,
+            window_cycles: 0,
+        })
+        .collect();
+
+    // Engine state: the event heap (min on `(time, kind)`), the
+    // active set (BTreeSet iterates in arrival order — request index
+    // == sorted-arrival position), the shape memo, and per-wave
+    // scratch buffers reused across the whole run.
+    let mut heap: BinaryHeap<Reverse<(u64, u8)>> = BinaryHeap::new();
+    let mut active: BTreeSet<u32> = BTreeSet::new();
+    let mut memo: HashMap<DispatchKey, DispatchMemo> = HashMap::new();
+    let mut next_arr = 0usize;
+    let mut clock = 0u64;
+    let mut wave_in_flight = false;
+    let mut events_n = 0u64;
+    let mut memo_hits = 0u64;
+    let mut memo_misses = 0u64;
+    // Wave scratch: `wave_pool`/`wave_fin` persist from dispatch to
+    // the wave-completion event that commits them.
+    let mut wave_pool: Vec<(u32, u32)> = Vec::new();
+    let mut wave_fin: Vec<u64> = Vec::new();
+    let mut costs: Vec<u64> = Vec::new();
+    let mut by_cost: Vec<usize> = Vec::new();
+    let mut load: Vec<u64> = vec![0; n_clusters];
+    let mut fresh_jobs: Vec<GemmJob> = Vec::new();
+    let mut fresh_keys: Vec<DispatchKey> = Vec::new();
+
+    if n > 0 {
+        heap.push(Reverse((arrivals[0].arrival, EV_ARRIVE)));
+    }
+    while let Some(&Reverse((t, _))) = heap.peek() {
+        clock = t;
+        // Drain every event at this instant before dispatching, so
+        // admission and wave commit both precede the next scheduling
+        // decision — the wave-synchronous loop's order.
+        while let Some(&Reverse((t2, kind))) = heap.peek() {
+            if t2 != clock {
+                break;
+            }
+            heap.pop();
+            events_n += 1;
+            if kind == EV_ARRIVE {
+                while next_arr < n
+                    && arrivals[next_arr].arrival <= clock
+                {
+                    active.insert(next_arr as u32);
+                    next_arr += 1;
+                }
+                if next_arr < n {
+                    heap.push(Reverse((
+                        arrivals[next_arr].arrival,
+                        EV_ARRIVE,
+                    )));
+                }
+            } else {
+                // Wave completion: commit ops, release dependents,
+                // retire finished requests. Accumulation is
+                // commutative and rows are sorted by id at the end,
+                // so commit order inside the wave is immaterial.
+                for i in 0..wave_pool.len() {
+                    let (ri, oi) = wave_pool[i];
+                    let fin = wave_fin[i];
+                    let riu = ri as usize;
+                    let model = arrivals[riu].model;
+                    total_ops += 1;
+                    remaining[riu] -= 1;
+                    if fin > last_finish[riu] {
+                        last_finish[riu] = fin;
+                    }
+                    for &d in &plans[model].dependents[oi as usize] {
+                        let slot = off[riu] as usize + d as usize;
+                        deps[slot] -= 1;
+                        if deps[slot] == 0 {
+                            ready_mask[riu] |= 1u64 << d;
+                        }
+                    }
+                    if remaining[riu] == 0 {
+                        let arrival = arrivals[riu].arrival;
+                        let completion = last_finish[riu];
+                        let latency =
+                            completion.saturating_sub(arrival);
+                        hist_shards[model].record(latency);
+                        if latency <= slo {
+                            slo_attained += 1;
+                        }
+                        if completion > makespan {
+                            makespan = completion;
+                        }
+                        rows.push(ServeRow {
+                            id: arrivals[riu].id,
+                            model,
+                            arrival,
+                            completion,
+                            latency,
+                            slo_met: latency <= slo,
+                            ops: plans[model].ops,
+                        });
+                        active.remove(&ri);
+                    }
+                }
+                wave_in_flight = false;
+            }
+        }
+
+        if wave_in_flight || active.is_empty() {
+            continue;
+        }
+
+        // Dispatch the next wave: pool the policy's ready ops.
+        wave_pool.clear();
+        match cfg.policy {
+            Policy::Fifo => {
+                let &ri = active.iter().next().unwrap();
+                collect_ready(
+                    ready_mask[ri as usize],
+                    ri,
+                    &mut wave_pool,
+                );
+            }
+            Policy::Continuous => {
+                for &ri in active.iter() {
+                    collect_ready(
+                        ready_mask[ri as usize],
+                        ri,
+                        &mut wave_pool,
+                    );
+                }
+            }
+        }
+        ensure!(
+            !wave_pool.is_empty(),
+            "serve deadlocked: {} active requests with no ready op",
+            active.len()
+        );
+        waves += 1;
+        for &(ri, oi) in &wave_pool {
+            ready_mask[ri as usize] &= !(1u64 << oi);
+        }
+
+        let single_shardable = cfg.policy == Policy::Continuous
+            && n_clusters > 1
+            && wave_pool.len() == 1
+            && matches!(
+                plans[arrivals[wave_pool[0].0 as usize].model].specs
+                    [wave_pool[0].1 as usize],
+                OpSpec::Gemm { shardable: true, .. }
+            );
+
+        let elapsed;
+        if single_shardable {
+            let (ri, oi) = wave_pool[0];
+            let model = arrivals[ri as usize].model;
+            let OpSpec::Gemm { m, n: nn, k, epi, .. } =
+                plans[model].specs[oi as usize]
+            else {
+                unreachable!("shardable op is a GEMM");
+            };
+            let key = (m, nn, k, epi, Placement::Sharded);
+            if memo.contains_key(&key) {
+                memo_hits += 1;
+            } else {
+                memo_misses += 1;
+                let job = GemmJob {
+                    seed: arrivals[ri as usize].seed
+                        ^ problem_seed(m, nn, k),
+                    ..GemmJob::fused(
+                        cfg.config, m, nn, k, cfg.layout, epi,
+                    )
+                };
+                let fr = svc.run_sharded_job(&job, &fabric)?;
+                memo.insert(
+                    key,
+                    DispatchMemo {
+                        cycles: fr.cycles,
+                        stalls: fr.stall_profile().totals(),
+                        flops: fr.fpu_ops_total(),
+                        dma_bytes: fr
+                            .shards
+                            .iter()
+                            .map(|s| s.perf.dma_bytes)
+                            .sum(),
+                        window_cycles: fr
+                            .shards
+                            .iter()
+                            .map(|s| s.perf.window_cycles)
+                            .sum(),
+                        shard_cycles: fr
+                            .shards
+                            .iter()
+                            .map(|s| s.cycles)
+                            .collect(),
+                    },
+                );
+            }
+            let mo = &memo[&key];
+            sharded_waves += 1;
+            gemm_ops += 1;
+            for (ci, &c) in mo.shard_cycles.iter().enumerate() {
+                busy[ci % n_clusters] += c;
+            }
+            for (t, v) in stall_totals.iter_mut().zip(mo.stalls) {
+                *t += v;
+            }
+            let acc = &mut mix[model];
+            acc.gemm_ops += 1;
+            acc.flops += mo.flops;
+            acc.dma_bytes += mo.dma_bytes;
+            acc.window_cycles += mo.window_cycles;
+            wave_fin.clear();
+            wave_fin.push(clock + mo.cycles);
+            elapsed = mo.cycles;
+        } else {
+            // Pass 1: route every GEMM through the shape memo; each
+            // unseen key queues exactly one backend job (in-wave
+            // duplicates alias the first toucher's job).
+            fresh_jobs.clear();
+            fresh_keys.clear();
+            for &(ri, oi) in &wave_pool {
+                let model = arrivals[ri as usize].model;
+                if let OpSpec::Gemm { m, n: nn, k, epi, .. } =
+                    plans[model].specs[oi as usize]
+                {
+                    let key = (m, nn, k, epi, Placement::Packed);
+                    if memo.contains_key(&key)
+                        || fresh_keys.contains(&key)
+                    {
+                        memo_hits += 1;
+                    } else {
+                        memo_misses += 1;
+                        fresh_keys.push(key);
+                        fresh_jobs.push(GemmJob {
+                            seed: arrivals[ri as usize].seed
+                                ^ problem_seed(m, nn, k),
+                            ..GemmJob::fused(
+                                cfg.config, m, nn, k, cfg.layout, epi,
+                            )
+                        });
+                    }
+                }
+            }
+            if !fresh_jobs.is_empty() {
+                // Deduplicated unseen shapes evaluate concurrently on
+                // the host pool; `parallel_map`'s atomic-index grant
+                // discipline keeps result order equal to submission
+                // order at any thread count.
+                let results = svc.run_batch(&fresh_jobs, cfg.threads)?;
+                for (key, res) in fresh_keys.iter().zip(&results) {
+                    let perf = &res.perf;
+                    memo.insert(
+                        *key,
+                        DispatchMemo {
+                            cycles: res.cycles,
+                            stalls: perf.stalls.totals(),
+                            flops: perf.fpu_ops_total,
+                            dma_bytes: perf.dma_bytes,
+                            window_cycles: perf.window_cycles,
+                            shard_cycles: Vec::new(),
+                        },
+                    );
+                }
+            }
+            // Pass 2: per-op costs and accounting, all from the memo.
+            costs.clear();
+            for &(ri, oi) in &wave_pool {
+                let model = arrivals[ri as usize].model;
+                match plans[model].specs[oi as usize] {
+                    OpSpec::Gemm { m, n: nn, k, epi, .. } => {
+                        let mo =
+                            &memo[&(m, nn, k, epi, Placement::Packed)];
+                        gemm_ops += 1;
+                        for (t, v) in
+                            stall_totals.iter_mut().zip(mo.stalls)
+                        {
+                            *t += v;
+                        }
+                        let acc = &mut mix[model];
+                        acc.gemm_ops += 1;
+                        acc.flops += mo.flops;
+                        acc.dma_bytes += mo.dma_bytes;
+                        acc.window_cycles += mo.window_cycles;
+                        costs.push(mo.cycles);
+                    }
+                    OpSpec::Add { cycles } => costs.push(cycles),
+                }
+            }
+            // Longest-processing-time-first onto the least-loaded
+            // cluster; tie-breaks byte-identical to the legacy loop.
+            by_cost.clear();
+            by_cost.extend(0..wave_pool.len());
+            by_cost.sort_by(|&a, &b| {
+                costs[b]
+                    .cmp(&costs[a])
+                    .then(wave_pool[a].cmp(&wave_pool[b]))
+            });
+            load.iter_mut().for_each(|l| *l = 0);
+            wave_fin.clear();
+            wave_fin.resize(wave_pool.len(), 0);
+            for &ix in &by_cost {
+                let c = (0..n_clusters)
+                    .min_by_key(|&c| (load[c], c))
+                    .unwrap();
+                wave_fin[ix] = clock + load[c] + costs[ix];
+                load[c] += costs[ix];
+            }
+            elapsed = load.iter().copied().max().unwrap_or(0);
+            for (ci, &l) in load.iter().enumerate() {
+                busy[ci] += l;
+            }
+        }
+        heap.push(Reverse((clock + elapsed, EV_WAVE)));
+        wave_in_flight = true;
+    }
+
+    rows.sort_by_key(|r| r.id);
+    // Merge the per-model latency shards (bucket-wise exact; the
+    // stats property suite pins shard-merge == single-stream).
+    let mut hist = CycleHistogram::new();
+    for shard in &hist_shards {
+        hist.merge(shard);
+    }
+    let stats1 = svc.stats();
+    let mut plan_stats = stats1.delta_since(&stats0);
+    // Every memo hit skipped a backend call whose plan re-prepare
+    // would have been a cache hit (the first toucher installed the
+    // plan), so folding the hits back in makes the run-local stats
+    // equal to the legacy engine's, bit for bit. The derived-SLO
+    // probe's hits fold in the same way.
+    plan_stats.plan_hits += memo_hits + probe_stats.memo_hits;
+    let completed = rows.len();
+    let report = ServeReport {
+        model: cfg.models.join("+"),
+        config: cfg.config,
+        backend: svc.backend_kind(),
+        policy: cfg.policy,
+        clusters: n_clusters,
+        rate_per_mcycle: cfg.rate_per_mcycle,
+        burst: cfg.burst,
+        seed: cfg.seed,
+        requests: trace.requests.len(),
+        completed,
+        makespan_cycles: makespan,
+        latency: hist,
+        slo_cycles: slo,
+        slo_attained,
+        plan_stats,
+        per_cluster_busy: busy,
+        waves,
+        sharded_waves,
+        gemm_ops,
+        total_ops,
+        noc: fabric.noc,
+        stall_totals,
+        mix,
+    };
+    Ok(ServeRun {
+        report,
+        models: cfg.models.clone(),
+        engine_stats: EngineStats {
+            events: events_n + probe_stats.events,
+            memo_hits: memo_hits + probe_stats.memo_hits,
+            memo_misses: memo_misses + probe_stats.memo_misses,
+        },
+        rows,
+    })
 }
 
 #[cfg(test)]
@@ -896,6 +1606,10 @@ mod tests {
             }],
         };
         assert!(serve_trace(&svc, &cfg, &trace).is_err());
+        // The legacy engine rejects the same inputs.
+        let mut lcfg = cfg.clone();
+        lcfg.engine = ServeEngine::Legacy;
+        assert!(serve_trace(&svc, &lcfg, &trace).is_err());
     }
 
     #[test]
@@ -930,5 +1644,84 @@ mod tests {
         let run = serve(&svc, &cfg).unwrap();
         assert_eq!(iso, run.report.latency.max());
         assert!(iso > 0);
+    }
+
+    #[test]
+    fn engine_names_round_trip() {
+        for e in [ServeEngine::Event, ServeEngine::Legacy] {
+            assert_eq!(ServeEngine::from_name(e.name()), Some(e));
+        }
+        assert_eq!(ServeEngine::from_name("waveish"), None);
+        assert_eq!(
+            ServeConfig::new(vec!["ffn".into()]).engine,
+            ServeEngine::Event
+        );
+    }
+
+    #[test]
+    fn event_and_legacy_engines_agree_on_a_smoke_trace() {
+        // Quick targeted differential (the shrinkable property lives
+        // in tests/serve.rs): mixed models, bursts, sharding, and a
+        // derived SLO all on — report and rows must be bit-identical.
+        let mut cfg = ServeConfig::new(vec![
+            "ffn".to_string(),
+            "qkv".to_string(),
+        ]);
+        cfg.clusters = 2;
+        cfg.requests = 8;
+        cfg.rate_per_mcycle = 30.0;
+        cfg.burst = 0.4;
+        cfg.seed = 0x5EED;
+        cfg.slo = None; // exercise the probe accounting too
+        for policy in [Policy::Fifo, Policy::Continuous] {
+            cfg.policy = policy;
+            cfg.engine = ServeEngine::Event;
+            let ev = serve(&analytic(), &cfg).unwrap();
+            cfg.engine = ServeEngine::Legacy;
+            let lg = serve(&analytic(), &cfg).unwrap();
+            assert_eq!(ev.report, lg.report, "{policy:?} report");
+            assert_eq!(ev.rows, lg.rows, "{policy:?} rows");
+            assert_eq!(ev.models, lg.models);
+            assert!(ev.engine_stats.events > 0);
+            assert!(
+                ev.engine_stats.memo_hits > 0,
+                "repeated shapes must hit the dispatch memo"
+            );
+        }
+    }
+
+    #[test]
+    fn event_dispatch_memo_first_touches_are_exact_under_threads() {
+        // Satellite regression (extends PR 4's exact-miss accounting
+        // to the shape memo): 16 simultaneous ffn requests on 8 host
+        // threads. ffn has exactly two distinct GEMM shapes, so the
+        // memo must record exactly 2 misses — the parallel fresh
+        // batch races the plan cache, but the deduplicated dispatch
+        // path makes the counters exact at any thread count.
+        let svc = analytic();
+        let mut cfg = cfg_of("ffn");
+        cfg.requests = 16;
+        cfg.burst = 1.0; // all arrive on cycle 0: maximal wave width
+        cfg.threads = 8;
+        let run = serve(&svc, &cfg).unwrap();
+        let es = run.engine_stats;
+        assert_eq!(es.memo_misses, 2, "{es:?}");
+        assert_eq!(
+            es.memo_hits + es.memo_misses,
+            run.report.gemm_ops,
+            "{es:?}"
+        );
+        let s = run.report.plan_stats;
+        assert_eq!(s.plan_hits + s.plan_misses, run.report.gemm_ops);
+        assert_eq!(s.plan_misses, 2, "{s:?}");
+        // Warm service, fresh run memo: dispatch first touches now
+        // land on cached plans — zero plan misses, same memo shape.
+        let again = serve(&svc, &cfg).unwrap();
+        assert_eq!(again.engine_stats.memo_misses, 2);
+        assert_eq!(again.report.plan_stats.plan_misses, 0);
+        assert_eq!(
+            again.report.plan_stats.plan_hits,
+            again.report.gemm_ops
+        );
     }
 }

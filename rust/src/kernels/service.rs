@@ -119,6 +119,21 @@ impl ServiceStats {
             self.plan_hits as f64 / total as f64
         }
     }
+
+    /// Counters accumulated since an `earlier` snapshot of the same
+    /// service — the run-local delta the serve report carries. The
+    /// counters are monotone, so plain saturating subtraction is
+    /// exact (and a mismatched snapshot can't underflow into garbage).
+    pub fn delta_since(&self, earlier: &ServiceStats) -> ServiceStats {
+        ServiceStats {
+            plan_hits: self
+                .plan_hits
+                .saturating_sub(earlier.plan_hits),
+            plan_misses: self
+                .plan_misses
+                .saturating_sub(earlier.plan_misses),
+        }
+    }
 }
 
 pub struct GemmService {
@@ -688,5 +703,52 @@ mod tests {
             assert_eq!(s.plan_hits, 15, "round {round}: {s:?}");
             assert!((s.hit_rate() - 15.0 / 16.0).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn concurrent_memo_tier_first_touches_are_exact() {
+        // Same discipline, one tier up: 16 identical jobs racing on 8
+        // workers against the replay backend's shape memo. The insert
+        // winner books the single miss; every loser replays a hit —
+        // at any interleaving.
+        for round in 0..4 {
+            let svc = GemmService::replay();
+            let jobs: Vec<GemmJob> = (0..16)
+                .map(|_| {
+                    GemmJob::for_problem(
+                        ConfigId::Zonl48Db,
+                        32,
+                        32,
+                        32,
+                        LayoutKind::Grouped,
+                    )
+                })
+                .collect();
+            svc.run_batch(&jobs, 8).unwrap();
+            let ms = svc.memo_stats().expect("replay tier has stats");
+            assert_eq!(ms.misses, 1, "round {round}: {ms:?}");
+            assert_eq!(ms.hits, 15, "round {round}: {ms:?}");
+        }
+    }
+
+    #[test]
+    fn stats_delta_since_subtracts_snapshots() {
+        let svc = GemmService::analytic();
+        let job = GemmJob::for_problem(
+            ConfigId::Zonl48Db,
+            32,
+            32,
+            32,
+            LayoutKind::Grouped,
+        );
+        svc.run_job(&job).unwrap();
+        let snap = svc.stats();
+        svc.run_job(&job).unwrap();
+        svc.run_job(&job).unwrap();
+        let d = svc.stats().delta_since(&snap);
+        assert_eq!(d, ServiceStats { plan_hits: 2, plan_misses: 0 });
+        // A stale (larger) snapshot saturates instead of wrapping.
+        let zero = ServiceStats::default().delta_since(&snap);
+        assert_eq!(zero, ServiceStats::default());
     }
 }

@@ -134,6 +134,9 @@ pub struct JsonRow {
     pub sim_cycles: u64,
     pub sim_cycles_per_sec: f64,
     pub speedup_vs_naive: f64,
+    /// Logical items per wall second (requests/s for the serve rows,
+    /// layers/s for net rows); 0 when the row has no item notion.
+    pub items_per_sec: f64,
 }
 
 impl JsonRow {
@@ -155,8 +158,24 @@ impl JsonRow {
             speedup_vs_naive: naive
                 .map(|n| n.median.as_secs_f64() / wall)
                 .unwrap_or(1.0),
+            items_per_sec: 0.0,
         }
     }
+
+    /// Attach an item-throughput figure (e.g. `requests / wall_s`).
+    pub fn with_items_per_sec(mut self, ips: f64) -> JsonRow {
+        self.items_per_sec = ips;
+        self
+    }
+}
+
+/// Repository root: the parent of the crate's manifest directory
+/// (`rust/` lives one level below it). Benches write the committed
+/// `BENCH_*.json` baselines here so the path is stable whether cargo
+/// runs from the workspace root or from `rust/`.
+pub fn repo_root() -> std::path::PathBuf {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).to_path_buf()
 }
 
 /// Write rows as a JSON array (hand-rolled; serde is unavailable
@@ -176,12 +195,14 @@ pub fn write_json(
         s.push_str(&format!(
             "  {{\"name\": \"{}\", \"wall_s\": {:.6}, \
              \"sim_cycles\": {}, \"sim_cycles_per_sec\": {:.1}, \
-             \"speedup_vs_naive\": {:.3}}}{}\n",
+             \"speedup_vs_naive\": {:.3}, \
+             \"items_per_sec\": {:.1}}}{}\n",
             r.name,
             r.wall_s,
             r.sim_cycles,
             r.sim_cycles_per_sec,
             r.speedup_vs_naive,
+            r.items_per_sec,
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }
@@ -213,16 +234,26 @@ mod tests {
         };
         let rows = vec![
             JsonRow::new("naive", &s, 1_000_000, None),
-            JsonRow::new("fast", &fast, 1_000_000, Some(&s)),
+            JsonRow::new("fast", &fast, 1_000_000, Some(&s))
+                .with_items_per_sec(24.0 / 0.001),
         ];
         assert!(rows[1].speedup_vs_naive > 9.0);
+        assert_eq!(rows[0].items_per_sec, 0.0);
+        assert!(rows[1].items_per_sec > 0.0);
         let path = dir.join("BENCH_test.json");
         write_json(&path, &rows).unwrap();
         let txt = std::fs::read_to_string(&path).unwrap();
         assert!(txt.starts_with("[\n"));
         assert!(txt.contains("\"speedup_vs_naive\""));
+        assert!(txt.contains("\"items_per_sec\""));
         assert!(txt.trim_end().ends_with(']'));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn repo_root_is_manifest_parent() {
+        let root = repo_root();
+        assert!(root.join("rust").join("Cargo.toml").exists());
     }
 
     #[test]

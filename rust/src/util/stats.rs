@@ -390,4 +390,114 @@ mod tests {
         assert_eq!(h.max(), 0);
         assert_eq!(h.mean(), 0.0);
     }
+
+    #[test]
+    fn prop_sharded_merge_is_bit_identical_to_sequential() {
+        // MegaServe accumulates latency into per-model shards and
+        // merges at the end; the report is only trustworthy if a
+        // k-way sharded feed merges bit-identically to one stream —
+        // including values straddling the exact-<32 / ~3.1%-above
+        // boundary (31/32/33) and octave edges.
+        use crate::util::prop::{check, Config};
+        let base = Config::default();
+        check(
+            &Config { cases: base.cases, seed: base.seed ^ 0x44157 },
+            |rng| {
+                let n = rng.range(0, 64);
+                (0..n)
+                    .map(|_| match rng.range(0, 5) {
+                        0 => rng.below(4), // tiny exact values
+                        1 => 31,           // last exact bucket
+                        2 => 32,           // first log bucket
+                        3 => 33,
+                        _ => rng.below(1u64 << rng.range(1, 40)),
+                    })
+                    .collect::<Vec<u64>>()
+            },
+            |vals: &Vec<u64>| {
+                for shards in [1usize, 2, 3, 7] {
+                    let mut seq = CycleHistogram::new();
+                    let mut parts: Vec<CycleHistogram> = (0..shards)
+                        .map(|_| CycleHistogram::new())
+                        .collect();
+                    for (i, &v) in vals.iter().enumerate() {
+                        seq.record(v);
+                        parts[i % shards].record(v);
+                    }
+                    let mut merged = CycleHistogram::new();
+                    for p in &parts {
+                        merged.merge(p);
+                    }
+                    if merged != seq {
+                        return Err(format!(
+                            "{shards}-way shard merge deviates from \
+                             sequential feed ({} values)",
+                            vals.len()
+                        ));
+                    }
+                    // The derived quantiles agree by construction,
+                    // but pin the headline ones anyway.
+                    for q in [0.5, 0.95, 0.99] {
+                        if merged.quantile(q) != seq.quantile(q) {
+                            return Err(format!(
+                                "q={q} differs after merge"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_quantiles_are_monotone_in_q() {
+        // quantile(q) must be nondecreasing in q for any recorded
+        // multiset — shrinking drives the failing value set down to a
+        // minimal counterexample if the scan ever regresses.
+        use crate::util::prop::{check, Config};
+        let base = Config::default();
+        check(
+            &Config {
+                cases: (base.cases / 2).max(16),
+                seed: base.seed ^ 0x40070,
+            },
+            |rng| {
+                let n = rng.range(1, 48);
+                (0..n)
+                    .map(|_| rng.below(1u64 << rng.range(1, 50)))
+                    .collect::<Vec<u64>>()
+            },
+            |vals: &Vec<u64>| {
+                if vals.is_empty() {
+                    return Ok(());
+                }
+                let mut h = CycleHistogram::new();
+                for &v in vals {
+                    h.record(v);
+                }
+                let qs: Vec<f64> =
+                    (0..=20).map(|i| i as f64 / 20.0).collect();
+                let mut prev = 0u64;
+                for &q in &qs {
+                    let cur = h.quantile(q);
+                    if cur < prev {
+                        return Err(format!(
+                            "quantile({q}) = {cur} < previous {prev}"
+                        ));
+                    }
+                    if cur < h.min() || cur > h.max() {
+                        return Err(format!(
+                            "quantile({q}) = {cur} outside \
+                             [{}, {}]",
+                            h.min(),
+                            h.max()
+                        ));
+                    }
+                    prev = cur;
+                }
+                Ok(())
+            },
+        );
+    }
 }

@@ -10,7 +10,9 @@
 
 use zerostall::backend::CycleAccurate;
 use zerostall::cluster::{ClusterPerf, ConfigId};
-use zerostall::coordinator::serve::{serve, Policy, ServeConfig};
+use zerostall::coordinator::serve::{
+    serve, Policy, ServeConfig, ServeEngine,
+};
 use zerostall::fabric::FabricConfig;
 use zerostall::kernels::{
     problem_seed, test_bias, test_matrices, Activation, Epilogue,
@@ -319,6 +321,11 @@ fn memo_tier_matches_cycle_on_repeated_shape_serve_trace() {
     cfg.policy = Policy::Continuous;
     cfg.seed = 7;
     cfg.threads = 2;
+    // This test pins the *backend* memo tier's hit/miss goldens, so
+    // it runs the wave-synchronous engine: the event core's own
+    // dispatch memo would (correctly) starve the replay tier of the
+    // repeat submissions the assertions below count.
+    cfg.engine = ServeEngine::Legacy;
 
     let cyc_svc = GemmService::cycle();
     let rep_svc = GemmService::replay();

@@ -7,7 +7,7 @@
 use zerostall::coordinator::report;
 use zerostall::coordinator::serve::{
     gen_arrivals, isolated_latency, serve, serve_trace, ArrivalTrace,
-    Policy, ServeConfig,
+    Policy, ServeConfig, ServeEngine,
 };
 use zerostall::kernels::GemmService;
 use zerostall::util::prop::{check, Config};
@@ -315,4 +315,120 @@ fn plan_cache_hit_rate_under_churn_is_exact() {
     // Replaying on the warm service is pure hits.
     let again = serve(&svc, &cfg).unwrap();
     assert_eq!(again.report.plan_stats.plan_misses, 0);
+}
+
+// =================================================================
+// MegaServe differential: the event-driven core must be bit-identical
+// to the wave-synchronous loop on random traces — report AND rows —
+// for both policies. This property gates the legacy path's removal.
+// =================================================================
+
+#[test]
+fn prop_event_engine_matches_legacy_on_random_traces() {
+    let base = Config::default();
+    let mut gen_cfg = cfg_of(&["ffn", "qkv"]);
+    gen_cfg.rate_per_mcycle = 30.0;
+    gen_cfg.burst = 0.4;
+    let arrivals_cfg = gen_cfg.clone();
+    check(
+        &Config {
+            cases: (base.cases / 4).max(8),
+            seed: base.seed ^ 0xE7E27,
+        },
+        move |rng| {
+            let mut c = arrivals_cfg.clone();
+            c.requests = rng.range(0, 8);
+            c.seed = rng.next_u64();
+            // The trace carries the knob choices in-band so shrinking
+            // stays meaningful: policy/clusters/SLO derive from the
+            // first request's seed below.
+            gen_arrivals(&c)
+        },
+        |trace: &ArrivalTrace| {
+            let knobs =
+                trace.requests.first().map(|r| r.seed).unwrap_or(0);
+            let mut cfg = cfg_of(&["ffn", "qkv"]);
+            cfg.rate_per_mcycle = 30.0;
+            cfg.burst = 0.4;
+            cfg.clusters = 1 + (knobs % 3) as usize;
+            cfg.policy = if knobs & 4 == 0 {
+                Policy::Fifo
+            } else {
+                Policy::Continuous
+            };
+            // Exercise the derived-SLO probe path too: its plan-cache
+            // and memo accounting must fold in identically.
+            cfg.slo = if knobs & 8 == 0 {
+                None
+            } else {
+                Some(u64::MAX)
+            };
+            cfg.engine = ServeEngine::Event;
+            let ev = serve_trace(&analytic(), &cfg, trace)
+                .map_err(|e| e.to_string())?;
+            cfg.engine = ServeEngine::Legacy;
+            let lg = serve_trace(&analytic(), &cfg, trace)
+                .map_err(|e| e.to_string())?;
+            // Compare report + rows + models (not engine_stats — the
+            // legacy loop keeps no event counters by construction).
+            if ev.report != lg.report {
+                return Err(format!(
+                    "reports differ:\nevent  {:?}\nlegacy {:?}",
+                    ev.report, lg.report
+                ));
+            }
+            if ev.rows != lg.rows {
+                return Err("per-request rows differ".into());
+            }
+            if ev.models != lg.models {
+                return Err("model tables differ".into());
+            }
+            if report::serve_csv(&ev).to_string()
+                != report::serve_csv(&lg).to_string()
+            {
+                return Err("rendered CSV differs".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// =================================================================
+// Acceptance scale check: a mixed-zoo trace through the event core is
+// bit-identical across 1/2/8 host threads (whole ServeRun, including
+// the event/memo counters), at a size where waves genuinely overlap.
+// =================================================================
+
+#[test]
+fn event_engine_is_deterministic_across_1_2_8_threads() {
+    let mut cfg = cfg_of(&["ffn", "qkv", "mlp"]);
+    cfg.requests = 300;
+    cfg.clusters = 4;
+    cfg.policy = Policy::Continuous;
+    cfg.rate_per_mcycle = 80.0;
+    cfg.burst = 0.3;
+    cfg.seed = 0xACCE55;
+    let mut runs = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let mut c = cfg.clone();
+        c.threads = threads;
+        runs.push(serve(&analytic(), &c).unwrap());
+    }
+    assert_eq!(runs[0], runs[1], "1 vs 2 threads");
+    assert_eq!(runs[1], runs[2], "2 vs 8 threads");
+    let run = &runs[0];
+    assert_eq!(run.report.completed, 300);
+    // The memo does real work at this scale: nearly every dispatch
+    // replays (three models contribute a handful of distinct shapes).
+    let es = run.engine_stats;
+    assert!(es.memo_misses > 0);
+    assert!(
+        es.memo_hits > 20 * es.memo_misses,
+        "steady-state dispatches must come from the memo: {es:?}"
+    );
+    assert_eq!(
+        es.memo_hits + es.memo_misses,
+        run.report.gemm_ops,
+        "every GEMM dispatch is exactly one memo hit or miss"
+    );
 }

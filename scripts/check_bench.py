@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Gate CI on the committed bench baselines.
+
+Usage: check_bench.py <baseline.json> <fresh.json>
+
+Each file is a JSON array of rows written by `util::bench::write_json`
+(name, wall_s, sim_cycles, sim_cycles_per_sec, speedup_vs_naive,
+items_per_sec). For every row name present in both files, the fresh
+run's throughput must be at least 80% of the committed baseline's
+(>20% regression fails). Throughput is `items_per_sec` when the
+baseline row carries one, `sim_cycles_per_sec` otherwise — both are
+wall-clock-derived, so the check tolerates runner noise via the 20%
+band rather than exact comparison.
+
+Bootstrap rows — committed with `wall_s == 0` before any real
+measurement exists — are skipped with a notice; the first CI run on a
+real machine replaces them via a normal commit of the regenerated
+JSON.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: r for r in rows}
+
+
+def throughput(row):
+    ips = row.get("items_per_sec", 0.0)
+    return ips if ips > 0 else row.get("sim_cycles_per_sec", 0.0)
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} <baseline.json> <fresh.json>")
+    base = load(sys.argv[1])
+    fresh = load(sys.argv[2])
+    failures = []
+    checked = 0
+    for name, brow in sorted(base.items()):
+        if brow.get("wall_s", 0.0) == 0.0:
+            print(f"  SKIP {name}: bootstrap baseline (no measurement)")
+            continue
+        frow = fresh.get(name)
+        if frow is None:
+            failures.append(f"{name}: row missing from fresh run")
+            continue
+        b, f = throughput(brow), throughput(frow)
+        if b <= 0:
+            print(f"  SKIP {name}: baseline has no throughput figure")
+            continue
+        checked += 1
+        ratio = f / b
+        status = "OK  " if ratio >= 0.8 else "FAIL"
+        print(f"  {status} {name}: {f:.1f} vs baseline {b:.1f} "
+              f"({ratio:.2f}x)")
+        if ratio < 0.8:
+            failures.append(
+                f"{name}: {ratio:.2f}x of baseline throughput "
+                f"(>20% regression)")
+    print(f"checked {checked} row(s) against {sys.argv[1]}")
+    if failures:
+        print("bench regression gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()
