@@ -93,9 +93,20 @@ pub struct PreparedGemm {
     /// One program per compute core plus the DM core's last — empty
     /// when the owning backend reports `needs_programs() == false`.
     pub programs: Vec<Arc<Program>>,
+    /// Lazily computed ProofScope verdict for this plan (shared by
+    /// every run of the prepared GEMM; see `lint()`).
+    pub lint_cache: std::sync::OnceLock<Arc<crate::verify::StaticStallReport>>,
 }
 
 impl PreparedGemm {
+    /// The ProofScope static stall verdict for this plan, computed on
+    /// first use and cached alongside the plan for its lifetime.
+    pub fn lint(&self) -> Arc<crate::verify::StaticStallReport> {
+        Arc::clone(self.lint_cache.get_or_init(|| {
+            Arc::new(crate::verify::verify_prepared(self))
+        }))
+    }
+
     pub fn m(&self) -> usize {
         self.plan.tiling.m
     }

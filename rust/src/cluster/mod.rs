@@ -24,7 +24,7 @@ use std::sync::Arc;
 use crate::core::snitch::CoreRequest;
 use crate::core::Core;
 use crate::dma::Dma;
-use crate::isa::{csr, Instr, Program};
+use crate::isa::Program;
 use crate::mem::{
     Interconnect, MainMemory, PortRequest, Tcdm,
 };
@@ -128,29 +128,13 @@ fn classify(
 }
 
 /// A DM-core program is *region-safe* when it can never touch the FP
-/// subsystem or the SSR streamers: no FP compute, no FREP, no FP
-/// loads/stores or converts, no SSR configuration, no SSR-enable CSR
-/// toggles. Such a program's only TCDM traffic is its integer LSU,
-/// which the region step arbitrates for real — so specializing the
-/// compute cores away cannot change any arbitration outcome.
+/// subsystem or the SSR streamers. The scan itself lives in the
+/// ProofScope analyzer ([`crate::verify::dm_program_region_safe`]) so
+/// fast-forwarding and the static stall verdicts rest on one
+/// soundness story (DESIGN.md §13); this is the cluster's memoization
+/// point for it.
 fn dm_prog_region_safe(p: &Program) -> bool {
-    p.instrs.iter().all(|i| {
-        if i.is_fp_compute() {
-            return false;
-        }
-        match i {
-            Instr::Frep { .. }
-            | Instr::Fld { .. }
-            | Instr::Fsd { .. }
-            | Instr::FcvtDW { .. }
-            | Instr::SsrCfgW { .. } => false,
-            Instr::Csrrw { csr: c, .. }
-            | Instr::Csrrs { csr: c, .. }
-            | Instr::Csrrsi { csr: c, .. }
-            | Instr::Csrrci { csr: c, .. } => *c != csr::SSR_ENABLE,
-            _ => true,
-        }
-    })
+    crate::verify::dm_program_region_safe(p)
 }
 
 impl Cluster {

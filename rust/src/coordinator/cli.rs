@@ -8,6 +8,10 @@
 //!   profile   — StallScope: cycle-accurate per-cycle stall
 //!               attribution of a zoo model, with roofline placement
 //!               and optional Chrome-trace export (`--trace f.json`)
+//!   lint      — ProofScope: static stall verdicts (impossible /
+//!               bounded / unknown per class) for every GEMM kernel of
+//!               a zoo model, differentially gated against StallScope
+//!               measurements on the cycle and analytic backends
 //!   sweep     — the full {8..128}^3 grid through a chosen backend
 //!   calibrate — fit the analytic model vs cycle-accurate ground truth
 //!   fig5      — the random-size sweep (box plots + CSV + headline)
@@ -34,7 +38,7 @@ use crate::backend::BackendKind;
 use crate::cluster::ConfigId;
 use crate::coordinator::workload::zoo;
 use crate::coordinator::{
-    experiments, net, profile, report, runner, serve, workload,
+    experiments, lint, net, profile, report, runner, serve, workload,
 };
 use crate::kernels::{GemmService, LayoutKind};
 
@@ -60,6 +64,9 @@ pub fn usage() -> &'static str {
      \x20 profile   --model mlp|ffn|qkv|attn|conv|llm \
      [--config <name>] [--clusters N] [--trace out.json] \
      [--fast-forward true|false] [--out results]\n\
+     \x20 lint      [--model all|<zoo[,zoo...]>] [--config <name>] \
+     [--clusters N] [--layout grouped|linear|linear-pad] \
+     [--gate true|false] [--out results]\n\
      \x20 sweep     [--backend analytic|cycle] [--config <name>|all] \
      [--threads N] [--clusters N] [--out results]\n\
      \x20 calibrate [--threads N] [--out results]\n\
@@ -273,6 +280,65 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                     tr.events.len()
                 );
             }
+        }
+        "lint" => {
+            let model_s = flags
+                .get("model")
+                .cloned()
+                .unwrap_or_else(|| "all".into());
+            let name = flags
+                .get("config")
+                .cloned()
+                .unwrap_or_else(|| "zonl48db".into());
+            let id = ConfigId::from_name(&name)
+                .ok_or_else(|| anyhow::anyhow!("unknown config {name}"))?;
+            let clusters = flag(&flags, "clusters", 1usize)?;
+            let layout = layout_of(
+                flags.get("layout").map(|s| s.as_str()).unwrap_or("grouped"),
+            )?;
+            let gate = flag(&flags, "gate", true)?;
+            let models: Vec<String> = if model_s == "all" {
+                zoo::models().iter().map(|m| m.to_string()).collect()
+            } else {
+                model_s.split(',').map(|s| s.trim().to_string()).collect()
+            };
+            let mut all_fails = Vec::new();
+            for model in &models {
+                let mut opts = lint::LintOpts::new(model);
+                opts.config = id;
+                opts.clusters = clusters;
+                opts.layout = layout;
+                opts.gate = gate;
+                eprintln!(
+                    "lint: `{model}` on {} x{clusters}{}...",
+                    id.name(),
+                    if gate { " + differential gate" } else { "" },
+                );
+                let rep = lint::run_lint(&opts)?;
+                let doc = report::render_lint(&rep);
+                println!("{doc}");
+                let stem = format!("lint-{model}-{}", id.name());
+                report::save(&out_dir, &format!("{stem}.md"), &doc)?;
+                report::lint_csv(&rep)
+                    .write(&out_dir.join(format!("{stem}.csv")))?;
+                report::lint_theorems_csv(&rep).write(
+                    &out_dir.join(format!("{stem}-theorems.csv")),
+                )?;
+                eprintln!(
+                    "wrote {}/{stem}.md, {stem}.csv, {stem}-theorems.csv",
+                    out_dir.display()
+                );
+                all_fails.extend(
+                    rep.failures()
+                        .into_iter()
+                        .map(|f| format!("{model}: {f}")),
+                );
+            }
+            anyhow::ensure!(
+                all_fails.is_empty(),
+                "differential soundness gate failed:\n  {}",
+                all_fails.join("\n  ")
+            );
         }
         "net" => {
             let model = flags
@@ -965,6 +1031,57 @@ mod tests {
         assert!(json.contains("traceEvents"));
         assert!(json.contains("Useful"));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lint_command_writes_artifacts() {
+        let dir = std::env::temp_dir().join("zerostall-lint-cli-test");
+        main_with_args(vec![
+            "lint".into(),
+            "--model".into(),
+            "ffn".into(),
+            "--gate".into(),
+            "false".into(),
+            "--out".into(),
+            dir.display().to_string(),
+        ])
+        .unwrap();
+        assert!(dir.join("lint-ffn-zonl48db.md").exists());
+        assert!(dir.join("lint-ffn-zonl48db.csv").exists());
+        assert!(dir.join("lint-ffn-zonl48db-theorems.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lint_command_gated_passes_on_attn() {
+        let dir =
+            std::env::temp_dir().join("zerostall-lint-cli-gate-test");
+        main_with_args(vec![
+            "lint".into(),
+            "--model".into(),
+            "attn".into(),
+            "--out".into(),
+            dir.display().to_string(),
+        ])
+        .unwrap();
+        let csv = std::fs::read_to_string(
+            dir.join("lint-attn-zonl48db.csv"),
+        )
+        .unwrap();
+        assert!(csv.contains("pass"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lint_command_rejects_unknown_model() {
+        assert!(main_with_args(vec![
+            "lint".into(),
+            "--model".into(),
+            "resnet9000".into(),
+            "--gate".into(),
+            "false".into(),
+        ])
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! The `zerostall lint` runner: ProofScope static stall verdicts for
+//! every GEMM layer of a zoo model, differentially gated against
+//! StallScope measurements.
+//!
+//! For each layer the runner asks the analyzer (`crate::verify`) for
+//! a [`StaticStallReport`] on the exact plan the `GemmService` would
+//! execute, then — unless `--gate false` — runs the layer on the
+//! cycle engine (FastPath on *and* off) and the analytic model and
+//! checks every measurement against the verdicts:
+//!
+//! * cycle sources: `Impossible` ⇒ 0 measured cycles, `Bounded(n)` ⇒
+//!   at most `n`, plus the DMA facet (`dma_phase_disjoint` proved ⇒
+//!   the interconnect counted zero DMA-vs-core conflicts);
+//! * the analytic source: `Impossible`-only (plus the DMA facet) —
+//!   its stall decomposition approximates magnitudes, so structural
+//!   bounds are the cycle engine's contract, but a class proved
+//!   impossible must be absent from a faithful prediction too.
+//!
+//! A violation is a soundness bug — in the analyzer or in the machine
+//! model — and fails the run (and CI). Elementwise ops have no kernel
+//! to verify and are skipped, mirroring `zerostall profile`.
+
+use anyhow::Result;
+
+use crate::backend::BackendKind;
+use crate::cluster::ConfigId;
+use crate::fabric::FabricConfig;
+use crate::kernels::{
+    choose_shard_grid, GemmJob, GemmService, LayoutKind,
+};
+use crate::profile::N_CLASSES;
+use crate::verify::{class_totals, StaticStallReport};
+
+use super::workload::graph::NetOp;
+use super::workload::{zoo, Problem};
+
+/// Lint-run parameters.
+#[derive(Clone, Debug)]
+pub struct LintOpts {
+    pub model: String,
+    pub config: ConfigId,
+    pub clusters: usize,
+    pub layout: LayoutKind,
+    /// Run the measured backends and assert the differential gate
+    /// (off = static verdicts only, no simulation).
+    pub gate: bool,
+}
+
+impl LintOpts {
+    pub fn new(model: &str) -> LintOpts {
+        LintOpts {
+            model: model.to_string(),
+            config: ConfigId::Zonl48Db,
+            clusters: 1,
+            layout: LayoutKind::Grouped,
+            gate: true,
+        }
+    }
+}
+
+/// One measured source checked against the verdicts.
+#[derive(Clone, Debug)]
+pub struct SourceMeasure {
+    /// "cycle+ff" | "cycle" | "analytic".
+    pub source: &'static str,
+    /// Stall cycles per class, summed over every core.
+    pub classes: [u64; N_CLASSES],
+    /// DMA-vs-core conflicts counted by the interconnect(s).
+    pub tcdm_conflicts_dma: u64,
+}
+
+/// One linted GEMM layer.
+#[derive(Clone, Debug)]
+pub struct LayerLint {
+    pub name: String,
+    pub problem: Problem,
+    pub epilogue: String,
+    /// Clusters the layer would run on (1 = whole on one cluster);
+    /// the verdict is scaled to this placement.
+    pub shards: usize,
+    pub report: StaticStallReport,
+    /// Empty unless `gate` was off.
+    pub measured: Vec<SourceMeasure>,
+    /// Differential-gate violations for this layer.
+    pub failures: Vec<String>,
+}
+
+/// The whole lint run.
+#[derive(Clone, Debug)]
+pub struct LintReport {
+    pub model: String,
+    pub config: ConfigId,
+    pub clusters: usize,
+    pub gated: bool,
+    pub layers: Vec<LayerLint>,
+    /// Elementwise ops skipped (no kernel to verify).
+    pub skipped_adds: usize,
+}
+
+impl LintReport {
+    /// Every differential-gate violation across all layers.
+    pub fn failures(&self) -> Vec<String> {
+        self.layers.iter().flat_map(|l| l.failures.clone()).collect()
+    }
+}
+
+/// Run the linter. A non-empty `report.failures()` means the
+/// differential soundness gate failed; the caller decides whether
+/// that is fatal (the CLI and CI treat it as such).
+pub fn run_lint(opts: &LintOpts) -> Result<LintReport> {
+    let g = zoo::build(&opts.model)?;
+    let order = g.topo_order()?;
+    let clusters = opts.clusters.max(1);
+    let fabric = FabricConfig::new(clusters);
+    // Plans (and their cached verdicts) come from a cycle service so
+    // the analyzer sees the real encoded programs, not a regeneration.
+    let plan_svc = GemmService::cycle();
+    let sources: Vec<(&'static str, GemmService)> = if opts.gate {
+        vec![
+            (
+                "cycle+ff",
+                GemmService::of_kind_ff(BackendKind::Cycle, true),
+            ),
+            ("cycle", GemmService::of_kind_ff(BackendKind::Cycle, false)),
+            ("analytic", GemmService::analytic()),
+        ]
+    } else {
+        Vec::new()
+    };
+
+    let mut layers = Vec::new();
+    let mut skipped_adds = 0usize;
+    for &oi in &order {
+        let NetOp::Gemm { name, x, w, epi, .. } = &g.ops[oi] else {
+            skipped_adds += 1;
+            continue;
+        };
+        let (xt, wt) = (&g.tensors[*x], &g.tensors[*w]);
+        let p = Problem { m: xt.rows, n: wt.cols, k: xt.cols };
+        let grid = choose_shard_grid(p.m, p.n, clusters);
+        let sharded = clusters > 1 && grid.used_clusters() > 1;
+
+        let (base, shards) = if sharded {
+            let sh = plan_svc.prepare_sharded(
+                opts.config,
+                p.m,
+                p.n,
+                p.k,
+                opts.layout,
+                *epi,
+                clusters,
+            )?;
+            (sh.prep.lint(), grid.used_clusters())
+        } else {
+            let prep = plan_svc.prepare_fused(
+                opts.config,
+                p.m,
+                p.n,
+                p.k,
+                opts.layout,
+                *epi,
+            )?;
+            (prep.lint(), 1)
+        };
+        let report = base.for_clusters(shards);
+
+        let mut measured = Vec::new();
+        let mut failures = Vec::new();
+        for (source, svc) in &sources {
+            let job = GemmJob::fused(
+                opts.config,
+                p.m,
+                p.n,
+                p.k,
+                opts.layout,
+                *epi,
+            );
+            let (classes, dma_conf) = if sharded {
+                let fr = svc.run_sharded_job(&job, &fabric)?;
+                let conf: u64 = fr
+                    .perfs()
+                    .iter()
+                    .map(|pf| pf.tcdm_conflicts_dma)
+                    .sum();
+                (class_totals(&fr.stall_profile()), conf)
+            } else {
+                let res = svc.run_job(&job)?;
+                (
+                    class_totals(&res.perf.stalls),
+                    res.perf.tcdm_conflicts_dma,
+                )
+            };
+            let tag = format!("{name}[{source}]");
+            let gate_report = if *source == "analytic" {
+                report.impossible_only()
+            } else {
+                report.clone()
+            };
+            failures.extend(gate_report.gate(&tag, &classes));
+            failures.extend(report.gate_dma(&tag, dma_conf));
+            measured.push(SourceMeasure {
+                source: *source,
+                classes,
+                tcdm_conflicts_dma: dma_conf,
+            });
+        }
+
+        layers.push(LayerLint {
+            name: name.clone(),
+            problem: p,
+            epilogue: epi.name(),
+            shards,
+            report,
+            measured,
+            failures,
+        });
+    }
+
+    Ok(LintReport {
+        model: opts.model.clone(),
+        config: opts.config,
+        clusters,
+        gated: opts.gate,
+        layers,
+        skipped_adds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::StallClass;
+    use crate::verify::Verdict;
+
+    #[test]
+    fn lint_ffn_static_only() {
+        let mut opts = LintOpts::new("ffn");
+        opts.gate = false;
+        let rep = run_lint(&opts).unwrap();
+        assert_eq!(rep.layers.len(), 2);
+        assert_eq!(rep.skipped_adds, 1);
+        assert!(!rep.gated);
+        for l in &rep.layers {
+            assert!(l.measured.is_empty());
+            assert!(l.failures.is_empty());
+            assert_eq!(
+                l.report.verdict(StallClass::RawHazard),
+                Verdict::Impossible,
+                "{}",
+                l.name
+            );
+        }
+    }
+
+    #[test]
+    fn lint_gated_mlp_passes_the_differential_gate() {
+        let rep = run_lint(&LintOpts::new("mlp")).unwrap();
+        assert!(rep.gated);
+        let fails = rep.failures();
+        assert!(fails.is_empty(), "soundness gate violated: {fails:?}");
+        for l in &rep.layers {
+            assert_eq!(l.measured.len(), 3, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn lint_rejects_unknown_model() {
+        assert!(run_lint(&LintOpts::new("resnet9000")).is_err());
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod cli;
 pub mod experiments;
+pub mod lint;
 pub mod net;
 pub mod profile;
 pub mod report;

@@ -821,6 +821,205 @@ pub fn render_serve_profile(
     out
 }
 
+// -------------------------------------------------- ProofScope lint --
+
+/// One verdict as a table/CSV-friendly cell: `0` (impossible),
+/// `<=N` (bounded), `?` (no claim).
+fn verdict_cell(v: crate::verify::Verdict) -> String {
+    use crate::verify::Verdict;
+    match v {
+        Verdict::Impossible => "0".to_string(),
+        Verdict::Bounded(n) => format!("<={n}"),
+        Verdict::Unknown => "?".to_string(),
+    }
+}
+
+/// The `zerostall lint` report.
+pub fn render_lint(r: &crate::coordinator::lint::LintReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "## ProofScope lint — `{}` on {} x{}\n\n",
+        r.model,
+        r.config.name(),
+        r.clusters,
+    ));
+    out.push_str(
+        "Static verdicts per stall class: `0` = proved impossible, \
+         `<=N` = proved bounded by N core-cycles, `?` = no claim.\n\n",
+    );
+    out.push_str("| layer | shape | epilogue | placement |");
+    for c in StallClass::all().into_iter().skip(1) {
+        out.push_str(&format!(" {} |", c.label()));
+    }
+    out.push('\n');
+    out.push_str("|---|---|---|---|");
+    for _ in StallClass::all().into_iter().skip(1) {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for l in &r.layers {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} |",
+            l.name,
+            l.problem,
+            l.epilogue,
+            if l.shards > 1 {
+                format!("sharded x{}", l.shards)
+            } else {
+                "1 cluster".to_string()
+            },
+        ));
+        for c in StallClass::all().into_iter().skip(1) {
+            out.push_str(&format!(
+                " {} |",
+                verdict_cell(l.report.verdict(c))
+            ));
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "\n* {} GEMM layers verified ({} unfused elementwise ops have \
+         no kernel and are excluded)\n\n",
+        r.layers.len(),
+        r.skipped_adds,
+    ));
+    out.push_str("### Theorems\n\n");
+    out.push_str("| layer | theorem | holds | detail |\n|---|---|---|---|\n");
+    for l in &r.layers {
+        for t in &l.report.theorems {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} |\n",
+                l.name,
+                t.name,
+                if t.holds { "yes" } else { "NO" },
+                t.detail,
+            ));
+        }
+    }
+    if r.gated {
+        out.push_str("\n### Differential gate (measured vs verdicts)\n\n");
+        out.push_str(
+            "| layer | source | ctrl_overhead | raw_hazard | \
+             bank_conflict | drain | noc_gated | dma_conflicts |\n\
+             |---|---|---|---|---|---|---|---|\n",
+        );
+        for l in &r.layers {
+            for m in &l.measured {
+                out.push_str(&format!(
+                    "| {} | {} | {} | {} | {} | {} | {} | {} |\n",
+                    l.name,
+                    m.source,
+                    m.classes[StallClass::ControlOverhead as usize],
+                    m.classes[StallClass::RawHazard as usize],
+                    m.classes[StallClass::BankConflict as usize],
+                    m.classes[StallClass::Drain as usize],
+                    m.classes[StallClass::NocGated as usize],
+                    m.tcdm_conflicts_dma,
+                ));
+            }
+        }
+        let fails = r.failures();
+        if fails.is_empty() {
+            out.push_str(&format!(
+                "\n* gate PASSED: {} layers x {} sources, 0 violations\n",
+                r.layers.len(),
+                r.layers.first().map_or(0, |l| l.measured.len()),
+            ));
+        } else {
+            out.push_str(&format!(
+                "\n* gate FAILED: {} violation(s)\n",
+                fails.len()
+            ));
+            for f in &fails {
+                out.push_str(&format!("  * {f}\n"));
+            }
+        }
+    } else {
+        out.push_str(
+            "\n* static verdicts only (`--gate false`): no backend was \
+             run against the claims\n",
+        );
+    }
+    out
+}
+
+/// Per-layer, per-class verdicts and measurements (schema pinned by
+/// the golden test — extend only by appending columns).
+pub fn lint_csv(r: &crate::coordinator::lint::LintReport) -> Csv {
+    let mut csv = Csv::new(vec![
+        "model",
+        "layer",
+        "m",
+        "n",
+        "k",
+        "config",
+        "clusters",
+        "shards",
+        "class",
+        "verdict",
+        "bound",
+        "measured_cycle_ff",
+        "measured_cycle",
+        "measured_analytic",
+        "gate",
+    ]);
+    for l in &r.layers {
+        let by = |src: &str| {
+            l.measured.iter().find(|m| m.source == src)
+        };
+        let gate = if r.gated {
+            if l.failures.is_empty() { "pass" } else { "fail" }
+        } else {
+            ""
+        };
+        for c in StallClass::all() {
+            let v = l.report.verdict(c);
+            let cell = |src: &str| {
+                by(src).map_or(String::new(), |m| {
+                    m.classes[c as usize].to_string()
+                })
+            };
+            csv.row(vec![
+                r.model.clone(),
+                l.name.clone(),
+                l.problem.m.to_string(),
+                l.problem.n.to_string(),
+                l.problem.k.to_string(),
+                r.config.name().to_string(),
+                r.clusters.to_string(),
+                l.shards.to_string(),
+                c.name().to_string(),
+                v.name().to_string(),
+                v.bound_str(),
+                cell("cycle+ff"),
+                cell("cycle"),
+                cell("analytic"),
+                gate.to_string(),
+            ]);
+        }
+    }
+    csv
+}
+
+/// Per-layer theorem facts (schema pinned by the golden test).
+pub fn lint_theorems_csv(r: &crate::coordinator::lint::LintReport) -> Csv {
+    let mut csv = Csv::new(vec![
+        "model", "layer", "theorem", "holds", "detail",
+    ]);
+    for l in &r.layers {
+        for t in &l.report.theorems {
+            csv.row(vec![
+                r.model.clone(),
+                l.name.clone(),
+                t.name.to_string(),
+                (t.holds as u8).to_string(),
+                t.detail.clone(),
+            ]);
+        }
+    }
+    csv
+}
+
 // ------------------------------------------------------------ sweep --
 
 /// Summary of a (possibly full-grid) backend sweep: per-config
@@ -980,6 +1179,28 @@ mod tests {
         assert!(doc.contains("predicted breakdown"));
         assert!(doc.contains("Roofline"));
         assert!(doc.contains("mlp_up"));
+    }
+
+    #[test]
+    fn lint_report_renders_and_csvs_match() {
+        use crate::coordinator::lint::{run_lint, LintOpts};
+        let mut opts = LintOpts::new("ffn");
+        opts.gate = false;
+        let rep = run_lint(&opts).unwrap();
+        let doc = render_lint(&rep);
+        assert!(doc.contains("## ProofScope lint"));
+        assert!(doc.contains("zonl_zero_loop_overhead"));
+        assert!(doc.contains("static verdicts only"));
+        let csv = lint_csv(&rep);
+        assert_eq!(csv.rows(), rep.layers.len() * N_CLASSES);
+        let th = lint_theorems_csv(&rep);
+        assert_eq!(
+            th.rows(),
+            rep.layers
+                .iter()
+                .map(|l| l.report.theorems.len())
+                .sum::<usize>()
+        );
     }
 
     #[test]

@@ -261,7 +261,12 @@ impl GemmService {
         } else {
             Vec::new()
         };
-        let prep = Arc::new(PreparedGemm { config, plan, programs });
+        let prep = Arc::new(PreparedGemm {
+            config,
+            plan,
+            programs,
+            lint_cache: Default::default(),
+        });
         let mut w = self.plans.write().unwrap();
         match w.entry(key) {
             Entry::Occupied(e) => {

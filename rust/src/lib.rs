@@ -38,6 +38,7 @@ pub mod profile;
 pub mod runtime;
 pub mod ssr;
 pub mod util;
+pub mod verify;
 
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")

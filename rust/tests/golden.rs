@@ -214,6 +214,64 @@ mod stallscope_golden {
     }
 }
 
+mod proofscope_golden {
+    use zerostall::coordinator::lint::{run_lint, LintOpts};
+    use zerostall::coordinator::report;
+
+    /// Pins the ProofScope artifact schemas (verdict and theorem
+    /// CSVs) and the lint report phrasing on one small static-only
+    /// scenario.
+    #[test]
+    fn lint_csv_schemas_are_pinned() {
+        let mut opts = LintOpts::new("qkv");
+        opts.gate = false;
+        let rep = run_lint(&opts).unwrap();
+
+        let csv = report::lint_csv(&rep).to_string();
+        assert!(
+            csv.starts_with(
+                "model,layer,m,n,k,config,clusters,shards,class,\
+                 verdict,bound,measured_cycle_ff,measured_cycle,\
+                 measured_analytic,gate\n"
+            ),
+            "lint CSV schema drifted:\n{csv}"
+        );
+        // One row per layer per stall class.
+        assert_eq!(
+            csv.lines().count(),
+            1 + rep.layers.len() * 9,
+            "row count drifted:\n{csv}"
+        );
+        assert!(csv.contains("qkv,qkv_proj,64,192,64,zonl48db,1,1,"));
+        assert!(csv.contains(",raw_hazard,impossible,"));
+        assert!(csv.contains(",bank_conflict,bounded,"));
+
+        let th = report::lint_theorems_csv(&rep).to_string();
+        assert!(
+            th.starts_with("model,layer,theorem,holds,detail\n"),
+            "theorem CSV schema drifted:\n{th}"
+        );
+        assert!(th.contains(",dma_phase_disjoint,1,"));
+        assert!(th.contains(",zonl_zero_loop_overhead,1,"));
+
+        // Report phrasing pinned.
+        let doc = report::render_lint(&rep);
+        for needle in [
+            "## ProofScope lint",
+            "proved impossible",
+            "| RawHazard |",
+            "### Theorems",
+            "zonl_zero_loop_overhead",
+            "static verdicts only",
+        ] {
+            assert!(
+                doc.contains(needle),
+                "lint report drifted; missing `{needle}` in:\n{doc}"
+            );
+        }
+    }
+}
+
 #[cfg(feature = "xla")]
 mod pjrt {
     use zerostall::cluster::ConfigId;

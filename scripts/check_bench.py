@@ -12,6 +12,10 @@ baseline row carries one, `sim_cycles_per_sec` otherwise — both are
 wall-clock-derived, so the check tolerates runner noise via the 20%
 band rather than exact comparison.
 
+A fresh row whose name is absent from the baseline also fails: a new
+bench must land together with its committed baseline row, otherwise it
+runs ungated forever.
+
 Bootstrap rows — committed with `wall_s == 0` before any real
 measurement exists — are skipped with a notice; the first CI run on a
 real machine replaces them via a normal commit of the regenerated
@@ -33,16 +37,20 @@ def throughput(row):
     return ips if ips > 0 else row.get("sim_cycles_per_sec", 0.0)
 
 
-def main():
-    if len(sys.argv) != 3:
-        sys.exit(f"usage: {sys.argv[0]} <baseline.json> <fresh.json>")
-    base = load(sys.argv[1])
-    fresh = load(sys.argv[2])
+def compare(base, fresh):
+    """Compare fresh rows against baseline rows.
+
+    Returns (lines, failures, checked): human-readable per-row lines,
+    failure messages (empty == gate passes), and the number of rows
+    actually throughput-checked.
+    """
+    lines = []
     failures = []
     checked = 0
     for name, brow in sorted(base.items()):
         if brow.get("wall_s", 0.0) == 0.0:
-            print(f"  SKIP {name}: bootstrap baseline (no measurement)")
+            lines.append(
+                f"  SKIP {name}: bootstrap baseline (no measurement)")
             continue
         frow = fresh.get(name)
         if frow is None:
@@ -50,17 +58,33 @@ def main():
             continue
         b, f = throughput(brow), throughput(frow)
         if b <= 0:
-            print(f"  SKIP {name}: baseline has no throughput figure")
+            lines.append(
+                f"  SKIP {name}: baseline has no throughput figure")
             continue
         checked += 1
         ratio = f / b
         status = "OK  " if ratio >= 0.8 else "FAIL"
-        print(f"  {status} {name}: {f:.1f} vs baseline {b:.1f} "
-              f"({ratio:.2f}x)")
+        lines.append(f"  {status} {name}: {f:.1f} vs baseline {b:.1f} "
+                     f"({ratio:.2f}x)")
         if ratio < 0.8:
             failures.append(
                 f"{name}: {ratio:.2f}x of baseline throughput "
                 f"(>20% regression)")
+    for name in sorted(set(fresh) - set(base)):
+        failures.append(
+            f"{name}: fresh row has no committed baseline "
+            f"(add it to the baseline JSON)")
+    return lines, failures, checked
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} <baseline.json> <fresh.json>")
+    base = load(sys.argv[1])
+    fresh = load(sys.argv[2])
+    lines, failures, checked = compare(base, fresh)
+    for line in lines:
+        print(line)
     print(f"checked {checked} row(s) against {sys.argv[1]}")
     if failures:
         print("bench regression gate FAILED:")

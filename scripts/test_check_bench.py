@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Unit tests for the check_bench.py skip/compare logic.
+
+Run with: python3 scripts/test_check_bench.py
+"""
+
+import unittest
+
+from check_bench import compare
+
+
+def row(name, wall_s=1.0, ips=0.0, scps=0.0):
+    return {
+        "name": name,
+        "wall_s": wall_s,
+        "items_per_sec": ips,
+        "sim_cycles_per_sec": scps,
+    }
+
+
+def by_name(rows):
+    return {r["name"]: r for r in rows}
+
+
+class CompareTest(unittest.TestCase):
+    def test_within_band_passes(self):
+        base = by_name([row("a", ips=100.0)])
+        fresh = by_name([row("a", ips=85.0)])
+        lines, failures, checked = compare(base, fresh)
+        self.assertEqual(failures, [])
+        self.assertEqual(checked, 1)
+        self.assertTrue(any("OK" in l and "a" in l for l in lines))
+
+    def test_regression_beyond_band_fails(self):
+        base = by_name([row("a", ips=100.0)])
+        fresh = by_name([row("a", ips=79.0)])
+        _, failures, checked = compare(base, fresh)
+        self.assertEqual(checked, 1)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("regression", failures[0])
+
+    def test_bootstrap_baseline_skipped(self):
+        base = by_name([row("a", wall_s=0.0, ips=100.0)])
+        fresh = by_name([row("a", ips=1.0)])
+        lines, failures, checked = compare(base, fresh)
+        self.assertEqual(failures, [])
+        self.assertEqual(checked, 0)
+        self.assertTrue(any("SKIP" in l and "bootstrap" in l
+                            for l in lines))
+
+    def test_zero_throughput_baseline_skipped(self):
+        base = by_name([row("a")])
+        fresh = by_name([row("a", ips=50.0)])
+        lines, failures, checked = compare(base, fresh)
+        self.assertEqual(failures, [])
+        self.assertEqual(checked, 0)
+        self.assertTrue(any("no throughput figure" in l for l in lines))
+
+    def test_missing_fresh_row_fails(self):
+        base = by_name([row("a", ips=100.0)])
+        _, failures, _ = compare(base, {})
+        self.assertEqual(len(failures), 1)
+        self.assertIn("missing from fresh run", failures[0])
+
+    def test_unknown_fresh_row_fails(self):
+        # A bench present only in the fresh run has no committed
+        # baseline and must fail the gate, not slip through silently.
+        base = by_name([row("a", ips=100.0)])
+        fresh = by_name([row("a", ips=100.0), row("b", ips=5.0)])
+        _, failures, checked = compare(base, fresh)
+        self.assertEqual(checked, 1)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("b", failures[0])
+        self.assertIn("no committed baseline", failures[0])
+
+    def test_sim_cycles_fallback_when_no_items_per_sec(self):
+        base = by_name([row("a", scps=1000.0)])
+        fresh = by_name([row("a", scps=500.0)])
+        _, failures, checked = compare(base, fresh)
+        self.assertEqual(checked, 1)
+        self.assertEqual(len(failures), 1)
+
+    def test_unknown_bootstrap_fresh_row_still_fails(self):
+        # Even against an all-bootstrap baseline, a fresh-only row is
+        # reported: nothing about the baseline's state exempts it.
+        base = by_name([row("a", wall_s=0.0)])
+        fresh = by_name([row("a", ips=1.0), row("new", ips=1.0)])
+        _, failures, _ = compare(base, fresh)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("new", failures[0])
+
+
+if __name__ == "__main__":
+    unittest.main()
