@@ -16,6 +16,9 @@
 //! core's advantage grows with trace length), `BENCH_QUICK` shortens
 //! the measurement budget for CI.
 
+use zerostall::coordinator::node::{
+    run_node, FaultPlan, NodeConfig, RouterPolicy,
+};
 use zerostall::coordinator::serve::{
     serve, Policy, ServeConfig, ServeEngine,
 };
@@ -116,6 +119,42 @@ fn main() {
         serve(&GemmService::analytic(), &ecfg).unwrap()
     });
 
+    // NodeSim: 4 fabrics behind the p2c router with a mid-trace
+    // fabric failure, analytic backend — the event-heap drain rate is
+    // the metric. Determinism is pinned across host thread counts
+    // before timing (the node tier only touches the backend via the
+    // per-model cost probes).
+    println!("== serve bench: node tier (4 fabrics, p2c, fault) ==");
+    let node_requests = env_usize(
+        "BENCH_NODE_REQUESTS",
+        if quick { 2_000 } else { 20_000 },
+    );
+    let mut ncfg = NodeConfig::new(cfg.clone(), 4);
+    ncfg.serve.requests = node_requests;
+    ncfg.serve.rate_per_mcycle = 100.0;
+    ncfg.router = RouterPolicy::PowerOfTwo;
+    ncfg.faults =
+        FaultPlan::parse("t=30000000,fabric=1,restore=60000000")
+            .unwrap();
+    let node_a = run_node(&GemmService::analytic(), &ncfg).unwrap();
+    let mut ncfg8 = ncfg.clone();
+    ncfg8.serve.threads = 8;
+    let node_b = run_node(&GemmService::analytic(), &ncfg8).unwrap();
+    assert_eq!(
+        node_a, node_b,
+        "node run deviates across host thread counts"
+    );
+    assert_eq!(
+        node_a.report.completed + node_a.report.shed_total(),
+        node_requests,
+        "node run lost requests"
+    );
+    let node_sim_cycles = node_a.report.makespan_cycles;
+    let ntag = format!("{node_requests}req_4fab");
+    let s_node = b.run(&format!("serve/node_p2c_{ntag}"), || {
+        run_node(&GemmService::analytic(), &ncfg).unwrap()
+    });
+
     let reqs = engine_requests as f64;
     let rows = vec![
         JsonRow::new("serve/cycle_naive", &s_naive, sim_cycles, None),
@@ -143,6 +182,12 @@ fn main() {
             Some(&s_legacy),
         )
         .with_items_per_sec(s_event.throughput(reqs)),
+        // Node row: requests drained through the node event heap per
+        // wall second (no speedup baseline — it is its own tier).
+        JsonRow::new("serve/node_p2c", &s_node, node_sim_cycles, None)
+            .with_items_per_sec(
+                s_node.throughput(node_requests as f64),
+            ),
     ];
     for r in &rows {
         println!(

@@ -38,7 +38,8 @@ use crate::backend::BackendKind;
 use crate::cluster::ConfigId;
 use crate::coordinator::workload::zoo;
 use crate::coordinator::{
-    experiments, lint, net, profile, report, runner, serve, workload,
+    experiments, lint, net, node, profile, report, runner, serve,
+    workload,
 };
 use crate::kernels::{GemmService, LayoutKind};
 
@@ -61,6 +62,10 @@ pub fn usage() -> &'static str {
      [--backend cycle|analytic|replay] [--fast-forward true|false] \
      [--seed S] [--slo CYCLES] [--serve-engine event|legacy] \
      [--threads N] [--profile true] [--out results]\n\
+     \x20           node tier: [--fabrics N] \
+     [--router rr|ll|p2c|affinity] \
+     [--fault \"t=T,fabric=F[,restore=T'][;...]\"] [--retries N] \
+     [--admit-factor K] [--sessions N]\n\
      \x20 profile   --model mlp|ffn|qkv|attn|conv|llm \
      [--config <name>] [--clusters N] [--trace out.json] \
      [--fast-forward true|false] [--out results]\n\
@@ -459,6 +464,77 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                          (event|legacy)"
                     )
                 })?;
+            // Node tier: any node flag routes the run through
+            // NodeSim (N fabrics behind a front-end router) instead
+            // of a single-fabric serve.
+            let node_mode = flags.contains_key("fabrics")
+                || flags.contains_key("router")
+                || flags.contains_key("fault");
+            if node_mode {
+                let mut ncfg = node::NodeConfig::new(
+                    cfg.clone(),
+                    flag(&flags, "fabrics", 2usize)?,
+                );
+                let router_s = flags
+                    .get("router")
+                    .cloned()
+                    .unwrap_or_else(|| "ll".into());
+                ncfg.router = node::RouterPolicy::from_name(&router_s)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown router `{router_s}` \
+                             (rr|ll|p2c|affinity)"
+                        )
+                    })?;
+                if let Some(s) = flags.get("fault") {
+                    ncfg.faults = node::FaultPlan::parse(s)?;
+                }
+                ncfg.max_retries = flag(&flags, "retries", 3u32)?;
+                ncfg.sessions = flag(&flags, "sessions", 16usize)?;
+                if flags.contains_key("admit-factor") {
+                    ncfg.admit_factor =
+                        Some(flag(&flags, "admit-factor", 1.0f64)?);
+                }
+                let ff = flag(&flags, "fast-forward", true)?;
+                let svc = GemmService::of_kind_ff(backend, ff);
+                eprintln!(
+                    "node serve: {} requests of `{}` at {} \
+                     req/Mcycle over {} fabrics x{} via `{}`, \
+                     router `{}`, faults `{}`...",
+                    cfg.requests,
+                    cfg.models.join("+"),
+                    cfg.rate_per_mcycle,
+                    ncfg.fabrics,
+                    cfg.clusters,
+                    backend.name(),
+                    ncfg.router.name(),
+                    ncfg.faults.summary(),
+                );
+                let run = node::run_node(&svc, &ncfg)?;
+                let doc = report::render_node(&run.report);
+                println!("{doc}");
+                let stem = format!(
+                    "node-{}-{}",
+                    cfg.models.join("+"),
+                    ncfg.router.name()
+                );
+                report::save(&out_dir, &format!("{stem}.md"), &doc)?;
+                report::node_csv(&run)
+                    .write(&out_dir.join(format!("{stem}.csv")))?;
+                report::node_fabric_csv(&run.report).write(
+                    &out_dir.join(format!("{stem}-fabrics.csv")),
+                )?;
+                report::node_sheds_csv(&run).write(
+                    &out_dir.join(format!("{stem}-sheds.csv")),
+                )?;
+                eprintln!(
+                    "wrote {}/{stem}.{{md,csv}} + per-fabric and \
+                     shed CSVs; run digest 0x{:016x}",
+                    out_dir.display(),
+                    run.report.digest,
+                );
+                return Ok(());
+            }
             eprintln!(
                 "serve: {} requests of `{}` at {} req/Mcycle \
                  (burst {}) on {} x{} via `{}`, policy `{}`...",
@@ -970,6 +1046,71 @@ mod tests {
             "serve".into(),
             "--serve-engine".into(),
             "waveish".into(),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn serve_command_node_mode_writes_all_csvs() {
+        let dir =
+            std::env::temp_dir().join("zerostall-node-cli-test");
+        main_with_args(vec![
+            "serve".into(),
+            "--model".into(),
+            "ffn".into(),
+            "--backend".into(),
+            "analytic".into(),
+            "--fabrics".into(),
+            "2".into(),
+            "--router".into(),
+            "p2c".into(),
+            "--fault".into(),
+            "t=500000,fabric=1,restore=900000".into(),
+            "--requests".into(),
+            "12".into(),
+            "--rate".into(),
+            "20".into(),
+            "--out".into(),
+            dir.display().to_string(),
+        ])
+        .unwrap();
+        assert!(dir.join("node-ffn-p2c.md").exists());
+        assert!(dir.join("node-ffn-p2c.csv").exists());
+        assert!(dir.join("node-ffn-p2c-fabrics.csv").exists());
+        assert!(dir.join("node-ffn-p2c-sheds.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_command_node_mode_rejects_bad_inputs() {
+        assert!(main_with_args(vec![
+            "serve".into(),
+            "--router".into(),
+            "hashring".into(),
+        ])
+        .is_err());
+        assert!(main_with_args(vec![
+            "serve".into(),
+            "--fabrics".into(),
+            "2".into(),
+            "--fault".into(),
+            "t=1,fabric=7".into(),
+        ])
+        .is_err());
+        assert!(main_with_args(vec![
+            "serve".into(),
+            "--fabrics".into(),
+            "2".into(),
+            "--fault".into(),
+            "whenever".into(),
+        ])
+        .is_err());
+        assert!(main_with_args(vec![
+            "serve".into(),
+            "--fabrics".into(),
+            "2".into(),
+            "--admit-factor".into(),
+            "-1".into(),
         ])
         .is_err());
     }

@@ -6,6 +6,7 @@ pub mod cli;
 pub mod experiments;
 pub mod lint;
 pub mod net;
+pub mod node;
 pub mod profile;
 pub mod report;
 pub mod runner;

@@ -1,0 +1,1217 @@
+//! NodeSim — a deterministic multi-fabric serving node on top of
+//! ServeSim ([`super::serve`]).
+//!
+//! The paper proves 96-99% utilization for one cluster fabric; the
+//! ROADMAP north star is a production-shaped serving system. This
+//! module composes `N` fabrics into a node behind a front-end router
+//! and closes the fleet-level gap: routing policy, SLO-aware
+//! admission control, overload shedding, and deterministic fault
+//! injection — all on **one** event heap in virtual time, so a
+//! million-request node trace with mid-trace fabric failures is
+//! bit-for-bit reproducible across runs and host thread counts.
+//!
+//! Architecture (DESIGN.md §14 carries the full determinism
+//! argument):
+//!
+//! * **Service model.** Each fabric serves its queue serially; one
+//!   request of model `m` costs [`solo_latency`]`(m, Continuous)` —
+//!   what the request costs an otherwise-idle fabric, waves going
+//!   tensor-parallel across its clusters. The costs are probed once
+//!   per model through the real serve engine (so they inherit the
+//!   backend, `--fast-forward`, calibration, ...), and the node tier
+//!   itself never touches the backend again: 10^6 requests drain in
+//!   pure event time.
+//! * **One heap.** Arrivals, completions, and fault transitions are
+//!   totally ordered by `(cycle, kind, fabric, epoch)` with the fixed
+//!   kind order `DOWN < UP < DONE < ARRIVE` — at equal cycles a
+//!   fault lands before the completion it kills, a restore lands
+//!   before work is routed to it, and completions commit before
+//!   same-cycle arrivals route. No ordering ever depends on host
+//!   threads or hash iteration.
+//! * **Faults.** A seeded [`FaultPlan`] drops a fabric at virtual
+//!   time `T` and optionally restores it at `T'`. A down fabric bumps
+//!   its `epoch`, which lazily invalidates the in-flight completion
+//!   event; the interrupted request and everything queued behind it
+//!   requeue through the router with `retries + 1`, shedding only
+//!   past `max_retries`. Requests are **never silently lost**: the
+//!   engine `ensure!`s `arrivals == completions + sheds` on every
+//!   run, and a shrinkable property test re-proves it over random
+//!   plans.
+//! * **Digest.** [`run_digest`] folds `(id, completion, fabric,
+//!   retries)` of every completion (plus the shed stream) through
+//!   FNV-1a 64 in id order — the checksum the determinism harness
+//!   pins bit-identical across 1/2/8 threads and `--fast-forward
+//!   on|off`.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::backend::BackendKind;
+use crate::cluster::ConfigId;
+use crate::fabric::NodeTopology;
+use crate::kernels::{GemmService, ServiceStats};
+use crate::util::prop::Shrink;
+use crate::util::rng::Rng;
+use crate::util::stats::{ratio, CycleHistogram, Fnv64};
+
+use super::serve::{
+    gen_arrivals, solo_latency, ArrivalTrace, Policy, ServeConfig,
+};
+
+// -------------------------------------------------------- routing --
+
+/// Front-end routing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Round-robin over up fabrics (the baseline the others beat).
+    RoundRobin,
+    /// Least-loaded: smallest backlog, ties to the lowest fabric id.
+    LeastLoaded,
+    /// Power-of-two-choices: two seeded draws among up fabrics, pick
+    /// the less loaded.
+    PowerOfTwo,
+    /// Session affinity: a session sticks to one fabric until that
+    /// fabric dies, then remaps via least-loaded (and stays remapped).
+    Affinity,
+}
+
+impl RouterPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "rr",
+            RouterPolicy::LeastLoaded => "ll",
+            RouterPolicy::PowerOfTwo => "p2c",
+            RouterPolicy::Affinity => "affinity",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<RouterPolicy> {
+        match s {
+            "rr" => Some(RouterPolicy::RoundRobin),
+            "ll" => Some(RouterPolicy::LeastLoaded),
+            "p2c" => Some(RouterPolicy::PowerOfTwo),
+            "affinity" => Some(RouterPolicy::Affinity),
+            _ => None,
+        }
+    }
+}
+
+// --------------------------------------------------------- faults --
+
+/// One injected fabric failure: down at `at`, optionally back up at
+/// `restore` (`None` = dead for the rest of the run).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at: u64,
+    pub fabric: usize,
+    pub restore: Option<u64>,
+}
+
+impl Shrink for FaultEvent {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.at > 0 {
+            out.push(FaultEvent { at: self.at / 2, ..*self });
+        }
+        if let Some(r) = self.restore {
+            out.push(FaultEvent { restore: None, ..*self });
+            let mid = (self.at + 1).max(self.at / 2 + r / 2);
+            if mid < r {
+                out.push(FaultEvent { restore: Some(mid), ..*self });
+            }
+        }
+        if self.fabric > 0 {
+            out.push(FaultEvent { fabric: 0, ..*self });
+        }
+        out
+    }
+}
+
+/// A deterministic fault schedule. Overlapping windows on one fabric
+/// are legal: down/up transitions are idempotent (a second DOWN on a
+/// dead fabric is a no-op, its paired restore still fires), so any
+/// plan the property generator draws is a valid input.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Parse the CLI syntax: `t=T,fabric=F[,restore=T']`, multiple
+    /// events joined with `;`.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for part in s.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (mut at, mut fabric, mut restore) = (None, None, None);
+            for kv in part.split(',') {
+                let kv = kv.trim();
+                let Some((k, v)) = kv.split_once('=') else {
+                    bail!("fault event field `{kv}` is not key=value");
+                };
+                match k.trim() {
+                    "t" => at = Some(v.trim().parse::<u64>()?),
+                    "fabric" => {
+                        fabric = Some(v.trim().parse::<usize>()?)
+                    }
+                    "restore" => {
+                        restore = Some(v.trim().parse::<u64>()?)
+                    }
+                    other => bail!(
+                        "unknown fault field `{other}` \
+                         (t|fabric|restore)"
+                    ),
+                }
+            }
+            let at = at
+                .ok_or_else(|| anyhow::anyhow!("fault event needs t="))?;
+            let fabric = fabric.ok_or_else(|| {
+                anyhow::anyhow!("fault event needs fabric=")
+            })?;
+            events.push(FaultEvent { at, fabric, restore });
+        }
+        Ok(FaultPlan { events })
+    }
+
+    /// Check the plan against a node of `fabrics` fabrics.
+    pub fn validate(&self, fabrics: usize) -> Result<()> {
+        for ev in &self.events {
+            ensure!(
+                ev.fabric < fabrics,
+                "fault names fabric {} (node has {})",
+                ev.fabric,
+                fabrics
+            );
+            if let Some(r) = ev.restore {
+                ensure!(
+                    r > ev.at,
+                    "fault restore {} must come after t {}",
+                    r,
+                    ev.at
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Human/report form, the inverse of [`FaultPlan::parse`].
+    pub fn summary(&self) -> String {
+        if self.events.is_empty() {
+            return "none".into();
+        }
+        self.events
+            .iter()
+            .map(|ev| match ev.restore {
+                Some(r) => format!(
+                    "t={},fabric={},restore={r}",
+                    ev.at, ev.fabric
+                ),
+                None => format!("t={},fabric={}", ev.at, ev.fabric),
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+}
+
+impl Shrink for FaultPlan {
+    fn shrinks(&self) -> Vec<Self> {
+        self.events
+            .shrinks()
+            .into_iter()
+            .map(|events| FaultPlan { events })
+            .collect()
+    }
+}
+
+// --------------------------------------------------------- config --
+
+/// Node-run parameters: a per-fabric [`ServeConfig`] (shape + arrival
+/// process) plus the node tier's knobs.
+#[derive(Clone, Debug)]
+pub struct NodeConfig {
+    /// Per-fabric shape, model mix, and arrival process. The node
+    /// serves `serve.requests` arrivals at `serve.rate_per_mcycle`
+    /// across all fabrics.
+    pub serve: ServeConfig,
+    pub fabrics: usize,
+    pub router: RouterPolicy,
+    pub faults: FaultPlan,
+    /// Requeue attempts a request survives before it is shed.
+    pub max_retries: u32,
+    /// Admission control: shed on arrival when the estimated latency
+    /// exceeds `admit_factor x SLO`. `None` admits everything.
+    pub admit_factor: Option<f64>,
+    /// Session-id space for the affinity router (a request's session
+    /// is its seed modulo this).
+    pub sessions: usize,
+}
+
+impl NodeConfig {
+    /// Defaults: least-loaded routing, no faults, 3 retries, no
+    /// admission control, 16 sessions.
+    pub fn new(serve: ServeConfig, fabrics: usize) -> NodeConfig {
+        NodeConfig {
+            serve,
+            fabrics: fabrics.max(1),
+            router: RouterPolicy::LeastLoaded,
+            faults: FaultPlan::default(),
+            max_retries: 3,
+            admit_factor: None,
+            sessions: 16,
+        }
+    }
+
+    pub fn topology(&self) -> NodeTopology {
+        NodeTopology::new(self.fabrics, self.serve.clusters)
+    }
+}
+
+// -------------------------------------------------------- results --
+
+/// Why a request was shed instead of served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Admission control: estimated latency past `admit_factor x SLO`.
+    Admission,
+    /// Requeued more than `max_retries` times by faults.
+    RetryBudget,
+    /// Every fabric down with no restore scheduled.
+    Unroutable,
+}
+
+impl ShedReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedReason::Admission => "admission",
+            ShedReason::RetryBudget => "retry-budget",
+            ShedReason::Unroutable => "unroutable",
+        }
+    }
+
+    /// Stable code folded into the run digest.
+    fn code(&self) -> u64 {
+        match self {
+            ShedReason::Admission => 1,
+            ShedReason::RetryBudget => 2,
+            ShedReason::Unroutable => 3,
+        }
+    }
+}
+
+/// Per-completed-request outcome row (CSV material).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeRow {
+    pub id: usize,
+    /// Index into the config's model mix.
+    pub model: usize,
+    pub session: u64,
+    /// Fabric the request finally completed on.
+    pub fabric: usize,
+    pub arrival: u64,
+    /// Cycle its (final) service began.
+    pub dispatched: u64,
+    pub completion: u64,
+    pub latency: u64,
+    /// Fault-driven requeues this request survived.
+    pub retries: u32,
+    pub slo_met: bool,
+}
+
+/// Per-shed-request outcome row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShedRow {
+    pub id: usize,
+    pub model: usize,
+    pub session: u64,
+    pub arrival: u64,
+    /// Cycle the shed decision was made.
+    pub at: u64,
+    pub retries: u32,
+    pub reason: ShedReason,
+}
+
+/// One fabric's telemetry. `latency` is a per-fabric histogram shard;
+/// the node report's overall histogram is the bucket-wise merge of
+/// all shards (exercising [`CycleHistogram::merge`] at scale).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FabricStats {
+    /// Requests completed on this fabric.
+    pub served: u64,
+    /// Cycles spent on work that completed.
+    pub busy_cycles: u64,
+    /// Cycles of partial service discarded by faults.
+    pub lost_cycles: u64,
+    /// Cycles spent down.
+    pub downtime: u64,
+    pub latency: CycleHistogram,
+}
+
+/// Aggregate node report. Derives `PartialEq` so the determinism
+/// harness can compare entire runs bit for bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeReport {
+    /// `+`-joined model mix.
+    pub model: String,
+    pub config: ConfigId,
+    pub backend: BackendKind,
+    pub router: RouterPolicy,
+    pub topo: NodeTopology,
+    pub rate_per_mcycle: f64,
+    pub burst: f64,
+    pub seed: u64,
+    pub faults: FaultPlan,
+    pub max_retries: u32,
+    pub requests: usize,
+    pub completed: usize,
+    pub shed_admission: usize,
+    pub shed_retry: usize,
+    pub shed_unroutable: usize,
+    /// Fault-driven requeues across all requests (served and shed).
+    pub retries_total: u64,
+    /// Last request-completion cycle (0 when nothing completed).
+    pub makespan_cycles: u64,
+    /// Merged per-fabric latency shards (p50/p95/p99 source).
+    pub latency: CycleHistogram,
+    pub slo_cycles: u64,
+    pub slo_attained: usize,
+    /// Per-model service cost (solo continuous-batching latency) the
+    /// queueing model ran on.
+    pub model_costs: Vec<u64>,
+    pub per_fabric: Vec<FabricStats>,
+    /// Plan-cache counters for this run's cost probes (delta over the
+    /// service totals).
+    pub plan_stats: ServiceStats,
+    /// Heap events processed.
+    pub events: u64,
+    /// FNV-1a fold of the outcome streams ([`run_digest`]).
+    pub digest: u64,
+}
+
+impl NodeReport {
+    pub fn p50(&self) -> u64 {
+        self.latency.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.latency.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.latency.quantile(0.99)
+    }
+
+    pub fn shed_total(&self) -> usize {
+        self.shed_admission + self.shed_retry + self.shed_unroutable
+    }
+
+    /// Completed requests per million cycles of makespan.
+    pub fn throughput_per_mcycle(&self) -> f64 {
+        ratio(self.completed as f64, self.makespan_cycles as f64)
+            * 1.0e6
+    }
+
+    /// Fraction of completed requests that met the SLO.
+    pub fn slo_attainment(&self) -> f64 {
+        ratio(self.slo_attained as f64, self.completed as f64)
+    }
+
+    /// Per-fabric busy fraction of the makespan.
+    pub fn fabric_utilization(&self) -> Vec<f64> {
+        self.per_fabric
+            .iter()
+            .map(|f| {
+                ratio(
+                    f.busy_cycles as f64,
+                    self.makespan_cycles as f64,
+                )
+            })
+            .collect()
+    }
+}
+
+/// A completed node run: report plus per-request outcome rows, both
+/// streams sorted by request id.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeRun {
+    pub report: NodeReport,
+    /// Model-name table the row `model` indexes resolve against.
+    pub models: Vec<String>,
+    pub rows: Vec<NodeRow>,
+    pub sheds: Vec<ShedRow>,
+}
+
+/// The canonical run digest: FNV-1a 64 over `(id, completion cycle,
+/// fabric id, retry count)` of every completed request in id order,
+/// a domain separator, then `(id, shed cycle, reason, retries)` of
+/// every shed request in id order. Two runs of the same scenario —
+/// across thread counts, FastPath settings, or refactors — must agree
+/// on all 64 bits.
+pub fn run_digest(rows: &[NodeRow], sheds: &[ShedRow]) -> u64 {
+    let mut h = Fnv64::new();
+    for r in rows {
+        h.write_u64(r.id as u64);
+        h.write_u64(r.completion);
+        h.write_u64(r.fabric as u64);
+        h.write_u64(r.retries as u64);
+    }
+    // Separator: a shed stream can never alias a completion stream.
+    h.write_u64(0x5EED_5EED_5EED_5EED);
+    for s in sheds {
+        h.write_u64(s.id as u64);
+        h.write_u64(s.at);
+        h.write_u64(s.reason.code());
+        h.write_u64(s.retries as u64);
+    }
+    h.finish()
+}
+
+// --------------------------------------------------------- engine --
+
+/// Heap event kinds, in tie-break order at equal cycles: a fault
+/// lands before the completion it kills, a restore lands before work
+/// routes to it, completions commit before same-cycle arrivals.
+const EV_DOWN: u8 = 0;
+const EV_UP: u8 = 1;
+const EV_DONE: u8 = 2;
+const EV_ARRIVE: u8 = 3;
+
+struct FabricSim {
+    up: bool,
+    /// Bumped on every DOWN; a DONE event carrying a stale epoch is
+    /// a completion from before the fault and is discarded.
+    epoch: u32,
+    queue: VecDeque<u32>,
+    in_service: Option<u32>,
+    service_start: u64,
+    /// Virtual cycle the backlog drains at (load estimate).
+    backlog_end: u64,
+    served: u64,
+    busy: u64,
+    lost: u64,
+    down_at: u64,
+    downtime: u64,
+    hist: CycleHistogram,
+}
+
+impl FabricSim {
+    fn new() -> FabricSim {
+        FabricSim {
+            up: true,
+            epoch: 0,
+            queue: VecDeque::new(),
+            in_service: None,
+            service_start: 0,
+            backlog_end: 0,
+            served: 0,
+            busy: 0,
+            lost: 0,
+            down_at: 0,
+            downtime: 0,
+            hist: CycleHistogram::new(),
+        }
+    }
+}
+
+/// One arrival's immutable fields, indexed by the engine's `u32`
+/// request index (sorted arrival order).
+struct Req {
+    id: usize,
+    model: usize,
+    arrival: u64,
+    session: u64,
+}
+
+struct Engine<'a> {
+    cfg: &'a NodeConfig,
+    reqs: Vec<Req>,
+    costs: Vec<u64>,
+    slo: u64,
+    fabrics: Vec<FabricSim>,
+    heap: BinaryHeap<Reverse<(u64, u8, u32, u32)>>,
+    /// Requests parked while every fabric is down but a restore is
+    /// still scheduled.
+    pending: VecDeque<u32>,
+    /// UP events still in the heap — when this hits zero with every
+    /// fabric down, requests are unroutable rather than parked.
+    future_ups: usize,
+    next_arr: usize,
+    rr_next: usize,
+    sticky: HashMap<u64, usize>,
+    p2c_rng: Rng,
+    retries: Vec<u32>,
+    rows: Vec<NodeRow>,
+    sheds: Vec<ShedRow>,
+    shed_admission: usize,
+    shed_retry: usize,
+    shed_unroutable: usize,
+    retries_total: u64,
+    slo_attained: usize,
+    makespan: u64,
+    events: u64,
+}
+
+impl Engine<'_> {
+    fn load(&self, f: usize, now: u64) -> u64 {
+        self.fabrics[f].backlog_end.saturating_sub(now)
+    }
+
+    fn least_loaded(&self, now: u64) -> usize {
+        (0..self.fabrics.len())
+            .filter(|&f| self.fabrics[f].up)
+            .min_by_key(|&f| (self.load(f, now), f))
+            .expect("least_loaded with no fabric up")
+    }
+
+    fn shed(&mut self, ri: u32, at: u64, reason: ShedReason) {
+        match reason {
+            ShedReason::Admission => self.shed_admission += 1,
+            ShedReason::RetryBudget => self.shed_retry += 1,
+            ShedReason::Unroutable => self.shed_unroutable += 1,
+        }
+        let r = &self.reqs[ri as usize];
+        self.sheds.push(ShedRow {
+            id: r.id,
+            model: r.model,
+            session: r.session,
+            arrival: r.arrival,
+            at,
+            retries: self.retries[ri as usize],
+            reason,
+        });
+    }
+
+    /// If `f` is up and idle, begin serving its queue head and
+    /// schedule the completion event under the current epoch.
+    fn start_next(&mut self, f: usize, now: u64) {
+        if !self.fabrics[f].up || self.fabrics[f].in_service.is_some()
+        {
+            return;
+        }
+        let Some(ri) = self.fabrics[f].queue.pop_front() else {
+            return;
+        };
+        let cost = self.costs[self.reqs[ri as usize].model];
+        let fb = &mut self.fabrics[f];
+        fb.in_service = Some(ri);
+        fb.service_start = now;
+        self.heap.push(Reverse((
+            now.saturating_add(cost),
+            EV_DONE,
+            f as u32,
+            fb.epoch,
+        )));
+    }
+
+    /// Route one request through the configured policy at `now`.
+    fn route(&mut self, ri: u32, now: u64) {
+        let n = self.fabrics.len();
+        if !self.fabrics.iter().any(|f| f.up) {
+            if self.future_ups > 0 {
+                self.pending.push_back(ri);
+            } else {
+                self.shed(ri, now, ShedReason::Unroutable);
+            }
+            return;
+        }
+        let f = match self.cfg.router {
+            RouterPolicy::RoundRobin => {
+                let mut pick = self.rr_next;
+                while !self.fabrics[pick].up {
+                    pick = (pick + 1) % n;
+                }
+                self.rr_next = (pick + 1) % n;
+                pick
+            }
+            RouterPolicy::LeastLoaded => self.least_loaded(now),
+            RouterPolicy::PowerOfTwo => {
+                let ups: Vec<usize> = (0..n)
+                    .filter(|&f| self.fabrics[f].up)
+                    .collect();
+                if ups.len() == 1 {
+                    ups[0]
+                } else {
+                    // Two distinct seeded draws; less loaded wins,
+                    // ties to the lower fabric id.
+                    let i =
+                        self.p2c_rng.below(ups.len() as u64) as usize;
+                    let mut j = self
+                        .p2c_rng
+                        .below(ups.len() as u64 - 1)
+                        as usize;
+                    if j >= i {
+                        j += 1;
+                    }
+                    let (a, b) = (ups[i], ups[j]);
+                    if (self.load(a, now), a) <= (self.load(b, now), b)
+                    {
+                        a
+                    } else {
+                        b
+                    }
+                }
+            }
+            RouterPolicy::Affinity => {
+                let s = self.reqs[ri as usize].session;
+                match self.sticky.get(&s) {
+                    Some(&f) if self.fabrics[f].up => f,
+                    _ => {
+                        let f = self.least_loaded(now);
+                        self.sticky.insert(s, f);
+                        f
+                    }
+                }
+            }
+        };
+        let cost = self.costs[self.reqs[ri as usize].model];
+        if let Some(k) = self.cfg.admit_factor {
+            // Estimated latency = waiting so far + the target's
+            // backlog + own service.
+            let waited = now - self.reqs[ri as usize].arrival;
+            let est = waited
+                .saturating_add(self.load(f, now))
+                .saturating_add(cost);
+            if (est as f64) > (self.slo as f64) * k {
+                self.shed(ri, now, ShedReason::Admission);
+                return;
+            }
+        }
+        let fb = &mut self.fabrics[f];
+        fb.backlog_end = fb.backlog_end.max(now).saturating_add(cost);
+        fb.queue.push_back(ri);
+        self.start_next(f, now);
+    }
+
+    fn on_down(&mut self, f: usize, t: u64) {
+        if !self.fabrics[f].up {
+            return; // overlapping plan: already down
+        }
+        let fb = &mut self.fabrics[f];
+        fb.up = false;
+        fb.epoch = fb.epoch.wrapping_add(1);
+        fb.down_at = t;
+        fb.backlog_end = t;
+        // Orphans requeue in a fixed order: the interrupted request
+        // first, then the queue front to back.
+        let mut orphans: Vec<u32> = Vec::new();
+        if let Some(ri) = fb.in_service.take() {
+            fb.lost += t - fb.service_start;
+            orphans.push(ri);
+        }
+        orphans.extend(fb.queue.drain(..));
+        for ri in orphans {
+            self.retries[ri as usize] += 1;
+            self.retries_total += 1;
+            if self.retries[ri as usize] > self.cfg.max_retries {
+                self.shed(ri, t, ShedReason::RetryBudget);
+            } else {
+                self.route(ri, t);
+            }
+        }
+    }
+
+    fn on_up(&mut self, f: usize, t: u64) {
+        let fb = &mut self.fabrics[f];
+        if !fb.up {
+            fb.up = true;
+            fb.downtime += t - fb.down_at;
+            fb.backlog_end = t;
+        }
+        // A fabric is up, so parked requests are routable again.
+        while let Some(ri) = self.pending.pop_front() {
+            self.route(ri, t);
+        }
+    }
+
+    fn on_done(&mut self, f: usize, epoch: u32, t: u64) {
+        if !self.fabrics[f].up || epoch != self.fabrics[f].epoch {
+            return; // completion from before a fault — discarded
+        }
+        let ri = self.fabrics[f]
+            .in_service
+            .take()
+            .expect("live DONE event on an idle fabric");
+        let r = &self.reqs[ri as usize];
+        let latency = t - r.arrival;
+        let slo_met = latency <= self.slo;
+        let row = NodeRow {
+            id: r.id,
+            model: r.model,
+            session: r.session,
+            fabric: f,
+            arrival: r.arrival,
+            dispatched: self.fabrics[f].service_start,
+            completion: t,
+            latency,
+            retries: self.retries[ri as usize],
+            slo_met,
+        };
+        let fb = &mut self.fabrics[f];
+        fb.busy += t - fb.service_start;
+        fb.served += 1;
+        fb.hist.record(latency);
+        if slo_met {
+            self.slo_attained += 1;
+        }
+        self.makespan = self.makespan.max(t);
+        self.rows.push(row);
+        self.start_next(f, t);
+    }
+
+    fn on_arrive(&mut self, t: u64) {
+        while self.next_arr < self.reqs.len()
+            && self.reqs[self.next_arr].arrival <= t
+        {
+            let ri = self.next_arr as u32;
+            self.next_arr += 1;
+            self.route(ri, t);
+        }
+        if self.next_arr < self.reqs.len() {
+            self.heap.push(Reverse((
+                self.reqs[self.next_arr].arrival,
+                EV_ARRIVE,
+                0,
+                0,
+            )));
+        }
+    }
+
+    fn run(&mut self) {
+        for ev in &self.cfg.faults.events {
+            self.heap.push(Reverse((
+                ev.at,
+                EV_DOWN,
+                ev.fabric as u32,
+                0,
+            )));
+            if let Some(r) = ev.restore {
+                self.heap.push(Reverse((
+                    r,
+                    EV_UP,
+                    ev.fabric as u32,
+                    0,
+                )));
+                self.future_ups += 1;
+            }
+        }
+        if !self.reqs.is_empty() {
+            self.heap.push(Reverse((
+                self.reqs[0].arrival,
+                EV_ARRIVE,
+                0,
+                0,
+            )));
+        }
+        while let Some(Reverse((t, kind, a, b))) = self.heap.pop() {
+            self.events += 1;
+            match kind {
+                EV_DOWN => self.on_down(a as usize, t),
+                EV_UP => {
+                    self.future_ups -= 1;
+                    self.on_up(a as usize, t);
+                }
+                EV_DONE => self.on_done(a as usize, b, t),
+                _ => self.on_arrive(t),
+            }
+        }
+        debug_assert!(self.pending.is_empty());
+    }
+}
+
+// ---------------------------------------------------- entry points --
+
+/// Generate the arrival trace for `cfg.serve` and run the node.
+pub fn run_node(
+    svc: &GemmService,
+    cfg: &NodeConfig,
+) -> Result<NodeRun> {
+    let trace = gen_arrivals(&cfg.serve);
+    run_node_trace(svc, cfg, &trace)
+}
+
+/// Run the node over an explicit arrival trace (the property tests
+/// feed shrunk traces through this entry point). Requests may arrive
+/// unsorted; the engine orders them by `(arrival, id)` itself.
+pub fn run_node_trace(
+    svc: &GemmService,
+    cfg: &NodeConfig,
+    trace: &ArrivalTrace,
+) -> Result<NodeRun> {
+    ensure!(cfg.fabrics >= 1, "node needs at least one fabric");
+    ensure!(
+        !cfg.serve.models.is_empty(),
+        "node serve needs at least one model"
+    );
+    ensure!(cfg.sessions >= 1, "node needs at least one session");
+    if let Some(k) = cfg.admit_factor {
+        ensure!(
+            k.is_finite() && k > 0.0,
+            "admit factor must be positive, got {k}"
+        );
+    }
+    cfg.faults.validate(cfg.fabrics)?;
+    for r in &trace.requests {
+        ensure!(
+            r.model < cfg.serve.models.len(),
+            "request {} names model index {} (mix has {})",
+            r.id,
+            r.model,
+            cfg.serve.models.len()
+        );
+    }
+    // Snapshot plan-cache counters before the cost probes so the
+    // report covers the run's full cache behavior.
+    let stats0 = svc.stats();
+    // Per-model service cost: solo continuous-batching latency on one
+    // idle fabric, probed through the real serve engine (backend,
+    // FastPath, and calibration all apply). `max(1)` keeps the event
+    // clock strictly progressing on degenerate costs.
+    let costs: Vec<u64> = (0..cfg.serve.models.len())
+        .map(|mi| {
+            solo_latency(svc, &cfg.serve, mi, Policy::Continuous)
+                .map(|c| c.max(1))
+        })
+        .collect::<Result<_>>()?;
+    // SLO convention matches ServeSim: explicit, or 4x the isolated
+    // FIFO latency of the mix's first model.
+    let slo = match cfg.serve.slo {
+        Some(s) => s,
+        None => solo_latency(svc, &cfg.serve, 0, Policy::Fifo)?
+            .saturating_mul(4),
+    };
+
+    let mut arrivals = trace.requests.clone();
+    arrivals.sort_by_key(|r| (r.arrival, r.id));
+    let reqs: Vec<Req> = arrivals
+        .iter()
+        .map(|r| Req {
+            id: r.id,
+            model: r.model,
+            arrival: r.arrival,
+            session: r.seed % cfg.sessions as u64,
+        })
+        .collect();
+    let n_reqs = reqs.len();
+
+    let mut eng = Engine {
+        cfg,
+        reqs,
+        costs,
+        slo,
+        fabrics: (0..cfg.fabrics).map(|_| FabricSim::new()).collect(),
+        heap: BinaryHeap::new(),
+        pending: VecDeque::new(),
+        future_ups: 0,
+        next_arr: 0,
+        rr_next: 0,
+        sticky: HashMap::new(),
+        p2c_rng: Rng::new(cfg.serve.seed ^ 0xD06_F00D),
+        retries: vec![0; n_reqs],
+        rows: Vec::with_capacity(n_reqs),
+        sheds: Vec::new(),
+        shed_admission: 0,
+        shed_retry: 0,
+        shed_unroutable: 0,
+        retries_total: 0,
+        slo_attained: 0,
+        makespan: 0,
+        events: 0,
+    };
+    eng.run();
+
+    // Conservation is a hard runtime invariant, not just a test: a
+    // node run that lost or double-counted a request is invalid.
+    ensure!(
+        eng.rows.len() + eng.sheds.len() == n_reqs,
+        "request conservation violated: {} arrivals != {} \
+         completions + {} sheds",
+        n_reqs,
+        eng.rows.len(),
+        eng.sheds.len()
+    );
+
+    let mut rows = eng.rows;
+    rows.sort_by_key(|r| r.id);
+    let mut sheds = eng.sheds;
+    sheds.sort_by_key(|s| s.id);
+    let digest = run_digest(&rows, &sheds);
+
+    let per_fabric: Vec<FabricStats> = eng
+        .fabrics
+        .iter()
+        .map(|f| FabricStats {
+            served: f.served,
+            busy_cycles: f.busy,
+            lost_cycles: f.lost,
+            downtime: match f.up {
+                true => f.downtime,
+                // Dead at end of run: downtime runs to the makespan.
+                false => {
+                    f.downtime
+                        + eng.makespan.saturating_sub(f.down_at)
+                }
+            },
+            latency: f.hist.clone(),
+        })
+        .collect();
+    let mut latency = CycleHistogram::new();
+    for f in &per_fabric {
+        latency.merge(&f.latency);
+    }
+
+    let report = NodeReport {
+        model: cfg.serve.models.join("+"),
+        config: cfg.serve.config,
+        backend: svc.backend_kind(),
+        router: cfg.router,
+        topo: cfg.topology(),
+        rate_per_mcycle: cfg.serve.rate_per_mcycle,
+        burst: cfg.serve.burst,
+        seed: cfg.serve.seed,
+        faults: cfg.faults.clone(),
+        max_retries: cfg.max_retries,
+        requests: n_reqs,
+        completed: rows.len(),
+        shed_admission: eng.shed_admission,
+        shed_retry: eng.shed_retry,
+        shed_unroutable: eng.shed_unroutable,
+        retries_total: eng.retries_total,
+        makespan_cycles: eng.makespan,
+        latency,
+        slo_cycles: slo,
+        slo_attained: eng.slo_attained,
+        model_costs: eng.costs,
+        per_fabric,
+        plan_stats: svc.stats().delta_since(&stats0),
+        events: eng.events,
+        digest,
+    };
+    Ok(NodeRun {
+        report,
+        models: cfg.serve.models.clone(),
+        rows,
+        sheds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg(fabrics: usize) -> NodeConfig {
+        let mut serve = ServeConfig::new(vec!["ffn".into()]);
+        serve.clusters = 2;
+        serve.requests = 32;
+        serve.rate_per_mcycle = 20.0;
+        serve.seed = 7;
+        NodeConfig::new(serve, fabrics)
+    }
+
+    #[test]
+    fn router_names_round_trip() {
+        for p in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::PowerOfTwo,
+            RouterPolicy::Affinity,
+        ] {
+            assert_eq!(RouterPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(RouterPolicy::from_name("nope"), None);
+    }
+
+    #[test]
+    fn fault_plan_parse_round_trip() {
+        let p =
+            FaultPlan::parse("t=100,fabric=1,restore=200;t=5,fabric=0")
+                .unwrap();
+        assert_eq!(
+            p.events,
+            vec![
+                FaultEvent {
+                    at: 100,
+                    fabric: 1,
+                    restore: Some(200)
+                },
+                FaultEvent { at: 5, fabric: 0, restore: None },
+            ]
+        );
+        assert_eq!(FaultPlan::parse(&p.summary()).unwrap(), p);
+        assert_eq!(FaultPlan::parse("").unwrap().summary(), "none");
+    }
+
+    #[test]
+    fn fault_plan_rejects_garbage() {
+        assert!(FaultPlan::parse("t=1,fabric").is_err());
+        assert!(FaultPlan::parse("t=1,rack=0").is_err());
+        assert!(FaultPlan::parse("fabric=0").is_err());
+        let p = FaultPlan::parse("t=9,fabric=4").unwrap();
+        assert!(p.validate(4).is_err());
+        assert!(p.validate(5).is_ok());
+        let p = FaultPlan::parse("t=9,fabric=0,restore=9").unwrap();
+        assert!(p.validate(1).is_err());
+    }
+
+    #[test]
+    fn round_robin_balances_uniform_load() {
+        let mut cfg = base_cfg(4);
+        cfg.router = RouterPolicy::RoundRobin;
+        let svc = GemmService::analytic();
+        let run = run_node(&svc, &cfg).unwrap();
+        assert_eq!(run.report.completed, 32);
+        assert_eq!(run.report.shed_total(), 0);
+        for f in &run.report.per_fabric {
+            assert_eq!(f.served, 8);
+        }
+    }
+
+    #[test]
+    fn single_fabric_matches_serial_queue_recurrence() {
+        let cfg = base_cfg(1);
+        let svc = GemmService::analytic();
+        let run = run_node(&svc, &cfg).unwrap();
+        let cost = run.report.model_costs[0];
+        // One fabric, one queue: completion is the textbook M/G/1
+        // recurrence over arrivals.
+        let mut prev = 0u64;
+        for row in &run.rows {
+            let expect = row.arrival.max(prev) + cost;
+            assert_eq!(row.completion, expect, "req {}", row.id);
+            prev = expect;
+        }
+    }
+
+    #[test]
+    fn admission_control_sheds_under_overload() {
+        let mut cfg = base_cfg(1);
+        cfg.serve.requests = 64;
+        cfg.serve.rate_per_mcycle = 5000.0;
+        cfg.admit_factor = Some(1.0);
+        let svc = GemmService::analytic();
+        let run = run_node(&svc, &cfg).unwrap();
+        let r = &run.report;
+        assert!(r.shed_admission > 0, "overload must shed");
+        assert!(r.completed > 0, "some requests must still complete");
+        assert_eq!(r.completed + r.shed_total(), r.requests);
+        // Survivors met the admission bound at dispatch time, so the
+        // tail is controlled: every completion is within factor x SLO
+        // (service adds nothing past the estimate on one fabric).
+        for row in &run.rows {
+            assert!(row.latency <= r.slo_cycles);
+        }
+    }
+
+    /// Eight requests all arrive at cycle 0, so both fabrics hold
+    /// work mid-service at any fault time in `(0, cost]` — the
+    /// scenario is valid whatever the probed service cost is.
+    fn burst_trace(n: usize) -> ArrivalTrace {
+        ArrivalTrace {
+            requests: (0..n)
+                .map(|id| crate::coordinator::serve::ServeRequest {
+                    id,
+                    model: 0,
+                    arrival: 0,
+                    seed: id as u64,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_sheds() {
+        let mut cfg = base_cfg(2);
+        cfg.max_retries = 0;
+        let svc = GemmService::analytic();
+        let cost =
+            solo_latency(&svc, &cfg.serve, 0, Policy::Continuous)
+                .unwrap()
+                .max(1);
+        // Down both fabrics while the first requests are still in
+        // service: every orphan exceeds its zero retry budget.
+        let at = (cost / 2).max(1);
+        cfg.faults = FaultPlan {
+            events: vec![
+                FaultEvent {
+                    at,
+                    fabric: 0,
+                    restore: Some(cost.saturating_mul(100)),
+                },
+                FaultEvent {
+                    at,
+                    fabric: 1,
+                    restore: Some(cost.saturating_mul(100)),
+                },
+            ],
+        };
+        let run =
+            run_node_trace(&svc, &cfg, &burst_trace(8)).unwrap();
+        let r = &run.report;
+        assert!(r.shed_retry > 0, "expected retry-budget sheds");
+        assert_eq!(r.completed + r.shed_total(), r.requests);
+        for s in &run.sheds {
+            if s.reason == ShedReason::RetryBudget {
+                assert!(s.retries > cfg.max_retries);
+            }
+        }
+    }
+
+    #[test]
+    fn unroutable_when_every_fabric_dies_for_good() {
+        let mut cfg = base_cfg(2);
+        let svc = GemmService::analytic();
+        let cost =
+            solo_latency(&svc, &cfg.serve, 0, Policy::Continuous)
+                .unwrap()
+                .max(1);
+        let at = (cost / 2).max(1);
+        cfg.faults = FaultPlan {
+            events: vec![
+                FaultEvent { at, fabric: 0, restore: None },
+                FaultEvent { at, fabric: 1, restore: None },
+            ],
+        };
+        let run =
+            run_node_trace(&svc, &cfg, &burst_trace(8)).unwrap();
+        let r = &run.report;
+        // Orphans keep retry budget but have nowhere to go: with no
+        // restore scheduled they shed as unroutable, never parked.
+        assert!(r.shed_unroutable > 0);
+        assert_eq!(r.completed + r.shed_total(), r.requests);
+        // Nothing completes after the node is dead.
+        for row in &run.rows {
+            assert!(row.completion < at);
+        }
+    }
+
+    #[test]
+    fn digest_tracks_outcome_not_incidentals() {
+        let cfg = base_cfg(2);
+        let svc = GemmService::analytic();
+        let a = run_node(&svc, &cfg).unwrap();
+        let b = run_node(&svc, &cfg).unwrap();
+        assert_eq!(a.report.digest, b.report.digest);
+        assert_eq!(a, b);
+        let mut cfg2 = base_cfg(2);
+        cfg2.serve.seed = 8;
+        let c = run_node(&svc, &cfg2).unwrap();
+        assert_ne!(a.report.digest, c.report.digest);
+    }
+
+    #[test]
+    fn fault_shrinks_stay_valid() {
+        let ev = FaultEvent { at: 100, fabric: 2, restore: Some(900) };
+        for s in ev.shrinks() {
+            if let Some(r) = s.restore {
+                assert!(r > s.at, "shrink broke restore>at: {s:?}");
+            }
+        }
+        let plan = FaultPlan { events: vec![ev, ev] };
+        for p in plan.shrinks() {
+            assert!(p.events.len() <= 2);
+        }
+    }
+}

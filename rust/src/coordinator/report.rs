@@ -548,6 +548,183 @@ pub fn serve_csv(run: &crate::coordinator::serve::ServeRun) -> Csv {
     c
 }
 
+// ----------------------------------------------------- NodeSim --
+
+pub fn render_node(r: &crate::coordinator::node::NodeReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "## Node serve `{}` on {} via the `{}` backend — router \
+         `{}`, {} fabrics x {} clusters\n\n",
+        r.model,
+        r.config.name(),
+        r.backend.name(),
+        r.router.name(),
+        r.topo.fabrics,
+        r.topo.fabric.clusters,
+    ));
+    out.push_str(&format!(
+        "* offered load: {:.2} req/Mcycle (burst {:.2}), {} requests, \
+         seed {}\n",
+        r.rate_per_mcycle, r.burst, r.requests, r.seed,
+    ));
+    out.push_str(&format!(
+        "* fault plan: {} (max retries {})\n",
+        r.faults.summary(),
+        r.max_retries,
+    ));
+    out.push_str(&format!(
+        "* completed: {} in {} cycles -> sustained {:.3} req/Mcycle\n",
+        r.completed,
+        r.makespan_cycles,
+        r.throughput_per_mcycle(),
+    ));
+    out.push_str(&format!(
+        "* shed: {} ({} admission / {} retry-budget / {} \
+         unroutable); retries: {}\n",
+        r.shed_total(),
+        r.shed_admission,
+        r.shed_retry,
+        r.shed_unroutable,
+        r.retries_total,
+    ));
+    out.push_str(&format!(
+        "* latency cycles: p50 {} / p95 {} / p99 {} (mean {:.0}, min \
+         {}, max {})\n",
+        r.p50(),
+        r.p95(),
+        r.p99(),
+        r.latency.mean(),
+        r.latency.min(),
+        r.latency.max(),
+    ));
+    out.push_str(&format!(
+        "* SLO {} cycles: {}/{} attained ({:.1}%)\n",
+        r.slo_cycles,
+        r.slo_attained,
+        r.completed,
+        r.slo_attainment() * 100.0,
+    ));
+    out.push_str(&format!(
+        "* run digest: 0x{:016x} ({} heap events)\n",
+        r.digest, r.events,
+    ));
+    out.push_str(&format!(
+        "* service cost model (cycles/request): {}\n",
+        r.model_costs
+            .iter()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join(" / "),
+    ));
+    out.push_str(&format!(
+        "* plan cache: {} hits / {} misses ({:.1}% hit rate over the \
+         cost probes)\n",
+        r.plan_stats.plan_hits,
+        r.plan_stats.plan_misses,
+        r.plan_stats.hit_rate() * 100.0,
+    ));
+    for (fi, (fs, u)) in r
+        .per_fabric
+        .iter()
+        .zip(r.fabric_utilization())
+        .enumerate()
+    {
+        out.push_str(&format!(
+            "  * fabric {fi}: served {}, busy {} cycles ({:.1}% of \
+             makespan), lost {}, down {}, p99 {}\n",
+            fs.served,
+            fs.busy_cycles,
+            u * 100.0,
+            fs.lost_cycles,
+            fs.downtime,
+            fs.latency.quantile(0.99),
+        ));
+    }
+    out
+}
+
+pub fn node_csv(run: &crate::coordinator::node::NodeRun) -> Csv {
+    let mut c = Csv::new(vec![
+        "req",
+        "model",
+        "session",
+        "fabric",
+        "arrival",
+        "dispatched",
+        "completion",
+        "latency_cycles",
+        "retries",
+        "slo_met",
+    ]);
+    for row in &run.rows {
+        c.row(vec![
+            row.id.to_string(),
+            run.models[row.model].clone(),
+            row.session.to_string(),
+            row.fabric.to_string(),
+            row.arrival.to_string(),
+            row.dispatched.to_string(),
+            row.completion.to_string(),
+            row.latency.to_string(),
+            row.retries.to_string(),
+            (row.slo_met as u8).to_string(),
+        ]);
+    }
+    c
+}
+
+pub fn node_sheds_csv(run: &crate::coordinator::node::NodeRun) -> Csv {
+    let mut c = Csv::new(vec![
+        "req", "model", "session", "arrival", "shed_at", "retries",
+        "reason",
+    ]);
+    for s in &run.sheds {
+        c.row(vec![
+            s.id.to_string(),
+            run.models[s.model].clone(),
+            s.session.to_string(),
+            s.arrival.to_string(),
+            s.at.to_string(),
+            s.retries.to_string(),
+            s.reason.name().to_string(),
+        ]);
+    }
+    c
+}
+
+pub fn node_fabric_csv(
+    r: &crate::coordinator::node::NodeReport,
+) -> Csv {
+    let mut c = Csv::new(vec![
+        "fabric",
+        "served",
+        "busy_cycles",
+        "utilization",
+        "lost_cycles",
+        "downtime",
+        "p50",
+        "p99",
+    ]);
+    for (fi, (fs, u)) in r
+        .per_fabric
+        .iter()
+        .zip(r.fabric_utilization())
+        .enumerate()
+    {
+        c.row(vec![
+            fi.to_string(),
+            fs.served.to_string(),
+            fs.busy_cycles.to_string(),
+            f(u, 4),
+            fs.lost_cycles.to_string(),
+            fs.downtime.to_string(),
+            fs.latency.quantile(0.50).to_string(),
+            fs.latency.quantile(0.99).to_string(),
+        ]);
+    }
+    c
+}
+
 // -------------------------------------------------- StallScope --
 
 /// Markdown table of class totals (shares of all attributed cycles).

@@ -461,15 +461,19 @@ fn gemm_job_of(
     }
 }
 
-/// Latency of one request of `model` served alone on an idle system
-/// under FIFO — the natural SLO / rate reference point for a config.
-pub fn isolated_latency(
+/// Latency of one request of `model` served alone on an idle fabric
+/// under `policy`. FIFO is the SLO / rate reference point every serve
+/// config derives from; Continuous is the node tier's service-cost
+/// model (a lone request's waves still go tensor-parallel, so this is
+/// what one request actually costs an otherwise-idle fabric).
+pub fn solo_latency(
     svc: &GemmService,
     cfg: &ServeConfig,
     model: usize,
+    policy: Policy,
 ) -> Result<u64> {
     let mut solo = cfg.clone();
-    solo.policy = Policy::Fifo;
+    solo.policy = policy;
     solo.requests = 1;
     solo.slo = Some(u64::MAX);
     let trace = ArrivalTrace {
@@ -482,6 +486,16 @@ pub fn isolated_latency(
     };
     let run = serve_trace(svc, &solo, &trace)?;
     Ok(run.report.latency.max())
+}
+
+/// Latency of one request of `model` served alone on an idle system
+/// under FIFO — the natural SLO / rate reference point for a config.
+pub fn isolated_latency(
+    svc: &GemmService,
+    cfg: &ServeConfig,
+    model: usize,
+) -> Result<u64> {
+    solo_latency(svc, cfg, model, Policy::Fifo)
 }
 
 /// Generate the arrival trace for `cfg` and serve it.

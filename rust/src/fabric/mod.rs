@@ -125,6 +125,30 @@ impl FabricConfig {
     }
 }
 
+/// Shape of a NodeSim node: `fabrics` identical cluster fabrics
+/// behind one front-end router (`coordinator::node`). Fabrics share
+/// nothing — each has its own NoC and L2 — so the node tier composes
+/// them purely in virtual time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeTopology {
+    pub fabrics: usize,
+    pub fabric: FabricConfig,
+}
+
+impl NodeTopology {
+    pub fn new(fabrics: usize, clusters: usize) -> Self {
+        Self {
+            fabrics: fabrics.max(1),
+            fabric: FabricConfig::new(clusters),
+        }
+    }
+
+    /// Clusters across the whole node.
+    pub fn total_clusters(&self) -> usize {
+        self.fabrics * self.fabric.clusters
+    }
+}
+
 /// Shared-link traffic counters for one fabric run.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NocStats {

@@ -245,6 +245,52 @@ impl CycleHistogram {
     }
 }
 
+// ------------------------------------------------------ run digest --
+
+/// Streaming FNV-1a 64-bit fold — the run-digest primitive NodeSim's
+/// checksum harness is built on.
+///
+/// FNV-1a is byte-order-defined, allocation-free, and has published
+/// test vectors, which makes the digest stable across platforms,
+/// thread counts, and refactors: fold a canonical tuple stream in a
+/// canonical order (the caller sorts) and any two runs of the same
+/// scenario either agree on all 64 bits or differ loudly. Not a
+/// cryptographic hash — it detects divergence, not adversaries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+
+    pub fn new() -> Self {
+        Fnv64(Self::OFFSET)
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    /// Fold a `u64` as its 8 little-endian bytes (fixed-width, so
+    /// adjacent fields can never alias each other's byte streams).
+    pub fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -295,6 +341,35 @@ mod tests {
     #[test]
     fn stddev_constant_is_zero() {
         assert_eq!(stddev(&[5.0, 5.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn fnv64_known_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(Fnv64::new().finish(), 0xcbf29ce484222325);
+        let mut h = Fnv64::new();
+        h.write_bytes(b"a");
+        assert_eq!(h.finish(), 0xaf63dc4c8601ec8c);
+        let mut h = Fnv64::new();
+        h.write_bytes(b"foobar");
+        assert_eq!(h.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv64_u64_is_le_bytes() {
+        let mut a = Fnv64::new();
+        a.write_u64(0x0102030405060708);
+        let mut b = Fnv64::new();
+        b.write_bytes(&[8, 7, 6, 5, 4, 3, 2, 1]);
+        assert_eq!(a, b);
+        // Field order matters: (x, y) != (y, x).
+        let mut xy = Fnv64::new();
+        xy.write_u64(1);
+        xy.write_u64(2);
+        let mut yx = Fnv64::new();
+        yx.write_u64(2);
+        yx.write_u64(1);
+        assert_ne!(xy.finish(), yx.finish());
     }
 
     #[test]

@@ -145,6 +145,170 @@ mod serve_golden {
     }
 }
 
+mod node_golden {
+    use zerostall::coordinator::node::{
+        run_digest, run_node, NodeConfig, NodeRow, RouterPolicy,
+    };
+    use zerostall::coordinator::report;
+    use zerostall::coordinator::serve::{
+        gen_arrivals, solo_latency, Policy, ServeConfig,
+    };
+    use zerostall::kernels::GemmService;
+    use zerostall::util::stats::CycleHistogram;
+
+    /// The pinned scenario: six `ffn` requests round-robined over two
+    /// fabrics, analytic backend, fixed seed, no faults — small
+    /// enough that the whole outcome is reconstructible by hand.
+    fn pinned_cfg() -> NodeConfig {
+        let mut serve = ServeConfig::new(vec!["ffn".to_string()]);
+        serve.clusters = 2;
+        serve.requests = 6;
+        serve.rate_per_mcycle = 25.0;
+        serve.seed = 0x90D5;
+        serve.slo = Some(u64::MAX);
+        let mut cfg = NodeConfig::new(serve, 2);
+        cfg.router = RouterPolicy::RoundRobin;
+        cfg
+    }
+
+    #[test]
+    fn node_summary_matches_independent_reconstruction() {
+        let cfg = pinned_cfg();
+        let svc = GemmService::analytic();
+        let run = run_node(&svc, &cfg).unwrap();
+        let r = &run.report;
+
+        // Counts pinned: no faults, no admission control — every
+        // arrival completes, nothing retries.
+        assert_eq!(r.requests, 6);
+        assert_eq!(r.completed, 6);
+        assert_eq!(r.shed_total(), 0);
+        assert_eq!(r.retries_total, 0);
+        assert!(run.sheds.is_empty());
+
+        // Independent reconstruction: the arrival trace is public,
+        // the service cost is a fresh probe through the serve engine,
+        // round-robin over two always-up fabrics is `id % 2`, and
+        // each fabric is a serial queue, so completions follow the
+        // Lindley recurrence per fabric. Any drift in routing,
+        // queueing, or cost accounting breaks this equality.
+        let probe = GemmService::analytic();
+        let cost =
+            solo_latency(&probe, &cfg.serve, 0, Policy::Continuous)
+                .unwrap();
+        assert!(cost > 0);
+        let trace = gen_arrivals(&cfg.serve);
+        let mut free = [0u64; 2];
+        let mut expect_rows = Vec::new();
+        for req in &trace.requests {
+            let fabric = req.id % 2;
+            let dispatched = req.arrival.max(free[fabric]);
+            let completion = dispatched + cost;
+            free[fabric] = completion;
+            expect_rows.push(NodeRow {
+                id: req.id,
+                model: 0,
+                session: req.seed % cfg.sessions as u64,
+                fabric,
+                arrival: req.arrival,
+                dispatched,
+                completion,
+                latency: completion - req.arrival,
+                retries: 0,
+                slo_met: true,
+            });
+        }
+        assert_eq!(run.rows, expect_rows, "outcome rows drifted");
+        assert_eq!(r.makespan_cycles, free[0].max(free[1]));
+
+        // The digest is exactly the FNV fold of the public outcome
+        // streams — recomputed here from the reconstruction.
+        assert_eq!(
+            run_digest(&expect_rows, &[]),
+            r.digest,
+            "run digest no longer folds (id, completion, fabric, \
+             retries)"
+        );
+
+        // p99 pinned against a reconstructed histogram.
+        let mut hist = CycleHistogram::new();
+        for row in &expect_rows {
+            hist.record(row.latency);
+        }
+        assert_eq!(r.p99(), hist.quantile(0.99), "p99 drifted");
+        assert_eq!(r.slo_attained, 6);
+
+        // CSV schemas pinned.
+        let csv = report::node_csv(&run).to_string();
+        assert!(
+            csv.starts_with(
+                "req,model,session,fabric,arrival,dispatched,\
+                 completion,latency_cycles,retries,slo_met\n"
+            ),
+            "node CSV schema drifted:\n{csv}"
+        );
+        assert_eq!(csv.lines().count(), 1 + 6);
+        let first = &expect_rows[0];
+        assert!(csv.contains(&format!(
+            "0,ffn,{},0,{},{},{},{},0,1",
+            first.session,
+            first.arrival,
+            first.dispatched,
+            first.completion,
+            first.latency,
+        )));
+        let sheds = report::node_sheds_csv(&run).to_string();
+        assert!(
+            sheds.starts_with(
+                "req,model,session,arrival,shed_at,retries,reason\n"
+            ),
+            "shed CSV schema drifted:\n{sheds}"
+        );
+        assert_eq!(sheds.lines().count(), 1, "shed CSV must be empty");
+        let fab = report::node_fabric_csv(r).to_string();
+        assert!(
+            fab.starts_with(
+                "fabric,served,busy_cycles,utilization,lost_cycles,\
+                 downtime,p50,p99\n"
+            ),
+            "fabric CSV schema drifted:\n{fab}"
+        );
+        assert_eq!(fab.lines().count(), 1 + 2);
+        assert!(fab.contains(&format!("0,3,{},", 3 * cost)));
+
+        // Report phrasing pinned.
+        let doc = report::render_node(r);
+        for needle in [
+            "## Node serve `ffn`",
+            "router `rr`, 2 fabrics x 2 clusters",
+            "* fault plan: none (max retries 3)",
+            "* shed: 0 (0 admission / 0 retry-budget / 0 unroutable)",
+            "* run digest: 0x",
+            "* service cost model (cycles/request):",
+            "  * fabric 1: served 3,",
+        ] {
+            assert!(
+                doc.contains(needle),
+                "node report drifted; missing `{needle}` in:\n{doc}"
+            );
+        }
+        assert!(doc
+            .contains(&format!("run digest: 0x{:016x}", r.digest)));
+    }
+
+    #[test]
+    fn node_golden_is_stable_across_reruns() {
+        let cfg = pinned_cfg();
+        let a = run_node(&GemmService::analytic(), &cfg).unwrap();
+        let b = run_node(&GemmService::analytic(), &cfg).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(
+            report::render_node(&a.report),
+            report::render_node(&b.report)
+        );
+    }
+}
+
 mod stallscope_golden {
     use zerostall::coordinator::profile::{run_profile, ProfileOpts};
     use zerostall::coordinator::report;

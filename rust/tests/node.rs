@@ -1,0 +1,580 @@
+//! NodeSim tests: the run-digest determinism harness (bit-identical
+//! across host thread counts and FastPath settings), the
+//! fault-injection conservation property over random shrinkable
+//! `FaultPlan`s, router-policy properties (p2c outage avoidance,
+//! session affinity, least-loaded vs round-robin tail latency), and
+//! the nightly million-request digest run.
+//!
+//! The node engine itself is single-threaded virtual time; host
+//! threads and `--fast-forward` only touch the per-model cost probes
+//! that run through the real serve engine. The digest harness
+//! therefore pins the whole stack end to end: if any backend tier,
+//! probe, or event-ordering rule wobbles, 64 bits disagree.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use zerostall::backend::BackendKind;
+use zerostall::coordinator::node::{
+    run_digest, run_node, run_node_trace, FaultEvent, FaultPlan,
+    NodeConfig, RouterPolicy, ShedReason,
+};
+use zerostall::coordinator::serve::{
+    solo_latency, ArrivalTrace, Policy, ServeConfig, ServeRequest,
+};
+use zerostall::kernels::GemmService;
+use zerostall::util::prop::{check, Config, Shrink};
+
+fn serve_cfg(models: &[&str], clusters: usize) -> ServeConfig {
+    let mut c = ServeConfig::new(
+        models.iter().map(|s| s.to_string()).collect(),
+    );
+    c.clusters = clusters;
+    c.slo = Some(u64::MAX);
+    c.seed = 2026;
+    c
+}
+
+/// Offered rate (req/Mcycle) that loads `fabrics` fabrics to `rho`
+/// given a mean per-request service cost — probed at runtime so the
+/// tests do not hard-code any backend's absolute cycle counts.
+fn rate_for_load(rho: f64, fabrics: usize, mean_cost: u64) -> f64 {
+    rho * fabrics as f64 * 1.0e6 / mean_cost as f64
+}
+
+fn mean_cost(svc: &GemmService, cfg: &ServeConfig) -> u64 {
+    let costs: Vec<u64> = (0..cfg.models.len())
+        .map(|mi| {
+            solo_latency(svc, cfg, mi, Policy::Continuous).unwrap()
+        })
+        .collect();
+    (costs.iter().sum::<u64>() / costs.len() as u64).max(1)
+}
+
+// =================================================================
+// Checksum determinism harness: the acceptance scenario — 4 fabrics
+// x 4 clusters, 10^5 requests, a mid-trace fabric failure — must
+// produce a bit-identical run (and run digest) across 1/2/8 host
+// threads, with zero lost requests and a stable p99.
+// =================================================================
+
+#[test]
+fn node_digest_bit_identical_across_threads_100k() {
+    let requests = 100_000usize;
+    let svc = GemmService::analytic();
+    let mut base = serve_cfg(&["ffn", "qkv"], 4);
+    base.requests = requests;
+    let cost = mean_cost(&svc, &base);
+    base.rate_per_mcycle = rate_for_load(0.6, 4, cost);
+    base.burst = 0.2;
+    // Mid-trace failure: fabric 1 dies a third of the way through
+    // the arrival span and comes back at two thirds.
+    let span =
+        requests as f64 * 1.0e6 / base.rate_per_mcycle;
+    let down_at = (span / 3.0) as u64;
+    let restore = (2.0 * span / 3.0) as u64;
+
+    let mut runs = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let mut scfg = base.clone();
+        scfg.threads = threads;
+        let mut cfg = NodeConfig::new(scfg, 4);
+        cfg.router = RouterPolicy::PowerOfTwo;
+        cfg.faults = FaultPlan {
+            events: vec![FaultEvent {
+                at: down_at,
+                fabric: 1,
+                restore: Some(restore),
+            }],
+        };
+        let svc = GemmService::analytic();
+        runs.push(run_node(&svc, &cfg).unwrap());
+    }
+    let r0 = &runs[0].report;
+    // Zero lost requests: the fault window has a restore and three
+    // fabrics stay up, so nothing is shed and everything completes.
+    assert_eq!(r0.completed, requests, "lost requests");
+    assert_eq!(r0.shed_total(), 0);
+    assert!(r0.per_fabric[1].downtime > 0, "fault never applied");
+    // Retry ledger: every requeue lands on exactly one request.
+    let retries_seen: u64 = runs[0]
+        .rows
+        .iter()
+        .map(|r| r.retries as u64)
+        .chain(runs[0].sheds.iter().map(|s| s.retries as u64))
+        .sum();
+    assert_eq!(retries_seen, r0.retries_total);
+    // Stable p99: finite and sane for a rho=0.6 node (generous
+    // bound — the point is "not runaway", not a perf pin).
+    assert!(r0.p99() > 0);
+    assert!(
+        r0.p99() < 50 * r0.model_costs.iter().max().unwrap(),
+        "p99 {} looks like an unstable queue",
+        r0.p99()
+    );
+    for run in &runs[1..] {
+        assert_eq!(
+            runs[0], *run,
+            "node run differs across host thread counts"
+        );
+        assert_eq!(runs[0].report.digest, run.report.digest);
+    }
+    // The digest is recomputable from the public outcome streams.
+    assert_eq!(
+        run_digest(&runs[0].rows, &runs[0].sheds),
+        runs[0].report.digest
+    );
+}
+
+#[test]
+fn node_digest_invariant_to_fast_forward_and_threads_cycle() {
+    // The cycle backend actually simulates the cost probes, so keep
+    // the trace at 2 x 10^4; FastPath bit-exactness (DESIGN.md S6)
+    // must carry through the probes into an identical node digest.
+    let requests = 20_000usize;
+    let mut base = serve_cfg(&["ffn"], 2);
+    base.requests = requests;
+    base.rate_per_mcycle = 30.0;
+    base.burst = 0.1;
+    let mut runs = Vec::new();
+    for (threads, ff) in [(2usize, true), (1, true), (2, false)] {
+        let mut scfg = base.clone();
+        scfg.threads = threads;
+        let mut cfg = NodeConfig::new(scfg, 4);
+        cfg.router = RouterPolicy::LeastLoaded;
+        cfg.faults =
+            FaultPlan::parse("t=100000000,fabric=0,restore=200000000")
+                .unwrap();
+        let svc = GemmService::of_kind_ff(BackendKind::Cycle, ff);
+        runs.push(run_node(&svc, &cfg).unwrap());
+    }
+    // Backend name differs per service only in kind, not FastPath,
+    // so whole-run equality is well-defined across all three.
+    assert_eq!(
+        runs[0], runs[1],
+        "node run differs across thread counts on the cycle backend"
+    );
+    assert_eq!(
+        runs[0], runs[2],
+        "node run differs across --fast-forward on|off"
+    );
+    assert_eq!(runs[0].report.completed, requests);
+}
+
+// =================================================================
+// Nightly scale: 10^6 requests behind the PROP_CASES gate (the
+// nightly property job sets it; plain `cargo test` skips).
+// =================================================================
+
+#[test]
+fn node_digest_million_requests_nightly() {
+    if std::env::var("PROP_CASES").is_err() {
+        eprintln!(
+            "skipping 10^6-request digest run (set PROP_CASES to \
+             enable; the nightly property job does)"
+        );
+        return;
+    }
+    let requests = 1_000_000usize;
+    let svc = GemmService::analytic();
+    let mut base = serve_cfg(&["ffn", "qkv"], 4);
+    base.requests = requests;
+    let cost = mean_cost(&svc, &base);
+    base.rate_per_mcycle = rate_for_load(0.7, 4, cost);
+    base.burst = 0.3;
+    let span = requests as f64 * 1.0e6 / base.rate_per_mcycle;
+    let mut runs = Vec::new();
+    for threads in [2usize, 8] {
+        let mut scfg = base.clone();
+        scfg.threads = threads;
+        let mut cfg = NodeConfig::new(scfg, 4);
+        cfg.router = RouterPolicy::PowerOfTwo;
+        cfg.faults = FaultPlan {
+            events: vec![
+                FaultEvent {
+                    at: (span / 4.0) as u64,
+                    fabric: 2,
+                    restore: Some((span / 2.0) as u64),
+                },
+                FaultEvent {
+                    at: (span / 2.0) as u64,
+                    fabric: 0,
+                    restore: Some((3.0 * span / 4.0) as u64),
+                },
+            ],
+        };
+        let svc = GemmService::analytic();
+        runs.push(run_node(&svc, &cfg).unwrap());
+    }
+    assert_eq!(runs[0], runs[1], "10^6-request node run wobbled");
+    let r = &runs[0].report;
+    assert_eq!(r.requests, requests);
+    assert_eq!(r.completed + r.shed_total(), requests);
+}
+
+// =================================================================
+// Fault-injection conservation: over random fault plans, routers,
+// retry budgets, and traces, no request is ever lost or
+// double-completed — every arrival shows up exactly once, as a
+// completion or a shed.
+// =================================================================
+
+#[derive(Clone, Debug)]
+struct FaultScenario {
+    trace: ArrivalTrace,
+    plan: FaultPlan,
+    fabrics: usize,
+    router: usize,
+    max_retries: u32,
+    tight_admission: bool,
+}
+
+impl Shrink for FaultScenario {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out: Vec<FaultScenario> = self
+            .plan
+            .shrinks()
+            .into_iter()
+            .map(|plan| FaultScenario { plan, ..self.clone() })
+            .collect();
+        out.extend(self.trace.shrinks().into_iter().map(|trace| {
+            FaultScenario { trace, ..self.clone() }
+        }));
+        if self.tight_admission {
+            out.push(FaultScenario {
+                tight_admission: false,
+                ..self.clone()
+            });
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_fault_plans_conserve_requests() {
+    let base = Config::default();
+    check(
+        &Config { cases: base.cases, seed: base.seed ^ 0x0DE5 },
+        |rng| {
+            let n = rng.range(4, 20);
+            let mut t = 0u64;
+            let requests = (0..n)
+                .map(|id| {
+                    t += rng.below(400_000);
+                    ServeRequest {
+                        id,
+                        model: rng.range(0, 1),
+                        arrival: t,
+                        seed: rng.next_u64(),
+                    }
+                })
+                .collect();
+            let fabrics = rng.range(1, 4);
+            let n_faults = rng.range(0, 3);
+            let events = (0..n_faults)
+                .map(|_| {
+                    let at = rng.below(3_000_000);
+                    let restore = if rng.bool() {
+                        Some(at + 1 + rng.below(3_000_000))
+                    } else {
+                        None
+                    };
+                    FaultEvent {
+                        at,
+                        fabric: rng.range(0, fabrics - 1),
+                        restore,
+                    }
+                })
+                .collect();
+            FaultScenario {
+                trace: ArrivalTrace { requests },
+                plan: FaultPlan { events },
+                fabrics,
+                router: rng.range(0, 3),
+                max_retries: rng.range(0, 3) as u32,
+                tight_admission: rng.bool(),
+            }
+        },
+        |s| {
+            let mut scfg = serve_cfg(&["ffn", "mlp"], 1);
+            if s.tight_admission {
+                // An SLO of 1 cycle with admission on sheds almost
+                // everything — the conservation ledger must still
+                // balance exactly.
+                scfg.slo = Some(1);
+            }
+            let mut cfg = NodeConfig::new(scfg, s.fabrics.max(1));
+            cfg.faults = s.plan.clone();
+            cfg.max_retries = s.max_retries;
+            cfg.router = match s.router % 4 {
+                0 => RouterPolicy::RoundRobin,
+                1 => RouterPolicy::LeastLoaded,
+                2 => RouterPolicy::PowerOfTwo,
+                _ => RouterPolicy::Affinity,
+            };
+            if s.tight_admission {
+                cfg.admit_factor = Some(1.0);
+            }
+            let svc = GemmService::analytic();
+            let run = run_node_trace(&svc, &cfg, &s.trace)
+                .map_err(|e| e.to_string())?;
+            let n = s.trace.requests.len();
+            if run.rows.len() + run.sheds.len() != n {
+                return Err(format!(
+                    "{} arrivals != {} completions + {} sheds",
+                    n,
+                    run.rows.len(),
+                    run.sheds.len()
+                ));
+            }
+            // Exactly-once: the id sets partition the arrivals.
+            let mut seen = BTreeSet::new();
+            for id in run
+                .rows
+                .iter()
+                .map(|r| r.id)
+                .chain(run.sheds.iter().map(|sh| sh.id))
+            {
+                if !seen.insert(id) {
+                    return Err(format!("request {id} seen twice"));
+                }
+            }
+            let expect: BTreeSet<usize> =
+                s.trace.requests.iter().map(|r| r.id).collect();
+            if seen != expect {
+                return Err("id sets do not partition".into());
+            }
+            for row in &run.rows {
+                if row.completion <= row.arrival {
+                    return Err(format!(
+                        "req {} completed at {} <= arrival {}",
+                        row.id, row.completion, row.arrival
+                    ));
+                }
+                if row.retries > cfg.max_retries {
+                    return Err(format!(
+                        "req {} completed with {} retries > budget",
+                        row.id, row.retries
+                    ));
+                }
+            }
+            for sh in &run.sheds {
+                if sh.reason == ShedReason::RetryBudget
+                    && sh.retries <= cfg.max_retries
+                {
+                    return Err(format!(
+                        "req {} shed on retry budget at {} retries",
+                        sh.id, sh.retries
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// =================================================================
+// Router-policy properties.
+// =================================================================
+
+/// p2c never routes to a down fabric: during an outage window no
+/// request is dispatched on the dead fabric, and with no restore the
+/// fabric never serves again.
+#[test]
+fn p2c_never_dispatches_into_an_outage() {
+    let svc = GemmService::analytic();
+    let mut base = serve_cfg(&["ffn"], 2);
+    base.requests = 300;
+    let cost = mean_cost(&svc, &base);
+    base.rate_per_mcycle = rate_for_load(0.7, 3, cost);
+    let span = base.requests as f64 * 1.0e6 / base.rate_per_mcycle;
+    let down_at = (span / 3.0) as u64;
+    let restore = (2.0 * span / 3.0) as u64;
+
+    for restore_opt in [None, Some(restore)] {
+        let mut cfg = NodeConfig::new(base.clone(), 3);
+        cfg.router = RouterPolicy::PowerOfTwo;
+        cfg.faults = FaultPlan {
+            events: vec![FaultEvent {
+                at: down_at,
+                fabric: 0,
+                restore: restore_opt,
+            }],
+        };
+        let svc = GemmService::analytic();
+        let run = run_node(&svc, &cfg).unwrap();
+        let mut pre_fault_on_f0 = 0;
+        for row in &run.rows {
+            if row.fabric != 0 {
+                continue;
+            }
+            // A completion on the dead fabric either fully predates
+            // the outage or was dispatched at/after the restore; a
+            // dispatch inside the window is impossible.
+            let legal = row.completion < down_at
+                || restore_opt
+                    .is_some_and(|r| row.dispatched >= r);
+            assert!(
+                legal,
+                "request {} ran on fabric 0 inside the outage \
+                 (dispatched {}, completed {})",
+                row.id, row.dispatched, row.completion
+            );
+            if row.completion < down_at {
+                pre_fault_on_f0 += 1;
+            }
+        }
+        assert!(
+            pre_fault_on_f0 > 0,
+            "p2c never used fabric 0 before the fault — scenario \
+             too weak to test anything"
+        );
+        let r = &run.report;
+        assert_eq!(r.completed + r.shed_total(), r.requests);
+    }
+}
+
+/// Affinity keeps a session on one fabric unless that fabric dies;
+/// after a death the session remaps exactly once.
+#[test]
+fn affinity_pins_sessions_until_their_fabric_dies() {
+    let svc = GemmService::analytic();
+    let mut base = serve_cfg(&["ffn"], 2);
+    base.requests = 200;
+    let cost = mean_cost(&svc, &base);
+    base.rate_per_mcycle = rate_for_load(0.6, 3, cost);
+    let span = base.requests as f64 * 1.0e6 / base.rate_per_mcycle;
+    let down_at = (span / 3.0) as u64;
+
+    // No faults: every session lives on exactly one fabric.
+    let mut cfg = NodeConfig::new(base.clone(), 3);
+    cfg.router = RouterPolicy::Affinity;
+    cfg.sessions = 8;
+    let run = run_node(&svc, &cfg).unwrap();
+    assert_eq!(run.report.completed, 200);
+    let mut by_session: BTreeMap<u64, BTreeSet<usize>> =
+        BTreeMap::new();
+    for row in &run.rows {
+        by_session.entry(row.session).or_default().insert(row.fabric);
+    }
+    for (session, fabrics) in &by_session {
+        assert_eq!(
+            fabrics.len(),
+            1,
+            "session {session} spread over fabrics {fabrics:?} \
+             with no faults"
+        );
+    }
+
+    // Fabric 0 dies for good: sessions pinned there move exactly
+    // once, everyone else stays put.
+    let mut cfg = NodeConfig::new(base, 3);
+    cfg.router = RouterPolicy::Affinity;
+    cfg.sessions = 8;
+    cfg.faults = FaultPlan {
+        events: vec![FaultEvent {
+            at: down_at,
+            fabric: 0,
+            restore: None,
+        }],
+    };
+    let svc = GemmService::analytic();
+    let run = run_node(&svc, &cfg).unwrap();
+    let mut by_session: BTreeMap<u64, Vec<(usize, u64)>> =
+        BTreeMap::new();
+    for row in &run.rows {
+        by_session
+            .entry(row.session)
+            .or_default()
+            .push((row.fabric, row.dispatched));
+    }
+    for (session, rows) in &by_session {
+        let fabrics: BTreeSet<usize> =
+            rows.iter().map(|&(f, _)| f).collect();
+        assert!(
+            fabrics.len() <= 2,
+            "session {session} used fabrics {fabrics:?}"
+        );
+        if fabrics.len() == 2 {
+            assert!(
+                fabrics.contains(&0),
+                "session {session} moved between live fabrics \
+                 {fabrics:?}"
+            );
+            for &(f, dispatched) in rows {
+                if f != 0 {
+                    assert!(
+                        dispatched >= down_at,
+                        "session {session} left fabric 0 before it \
+                         died"
+                    );
+                }
+            }
+        }
+    }
+    let r = &run.report;
+    assert_eq!(r.completed + r.shed_total(), r.requests);
+}
+
+/// Least-loaded beats round-robin p99 on a skewed mix (acceptance
+/// bound in the PR 4 style: > 1.3x). The trace is adversarial for a
+/// load-oblivious router and fully deterministic: heavy/light pairs
+/// arrive together, spaced at the balanced service rate, so rr piles
+/// every heavy request onto one fabric (its backlog grows linearly)
+/// while ll keeps both backlogs bounded.
+#[test]
+fn least_loaded_beats_round_robin_p99_on_skewed_mix() {
+    let svc = GemmService::analytic();
+    let base = serve_cfg(&["llm", "mlp"], 2);
+    let c0 =
+        solo_latency(&svc, &base, 0, Policy::Continuous).unwrap();
+    let c1 =
+        solo_latency(&svc, &base, 1, Policy::Continuous).unwrap();
+    let (heavy, light) = if c0 >= c1 { (0, 1) } else { (1, 0) };
+    let (ch, cl) = (c0.max(c1), c0.min(c1));
+    assert!(
+        ch > cl,
+        "zoo models llm/mlp cost the same ({ch}); the skewed-mix \
+         scenario needs asymmetric service costs"
+    );
+    let pairs = 200usize;
+    let gap = (ch + cl) / 2;
+    let requests: Vec<ServeRequest> = (0..pairs)
+        .flat_map(|i| {
+            let t = i as u64 * gap;
+            [
+                ServeRequest {
+                    id: 2 * i,
+                    model: heavy,
+                    arrival: t,
+                    seed: 0xA5A5 ^ i as u64,
+                },
+                ServeRequest {
+                    id: 2 * i + 1,
+                    model: light,
+                    arrival: t,
+                    seed: 0x5A5A ^ i as u64,
+                },
+            ]
+        })
+        .collect();
+    let trace = ArrivalTrace { requests };
+
+    let mut p99 = BTreeMap::new();
+    for router in
+        [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded]
+    {
+        let mut cfg = NodeConfig::new(base.clone(), 2);
+        cfg.router = router;
+        let svc = GemmService::analytic();
+        let run = run_node_trace(&svc, &cfg, &trace).unwrap();
+        assert_eq!(run.report.completed, 2 * pairs);
+        assert_eq!(run.report.shed_total(), 0);
+        p99.insert(router.name(), run.report.p99());
+    }
+    let (rr, ll) = (p99["rr"] as f64, p99["ll"] as f64);
+    assert!(
+        rr > 1.3 * ll,
+        "least-loaded p99 {ll} not 1.3x better than round-robin \
+         p99 {rr} on the skewed mix"
+    );
+}
