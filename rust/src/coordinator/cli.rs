@@ -42,6 +42,7 @@ use crate::coordinator::{
     workload,
 };
 use crate::kernels::{GemmService, LayoutKind};
+use crate::util::log;
 
 pub fn usage() -> &'static str {
     "zerostall — cycle-accurate RISC-V cluster co-design framework\n\
@@ -65,7 +66,10 @@ pub fn usage() -> &'static str {
      \x20           node tier: [--fabrics N] \
      [--router rr|ll|p2c|affinity] \
      [--fault \"t=T,fabric=F[,restore=T'][;...]\"] [--retries N] \
-     [--admit-factor K] [--sessions N]\n\
+     [--admit-factor K] [--sessions N] \
+     [--autoscale \"low=L,high=H,cooldown=C\"]\n\
+     \x20           telemetry: [--telemetry] [--telemetry-window W] \
+     [--trace out.json] [--quiet]\n\
      \x20 profile   --model mlp|ffn|qkv|attn|conv|llm \
      [--config <name>] [--clusters N] [--trace out.json] \
      [--fast-forward true|false] [--out results]\n\
@@ -88,7 +92,12 @@ pub fn usage() -> &'static str {
      CONFIGS: base32fc zonl32fc zonl64fc zonl64db zonl48db\n"
 }
 
-/// Parse `--key value` pairs after the subcommand.
+/// Boolean flags that may appear bare (no value) and mean `true`.
+const BARE_FLAGS: &[&str] = &["quiet", "telemetry"];
+
+/// Parse `--key value` pairs after the subcommand. The flags in
+/// [`BARE_FLAGS`] may also appear bare (`--quiet`) and parse as
+/// `true`; everything else requires an explicit value.
 pub fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
     let mut map = HashMap::new();
     let mut i = 0;
@@ -98,11 +107,19 @@ pub fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
             k.starts_with("--"),
             "expected --flag, got `{k}`"
         );
+        let key = &k[2..];
+        if BARE_FLAGS.contains(&key)
+            && (i + 1 >= args.len() || args[i + 1].starts_with("--"))
+        {
+            map.insert(key.to_string(), "true".to_string());
+            i += 1;
+            continue;
+        }
         anyhow::ensure!(
             i + 1 < args.len(),
             "flag {k} needs a value"
         );
-        map.insert(k[2..].to_string(), args[i + 1].clone());
+        map.insert(key.to_string(), args[i + 1].clone());
         i += 2;
     }
     Ok(map)
@@ -150,6 +167,11 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
         return Ok(());
     };
     let flags = parse_flags(&args[1..])?;
+    log::set_level(if flag(&flags, "quiet", false)? {
+        log::Level::Quiet
+    } else {
+        log::Level::Info
+    });
     let out_dir =
         PathBuf::from(flags.get("out").cloned().unwrap_or_else(|| {
             "results".to_string()
@@ -254,11 +276,14 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             opts.clusters = clusters;
             opts.trace = trace_path.is_some();
             opts.fast_forward = flag(&flags, "fast-forward", true)?;
-            eprintln!(
-                "profile: `{model}` on {} x{clusters}, cycle-accurate \
-                 StallScope{}...",
-                id.name(),
-                if opts.trace { " + Chrome trace" } else { "" },
+            log::info(
+                "profile",
+                &[
+                    ("model", log::v(&model)),
+                    ("config", log::v(id.name())),
+                    ("clusters", log::v(clusters)),
+                    ("chrome_trace", log::v(opts.trace)),
+                ],
             );
             let (rep, trace) = profile::run_profile(&opts)?;
             let doc = report::render_profile(&rep);
@@ -271,18 +296,21 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                 rep.layers.iter().map(|l| l.roofline.clone()).collect();
             report::roofline_csv(&points)
                 .write(&out_dir.join(format!("{stem}-roofline.csv")))?;
-            eprintln!(
-                "wrote {}/{stem}.md, {stem}-stalls.csv, \
-                 {stem}-roofline.csv",
-                out_dir.display()
+            log::info(
+                "profile_artifacts",
+                &[
+                    ("dir", log::v(out_dir.display())),
+                    ("stem", log::v(&stem)),
+                ],
             );
             if let (Some(path), Some(tr)) = (trace_path, trace) {
                 tr.write(&path)?;
-                eprintln!(
-                    "wrote Chrome trace {} ({} events) — load in \
-                     chrome://tracing or Perfetto",
-                    path.display(),
-                    tr.events.len()
+                log::info(
+                    "chrome_trace",
+                    &[
+                        ("path", log::v(path.display())),
+                        ("events", log::v(tr.events.len())),
+                    ],
                 );
             }
         }
@@ -314,10 +342,14 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                 opts.clusters = clusters;
                 opts.layout = layout;
                 opts.gate = gate;
-                eprintln!(
-                    "lint: `{model}` on {} x{clusters}{}...",
-                    id.name(),
-                    if gate { " + differential gate" } else { "" },
+                log::info(
+                    "lint",
+                    &[
+                        ("model", log::v(model)),
+                        ("config", log::v(id.name())),
+                        ("clusters", log::v(clusters)),
+                        ("gate", log::v(gate)),
+                    ],
                 );
                 let rep = lint::run_lint(&opts)?;
                 let doc = report::render_lint(&rep);
@@ -329,9 +361,12 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                 report::lint_theorems_csv(&rep).write(
                     &out_dir.join(format!("{stem}-theorems.csv")),
                 )?;
-                eprintln!(
-                    "wrote {}/{stem}.md, {stem}.csv, {stem}-theorems.csv",
-                    out_dir.display()
+                log::info(
+                    "lint_artifacts",
+                    &[
+                        ("dir", log::v(out_dir.display())),
+                        ("stem", log::v(&stem)),
+                    ],
                 );
                 all_fails.extend(
                     rep.failures()
@@ -362,13 +397,17 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             let seed = flag(&flags, "seed", 2026u64)?;
             let clusters = flag(&flags, "clusters", 1usize)?;
             let g = zoo::build(&model)?;
-            eprintln!(
-                "net: `{model}` ({} ops, {} MACs) on {} x{clusters} \
-                 via `{}` on {threads} threads...",
-                g.ops.len(),
-                g.macs(),
-                id.name(),
-                backend.name(),
+            log::info(
+                "net",
+                &[
+                    ("model", log::v(&model)),
+                    ("ops", log::v(g.ops.len())),
+                    ("macs", log::v(g.macs())),
+                    ("config", log::v(id.name())),
+                    ("clusters", log::v(clusters)),
+                    ("backend", log::v(backend.name())),
+                    ("threads", log::v(threads)),
+                ],
             );
             let profile_on = flag(&flags, "profile", false)?;
             let ff = flag(&flags, "fast-forward", true)?;
@@ -392,9 +431,12 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             report::save(&out_dir, &format!("{stem}.md"), &doc)?;
             report::net_csv(&run.report)
                 .write(&out_dir.join(format!("{stem}.csv")))?;
-            eprintln!(
-                "wrote {}/{stem}.{{md,csv}}",
-                out_dir.display()
+            log::info(
+                "net_artifacts",
+                &[
+                    ("dir", log::v(out_dir.display())),
+                    ("stem", log::v(&stem)),
+                ],
             );
         }
         "serve" => {
@@ -464,12 +506,26 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                          (event|legacy)"
                     )
                 })?;
+            // TimeScope: `--telemetry` enables the bus at the default
+            // window; `--telemetry-window W` sets the window (and
+            // implies the bus is on).
+            if flag(&flags, "telemetry", false)?
+                || flags.contains_key("telemetry-window")
+            {
+                cfg.telemetry = Some(flag(
+                    &flags,
+                    "telemetry-window",
+                    crate::profile::telemetry::DEFAULT_WINDOW,
+                )?);
+            }
+            let trace_path = flags.get("trace").map(PathBuf::from);
             // Node tier: any node flag routes the run through
             // NodeSim (N fabrics behind a front-end router) instead
             // of a single-fabric serve.
             let node_mode = flags.contains_key("fabrics")
                 || flags.contains_key("router")
-                || flags.contains_key("fault");
+                || flags.contains_key("fault")
+                || flags.contains_key("autoscale");
             if node_mode {
                 let mut ncfg = node::NodeConfig::new(
                     cfg.clone(),
@@ -495,23 +551,37 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                     ncfg.admit_factor =
                         Some(flag(&flags, "admit-factor", 1.0f64)?);
                 }
+                if let Some(s) = flags.get("autoscale") {
+                    ncfg.autoscale =
+                        Some(node::AutoscalePolicy::parse(s)?);
+                }
                 let ff = flag(&flags, "fast-forward", true)?;
                 let svc = GemmService::of_kind_ff(backend, ff);
-                eprintln!(
-                    "node serve: {} requests of `{}` at {} \
-                     req/Mcycle over {} fabrics x{} via `{}`, \
-                     router `{}`, faults `{}`...",
-                    cfg.requests,
-                    cfg.models.join("+"),
-                    cfg.rate_per_mcycle,
-                    ncfg.fabrics,
-                    cfg.clusters,
-                    backend.name(),
-                    ncfg.router.name(),
-                    ncfg.faults.summary(),
+                log::info(
+                    "node_serve",
+                    &[
+                        ("requests", log::v(cfg.requests)),
+                        ("model", log::v(cfg.models.join("+"))),
+                        ("rate", log::v(cfg.rate_per_mcycle)),
+                        ("fabrics", log::v(ncfg.fabrics)),
+                        ("clusters", log::v(cfg.clusters)),
+                        ("backend", log::v(backend.name())),
+                        ("router", log::v(ncfg.router.name())),
+                        ("faults", ncfg.faults.summary()),
+                        (
+                            "autoscale",
+                            ncfg.autoscale
+                                .map(|p| p.summary())
+                                .unwrap_or_else(|| "off".into()),
+                        ),
+                    ],
                 );
                 let run = node::run_node(&svc, &ncfg)?;
-                let doc = report::render_node(&run.report);
+                let mut doc = report::render_node(&run.report);
+                if let Some(tel) = &run.telemetry {
+                    doc.push('\n');
+                    doc.push_str(&report::render_telemetry(tel));
+                }
                 println!("{doc}");
                 let stem = format!(
                     "node-{}-{}",
@@ -527,25 +597,52 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                 report::node_sheds_csv(&run).write(
                     &out_dir.join(format!("{stem}-sheds.csv")),
                 )?;
-                eprintln!(
-                    "wrote {}/{stem}.{{md,csv}} + per-fabric and \
-                     shed CSVs; run digest 0x{:016x}",
-                    out_dir.display(),
-                    run.report.digest,
+                if let Some(tel) = &run.telemetry {
+                    report::telemetry_csv(tel).write(
+                        &out_dir
+                            .join(format!("{stem}-telemetry.csv")),
+                    )?;
+                    if let Some(path) = &trace_path {
+                        let tr = tel.to_chrome("fabric");
+                        tr.write(path)?;
+                        log::info(
+                            "chrome_trace",
+                            &[
+                                ("path", log::v(path.display())),
+                                ("events", log::v(tr.events.len())),
+                            ],
+                        );
+                    }
+                }
+                log::info(
+                    "node_artifacts",
+                    &[
+                        ("dir", log::v(out_dir.display())),
+                        ("stem", log::v(&stem)),
+                        (
+                            "digest",
+                            format!("0x{:016x}", run.report.digest),
+                        ),
+                        (
+                            "telemetry",
+                            log::v(run.telemetry.is_some()),
+                        ),
+                    ],
                 );
                 return Ok(());
             }
-            eprintln!(
-                "serve: {} requests of `{}` at {} req/Mcycle \
-                 (burst {}) on {} x{} via `{}`, policy `{}`...",
-                cfg.requests,
-                cfg.models.join("+"),
-                cfg.rate_per_mcycle,
-                cfg.burst,
-                id.name(),
-                cfg.clusters,
-                backend.name(),
-                policy.name(),
+            log::info(
+                "serve",
+                &[
+                    ("requests", log::v(cfg.requests)),
+                    ("model", log::v(cfg.models.join("+"))),
+                    ("rate", log::v(cfg.rate_per_mcycle)),
+                    ("burst", log::v(cfg.burst)),
+                    ("config", log::v(id.name())),
+                    ("clusters", log::v(cfg.clusters)),
+                    ("backend", log::v(backend.name())),
+                    ("policy", log::v(policy.name())),
+                ],
             );
             let profile_on = flag(&flags, "profile", false)?;
             let ff = flag(&flags, "fast-forward", true)?;
@@ -553,24 +650,36 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             let run = serve::serve(&svc, &cfg)?;
             if cfg.engine == serve::ServeEngine::Event {
                 let es = run.engine_stats;
-                eprintln!(
-                    "event core: {} events, dispatch memo {} hits / \
-                     {} misses",
-                    es.events, es.memo_hits, es.memo_misses,
+                log::info(
+                    "serve_event_core",
+                    &[
+                        ("events", log::v(es.events)),
+                        ("memo_hits", log::v(es.memo_hits)),
+                        ("memo_misses", log::v(es.memo_misses)),
+                    ],
                 );
             }
             if let Some(ms) = svc.memo_stats() {
-                eprintln!(
-                    "memo tier: {} hits / {} misses ({:.0}% replayed)",
-                    ms.hits,
-                    ms.misses,
-                    ms.hit_rate() * 100.0,
+                log::info(
+                    "memo_tier",
+                    &[
+                        ("hits", log::v(ms.hits)),
+                        ("misses", log::v(ms.misses)),
+                        (
+                            "replayed_pct",
+                            format!("{:.0}", ms.hit_rate() * 100.0),
+                        ),
+                    ],
                 );
             }
             let mut doc = report::render_serve(&run.report);
             if profile_on {
                 doc.push('\n');
                 doc.push_str(&report::render_serve_profile(&run.report));
+            }
+            if let Some(tel) = &run.telemetry {
+                doc.push('\n');
+                doc.push_str(&report::render_telemetry(tel));
             }
             println!("{doc}");
             let stem = format!(
@@ -581,9 +690,29 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             report::save(&out_dir, &format!("{stem}.md"), &doc)?;
             report::serve_csv(&run)
                 .write(&out_dir.join(format!("{stem}.csv")))?;
-            eprintln!(
-                "wrote {}/{stem}.{{md,csv}}",
-                out_dir.display()
+            if let Some(tel) = &run.telemetry {
+                report::telemetry_csv(tel).write(
+                    &out_dir.join(format!("{stem}-telemetry.csv")),
+                )?;
+                if let Some(path) = &trace_path {
+                    let tr = tel.to_chrome("serve");
+                    tr.write(path)?;
+                    log::info(
+                        "chrome_trace",
+                        &[
+                            ("path", log::v(path.display())),
+                            ("events", log::v(tr.events.len())),
+                        ],
+                    );
+                }
+            }
+            log::info(
+                "serve_artifacts",
+                &[
+                    ("dir", log::v(out_dir.display())),
+                    ("stem", log::v(&stem)),
+                    ("telemetry", log::v(run.telemetry.is_some())),
+                ],
             );
         }
         "sweep" => {
@@ -603,16 +732,25 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             };
             let dims = workload::dim_grid().len();
             let points = dims * dims * dims * configs.len();
-            eprintln!(
-                "sweep: {points} points ({} configs x {dims}^3 dims) \
-                 via the `{}` backend on {threads} threads...",
-                configs.len(),
-                backend.name(),
+            log::info(
+                "sweep",
+                &[
+                    ("points", log::v(points)),
+                    ("configs", log::v(configs.len())),
+                    ("dims", log::v(dims)),
+                    ("backend", log::v(backend.name())),
+                    ("threads", log::v(threads)),
+                ],
             );
             if backend == BackendKind::Cycle {
-                eprintln!(
-                    "note: cycle-accurate full-grid sweeps take hours; \
-                     use --backend analytic for triage"
+                log::info(
+                    "sweep_note",
+                    &[(
+                        "hint",
+                        "cycle-accurate full-grid sweeps take \
+                         hours; use --backend analytic for triage"
+                            .into(),
+                    )],
                 );
             }
             let svc = GemmService::of_kind(backend);
@@ -627,11 +765,16 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             let doc = report::render_sweep(&rows, backend.name(), elapsed);
             println!("{doc}");
             let stats = svc.stats();
-            eprintln!(
-                "plan cache: {} hits / {} misses ({:.0}% hit rate)",
-                stats.plan_hits,
-                stats.plan_misses,
-                stats.hit_rate() * 100.0,
+            log::info(
+                "plan_cache",
+                &[
+                    ("hits", log::v(stats.plan_hits)),
+                    ("misses", log::v(stats.plan_misses)),
+                    (
+                        "hit_rate_pct",
+                        format!("{:.0}", stats.hit_rate() * 100.0),
+                    ),
+                ],
             );
             let name = format!("sweep-{}.csv", backend.name());
             report::fig5_csv(&rows).write(&out_dir.join(&name))?;
@@ -640,19 +783,29 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
                 &format!("sweep-{}.md", backend.name()),
                 &doc,
             )?;
-            eprintln!(
-                "wrote {}/sweep-{}.{{md,csv}}",
-                out_dir.display(),
-                backend.name()
+            log::info(
+                "sweep_artifacts",
+                &[
+                    ("dir", log::v(out_dir.display())),
+                    (
+                        "stem",
+                        format!("sweep-{}", backend.name()),
+                    ),
+                ],
             );
         }
         "calibrate" => {
             let threads =
                 flag(&flags, "threads", runner::default_threads())?;
-            eprintln!(
-                "calibrate: {} grid points x 5 configs, cycle-accurate \
-                 ground truth on {threads} threads...",
-                experiments::calibration_grid().len()
+            log::info(
+                "calibrate",
+                &[
+                    (
+                        "grid_points",
+                        log::v(experiments::calibration_grid().len()),
+                    ),
+                    ("threads", log::v(threads)),
+                ],
             );
             let out = experiments::calibrate(threads)?;
             let doc = format!(
@@ -664,9 +817,9 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             report::save(&out_dir, "calibration.md", &doc)?;
             report::error_csv(&out.errors)
                 .write(&out_dir.join("calibration_errors.csv"))?;
-            eprintln!(
-                "wrote {}/calibration.md and calibration_errors.csv",
-                out_dir.display()
+            log::info(
+                "calibrate_artifacts",
+                &[("dir", log::v(out_dir.display()))],
             );
         }
         "fig5" => {
@@ -675,10 +828,13 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             let threads =
                 flag(&flags, "threads", runner::default_threads())?;
             let backend = backend_of(&flags, BackendKind::Cycle)?;
-            eprintln!(
-                "fig5: {samples} sizes x 5 configs via `{}` on {threads} \
-                 threads...",
-                backend.name()
+            log::info(
+                "fig5",
+                &[
+                    ("samples", log::v(samples)),
+                    ("backend", log::v(backend.name())),
+                    ("threads", log::v(threads)),
+                ],
             );
             let svc = GemmService::of_kind(backend);
             let rows = experiments::fig5_with(&svc, samples, seed, threads)?;
@@ -692,7 +848,10 @@ pub fn main_with_args(args: Vec<String>) -> anyhow::Result<()> {
             println!("{doc}");
             report::save(&out_dir, "fig5.md", &doc)?;
             report::fig5_csv(&rows).write(&out_dir.join("fig5.csv"))?;
-            eprintln!("wrote {}/fig5.{{md,csv}}", out_dir.display());
+            log::info(
+                "fig5_artifacts",
+                &[("dir", log::v(out_dir.display()))],
+            );
         }
         "table1" => {
             let rows = experiments::table1();
@@ -1111,6 +1270,101 @@ mod tests {
             "2".into(),
             "--admit-factor".into(),
             "-1".into(),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn parse_flags_accepts_bare_boolean_flags() {
+        // `--telemetry` / `--quiet` may appear bare (no value) even
+        // directly before another flag; everything else still needs
+        // its value.
+        let f = parse_flags(&[
+            "--telemetry".into(),
+            "--requests".into(),
+            "4".into(),
+            "--quiet".into(),
+        ])
+        .unwrap();
+        assert_eq!(f.get("telemetry").unwrap(), "true");
+        assert_eq!(f.get("quiet").unwrap(), "true");
+        assert_eq!(f.get("requests").unwrap(), "4");
+        // An explicit value still parses.
+        let f = parse_flags(&["--telemetry".into(), "false".into()])
+            .unwrap();
+        assert_eq!(f.get("telemetry").unwrap(), "false");
+    }
+
+    #[test]
+    fn serve_command_telemetry_writes_csv_and_trace() {
+        let dir =
+            std::env::temp_dir().join("zerostall-serve-cli-tel-test");
+        let trace = dir.join("spans.trace.json");
+        main_with_args(vec![
+            "serve".into(),
+            "--model".into(),
+            "ffn".into(),
+            "--requests".into(),
+            "8".into(),
+            "--telemetry".into(),
+            "--trace".into(),
+            trace.display().to_string(),
+            "--out".into(),
+            dir.display().to_string(),
+        ])
+        .unwrap();
+        let csv = std::fs::read_to_string(
+            dir.join("serve-ffn-cb-telemetry.csv"),
+        )
+        .unwrap();
+        assert!(csv.starts_with(
+            "metric,labels,window,t_start,t_end,kind,value"
+        ));
+        assert!(csv.contains("arrivals"));
+        let json = std::fs::read_to_string(&trace).unwrap();
+        assert!(json.contains("traceEvents"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_command_autoscale_enters_node_mode() {
+        // `--autoscale` alone must switch into node mode, imply
+        // telemetry, and surface the policy in the report.
+        let dir =
+            std::env::temp_dir().join("zerostall-node-cli-auto-test");
+        main_with_args(vec![
+            "serve".into(),
+            "--model".into(),
+            "ffn".into(),
+            "--requests".into(),
+            "8".into(),
+            "--rate".into(),
+            "5".into(),
+            "--autoscale".into(),
+            "low=0.2,high=0.7,cooldown=3".into(),
+            "--out".into(),
+            dir.display().to_string(),
+        ])
+        .unwrap();
+        assert!(dir.join("node-ffn-ll-telemetry.csv").exists());
+        let md = std::fs::read_to_string(dir.join("node-ffn-ll.md"))
+            .unwrap();
+        assert!(md.contains("autoscale: low=0.2,high=0.7,cooldown=3"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_command_rejects_bad_autoscale() {
+        assert!(main_with_args(vec![
+            "serve".into(),
+            "--autoscale".into(),
+            "low=0.9,high=0.1".into(),
+        ])
+        .is_err());
+        assert!(main_with_args(vec![
+            "serve".into(),
+            "--autoscale".into(),
+            "verve=1".into(),
         ])
         .is_err());
     }

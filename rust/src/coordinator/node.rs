@@ -52,6 +52,7 @@ use crate::backend::BackendKind;
 use crate::cluster::ConfigId;
 use crate::fabric::NodeTopology;
 use crate::kernels::{GemmService, ServiceStats};
+use crate::profile::telemetry::{self, SpanKind, Telemetry};
 use crate::util::prop::Shrink;
 use crate::util::rng::Rng;
 use crate::util::stats::{ratio, CycleHistogram, Fnv64};
@@ -228,6 +229,99 @@ impl Shrink for FaultPlan {
     }
 }
 
+// ----------------------------------------------------- autoscaling --
+
+/// Signal-driven autoscaler policy (TimeScope's first consumer,
+/// DESIGN.md §15): at every telemetry-window boundary the node reads
+/// the *just-recorded* windowed utilization and queue-depth gauges
+/// and parks (low) / unparks (high) fabrics with hysteresis.
+///
+/// * a fabric is **parked** when the mean utilization of active
+///   fabrics over the closed window sits below `low` — only an idle
+///   fabric (nothing queued or in service) is eligible, so parking
+///   can never orphan work;
+/// * a fabric is **unparked** when mean utilization exceeds `high`
+///   or queue depth spikes past twice the active-fabric count;
+/// * `cooldown` windows must pass between scaling actions, which —
+///   together with `low < high` — is the hysteresis band that keeps
+///   the controller from oscillating on a signal that hovers near
+///   one threshold.
+///
+/// Parking is a routing property: a parked fabric takes no new work
+/// but stays `up` (faults and restores still apply). When every
+/// routable fabric is down, the router force-unparks before it would
+/// park a request or shed it, so autoscaling never *adds* sheds in a
+/// scenario fixed provisioning would survive.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoscalePolicy {
+    /// Park when mean active-fabric utilization < `low` (fraction).
+    pub low: f64,
+    /// Unpark when mean active-fabric utilization > `high`.
+    pub high: f64,
+    /// Minimum telemetry windows between scaling actions.
+    pub cooldown: u64,
+}
+
+impl AutoscalePolicy {
+    /// Parse the CLI syntax `low=L,high=H,cooldown=C` (any subset;
+    /// defaults `low=0.2,high=0.7,cooldown=3`).
+    pub fn parse(s: &str) -> Result<AutoscalePolicy> {
+        let mut p = AutoscalePolicy {
+            low: 0.2,
+            high: 0.7,
+            cooldown: 3,
+        };
+        for kv in s.split(',') {
+            let kv = kv.trim();
+            if kv.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = kv.split_once('=') else {
+                bail!("autoscale field `{kv}` is not key=value");
+            };
+            match k.trim() {
+                "low" => p.low = v.trim().parse::<f64>()?,
+                "high" => p.high = v.trim().parse::<f64>()?,
+                "cooldown" => {
+                    p.cooldown = v.trim().parse::<u64>()?
+                }
+                other => bail!(
+                    "unknown autoscale field `{other}` \
+                     (low|high|cooldown)"
+                ),
+            }
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.low.is_finite() && self.low >= 0.0,
+            "autoscale low must be a nonnegative fraction"
+        );
+        ensure!(
+            self.high.is_finite() && self.high > self.low,
+            "autoscale needs low < high (hysteresis band), got \
+             low={} high={}",
+            self.low,
+            self.high
+        );
+        ensure!(
+            self.cooldown >= 1,
+            "autoscale cooldown must be at least 1 window"
+        );
+        Ok(())
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "low={},high={},cooldown={}",
+            self.low, self.high, self.cooldown
+        )
+    }
+}
+
 // --------------------------------------------------------- config --
 
 /// Node-run parameters: a per-fabric [`ServeConfig`] (shape + arrival
@@ -249,11 +343,15 @@ pub struct NodeConfig {
     /// Session-id space for the affinity router (a request's session
     /// is its seed modulo this).
     pub sessions: usize,
+    /// Signal-driven fabric park/unpark policy. Implies telemetry
+    /// (the policy reads the windowed gauges); `None` keeps fixed
+    /// provisioning.
+    pub autoscale: Option<AutoscalePolicy>,
 }
 
 impl NodeConfig {
     /// Defaults: least-loaded routing, no faults, 3 retries, no
-    /// admission control, 16 sessions.
+    /// admission control, 16 sessions, fixed provisioning.
     pub fn new(serve: ServeConfig, fabrics: usize) -> NodeConfig {
         NodeConfig {
             serve,
@@ -263,6 +361,7 @@ impl NodeConfig {
             max_retries: 3,
             admit_factor: None,
             sessions: 16,
+            autoscale: None,
         }
     }
 
@@ -366,6 +465,7 @@ pub struct NodeReport {
     pub seed: u64,
     pub faults: FaultPlan,
     pub max_retries: u32,
+    pub autoscale: Option<AutoscalePolicy>,
     pub requests: usize,
     pub completed: usize,
     pub shed_admission: usize,
@@ -388,7 +488,14 @@ pub struct NodeReport {
     pub plan_stats: ServiceStats,
     /// Heap events processed.
     pub events: u64,
-    /// FNV-1a fold of the outcome streams ([`run_digest`]).
+    /// Provisioned fabric-cycles: Σ over fabrics of cycles spent
+    /// `up && !parked` within the makespan — the energy/provisioning
+    /// proxy the autoscaler minimizes. Fixed provisioning with no
+    /// faults makes this `fabrics x makespan`.
+    pub active_cycles: u64,
+    /// FNV-1a fold of the outcome streams ([`run_digest`]); with
+    /// telemetry enabled, the sealed telemetry stream is folded on
+    /// top, so the windowed signals are digest-checked too.
     pub digest: u64,
 }
 
@@ -443,6 +550,9 @@ pub struct NodeRun {
     pub models: Vec<String>,
     pub rows: Vec<NodeRow>,
     pub sheds: Vec<ShedRow>,
+    /// Sealed TimeScope stream (`Some` when telemetry or autoscaling
+    /// was enabled). Compared bit for bit by the determinism tests.
+    pub telemetry: Option<Telemetry>,
 }
 
 /// The canonical run digest: FNV-1a 64 over `(id, completion cycle,
@@ -474,18 +584,23 @@ pub fn run_digest(rows: &[NodeRow], sheds: &[ShedRow]) -> u64 {
 
 /// Heap event kinds, in tie-break order at equal cycles: a fault
 /// lands before the completion it kills, a restore lands before work
-/// routes to it, completions commit before same-cycle arrivals.
+/// routes to it, completions commit before the telemetry sampler
+/// closes the window they belong to, and the sampler reads state
+/// before same-cycle arrivals route.
 const EV_DOWN: u8 = 0;
 const EV_UP: u8 = 1;
 const EV_DONE: u8 = 2;
-const EV_ARRIVE: u8 = 3;
+const EV_SAMPLE: u8 = 3;
+const EV_ARRIVE: u8 = 4;
 
 struct FabricSim {
     up: bool,
     /// Bumped on every DOWN; a DONE event carrying a stale epoch is
     /// a completion from before the fault and is discarded.
     epoch: u32,
-    queue: VecDeque<u32>,
+    /// `(request index, enqueue cycle)` — the enqueue cycle feeds
+    /// the per-attempt queue lifecycle span.
+    queue: VecDeque<(u32, u64)>,
     in_service: Option<u32>,
     service_start: u64,
     /// Virtual cycle the backlog drains at (load estimate).
@@ -495,6 +610,13 @@ struct FabricSim {
     lost: u64,
     down_at: u64,
     downtime: u64,
+    /// Autoscaler state: a parked fabric takes no new routes but
+    /// stays `up` (faults still apply).
+    parked: bool,
+    /// Start of the current `up && !parked` period.
+    active_since: u64,
+    /// Accumulated provisioned (`up && !parked`) cycles.
+    active: u64,
     hist: CycleHistogram,
 }
 
@@ -512,8 +634,16 @@ impl FabricSim {
             lost: 0,
             down_at: 0,
             downtime: 0,
+            parked: false,
+            active_since: 0,
+            active: 0,
             hist: CycleHistogram::new(),
         }
+    }
+
+    /// Routable: up and not parked by the autoscaler.
+    fn routable(&self) -> bool {
+        self.up && !self.parked
     }
 }
 
@@ -553,6 +683,13 @@ struct Engine<'a> {
     slo_attained: usize,
     makespan: u64,
     events: u64,
+    /// TimeScope stream (`Some` when telemetry is enabled).
+    tel: Option<Telemetry>,
+    /// Pre-rendered `fabric=F` label strings (avoids re-formatting
+    /// on every telemetry record).
+    fab_labels: Vec<String>,
+    /// Window index of the last autoscaler action (cooldown gate).
+    last_scale: u64,
 }
 
 impl Engine<'_> {
@@ -562,9 +699,9 @@ impl Engine<'_> {
 
     fn least_loaded(&self, now: u64) -> usize {
         (0..self.fabrics.len())
-            .filter(|&f| self.fabrics[f].up)
+            .filter(|&f| self.fabrics[f].routable())
             .min_by_key(|&f| (self.load(f, now), f))
-            .expect("least_loaded with no fabric up")
+            .expect("least_loaded with no fabric routable")
     }
 
     fn shed(&mut self, ri: u32, at: u64, reason: ShedReason) {
@@ -574,7 +711,7 @@ impl Engine<'_> {
             ShedReason::Unroutable => self.shed_unroutable += 1,
         }
         let r = &self.reqs[ri as usize];
-        self.sheds.push(ShedRow {
+        let row = ShedRow {
             id: r.id,
             model: r.model,
             session: r.session,
@@ -582,7 +719,18 @@ impl Engine<'_> {
             at,
             retries: self.retries[ri as usize],
             reason,
-        });
+        };
+        if let Some(tel) = self.tel.as_mut() {
+            tel.count("sheds", reason.name(), at, 1);
+            tel.instant(
+                SpanKind::Shed,
+                0,
+                row.id as u64,
+                at,
+                reason.code(),
+            );
+        }
+        self.sheds.push(row);
     }
 
     /// If `f` is up and idle, begin serving its queue head and
@@ -592,36 +740,60 @@ impl Engine<'_> {
         {
             return;
         }
-        let Some(ri) = self.fabrics[f].queue.pop_front() else {
+        let Some((ri, enq)) = self.fabrics[f].queue.pop_front() else {
             return;
         };
         let cost = self.costs[self.reqs[ri as usize].model];
         let fb = &mut self.fabrics[f];
         fb.in_service = Some(ri);
         fb.service_start = now;
+        let epoch = fb.epoch;
+        let depth = fb.queue.len() as u64;
+        if let Some(tel) = self.tel.as_mut() {
+            // One queue span per routing attempt (retries get one
+            // span per fabric they waited on).
+            tel.span(
+                SpanKind::Queue,
+                f as u32,
+                self.reqs[ri as usize].id as u64,
+                enq,
+                now,
+                self.retries[ri as usize] as u64,
+            );
+            tel.gauge("queue_depth", &self.fab_labels[f], now, depth);
+        }
         self.heap.push(Reverse((
             now.saturating_add(cost),
             EV_DONE,
             f as u32,
-            fb.epoch,
+            epoch,
         )));
     }
 
     /// Route one request through the configured policy at `now`.
     fn route(&mut self, ri: u32, now: u64) {
         let n = self.fabrics.len();
-        if !self.fabrics.iter().any(|f| f.up) {
-            if self.future_ups > 0 {
+        if !self.fabrics.iter().any(|f| f.routable()) {
+            // Safety valve: before parking the request (or shedding
+            // it), force-unpark an up-but-parked fabric — the
+            // autoscaler must never turn a survivable scenario into
+            // a shed.
+            if let Some(f) =
+                (0..n).find(|&f| self.fabrics[f].up)
+            {
+                self.unpark(f, now);
+            } else if self.future_ups > 0 {
                 self.pending.push_back(ri);
+                return;
             } else {
                 self.shed(ri, now, ShedReason::Unroutable);
+                return;
             }
-            return;
         }
         let f = match self.cfg.router {
             RouterPolicy::RoundRobin => {
                 let mut pick = self.rr_next;
-                while !self.fabrics[pick].up {
+                while !self.fabrics[pick].routable() {
                     pick = (pick + 1) % n;
                 }
                 self.rr_next = (pick + 1) % n;
@@ -630,7 +802,7 @@ impl Engine<'_> {
             RouterPolicy::LeastLoaded => self.least_loaded(now),
             RouterPolicy::PowerOfTwo => {
                 let ups: Vec<usize> = (0..n)
-                    .filter(|&f| self.fabrics[f].up)
+                    .filter(|&f| self.fabrics[f].routable())
                     .collect();
                 if ups.len() == 1 {
                     ups[0]
@@ -658,7 +830,7 @@ impl Engine<'_> {
             RouterPolicy::Affinity => {
                 let s = self.reqs[ri as usize].session;
                 match self.sticky.get(&s) {
-                    Some(&f) if self.fabrics[f].up => f,
+                    Some(&f) if self.fabrics[f].routable() => f,
                     _ => {
                         let f = self.least_loaded(now);
                         self.sticky.insert(s, f);
@@ -682,7 +854,11 @@ impl Engine<'_> {
         }
         let fb = &mut self.fabrics[f];
         fb.backlog_end = fb.backlog_end.max(now).saturating_add(cost);
-        fb.queue.push_back(ri);
+        fb.queue.push_back((ri, now));
+        let depth = fb.queue.len() as u64;
+        if let Some(tel) = self.tel.as_mut() {
+            tel.gauge("queue_depth", &self.fab_labels[f], now, depth);
+        }
         self.start_next(f, now);
     }
 
@@ -692,20 +868,46 @@ impl Engine<'_> {
         }
         let fb = &mut self.fabrics[f];
         fb.up = false;
+        if !fb.parked {
+            fb.active += t.saturating_sub(fb.active_since);
+        }
         fb.epoch = fb.epoch.wrapping_add(1);
         fb.down_at = t;
         fb.backlog_end = t;
         // Orphans requeue in a fixed order: the interrupted request
         // first, then the queue front to back.
         let mut orphans: Vec<u32> = Vec::new();
+        let mut lost_span = None;
         if let Some(ri) = fb.in_service.take() {
             fb.lost += t - fb.service_start;
+            lost_span = Some((fb.service_start, t));
             orphans.push(ri);
         }
-        orphans.extend(fb.queue.drain(..));
+        orphans.extend(fb.queue.drain(..).map(|(ri, _)| ri));
+        if let Some(tel) = self.tel.as_mut() {
+            if let Some((start, end)) = lost_span {
+                tel.count_span(
+                    "fabric_lost_cycles",
+                    &self.fab_labels[f],
+                    start,
+                    end,
+                );
+            }
+            tel.gauge("queue_depth", &self.fab_labels[f], t, 0);
+        }
         for ri in orphans {
             self.retries[ri as usize] += 1;
             self.retries_total += 1;
+            if let Some(tel) = self.tel.as_mut() {
+                tel.count("retries", "", t, 1);
+                tel.instant(
+                    SpanKind::Retry,
+                    f as u32,
+                    self.reqs[ri as usize].id as u64,
+                    t,
+                    self.retries[ri as usize] as u64,
+                );
+            }
             if self.retries[ri as usize] > self.cfg.max_retries {
                 self.shed(ri, t, ShedReason::RetryBudget);
             } else {
@@ -720,6 +922,19 @@ impl Engine<'_> {
             fb.up = true;
             fb.downtime += t - fb.down_at;
             fb.backlog_end = t;
+            if !fb.parked {
+                fb.active_since = t;
+            }
+            let down_at = fb.down_at;
+            if let Some(tel) = self.tel.as_mut() {
+                tel.span(SpanKind::Outage, f as u32, 0, down_at, t, 0);
+                tel.count_span(
+                    "fabric_downtime_cycles",
+                    &self.fab_labels[f],
+                    down_at,
+                    t,
+                );
+            }
         }
         // A fabric is up, so parked requests are routable again.
         while let Some(ri) = self.pending.pop_front() {
@@ -754,6 +969,36 @@ impl Engine<'_> {
         fb.busy += t - fb.service_start;
         fb.served += 1;
         fb.hist.record(latency);
+        if let Some(tel) = self.tel.as_mut() {
+            // Busy cycles are attributed window-exactly from the
+            // same span `fb.busy` integrates, so
+            // `Σ per-window busy == fabric total busy` holds by
+            // construction — and is still `ensure!`d after the run.
+            tel.count_span(
+                "fabric_busy_cycles",
+                &self.fab_labels[f],
+                row.dispatched,
+                t,
+            );
+            tel.count("completions", &self.fab_labels[f], t, 1);
+            tel.observe("latency", "", t, latency);
+            tel.span(
+                SpanKind::Service,
+                f as u32,
+                row.id as u64,
+                row.dispatched,
+                t,
+                row.retries as u64,
+            );
+            tel.span(
+                SpanKind::Request,
+                f as u32,
+                row.id as u64,
+                row.arrival,
+                t,
+                row.retries as u64,
+            );
+        }
         if slo_met {
             self.slo_attained += 1;
         }
@@ -768,6 +1013,9 @@ impl Engine<'_> {
         {
             let ri = self.next_arr as u32;
             self.next_arr += 1;
+            if let Some(tel) = self.tel.as_mut() {
+                tel.count("arrivals", "", t, 1);
+            }
             self.route(ri, t);
         }
         if self.next_arr < self.reqs.len() {
@@ -777,6 +1025,142 @@ impl Engine<'_> {
                 0,
                 0,
             )));
+        }
+    }
+
+    // ------------------------------------- autoscaler + sampler --
+
+    fn park(&mut self, f: usize, t: u64) {
+        let fb = &mut self.fabrics[f];
+        debug_assert!(fb.routable() && fb.in_service.is_none());
+        fb.parked = true;
+        fb.active += t.saturating_sub(fb.active_since);
+        if let Some(tel) = self.tel.as_mut() {
+            tel.count("autoscale_park", "", t, 1);
+            tel.instant(SpanKind::Scale, f as u32, 0, t, 1);
+        }
+    }
+
+    fn unpark(&mut self, f: usize, t: u64) {
+        let fb = &mut self.fabrics[f];
+        if !fb.parked {
+            return;
+        }
+        fb.parked = false;
+        if fb.up {
+            fb.active_since = t;
+            fb.backlog_end = fb.backlog_end.max(t);
+        }
+        if let Some(tel) = self.tel.as_mut() {
+            tel.count("autoscale_unpark", "", t, 1);
+            tel.instant(SpanKind::Scale, f as u32, 0, t, 0);
+        }
+    }
+
+    /// Telemetry sampler, fired at every window boundary `t = k*W`
+    /// while work remains: closes window `k-1` by recording the
+    /// utilization and queue-depth gauges, then lets the autoscale
+    /// policy act on exactly those recorded values.
+    fn on_sample(&mut self, t: u64) {
+        let w = match &self.tel {
+            Some(tel) => tel.window(),
+            None => return,
+        };
+        let closed = (t / w).saturating_sub(1);
+        let win_start = closed * w;
+        let n = self.fabrics.len();
+        let mut util_sum = 0u64;
+        let mut active_n = 0u64;
+        let mut queue_total = 0u64;
+        for f in 0..n {
+            let fb = &self.fabrics[f];
+            queue_total += fb.queue.len() as u64;
+            // Busy cycles already committed to the closed window by
+            // completed service, plus the still-in-flight span's
+            // overlap with it — all pure virtual time.
+            let mut busy = self
+                .tel
+                .as_ref()
+                .unwrap()
+                .counter_window(
+                    "fabric_busy_cycles",
+                    &self.fab_labels[f],
+                    closed,
+                );
+            if fb.up && fb.in_service.is_some() {
+                let lo = fb.service_start.max(win_start);
+                busy += t.saturating_sub(lo).min(w);
+            }
+            let util = (busy.min(w) * 1000) / w;
+            if fb.routable() {
+                util_sum += util;
+                active_n += 1;
+            }
+            let depth = fb.queue.len() as u64;
+            let tel = self.tel.as_mut().unwrap();
+            tel.gauge("util_permille", &self.fab_labels[f], t - 1, util);
+            tel.gauge("queue_depth", &self.fab_labels[f], t - 1, depth);
+        }
+        queue_total += self.pending.len() as u64;
+        let mean_util = if active_n == 0 {
+            0
+        } else {
+            util_sum / active_n
+        };
+        {
+            let tel = self.tel.as_mut().unwrap();
+            tel.gauge("util_permille", "node", t - 1, mean_util);
+            tel.gauge("queue_depth", "node", t - 1, queue_total);
+        }
+
+        if let Some(pol) = self.cfg.autoscale {
+            let now_w = t / w;
+            // Read back exactly what was just recorded: the policy
+            // consumes telemetry gauges, nothing else.
+            let tel = self.tel.as_ref().unwrap();
+            let util_g = tel
+                .gauge_window("util_permille", "node", closed)
+                .map(|c| c.max)
+                .unwrap_or(0);
+            let queue_g = tel
+                .gauge_window("queue_depth", "node", closed)
+                .map(|c| c.max)
+                .unwrap_or(0);
+            let cooled = now_w >= self.last_scale + pol.cooldown;
+            let high = (util_g as f64) > pol.high * 1000.0;
+            let spike = queue_g > active_n.max(1) * 2;
+            let low = (util_g as f64) < pol.low * 1000.0;
+            if cooled && (high || spike) {
+                if let Some(f) = (0..n)
+                    .find(|&f| self.fabrics[f].up && self.fabrics[f].parked)
+                {
+                    self.unpark(f, t);
+                    self.last_scale = now_w;
+                }
+            } else if cooled && low && queue_total == 0 && active_n > 1
+            {
+                // Park the highest-id idle routable fabric.
+                if let Some(f) = (0..n).rev().find(|&f| {
+                    let fb = &self.fabrics[f];
+                    fb.routable()
+                        && fb.in_service.is_none()
+                        && fb.queue.is_empty()
+                }) {
+                    self.park(f, t);
+                    self.last_scale = now_w;
+                }
+            }
+        }
+
+        // Keep sampling only while work remains; otherwise let the
+        // heap drain.
+        let work_left = self.next_arr < self.reqs.len()
+            || !self.pending.is_empty()
+            || self.fabrics.iter().any(|f| {
+                f.in_service.is_some() || !f.queue.is_empty()
+            });
+        if work_left {
+            self.heap.push(Reverse((t + w, EV_SAMPLE, 0, 0)));
         }
     }
 
@@ -806,6 +1190,10 @@ impl Engine<'_> {
                 0,
             )));
         }
+        if let Some(tel) = &self.tel {
+            // First sampler fires at the end of window 0.
+            self.heap.push(Reverse((tel.window(), EV_SAMPLE, 0, 0)));
+        }
         while let Some(Reverse((t, kind, a, b))) = self.heap.pop() {
             self.events += 1;
             match kind {
@@ -815,6 +1203,7 @@ impl Engine<'_> {
                     self.on_up(a as usize, t);
                 }
                 EV_DONE => self.on_done(a as usize, b, t),
+                EV_SAMPLE => self.on_sample(t),
                 _ => self.on_arrive(t),
             }
         }
@@ -853,7 +1242,15 @@ pub fn run_node_trace(
             "admit factor must be positive, got {k}"
         );
     }
+    if let Some(pol) = &cfg.autoscale {
+        pol.validate()?;
+    }
     cfg.faults.validate(cfg.fabrics)?;
+    // Telemetry window: explicit `--telemetry[-window]`, or implied
+    // by the autoscaler (its signals *are* the windowed gauges).
+    let tel_window = cfg.serve.telemetry.or_else(|| {
+        cfg.autoscale.map(|_| telemetry::DEFAULT_WINDOW)
+    });
     for r in &trace.requests {
         ensure!(
             r.model < cfg.serve.models.len(),
@@ -920,6 +1317,11 @@ pub fn run_node_trace(
         slo_attained: 0,
         makespan: 0,
         events: 0,
+        tel: tel_window.map(Telemetry::new),
+        fab_labels: (0..cfg.fabrics)
+            .map(|f| format!("fabric={f}"))
+            .collect(),
+        last_scale: 0,
     };
     eng.run();
 
@@ -938,7 +1340,64 @@ pub fn run_node_trace(
     rows.sort_by_key(|r| r.id);
     let mut sheds = eng.sheds;
     sheds.sort_by_key(|s| s.id);
-    let digest = run_digest(&rows, &sheds);
+
+    // Close per-fabric accounting at the makespan: outage spans of
+    // still-dead fabrics, and the provisioned-cycle integral.
+    let mut active_cycles = 0u64;
+    for (f, fb) in eng.fabrics.iter_mut().enumerate() {
+        if !fb.up {
+            if let Some(tel) = eng.tel.as_mut() {
+                let end = eng.makespan.max(fb.down_at);
+                tel.span(
+                    SpanKind::Outage,
+                    f as u32,
+                    0,
+                    fb.down_at,
+                    end,
+                    0,
+                );
+                tel.count_span(
+                    "fabric_downtime_cycles",
+                    &eng.fab_labels[f],
+                    fb.down_at,
+                    end,
+                );
+            }
+        } else if !fb.parked {
+            fb.active += eng.makespan.saturating_sub(fb.active_since);
+        }
+        active_cycles += fb.active;
+    }
+    let telemetry = eng.tel.take().map(|mut tel| {
+        tel.seal(eng.makespan);
+        tel
+    });
+    // The windowed busy series must conserve the fabric totals
+    // exactly — a split that loses or duplicates cycles would make
+    // every derived utilization signal a lie.
+    if let Some(tel) = &telemetry {
+        for (f, fb) in eng.fabrics.iter().enumerate() {
+            let windowed =
+                tel.counter_total("fabric_busy_cycles", &eng.fab_labels[f]);
+            ensure!(
+                windowed == fb.busy,
+                "telemetry busy-cycle conservation violated on \
+                 fabric {f}: Σ per-window {windowed} != total {}",
+                fb.busy
+            );
+        }
+    }
+
+    let base_digest = run_digest(&rows, &sheds);
+    let digest = match &telemetry {
+        Some(tel) => {
+            let mut h = Fnv64::new();
+            h.write_u64(base_digest);
+            tel.fold(&mut h);
+            h.finish()
+        }
+        None => base_digest,
+    };
 
     let per_fabric: Vec<FabricStats> = eng
         .fabrics
@@ -974,6 +1433,7 @@ pub fn run_node_trace(
         seed: cfg.serve.seed,
         faults: cfg.faults.clone(),
         max_retries: cfg.max_retries,
+        autoscale: cfg.autoscale,
         requests: n_reqs,
         completed: rows.len(),
         shed_admission: eng.shed_admission,
@@ -988,6 +1448,7 @@ pub fn run_node_trace(
         per_fabric,
         plan_stats: svc.stats().delta_since(&stats0),
         events: eng.events,
+        active_cycles,
         digest,
     };
     Ok(NodeRun {
@@ -995,6 +1456,7 @@ pub fn run_node_trace(
         models: cfg.serve.models.clone(),
         rows,
         sheds,
+        telemetry,
     })
 }
 
@@ -1199,6 +1661,106 @@ mod tests {
         cfg2.serve.seed = 8;
         let c = run_node(&svc, &cfg2).unwrap();
         assert_ne!(a.report.digest, c.report.digest);
+    }
+
+    #[test]
+    fn autoscale_parse_round_trip_and_rejects() {
+        let p = AutoscalePolicy::parse("low=0.1,high=0.9,cooldown=5")
+            .unwrap();
+        assert_eq!(p.low, 0.1);
+        assert_eq!(p.high, 0.9);
+        assert_eq!(p.cooldown, 5);
+        assert_eq!(AutoscalePolicy::parse(&p.summary()).unwrap(), p);
+        // Any subset of fields keeps the other defaults.
+        let d = AutoscalePolicy::parse("cooldown=7").unwrap();
+        assert_eq!((d.low, d.high, d.cooldown), (0.2, 0.7, 7));
+        assert!(AutoscalePolicy::parse("low=0.9,high=0.1").is_err());
+        assert!(AutoscalePolicy::parse("cooldown=0").is_err());
+        assert!(AutoscalePolicy::parse("verve=1").is_err());
+        assert!(AutoscalePolicy::parse("low").is_err());
+    }
+
+    #[test]
+    fn telemetry_conserves_busy_cycles_and_folds_into_digest() {
+        let mut cfg = base_cfg(2);
+        cfg.serve.telemetry = Some(50_000);
+        let svc = GemmService::analytic();
+        let run = run_node(&svc, &cfg).unwrap();
+        let tel = run.telemetry.as_ref().expect("telemetry enabled");
+        // Σ per-window busy == fabric total busy (also a runtime
+        // ensure!; re-checked here against the report).
+        for (f, fs) in run.report.per_fabric.iter().enumerate() {
+            let label = format!("fabric={f}");
+            assert_eq!(
+                tel.counter_total("fabric_busy_cycles", &label),
+                fs.busy_cycles,
+            );
+        }
+        // Arrivals/completions counters conserve the request streams.
+        assert_eq!(
+            tel.counter_total("arrivals", "") as usize,
+            run.report.requests,
+        );
+        let completions: u64 = (0..cfg.fabrics)
+            .map(|f| {
+                tel.counter_total("completions", &format!("fabric={f}"))
+            })
+            .sum();
+        assert_eq!(completions as usize, run.report.completed);
+        // The report digest is exactly base run_digest + tel fold.
+        let mut h = Fnv64::new();
+        h.write_u64(run_digest(&run.rows, &run.sheds));
+        tel.fold(&mut h);
+        assert_eq!(run.report.digest, h.finish());
+        // And with telemetry off the digest is the bare run_digest.
+        let mut plain = base_cfg(2);
+        plain.serve.telemetry = None;
+        let p = run_node(&svc, &plain).unwrap();
+        assert!(p.telemetry.is_none());
+        assert_eq!(p.report.digest, run_digest(&p.rows, &p.sheds));
+        // Telemetry never changes the outcome streams themselves.
+        assert_eq!(p.rows, run.rows);
+        assert_eq!(p.sheds, run.sheds);
+    }
+
+    #[test]
+    fn autoscaler_parks_idle_fabrics_without_adding_sheds() {
+        // 4 fabrics at a trickle rate: fixed provisioning keeps all
+        // four active for the whole makespan; the autoscaler should
+        // park surplus fabrics (fewer provisioned cycles) while
+        // shedding nothing the fixed node wouldn't.
+        let mut fixed = base_cfg(4);
+        fixed.serve.requests = 48;
+        fixed.serve.rate_per_mcycle = 1.0;
+        let svc = GemmService::analytic();
+        let base = run_node(&svc, &fixed).unwrap();
+        let mut auto_cfg = fixed.clone();
+        auto_cfg.autoscale = Some(
+            AutoscalePolicy::parse("low=0.3,high=0.9,cooldown=1")
+                .unwrap(),
+        );
+        let auto_run = run_node(&svc, &auto_cfg).unwrap();
+        let tel =
+            auto_run.telemetry.as_ref().expect("autoscale implies tel");
+        assert!(
+            tel.counter_total("autoscale_park", "") > 0,
+            "a trickle load on 4 fabrics must trigger parking"
+        );
+        assert!(
+            auto_run.report.shed_total() <= base.report.shed_total(),
+            "autoscaling must not add sheds at equal offered load"
+        );
+        assert!(
+            auto_run.report.active_cycles
+                < base.report.active_cycles,
+            "parking must reduce provisioned fabric-cycles: {} vs {}",
+            auto_run.report.active_cycles,
+            base.report.active_cycles,
+        );
+        assert_eq!(
+            auto_run.report.completed + auto_run.report.shed_total(),
+            auto_run.report.requests,
+        );
     }
 
     #[test]

@@ -5,6 +5,7 @@ use std::path::Path;
 
 use crate::cluster::ConfigId;
 use crate::model::congestion;
+use crate::profile::telemetry::Telemetry;
 use crate::profile::{RooflinePoint, StallClass, StallProfile, N_CLASSES};
 use crate::util::csv::{f, Csv};
 use crate::util::stats::{box_stats, ratio, BoxStats};
@@ -572,6 +573,13 @@ pub fn render_node(r: &crate::coordinator::node::NodeReport) -> String {
         r.faults.summary(),
         r.max_retries,
     ));
+    if let Some(pol) = &r.autoscale {
+        out.push_str(&format!(
+            "* autoscale: {} — provisioned {} fabric-cycles\n",
+            pol.summary(),
+            r.active_cycles,
+        ));
+    }
     out.push_str(&format!(
         "* completed: {} in {} cycles -> sustained {:.3} req/Mcycle\n",
         r.completed,
@@ -723,6 +731,107 @@ pub fn node_fabric_csv(
         ]);
     }
     c
+}
+
+// -------------------------------------------------- TimeScope --
+
+/// The `telemetry.csv` time-series artifact: one row per
+/// `(series, window, aggregate)` in canonical (BTreeMap) order.
+/// Counter series are emitted **densely** over `0..=last_window` —
+/// a window where nothing happened is an explicit `0` row, so a
+/// utilization dip or completion stall during an outage is visible
+/// in the artifact itself, not inferred from missing rows. Gauge
+/// and histogram series are sparse (only observed windows).
+pub fn telemetry_csv(tel: &Telemetry) -> Csv {
+    let w = tel.window();
+    let mut c = Csv::new(vec![
+        "metric", "labels", "window", "t_start", "t_end", "kind",
+        "value",
+    ]);
+    let span =
+        |k: u64| ((k * w).to_string(), ((k + 1) * w).to_string());
+    for ((metric, labels), series) in tel.counter_series() {
+        for k in 0..=tel.last_window() {
+            let (t0, t1) = span(k);
+            c.row(vec![
+                metric.to_string(),
+                labels.clone(),
+                k.to_string(),
+                t0,
+                t1,
+                "count".to_string(),
+                series.get(&k).copied().unwrap_or(0).to_string(),
+            ]);
+        }
+    }
+    for ((metric, labels), series) in tel.gauge_series() {
+        for (&k, cell) in series {
+            let (t0, t1) = span(k);
+            for (kind, value) in [
+                ("gauge_min", cell.min.to_string()),
+                ("gauge_max", cell.max.to_string()),
+                ("gauge_mean", f(cell.mean(), 3)),
+            ] {
+                c.row(vec![
+                    metric.to_string(),
+                    labels.clone(),
+                    k.to_string(),
+                    t0.clone(),
+                    t1.clone(),
+                    kind.to_string(),
+                    value,
+                ]);
+            }
+        }
+    }
+    for ((metric, labels), series) in tel.hist_series() {
+        for (&k, h) in series {
+            let (t0, t1) = span(k);
+            for (kind, value) in [
+                ("hist_n", h.count().to_string()),
+                ("hist_p50", h.quantile(0.50).to_string()),
+                ("hist_p99", h.quantile(0.99).to_string()),
+            ] {
+                c.row(vec![
+                    metric.to_string(),
+                    labels.clone(),
+                    k.to_string(),
+                    t0.clone(),
+                    t1.clone(),
+                    kind.to_string(),
+                    value,
+                ]);
+            }
+        }
+    }
+    c
+}
+
+/// Short markdown summary of a sealed telemetry stream (appended to
+/// the serve/node report when `--telemetry` is on).
+pub fn render_telemetry(tel: &Telemetry) -> String {
+    let mut out = String::new();
+    out.push_str("### TimeScope telemetry\n\n");
+    out.push_str(&format!(
+        "* window: {} cycles, {} windows over {} cycles\n",
+        tel.window(),
+        tel.last_window() + 1,
+        tel.end(),
+    ));
+    out.push_str(&format!(
+        "* series: {} ({} spans), stream digest 0x{:016x}\n",
+        tel.series_count(),
+        tel.spans().len(),
+        tel.digest(),
+    ));
+    let parks = tel.counter_total("autoscale_park", "");
+    let unparks = tel.counter_total("autoscale_unpark", "");
+    if parks + unparks > 0 {
+        out.push_str(&format!(
+            "* autoscale: {parks} parks / {unparks} unparks\n",
+        ));
+    }
+    out
 }
 
 // -------------------------------------------------- StallScope --

@@ -71,6 +71,7 @@ use crate::kernels::{
     choose_shard_grid, problem_seed, Epilogue, GemmJob, GemmService,
     LayoutKind, ServiceStats,
 };
+use crate::profile::telemetry::{SpanKind, Telemetry};
 use crate::profile::N_CLASSES;
 use crate::util::prop::Shrink;
 use crate::util::rng::Rng;
@@ -161,6 +162,11 @@ pub struct ServeConfig {
     /// Serve core (event-driven by default; `Legacy` keeps the
     /// wave-synchronous loop for the differential property).
     pub engine: ServeEngine,
+    /// Virtual-time telemetry window in cycles; `None` (default)
+    /// disables the telemetry bus entirely. Event core only — the
+    /// legacy engine ignores it (its run carries no telemetry), so
+    /// the differential property keeps comparing runs with it off.
+    pub telemetry: Option<u64>,
 }
 
 impl ServeConfig {
@@ -181,6 +187,7 @@ impl ServeConfig {
             slo: None,
             threads: 2,
             engine: ServeEngine::Event,
+            telemetry: None,
         }
     }
 }
@@ -411,6 +418,9 @@ pub struct ServeRun {
     pub models: Vec<String>,
     /// Event-core counters (zero under the legacy engine).
     pub engine_stats: EngineStats,
+    /// Windowed metric registry + request-lifecycle spans; `Some`
+    /// iff [`ServeConfig::telemetry`] was set on the event core.
+    pub telemetry: Option<Telemetry>,
     pub rows: Vec<ServeRow>,
 }
 
@@ -476,6 +486,7 @@ pub fn solo_latency(
     solo.policy = policy;
     solo.requests = 1;
     solo.slo = Some(u64::MAX);
+    solo.telemetry = None;
     let trace = ArrivalTrace {
         requests: vec![ServeRequest {
             id: 0,
@@ -832,6 +843,7 @@ fn serve_trace_legacy(
         report,
         models: cfg.models.clone(),
         engine_stats: EngineStats::default(),
+        telemetry: None,
         rows,
     })
 }
@@ -1019,6 +1031,9 @@ fn serve_trace_event(
             solo.policy = Policy::Fifo;
             solo.requests = 1;
             solo.slo = Some(u64::MAX);
+            // The probe is a measurement artifact, not traffic — keep
+            // its events out of the parent telemetry stream.
+            solo.telemetry = None;
             let ptrace = ArrivalTrace {
                 requests: vec![ServeRequest {
                     id: 0,
@@ -1104,6 +1119,10 @@ fn serve_trace_event(
     let mut load: Vec<u64> = vec![0; n_clusters];
     let mut fresh_jobs: Vec<GemmJob> = Vec::new();
     let mut fresh_keys: Vec<DispatchKey> = Vec::new();
+    // Telemetry bus (optional). Every record below is keyed on the
+    // virtual clock and engine state only, so the stream — like the
+    // run itself — is bit-identical at any host thread count.
+    let mut tel = cfg.telemetry.map(Telemetry::new);
 
     if n > 0 {
         heap.push(Reverse((arrivals[0].arrival, EV_ARRIVE)));
@@ -1125,6 +1144,9 @@ fn serve_trace_event(
                 {
                     active.insert(next_arr as u32);
                     next_arr += 1;
+                    if let Some(tel) = tel.as_mut() {
+                        tel.count("arrivals", "", clock, 1);
+                    }
                 }
                 if next_arr < n {
                     heap.push(Reverse((
@@ -1176,6 +1198,23 @@ fn serve_trace_event(
                             ops: plans[model].ops,
                         });
                         active.remove(&ri);
+                        if let Some(tel) = tel.as_mut() {
+                            tel.count("completions", "", completion, 1);
+                            tel.observe(
+                                "latency_cycles",
+                                "",
+                                completion,
+                                latency,
+                            );
+                            tel.span(
+                                SpanKind::Request,
+                                0,
+                                arrivals[riu].id as u64,
+                                arrival,
+                                completion,
+                                plans[model].ops as u64,
+                            );
+                        }
                     }
                 }
                 wave_in_flight = false;
@@ -1213,6 +1252,7 @@ fn serve_trace_event(
             active.len()
         );
         waves += 1;
+        let (hits0, misses0) = (memo_hits, memo_misses);
         for &(ri, oi) in &wave_pool {
             ready_mask[ri as usize] &= !(1u64 << oi);
         }
@@ -1387,6 +1427,26 @@ fn serve_trace_event(
                 busy[ci] += l;
             }
         }
+        if let Some(tel) = tel.as_mut() {
+            tel.count("waves", "", clock, 1);
+            tel.count("memo_hits", "", clock, memo_hits - hits0);
+            tel.count(
+                "memo_misses",
+                "",
+                clock,
+                memo_misses - misses0,
+            );
+            tel.gauge("in_flight", "", clock, active.len() as u64);
+            tel.gauge("wave_ops", "", clock, wave_pool.len() as u64);
+            tel.span(
+                SpanKind::Wave,
+                0,
+                waves,
+                clock,
+                clock + elapsed,
+                wave_pool.len() as u64,
+            );
+        }
         heap.push(Reverse((clock + elapsed, EV_WAVE)));
         wave_in_flight = true;
     }
@@ -1440,6 +1500,10 @@ fn serve_trace_event(
             memo_hits: memo_hits + probe_stats.memo_hits,
             memo_misses: memo_misses + probe_stats.memo_misses,
         },
+        telemetry: tel.map(|mut t| {
+            t.seal(makespan.max(clock));
+            t
+        }),
         rows,
     })
 }

@@ -31,9 +31,11 @@
 //! cycle-vs-analytic breakdown differential tests compare.
 
 pub mod roofline;
+pub mod telemetry;
 pub mod trace;
 
 pub use roofline::{Bound, Ceilings, RooflinePoint};
+pub use telemetry::{SpanKind, Telemetry};
 pub use trace::{ChromeTrace, TraceBuf};
 
 /// Number of attribution classes (the full taxonomy).

@@ -1,0 +1,871 @@
+//! TimeScope — a deterministic virtual-time telemetry bus.
+//!
+//! Every serving-tier report used to be an end-of-run aggregate; this
+//! module makes the *time-resolved* signals first-class: counters,
+//! gauges and bucketed histograms keyed by `(metric, label-set)` and
+//! sampled into fixed virtual-time windows of `window` cycles, plus
+//! per-request lifecycle spans (arrive → admit/shed → queue →
+//! dispatch → complete, with retry edges across fabric faults).
+//!
+//! Determinism discipline (DESIGN.md §15):
+//!
+//! * **window assignment is pure virtual time** — `window_of(t) =
+//!   t / window`, no wall clock anywhere;
+//! * **shards merge bucket-wise** exactly like
+//!   [`CycleHistogram`](crate::util::stats::CycleHistogram):
+//!   counters add, gauge cells combine min/max/sum/n (all
+//!   commutative and associative, so shard order cannot matter),
+//!   window histograms merge per bucket, span streams concatenate
+//!   and canonically re-sort at [`Telemetry::seal`];
+//! * **the stream folds into the FNV-1a run digest**
+//!   ([`Telemetry::fold`]) in canonical `BTreeMap` order, so
+//!   bit-identity across host thread counts is machine-checked by
+//!   NodeSim's digest harness, not asserted in prose.
+
+use std::collections::BTreeMap;
+
+use super::trace::{ChromeTrace, TraceEvent};
+use crate::util::stats::{CycleHistogram, Fnv64};
+
+/// Default window width (cycles) for `--telemetry` when no
+/// `--telemetry-window` is given: 1 Mcycle, ~1 ms at 1 GHz.
+pub const DEFAULT_WINDOW: u64 = 1_000_000;
+
+/// `(metric, label-set)` series key. Metrics are static program
+/// identifiers; labels are a small rendered set like `fabric=1`.
+pub type SeriesKey = (&'static str, String);
+
+// ---------------------------------------------------------- spans --
+
+/// Lifecycle span classes. Discriminants are part of the digest
+/// stream — append-only, never renumber.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Waiting in a fabric queue (one span per attempt).
+    Queue = 0,
+    /// In service on a fabric.
+    Service = 1,
+    /// A fabric outage (down → restore, or down → end of run).
+    Outage = 2,
+    /// One dispatch wave of the serve event core.
+    Wave = 3,
+    /// Whole request lifetime (arrival → completion).
+    Request = 4,
+    /// Retry edge: an orphaned request re-entering the router
+    /// (instant).
+    Retry = 5,
+    /// Request shed (instant).
+    Shed = 6,
+    /// Autoscaler park/unpark decision (instant; `detail` is 1 for
+    /// park, 0 for unpark).
+    Scale = 7,
+}
+
+impl SpanKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SpanKind::Queue => "queue",
+            SpanKind::Service => "service",
+            SpanKind::Outage => "outage",
+            SpanKind::Wave => "wave",
+            SpanKind::Request => "request",
+            SpanKind::Retry => "retry",
+            SpanKind::Shed => "shed",
+            SpanKind::Scale => "scale",
+        }
+    }
+
+    pub fn code(&self) -> u64 {
+        *self as u64
+    }
+}
+
+/// One lifecycle span. Instants are zero-length (`start == end`).
+/// The derived `Ord` (field order: start, end, kind, pid, id,
+/// detail) is the canonical stream order [`Telemetry::seal`] sorts
+/// into, so shard concatenation order cannot leak into the digest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SpanRec {
+    pub start: u64,
+    pub end: u64,
+    pub kind: SpanKind,
+    /// Track id (fabric index in NodeSim, 0 in ServeSim).
+    pub pid: u32,
+    /// Request id (or wave index for `Wave` spans).
+    pub id: u64,
+    /// Kind-specific payload (retry count, ops in wave, shed reason).
+    pub detail: u64,
+}
+
+// ---------------------------------------------------- window cells --
+
+/// Per-window gauge cell. Merge combines min/max/sum/n — all
+/// commutative, so "last write" (which would depend on shard order)
+/// is deliberately not representable. Reports read `max` (spikes)
+/// and `mean()` (levels).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GaugeCell {
+    pub min: u64,
+    pub max: u64,
+    pub sum: u128,
+    pub n: u64,
+}
+
+impl GaugeCell {
+    fn of(v: u64) -> Self {
+        Self { min: v, max: v, sum: v as u128, n: 1 }
+    }
+
+    fn absorb(&mut self, v: u64) {
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.sum += v as u128;
+        self.n += 1;
+    }
+
+    fn merge(&mut self, o: &GaugeCell) {
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+        self.sum += o.sum;
+        self.n += o.n;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.n as f64
+        }
+    }
+}
+
+/// Sparse per-window histogram sharing [`CycleHistogram`]'s bucket
+/// geometry (exact below 32, then 32 sub-buckets per octave), stored
+/// as a `BTreeMap` so thousands of mostly-empty windows stay cheap.
+/// Merge is bucket-wise exact, like the dense histogram it mirrors.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WindowHist {
+    counts: BTreeMap<u32, u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl WindowHist {
+    pub fn record(&mut self, v: u64) {
+        let idx = CycleHistogram::bucket_index(v) as u32;
+        *self.counts.entry(idx).or_insert(0) += 1;
+        if self.total == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.total += 1;
+        self.sum += v as u128;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Upper-bucket-bound quantile, clamped to observed min/max —
+    /// same semantics as [`CycleHistogram::quantile`].
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.total as f64).ceil() as u64)
+            .clamp(1, self.total);
+        let mut acc = 0u64;
+        for (&idx, &c) in &self.counts {
+            acc += c;
+            if acc >= target {
+                let (_, hi) =
+                    CycleHistogram::bucket_bounds(idx as usize);
+                return hi.min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, o: &WindowHist) {
+        if o.total == 0 {
+            return;
+        }
+        for (&idx, &c) in &o.counts {
+            *self.counts.entry(idx).or_insert(0) += c;
+        }
+        if self.total == 0 {
+            self.min = o.min;
+            self.max = o.max;
+        } else {
+            self.min = self.min.min(o.min);
+            self.max = self.max.max(o.max);
+        }
+        self.total += o.total;
+        self.sum += o.sum;
+    }
+}
+
+// ------------------------------------------------------- registry --
+
+/// The windowed metric registry plus the span stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Telemetry {
+    window: u64,
+    /// Virtual end of the observed run ([`Telemetry::seal`]); rows
+    /// for dense counters are emitted for every window up to here.
+    end: u64,
+    counters: BTreeMap<SeriesKey, BTreeMap<u64, u64>>,
+    gauges: BTreeMap<SeriesKey, BTreeMap<u64, GaugeCell>>,
+    hists: BTreeMap<SeriesKey, BTreeMap<u64, WindowHist>>,
+    spans: Vec<SpanRec>,
+}
+
+impl Telemetry {
+    pub fn new(window: u64) -> Self {
+        Self {
+            window: window.max(1),
+            end: 0,
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            hists: BTreeMap::new(),
+            spans: Vec::new(),
+        }
+    }
+
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+
+    /// Virtual end of the run (set by [`Telemetry::seal`]).
+    pub fn end(&self) -> u64 {
+        self.end
+    }
+
+    /// Window index of virtual time `t` — pure integer arithmetic on
+    /// virtual time; an event *exactly on* a boundary `k*W` belongs
+    /// to window `k` (half-open windows `[kW, (k+1)W)`).
+    pub fn window_of(&self, t: u64) -> u64 {
+        t / self.window
+    }
+
+    /// Index of the last window touched by the sealed run. A
+    /// zero-length run still reports window 0 (empty).
+    pub fn last_window(&self) -> u64 {
+        if self.end == 0 {
+            0
+        } else {
+            (self.end - 1) / self.window
+        }
+    }
+
+    // ------------------------------------------------- recording --
+
+    /// Add `delta` to a counter in the window containing `t`.
+    pub fn count(
+        &mut self,
+        metric: &'static str,
+        labels: &str,
+        t: u64,
+        delta: u64,
+    ) {
+        if delta == 0 {
+            return;
+        }
+        let w = self.window_of(t);
+        *self
+            .counters
+            .entry((metric, labels.to_string()))
+            .or_default()
+            .entry(w)
+            .or_insert(0) += delta;
+    }
+
+    /// Attribute the half-open cycle span `[start, end)` to a
+    /// counter, split exactly across every window it overlaps — the
+    /// primitive behind the `Σ per-window busy == fabric total busy`
+    /// conservation invariant. Zero-length spans are no-ops.
+    pub fn count_span(
+        &mut self,
+        metric: &'static str,
+        labels: &str,
+        start: u64,
+        end: u64,
+    ) {
+        if end <= start {
+            return;
+        }
+        let series = self
+            .counters
+            .entry((metric, labels.to_string()))
+            .or_default();
+        let mut w = start / self.window;
+        loop {
+            let w_start = w * self.window;
+            let w_end = w_start + self.window;
+            let lo = start.max(w_start);
+            let hi = end.min(w_end);
+            if hi > lo {
+                *series.entry(w).or_insert(0) += hi - lo;
+            }
+            if end <= w_end {
+                break;
+            }
+            w += 1;
+        }
+    }
+
+    /// Sample a gauge in the window containing `t`.
+    pub fn gauge(
+        &mut self,
+        metric: &'static str,
+        labels: &str,
+        t: u64,
+        value: u64,
+    ) {
+        let w = self.window_of(t);
+        self.gauges
+            .entry((metric, labels.to_string()))
+            .or_default()
+            .entry(w)
+            .and_modify(|c| c.absorb(value))
+            .or_insert_with(|| GaugeCell::of(value));
+    }
+
+    /// Record a value into the window histogram containing `t`.
+    pub fn observe(
+        &mut self,
+        metric: &'static str,
+        labels: &str,
+        t: u64,
+        value: u64,
+    ) {
+        let w = self.window_of(t);
+        self.hists
+            .entry((metric, labels.to_string()))
+            .or_default()
+            .entry(w)
+            .or_default()
+            .record(value);
+    }
+
+    /// Record a lifecycle span.
+    pub fn span(
+        &mut self,
+        kind: SpanKind,
+        pid: u32,
+        id: u64,
+        start: u64,
+        end: u64,
+        detail: u64,
+    ) {
+        debug_assert!(end >= start, "span ends before it starts");
+        self.spans.push(SpanRec { start, end, kind, pid, id, detail });
+    }
+
+    /// Record an instant marker (zero-length span).
+    pub fn instant(
+        &mut self,
+        kind: SpanKind,
+        pid: u32,
+        id: u64,
+        t: u64,
+        detail: u64,
+    ) {
+        self.span(kind, pid, id, t, t, detail);
+    }
+
+    /// Close the stream at virtual time `end`: fixes the dense
+    /// window range and sorts spans into canonical order. Call after
+    /// all shards are merged; idempotent.
+    pub fn seal(&mut self, end: u64) {
+        self.end = self.end.max(end);
+        self.spans.sort_unstable();
+    }
+
+    /// Merge another shard into this one. Commutative and
+    /// associative by construction (counter adds, gauge cell
+    /// min/max/sum/n, bucket-wise histogram adds, span
+    /// concatenation + canonical re-sort at seal) — the same
+    /// discipline as `CycleHistogram` shard merging.
+    pub fn merge(&mut self, other: &Telemetry) {
+        assert_eq!(
+            self.window, other.window,
+            "cannot merge telemetry shards with different windows"
+        );
+        for (k, series) in &other.counters {
+            let dst = self.counters.entry(k.clone()).or_default();
+            for (&w, &v) in series {
+                *dst.entry(w).or_insert(0) += v;
+            }
+        }
+        for (k, series) in &other.gauges {
+            let dst = self.gauges.entry(k.clone()).or_default();
+            for (&w, cell) in series {
+                dst.entry(w)
+                    .and_modify(|c| c.merge(cell))
+                    .or_insert(*cell);
+            }
+        }
+        for (k, series) in &other.hists {
+            let dst = self.hists.entry(k.clone()).or_default();
+            for (&w, h) in series {
+                dst.entry(w).or_default().merge(h);
+            }
+        }
+        self.spans.extend_from_slice(&other.spans);
+        self.end = self.end.max(other.end);
+    }
+
+    // --------------------------------------------------- queries --
+
+    pub fn counter_window(
+        &self,
+        metric: &'static str,
+        labels: &str,
+        w: u64,
+    ) -> u64 {
+        self.counters
+            .get(&(metric, labels.to_string()))
+            .and_then(|s| s.get(&w))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn counter_total(
+        &self,
+        metric: &'static str,
+        labels: &str,
+    ) -> u64 {
+        self.counters
+            .get(&(metric, labels.to_string()))
+            .map(|s| s.values().sum())
+            .unwrap_or(0)
+    }
+
+    pub fn gauge_window(
+        &self,
+        metric: &'static str,
+        labels: &str,
+        w: u64,
+    ) -> Option<GaugeCell> {
+        self.gauges
+            .get(&(metric, labels.to_string()))
+            .and_then(|s| s.get(&w))
+            .copied()
+    }
+
+    pub fn hist_window(
+        &self,
+        metric: &'static str,
+        labels: &str,
+        w: u64,
+    ) -> Option<&WindowHist> {
+        self.hists
+            .get(&(metric, labels.to_string()))
+            .and_then(|s| s.get(&w))
+    }
+
+    pub fn spans(&self) -> &[SpanRec] {
+        &self.spans
+    }
+
+    pub fn series_count(&self) -> usize {
+        self.counters.len() + self.gauges.len() + self.hists.len()
+    }
+
+    /// Iterate counter series in canonical order (CSV emission).
+    pub fn counter_series(
+        &self,
+    ) -> impl Iterator<Item = (&SeriesKey, &BTreeMap<u64, u64>)> {
+        self.counters.iter()
+    }
+
+    pub fn gauge_series(
+        &self,
+    ) -> impl Iterator<Item = (&SeriesKey, &BTreeMap<u64, GaugeCell>)>
+    {
+        self.gauges.iter()
+    }
+
+    pub fn hist_series(
+        &self,
+    ) -> impl Iterator<Item = (&SeriesKey, &BTreeMap<u64, WindowHist>)>
+    {
+        self.hists.iter()
+    }
+
+    // ---------------------------------------------------- digest --
+
+    /// Fold the whole sealed stream into an FNV-1a hash in canonical
+    /// order. Every field is folded fixed-width (u64/LE) so adjacent
+    /// fields can never alias; section separators keep an empty
+    /// section from aliasing a neighbouring one.
+    pub fn fold(&self, h: &mut Fnv64) {
+        const SEP: u64 = 0x7E1E_5C0E_7E1E_5C0E;
+        h.write_u64(self.window);
+        h.write_u64(self.end);
+        h.write_u64(SEP);
+        h.write_u64(self.counters.len() as u64);
+        for ((metric, labels), series) in &self.counters {
+            Self::fold_key(h, metric, labels);
+            h.write_u64(series.len() as u64);
+            for (&w, &v) in series {
+                h.write_u64(w);
+                h.write_u64(v);
+            }
+        }
+        h.write_u64(SEP);
+        h.write_u64(self.gauges.len() as u64);
+        for ((metric, labels), series) in &self.gauges {
+            Self::fold_key(h, metric, labels);
+            h.write_u64(series.len() as u64);
+            for (&w, c) in series {
+                h.write_u64(w);
+                h.write_u64(c.min);
+                h.write_u64(c.max);
+                h.write_u64(c.sum as u64);
+                h.write_u64((c.sum >> 64) as u64);
+                h.write_u64(c.n);
+            }
+        }
+        h.write_u64(SEP);
+        h.write_u64(self.hists.len() as u64);
+        for ((metric, labels), series) in &self.hists {
+            Self::fold_key(h, metric, labels);
+            h.write_u64(series.len() as u64);
+            for (&w, hist) in series {
+                h.write_u64(w);
+                h.write_u64(hist.total);
+                h.write_u64(hist.sum as u64);
+                h.write_u64((hist.sum >> 64) as u64);
+                h.write_u64(hist.min);
+                h.write_u64(hist.max);
+                h.write_u64(hist.counts.len() as u64);
+                for (&idx, &c) in &hist.counts {
+                    h.write_u64(idx as u64);
+                    h.write_u64(c);
+                }
+            }
+        }
+        h.write_u64(SEP);
+        h.write_u64(self.spans.len() as u64);
+        for s in &self.spans {
+            h.write_u64(s.start);
+            h.write_u64(s.end);
+            h.write_u64(s.kind.code());
+            h.write_u64(s.pid as u64);
+            h.write_u64(s.id);
+            h.write_u64(s.detail);
+        }
+    }
+
+    fn fold_key(h: &mut Fnv64, metric: &str, labels: &str) {
+        h.write_u64(metric.len() as u64);
+        h.write_bytes(metric.as_bytes());
+        h.write_u64(labels.len() as u64);
+        h.write_bytes(labels.as_bytes());
+    }
+
+    /// Standalone digest of the stream (tests; NodeSim folds via
+    /// [`Telemetry::fold`] on top of its row digest).
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        self.fold(&mut h);
+        h.finish()
+    }
+
+    // ----------------------------------------------- trace export --
+
+    /// Export lifecycle spans + gauge time series as a Chrome
+    /// `trace_event` timeline: one process per track id
+    /// (`{process_prefix} {pid}`), one thread per span kind, counter
+    /// samples per gauge window (window max). Loads in
+    /// `chrome://tracing` / Perfetto alongside StallScope traces.
+    pub fn to_chrome(&self, process_prefix: &str) -> ChromeTrace {
+        let mut t = ChromeTrace::default();
+        let mut pids: Vec<u32> =
+            self.spans.iter().map(|s| s.pid).collect();
+        pids.sort_unstable();
+        pids.dedup();
+        if pids.is_empty() {
+            pids.push(0);
+        }
+        for &pid in &pids {
+            t.processes
+                .push((pid, format!("{process_prefix} {pid}")));
+            for kind in [
+                SpanKind::Queue,
+                SpanKind::Service,
+                SpanKind::Outage,
+                SpanKind::Wave,
+                SpanKind::Request,
+            ] {
+                t.tracks.push((
+                    pid,
+                    kind.code() as u32,
+                    kind.label().to_string(),
+                ));
+            }
+        }
+        for s in &self.spans {
+            if s.end > s.start {
+                t.events.push(TraceEvent::Span {
+                    pid: s.pid,
+                    tid: s.kind.code() as u32,
+                    name: s.kind.label(),
+                    ts: s.start,
+                    dur: s.end - s.start,
+                });
+            } else {
+                t.events.push(TraceEvent::Instant {
+                    pid: s.pid,
+                    name: format!("{} id={}", s.kind.label(), s.id),
+                    ts: s.start,
+                });
+            }
+        }
+        for ((metric, labels), series) in &self.gauges {
+            let name = if labels.is_empty() {
+                (*metric).to_string()
+            } else {
+                format!("{metric}{{{labels}}}")
+            };
+            for (&w, cell) in series {
+                t.events.push(TraceEvent::Counter {
+                    pid: pids[0],
+                    name: name.clone(),
+                    ts: w * self.window,
+                    value: cell.max,
+                });
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn window_assignment_is_half_open() {
+        let tel = Telemetry::new(100);
+        // An event exactly on a boundary belongs to the *opening*
+        // window: [kW, (k+1)W).
+        assert_eq!(tel.window_of(0), 0);
+        assert_eq!(tel.window_of(99), 0);
+        assert_eq!(tel.window_of(100), 1);
+        assert_eq!(tel.window_of(101), 1);
+    }
+
+    #[test]
+    fn zero_length_run_is_benign() {
+        let mut tel = Telemetry::new(100);
+        tel.seal(0);
+        assert_eq!(tel.end(), 0);
+        assert_eq!(tel.last_window(), 0);
+        assert_eq!(tel.counter_total("x", ""), 0);
+        assert_eq!(tel.series_count(), 0);
+    }
+
+    #[test]
+    fn trailing_partial_window_is_counted() {
+        let mut tel = Telemetry::new(100);
+        tel.count("c", "", 250, 1);
+        tel.seal(251);
+        // end=251 → windows 0, 1 and a trailing partial window 2.
+        assert_eq!(tel.last_window(), 2);
+        assert_eq!(tel.counter_window("c", "", 2), 1);
+        // An end exactly on a boundary does NOT open a new window.
+        let mut tel2 = Telemetry::new(100);
+        tel2.seal(200);
+        assert_eq!(tel2.last_window(), 1);
+    }
+
+    #[test]
+    fn count_span_splits_exactly_across_windows() {
+        let mut tel = Telemetry::new(100);
+        // [50, 250): 50 cycles in w0, 100 in w1, 50 in w2.
+        tel.count_span("busy", "fabric=0", 50, 250);
+        assert_eq!(tel.counter_window("busy", "fabric=0", 0), 50);
+        assert_eq!(tel.counter_window("busy", "fabric=0", 1), 100);
+        assert_eq!(tel.counter_window("busy", "fabric=0", 2), 50);
+        assert_eq!(tel.counter_total("busy", "fabric=0"), 200);
+        // A span ending exactly on a boundary puts nothing in the
+        // next window; zero-length spans record nothing.
+        tel.count_span("busy", "fabric=1", 100, 200);
+        assert_eq!(tel.counter_window("busy", "fabric=1", 2), 0);
+        assert_eq!(tel.counter_window("busy", "fabric=1", 1), 100);
+        tel.count_span("busy", "fabric=2", 70, 70);
+        assert_eq!(tel.counter_total("busy", "fabric=2"), 0);
+    }
+
+    #[test]
+    fn prop_count_span_conserves_total_length() {
+        check(
+            &Config::default(),
+            |rng: &mut Rng| {
+                let n = rng.range(0, 12);
+                (0..n)
+                    .map(|_| {
+                        let a = rng.below(5_000);
+                        (a, a + rng.below(3_000))
+                    })
+                    .map(|(a, b)| vec![a, b])
+                    .collect::<Vec<Vec<u64>>>()
+            },
+            |spans: &Vec<Vec<u64>>| {
+                let mut tel = Telemetry::new(257);
+                let mut want = 0u64;
+                for s in spans {
+                    if s.len() != 2 || s[1] < s[0] {
+                        continue;
+                    }
+                    tel.count_span("busy", "f", s[0], s[1]);
+                    want += s[1] - s[0];
+                }
+                let got = tel.counter_total("busy", "f");
+                if got != want {
+                    return Err(format!(
+                        "window split lost cycles: {got} != {want}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gauge_cells_track_min_max_mean() {
+        let mut tel = Telemetry::new(100);
+        tel.gauge("q", "fabric=0", 10, 3);
+        tel.gauge("q", "fabric=0", 20, 9);
+        tel.gauge("q", "fabric=0", 30, 6);
+        let c = tel.gauge_window("q", "fabric=0", 0).unwrap();
+        assert_eq!(c.min, 3);
+        assert_eq!(c.max, 9);
+        assert_eq!(c.n, 3);
+        assert!((c.mean() - 6.0).abs() < 1e-12);
+        assert!(tel.gauge_window("q", "fabric=0", 1).is_none());
+    }
+
+    #[test]
+    fn window_hist_matches_cycle_histogram_quantiles() {
+        let mut wh = WindowHist::default();
+        let mut ch = CycleHistogram::new();
+        for v in [1u64, 31, 32, 33, 1000, 50_000, 7] {
+            wh.record(v);
+            ch.record(v);
+        }
+        assert_eq!(wh.count(), ch.count());
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(wh.quantile(q), ch.quantile(q), "q={q}");
+        }
+        assert!((wh.mean() - ch.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_is_commutative_and_matches_single_stream() {
+        // Feed one event stream into 1 shard and into k shards in
+        // two different merge orders: all three must be identical —
+        // the CycleHistogram shard discipline, re-proved here.
+        let mut rng = Rng::new(0x7E1E);
+        let events: Vec<(u64, u64)> = (0..200)
+            .map(|_| (rng.below(10_000), rng.below(50)))
+            .collect();
+        let mut seq = Telemetry::new(1000);
+        let mut a = Telemetry::new(1000);
+        let mut b = Telemetry::new(1000);
+        let mut c = Telemetry::new(1000);
+        for (i, &(t, v)) in events.iter().enumerate() {
+            seq.count("c", "x", t, v);
+            seq.gauge("g", "x", t, v);
+            seq.observe("h", "x", t, v);
+            seq.span(SpanKind::Queue, 0, i as u64, t, t + v, 0);
+            let shard = match i % 3 {
+                0 => &mut a,
+                1 => &mut b,
+                _ => &mut c,
+            };
+            shard.count("c", "x", t, v);
+            shard.gauge("g", "x", t, v);
+            shard.observe("h", "x", t, v);
+            shard.span(SpanKind::Queue, 0, i as u64, t, t + v, 0);
+        }
+        seq.seal(10_050);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        ab.merge(&c);
+        ab.seal(10_050);
+        let mut cb = c.clone();
+        cb.merge(&a);
+        cb.merge(&b);
+        cb.seal(10_050);
+        assert_eq!(ab, seq, "sharded merge deviates from sequential");
+        assert_eq!(cb, seq, "merge depends on shard order");
+        assert_eq!(ab.digest(), seq.digest());
+    }
+
+    #[test]
+    fn digest_is_sensitive_to_every_section() {
+        let mut base = Telemetry::new(100);
+        base.count("c", "", 5, 1);
+        base.gauge("g", "", 5, 2);
+        base.observe("h", "", 5, 3);
+        base.span(SpanKind::Service, 1, 7, 5, 9, 0);
+        base.seal(10);
+        let d0 = base.digest();
+        let mut m = base.clone();
+        m.count("c", "", 5, 1);
+        m.seal(10);
+        assert_ne!(m.digest(), d0, "counter change must move digest");
+        let mut m = base.clone();
+        m.gauge("g", "", 5, 3);
+        m.seal(10);
+        assert_ne!(m.digest(), d0, "gauge change must move digest");
+        let mut m = base.clone();
+        m.instant(SpanKind::Retry, 1, 7, 6, 1);
+        m.seal(10);
+        assert_ne!(m.digest(), d0, "span change must move digest");
+        let mut m = base.clone();
+        m.seal(11);
+        assert_ne!(m.digest(), d0, "end change must move digest");
+    }
+
+    #[test]
+    fn chrome_export_is_structurally_sound() {
+        let mut tel = Telemetry::new(100);
+        tel.span(SpanKind::Service, 1, 42, 10, 60, 0);
+        tel.instant(SpanKind::Shed, 1, 43, 70, 2);
+        tel.gauge("queue_depth", "fabric=1", 20, 5);
+        tel.seal(100);
+        let t = tel.to_chrome("fabric");
+        let j = t.to_json();
+        assert!(j.contains("\"ph\":\"X\""), "span event missing");
+        assert!(j.contains("\"ph\":\"i\""), "instant missing");
+        assert!(j.contains("\"ph\":\"C\""), "counter missing");
+        assert!(j.contains("queue_depth{fabric=1}"));
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "unbalanced JSON"
+        );
+    }
+}

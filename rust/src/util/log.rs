@@ -1,0 +1,143 @@
+//! Leveled `key=value` status logger for CLI diagnostics.
+//!
+//! The CLI used to sprinkle ad-hoc `eprintln!` prose; every status
+//! line now goes through [`info`]/[`debug`] and renders as one
+//! grep-able structured line on stderr:
+//!
+//! ```text
+//! level=info event=node_serve fabrics=4 router=p2c requests=100000
+//! ```
+//!
+//! `--quiet` maps to [`set_level`]`(Level::Quiet)`, which silences
+//! status lines without touching report/CSV artifacts (stdout and
+//! files are never routed through here). Values containing spaces,
+//! quotes or `=` are double-quoted with embedded quotes doubled, so
+//! the lines stay machine-splittable.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Suppress all status lines (`--quiet`).
+    Quiet = 0,
+    /// Normal CLI status lines (default).
+    Info = 1,
+    /// Extra diagnostics.
+    Debug = 2,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Quiet,
+        1 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Quote a value only when needed to keep the line splittable on
+/// spaces: anything containing whitespace, `"` or `=` is wrapped in
+/// double quotes with embedded quotes doubled.
+fn quote(v: &str) -> String {
+    if v.is_empty()
+        || v.contains(char::is_whitespace)
+        || v.contains('"')
+        || v.contains('=')
+    {
+        format!("\"{}\"", v.replace('"', "\"\""))
+    } else {
+        v.to_string()
+    }
+}
+
+/// Render one structured line (pure; unit-tested directly).
+pub fn format_line(
+    level: Level,
+    event: &str,
+    kv: &[(&str, String)],
+) -> String {
+    let lvl = match level {
+        Level::Quiet => "quiet",
+        Level::Info => "info",
+        Level::Debug => "debug",
+    };
+    let mut out = format!("level={lvl} event={}", quote(event));
+    for (k, v) in kv {
+        out.push(' ');
+        out.push_str(k);
+        out.push('=');
+        out.push_str(&quote(v));
+    }
+    out
+}
+
+fn emit(at: Level, event: &str, kv: &[(&str, String)]) {
+    if level() >= at {
+        eprintln!("{}", format_line(at, event, kv));
+    }
+}
+
+/// Normal status line (suppressed by `--quiet`).
+pub fn info(event: &str, kv: &[(&str, String)]) {
+    emit(Level::Info, event, kv);
+}
+
+/// Extra diagnostics (shown only at `Level::Debug`).
+pub fn debug(event: &str, kv: &[(&str, String)]) {
+    emit(Level::Debug, event, kv);
+}
+
+/// Convenience: stringify a displayable value for the kv slice.
+pub fn v(x: impl std::fmt::Display) -> String {
+    x.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_values_stay_bare() {
+        let line = format_line(
+            Level::Info,
+            "serve",
+            &[("requests", v(100)), ("router", v("p2c"))],
+        );
+        assert_eq!(
+            line,
+            "level=info event=serve requests=100 router=p2c"
+        );
+    }
+
+    #[test]
+    fn risky_values_are_quoted() {
+        let line = format_line(
+            Level::Info,
+            "node_serve",
+            &[
+                ("fault", "t=300,fabric=1".to_string()),
+                ("msg", "two words".to_string()),
+                ("q", "say \"hi\"".to_string()),
+                ("empty", String::new()),
+            ],
+        );
+        assert_eq!(
+            line,
+            "level=info event=node_serve \
+             fault=\"t=300,fabric=1\" msg=\"two words\" \
+             q=\"say \"\"hi\"\"\" empty=\"\""
+        );
+    }
+
+    #[test]
+    fn level_order_gates_emission() {
+        assert!(Level::Quiet < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod csv;
+pub mod log;
 pub mod prop;
 pub mod rng;
 pub mod stats;

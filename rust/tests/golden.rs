@@ -309,6 +309,136 @@ mod node_golden {
     }
 }
 
+mod timescope_golden {
+    use zerostall::coordinator::node::{
+        run_digest, run_node, NodeConfig, RouterPolicy,
+    };
+    use zerostall::coordinator::report;
+    use zerostall::coordinator::serve::{
+        gen_arrivals, solo_latency, Policy, ServeConfig,
+    };
+    use zerostall::kernels::GemmService;
+    use zerostall::util::stats::Fnv64;
+
+    /// The node-golden scenario with telemetry on: six `ffn` requests
+    /// round-robined over two fabrics, window = one service cost, so
+    /// every windowed series is reconstructible from the same Lindley
+    /// recurrence the node golden pins.
+    fn pinned_cfg(window: u64) -> NodeConfig {
+        let mut serve = ServeConfig::new(vec!["ffn".to_string()]);
+        serve.clusters = 2;
+        serve.requests = 6;
+        serve.rate_per_mcycle = 25.0;
+        serve.seed = 0x90D5;
+        serve.slo = Some(u64::MAX);
+        serve.telemetry = Some(window);
+        let mut cfg = NodeConfig::new(serve, 2);
+        cfg.router = RouterPolicy::RoundRobin;
+        cfg
+    }
+
+    #[test]
+    fn telemetry_csv_schema_and_window_rows_are_pinned() {
+        let svc = GemmService::analytic();
+        let probe_cfg = pinned_cfg(1);
+        let cost =
+            solo_latency(&svc, &probe_cfg.serve, 0, Policy::Continuous)
+                .unwrap();
+        assert!(cost > 0);
+        let w = cost;
+        let cfg = pinned_cfg(w);
+        let run = run_node(&svc, &cfg).unwrap();
+        let tel = run.telemetry.as_ref().expect("telemetry enabled");
+        assert_eq!(tel.window(), w);
+
+        // Independent reconstruction of the windowed series from the
+        // public arrival trace (round-robin is `id % 2`, each fabric
+        // a serial queue).
+        let trace = gen_arrivals(&cfg.serve);
+        let mut free = [0u64; 2];
+        let mut completions0 =
+            std::collections::BTreeMap::<u64, u64>::new();
+        let mut arrivals_w0 = 0u64;
+        for req in &trace.requests {
+            if req.arrival < w {
+                arrivals_w0 += 1;
+            }
+            let fabric = (req.id % 2) as usize;
+            let dispatched = req.arrival.max(free[fabric]);
+            let completion = dispatched + cost;
+            free[fabric] = completion;
+            if fabric == 0 {
+                *completions0.entry(completion / w).or_insert(0) += 1;
+            }
+        }
+        assert!(arrivals_w0 > 0, "first arrival is cycle 0");
+
+        // CSV schema pinned.
+        let csv = report::telemetry_csv(tel).to_string();
+        assert!(
+            csv.starts_with(
+                "metric,labels,window,t_start,t_end,kind,value\n"
+            ),
+            "telemetry CSV schema drifted:\n{csv}"
+        );
+        // Window-0 arrivals row reconstructed exactly.
+        assert!(
+            csv.contains(&format!(
+                "arrivals,,0,0,{w},count,{arrivals_w0}"
+            )),
+            "window-0 arrivals row drifted:\n{csv}"
+        );
+        // First fabric-0 completion window reconstructed exactly.
+        let (&k0, &n0) = completions0.iter().next().unwrap();
+        assert!(
+            csv.contains(&format!(
+                "completions,fabric=0,{k0},{},{},count,{n0}",
+                k0 * w,
+                (k0 + 1) * w,
+            )),
+            "fabric-0 completion window row drifted:\n{csv}"
+        );
+        // Counter series are dense: one row per window, so a stalled
+        // window is an explicit zero row, not a missing one.
+        let arrival_rows = csv
+            .lines()
+            .filter(|l| l.starts_with("arrivals,,"))
+            .count() as u64;
+        assert_eq!(arrival_rows, tel.last_window() + 1);
+        // The artifact itself conserves busy cycles: fabric 0 served
+        // three requests back to back.
+        let busy_sum: u64 = csv
+            .lines()
+            .filter(|l| l.starts_with("fabric_busy_cycles,fabric=0,"))
+            .map(|l| l.rsplit(',').next().unwrap().parse::<u64>().unwrap())
+            .sum();
+        assert_eq!(busy_sum, 3 * cost, "busy-cycle rows drifted");
+
+        // The run digest is the base outcome digest with the
+        // registry folded on top.
+        let mut h = Fnv64::new();
+        h.write_u64(run_digest(&run.rows, &run.sheds));
+        tel.fold(&mut h);
+        assert_eq!(run.report.digest, h.finish());
+
+        // Report phrasing pinned; no autoscale line when off.
+        let doc = report::render_telemetry(tel);
+        for needle in [
+            "### TimeScope telemetry",
+            "* window:",
+            "stream digest 0x",
+        ] {
+            assert!(
+                doc.contains(needle),
+                "telemetry report drifted; missing `{needle}` in:\n{doc}"
+            );
+        }
+        assert!(!doc.contains("autoscale:"));
+        let node_doc = report::render_node(&run.report);
+        assert!(!node_doc.contains("autoscale"));
+    }
+}
+
 mod stallscope_golden {
     use zerostall::coordinator::profile::{run_profile, ProfileOpts};
     use zerostall::coordinator::report;

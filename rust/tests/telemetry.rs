@@ -1,0 +1,453 @@
+//! TimeScope tests: telemetry determinism (bit-identical registries
+//! and digests across host thread counts and FastPath settings), the
+//! shard-merge commutativity property, fault-window signal visibility
+//! (utilization dip + queue-depth spike), and the autoscaler
+//! acceptance claim (no extra sheds, fewer provisioned fabric-cycles
+//! than fixed provisioning at the same offered rate).
+//!
+//! Virtual-time windowing makes every signal a pure function of the
+//! event stream, so telemetry must never perturb outcomes: each test
+//! that turns the registry on also pins the outcome rows against a
+//! telemetry-off twin.
+
+use zerostall::backend::BackendKind;
+use zerostall::coordinator::node::{
+    run_digest, run_node, AutoscalePolicy, FaultEvent, FaultPlan,
+    NodeConfig, RouterPolicy,
+};
+use zerostall::coordinator::serve::{
+    serve, solo_latency, Policy, ServeConfig,
+};
+use zerostall::kernels::GemmService;
+use zerostall::profile::telemetry::{SpanKind, Telemetry};
+use zerostall::util::prop::{check, Config, Shrink};
+use zerostall::util::stats::Fnv64;
+
+fn serve_cfg(models: &[&str], clusters: usize) -> ServeConfig {
+    let mut c = ServeConfig::new(
+        models.iter().map(|s| s.to_string()).collect(),
+    );
+    c.clusters = clusters;
+    c.slo = Some(u64::MAX);
+    c.seed = 2026;
+    c
+}
+
+fn rate_for_load(rho: f64, fabrics: usize, mean_cost: u64) -> f64 {
+    rho * fabrics as f64 * 1.0e6 / mean_cost as f64
+}
+
+fn mean_cost(svc: &GemmService, cfg: &ServeConfig) -> u64 {
+    let costs: Vec<u64> = (0..cfg.models.len())
+        .map(|mi| {
+            solo_latency(svc, cfg, mi, Policy::Continuous).unwrap()
+        })
+        .collect();
+    (costs.iter().sum::<u64>() / costs.len() as u64).max(1)
+}
+
+// =================================================================
+// Determinism: the full telemetry registry (counters, gauges,
+// histograms, spans) and the folded digest must be bit-identical
+// across 1/2/8 host threads on the acceptance-scale node run.
+// =================================================================
+
+#[test]
+fn node_telemetry_bit_identical_across_threads_100k() {
+    let requests = 100_000usize;
+    let svc = GemmService::analytic();
+    let mut base = serve_cfg(&["ffn", "qkv"], 4);
+    base.requests = requests;
+    let cost = mean_cost(&svc, &base);
+    base.rate_per_mcycle = rate_for_load(0.6, 4, cost);
+    base.burst = 0.2;
+    base.telemetry = Some(32 * cost);
+    let span = requests as f64 * 1.0e6 / base.rate_per_mcycle;
+
+    let mut runs = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let mut scfg = base.clone();
+        scfg.threads = threads;
+        let mut cfg = NodeConfig::new(scfg, 4);
+        cfg.router = RouterPolicy::PowerOfTwo;
+        cfg.faults = FaultPlan {
+            events: vec![FaultEvent {
+                at: (span / 3.0) as u64,
+                fabric: 1,
+                restore: Some((2.0 * span / 3.0) as u64),
+            }],
+        };
+        runs.push(run_node(&svc, &cfg).unwrap());
+    }
+    let tel = runs[0].telemetry.as_ref().expect("telemetry enabled");
+    assert!(tel.series_count() > 0);
+    assert!(!tel.spans().is_empty());
+    for run in &runs[1..] {
+        assert_eq!(
+            runs[0], *run,
+            "telemetry-on node run differs across host thread counts"
+        );
+    }
+    // The digest is recomputable: base outcome digest, then the
+    // registry folded on top.
+    let mut h = Fnv64::new();
+    h.write_u64(run_digest(&runs[0].rows, &runs[0].sheds));
+    tel.fold(&mut h);
+    assert_eq!(runs[0].report.digest, h.finish());
+    // And equals the registry's own standalone digest discipline.
+    assert_eq!(tel.digest(), runs[1].telemetry.as_ref().unwrap().digest());
+}
+
+#[test]
+fn node_telemetry_invariant_to_fast_forward_on_cycle_backend() {
+    // The cycle backend actually simulates the per-model cost
+    // probes; FastPath bit-exactness must carry through into an
+    // identical telemetry registry, not just identical outcome rows.
+    let requests = 10_000usize;
+    let mut base = serve_cfg(&["ffn"], 2);
+    base.requests = requests;
+    base.rate_per_mcycle = 30.0;
+    base.burst = 0.1;
+    base.telemetry = Some(2_000_000);
+    let mut runs = Vec::new();
+    for (threads, ff) in [(2usize, true), (1, true), (2, false)] {
+        let mut scfg = base.clone();
+        scfg.threads = threads;
+        let mut cfg = NodeConfig::new(scfg, 4);
+        cfg.router = RouterPolicy::LeastLoaded;
+        let svc = GemmService::of_kind_ff(BackendKind::Cycle, ff);
+        runs.push(run_node(&svc, &cfg).unwrap());
+    }
+    assert_eq!(runs[0], runs[1], "telemetry differs across threads");
+    assert_eq!(runs[0], runs[2], "telemetry differs across fast-forward");
+    assert!(runs[0].telemetry.is_some());
+}
+
+// =================================================================
+// Signal visibility: a mid-trace fabric outage must appear in the
+// windowed series as a utilization dip on the dead fabric and a
+// queue-depth spike on the survivors, and the downtime counter must
+// conserve the report's downtime cycles exactly.
+// =================================================================
+
+#[test]
+fn fault_window_shows_utilization_dip_and_queue_spike() {
+    let requests = 20_000usize;
+    let svc = GemmService::analytic();
+    let mut base = serve_cfg(&["ffn", "qkv"], 4);
+    base.requests = requests;
+    let cost = mean_cost(&svc, &base);
+    // rho = 0.8 on 4 fabrics: losing one pushes the survivors past
+    // saturation, so the queue must grow for the whole outage.
+    base.rate_per_mcycle = rate_for_load(0.8, 4, cost);
+    base.burst = 0.2;
+    let span = requests as f64 * 1.0e6 / base.rate_per_mcycle;
+    let down_at = (span / 3.0) as u64;
+    let restore = (2.0 * span / 3.0) as u64;
+    // ~10 windows fully inside the outage.
+    base.telemetry = Some(((restore - down_at) / 10).max(1));
+
+    let mut cfg = NodeConfig::new(base, 4);
+    cfg.router = RouterPolicy::PowerOfTwo;
+    cfg.faults = FaultPlan {
+        events: vec![FaultEvent {
+            at: down_at,
+            fabric: 1,
+            restore: Some(restore),
+        }],
+    };
+    let run = run_node(&svc, &cfg).unwrap();
+    let tel = run.telemetry.as_ref().unwrap();
+    let w = tel.window();
+    assert_eq!(run.report.shed_total(), 0);
+
+    // Exact conservation: the windowed downtime counter re-adds to
+    // the report's downtime cycle total.
+    assert_eq!(
+        tel.counter_total("fabric_downtime_cycles", "fabric=1"),
+        run.report.per_fabric[1].downtime,
+    );
+
+    // Windows fully inside the outage: the dead fabric completes
+    // nothing and its utilization gauge reads zero.
+    let first_in = down_at / w + 1; // first window starting after down
+    let last_in = restore / w; // windows [first_in, last_in) end before restore
+    assert!(
+        first_in + 3 <= last_in,
+        "outage too short for windowed assertions: [{first_in},{last_in})"
+    );
+    for win in first_in..last_in {
+        assert_eq!(
+            tel.counter_window("completions", "fabric=1", win),
+            0,
+            "dead fabric completed work in window {win}"
+        );
+        if let Some(cell) = tel.gauge_window("util_permille", "fabric=1", win)
+        {
+            assert_eq!(
+                cell.max, 0,
+                "dead fabric shows utilization in window {win}"
+            );
+        }
+    }
+    // The fabric did real work outside the outage.
+    assert!(tel.counter_total("completions", "fabric=1") > 0);
+
+    // Queue-depth spike: the node-wide backlog during the outage
+    // dwarfs the steady-state backlog before it.
+    let depth_max = |win: u64| {
+        tel.gauge_window("queue_depth", "node", win)
+            .map(|c| c.max)
+            .unwrap_or(0)
+    };
+    let pre = (0..first_in.saturating_sub(1)).map(depth_max).max().unwrap_or(0);
+    let spike = (first_in..last_in).map(depth_max).max().unwrap_or(0);
+    assert!(
+        spike > pre,
+        "no queue-depth spike during outage: {spike} <= {pre}"
+    );
+
+    // An Outage span covering the fault is in the span stream.
+    assert!(run
+        .telemetry
+        .as_ref()
+        .unwrap()
+        .spans()
+        .iter()
+        .any(|s| s.kind == SpanKind::Outage
+            && s.pid == 1
+            && s.start == down_at));
+}
+
+// =================================================================
+// Serve event core: telemetry is observability only — the outcome
+// rows are identical with the registry on or off, and the counters
+// conserve the request stream.
+// =================================================================
+
+#[test]
+fn serve_telemetry_conserves_streams_and_never_perturbs_rows() {
+    let svc = GemmService::analytic();
+    let mut on = serve_cfg(&["ffn", "qkv"], 2);
+    on.requests = 400;
+    on.rate_per_mcycle = 40.0;
+    on.telemetry = Some(500_000);
+    let mut off = on.clone();
+    off.telemetry = None;
+
+    let a = serve(&svc, &on).unwrap();
+    let b = serve(&svc, &off).unwrap();
+    assert!(b.telemetry.is_none());
+    assert_eq!(a.rows, b.rows, "telemetry perturbed serve outcomes");
+    assert_eq!(a.report, b.report);
+
+    let tel = a.telemetry.as_ref().expect("telemetry enabled");
+    assert_eq!(tel.counter_total("arrivals", "") as usize, on.requests);
+    assert_eq!(
+        tel.counter_total("completions", "") as usize,
+        a.rows.len()
+    );
+    // Explicit SLO, so no derived-SLO probe ran and the engine-stat
+    // totals are exactly the per-wave telemetry deltas.
+    assert_eq!(
+        a.engine_stats.memo_hits,
+        tel.counter_total("memo_hits", ""),
+    );
+    assert_eq!(
+        a.engine_stats.memo_misses,
+        tel.counter_total("memo_misses", ""),
+    );
+    // One Request lifecycle span per completed request, one Wave
+    // span per dispatched wave.
+    let reqs = tel
+        .spans()
+        .iter()
+        .filter(|s| s.kind == SpanKind::Request)
+        .count();
+    assert_eq!(reqs, a.rows.len());
+    let waves = tel
+        .spans()
+        .iter()
+        .filter(|s| s.kind == SpanKind::Wave)
+        .count() as u64;
+    assert_eq!(waves, tel.counter_total("waves", ""));
+}
+
+// =================================================================
+// Shard-merge discipline: merging per-shard registries is exact and
+// commutative — any partition of the event stream into shards, merged
+// in any order, folds to the same digest as single-shard recording.
+// =================================================================
+
+#[derive(Clone, Debug)]
+struct TelEvents {
+    /// `(time, kind%4, value)`: 0=count, 1=gauge, 2=observe, 3=span.
+    events: Vec<(u64, u64, u64)>,
+}
+
+impl Shrink for TelEvents {
+    fn shrinks(&self) -> Vec<Self> {
+        self.events
+            .shrinks()
+            .into_iter()
+            .map(|events| TelEvents { events })
+            .collect()
+    }
+}
+
+fn record(tel: &mut Telemetry, ev: &(u64, u64, u64)) {
+    let (t, kind, v) = *ev;
+    match kind % 4 {
+        0 => tel.count("hits", "fabric=0", t, v % 7 + 1),
+        1 => tel.gauge("depth", "node", t, v % 100),
+        2 => tel.observe("latency", "", t, v),
+        _ => tel.span(SpanKind::Wave, 0, v, t, t + v % 1000, v % 3),
+    }
+}
+
+#[test]
+fn prop_shard_merge_is_exact_and_commutative() {
+    let window = 1_000u64;
+    check(
+        &Config::default(),
+        |r| {
+            let n = r.range(0, 60);
+            TelEvents {
+                events: (0..n)
+                    .map(|_| {
+                        (r.below(20_000), r.below(4), r.below(5_000))
+                    })
+                    .collect(),
+            }
+        },
+        |input| {
+            let end = input
+                .events
+                .iter()
+                .map(|&(t, _, v)| t + v % 1000)
+                .max()
+                .unwrap_or(0);
+            // Single-shard reference.
+            let mut whole = Telemetry::new(window);
+            for ev in &input.events {
+                record(&mut whole, ev);
+            }
+            whole.seal(end);
+            // Three shards by round-robin, merged in two orders.
+            for order in [[0usize, 1, 2], [2, 0, 1]] {
+                let mut shards = vec![
+                    Telemetry::new(window),
+                    Telemetry::new(window),
+                    Telemetry::new(window),
+                ];
+                for (i, ev) in input.events.iter().enumerate() {
+                    record(&mut shards[i % 3], ev);
+                }
+                let mut merged = Telemetry::new(window);
+                for &s in &order {
+                    merged.merge(&shards[s]);
+                }
+                merged.seal(end);
+                if merged != whole {
+                    return Err(format!(
+                        "shard merge (order {order:?}) diverged from \
+                         single-shard recording"
+                    ));
+                }
+                if merged.digest() != whole.digest() {
+                    return Err("merge digest diverged".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// =================================================================
+// Window boundaries: events on exact window edges, zero-length runs,
+// and trailing partial windows.
+// =================================================================
+
+#[test]
+fn window_boundary_assignment_is_half_open() {
+    let mut tel = Telemetry::new(100);
+    // t = 99 is the last cycle of window 0; t = 100 opens window 1.
+    tel.count("c", "", 99, 1);
+    tel.count("c", "", 100, 1);
+    tel.seal(150);
+    assert_eq!(tel.counter_window("c", "", 0), 1);
+    assert_eq!(tel.counter_window("c", "", 1), 1);
+    // Trailing partial window [100, 150) still reads back.
+    assert_eq!(tel.last_window(), 1);
+    // A span crossing the boundary splits window-exactly.
+    let mut tel2 = Telemetry::new(100);
+    tel2.count_span("busy", "", 50, 250);
+    tel2.seal(250);
+    assert_eq!(tel2.counter_window("busy", "", 0), 50);
+    assert_eq!(tel2.counter_window("busy", "", 1), 100);
+    assert_eq!(tel2.counter_window("busy", "", 2), 50);
+    assert_eq!(tel2.counter_total("busy", ""), 200);
+}
+
+#[test]
+fn zero_length_run_has_no_windows() {
+    let mut tel = Telemetry::new(100);
+    tel.seal(0);
+    assert_eq!(tel.end(), 0);
+    assert_eq!(tel.last_window(), 0);
+    assert_eq!(tel.counter_window("anything", "", 0), 0);
+    assert!(tel.spans().is_empty());
+    // Two empty registries agree bit-for-bit.
+    let mut other = Telemetry::new(100);
+    other.seal(0);
+    assert_eq!(tel.digest(), other.digest());
+}
+
+// =================================================================
+// Autoscaler acceptance: reading only windowed gauges, the policy
+// must shed no more than fixed provisioning at the same offered rate
+// while spending fewer provisioned fabric-cycles.
+// =================================================================
+
+#[test]
+fn autoscaler_beats_fixed_provisioning_on_idle_cycles() {
+    let requests = 2_000usize;
+    let svc = GemmService::analytic();
+    let mut base = serve_cfg(&["ffn"], 2);
+    base.requests = requests;
+    let cost = mean_cost(&svc, &base);
+    // Light load: ~15% of a 4-fabric node. Fixed provisioning keeps
+    // 4 fabrics hot; the autoscaler should park most of them.
+    base.rate_per_mcycle = rate_for_load(0.15, 4, cost);
+
+    let fixed_cfg = NodeConfig::new(base.clone(), 4);
+    let fixed = run_node(&svc, &fixed_cfg).unwrap();
+
+    let mut auto_cfg = NodeConfig::new(base, 4);
+    auto_cfg.autoscale =
+        Some(AutoscalePolicy::parse("low=0.3,high=0.9,cooldown=2").unwrap());
+    let auto_run = run_node(&svc, &auto_cfg).unwrap();
+    let tel = auto_run.telemetry.as_ref().expect("autoscale implies tel");
+
+    assert!(
+        tel.counter_total("autoscale_park", "") > 0,
+        "light load never triggered a park"
+    );
+    assert!(auto_run.report.shed_total() <= fixed.report.shed_total());
+    assert_eq!(
+        auto_run.report.completed + auto_run.report.shed_total(),
+        requests,
+        "autoscaling lost requests"
+    );
+    assert!(
+        auto_run.report.active_cycles < fixed.report.active_cycles,
+        "autoscaler spent {} provisioned fabric-cycles, fixed spent {}",
+        auto_run.report.active_cycles,
+        fixed.report.active_cycles,
+    );
+    // Scale decisions leave an audit trail in the span stream.
+    assert!(tel
+        .spans()
+        .iter()
+        .any(|s| s.kind == SpanKind::Scale));
+}

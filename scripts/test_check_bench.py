@@ -80,6 +80,41 @@ class CompareTest(unittest.TestCase):
         self.assertEqual(checked, 1)
         self.assertEqual(len(failures), 1)
 
+    def test_mixed_file_gates_armed_rows_and_skips_bootstrap(self):
+        # One file, both kinds of row: the bootstrap (wall_s == 0)
+        # row is skipped, but the armed rows beside it still gate —
+        # arming a baseline must never be all-or-nothing per file.
+        base = by_name([
+            row("boot", wall_s=0.0, ips=100.0),
+            row("armed_ok", ips=100.0),
+            row("armed_bad", ips=100.0),
+        ])
+        fresh = by_name([
+            row("boot", ips=1.0),
+            row("armed_ok", ips=95.0),
+            row("armed_bad", ips=10.0),
+        ])
+        lines, failures, checked = compare(base, fresh)
+        self.assertEqual(checked, 2)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("armed_bad", failures[0])
+        self.assertTrue(any("SKIP boot" in l and "bootstrap" in l
+                            for l in lines))
+        self.assertTrue(any("OK" in l and "armed_ok" in l
+                            for l in lines))
+
+    def test_armed_zero_throughput_is_skip_not_crash(self):
+        # A row armed with wall_s > 0 but no throughput figure at all
+        # (both fields zero) is distinct from a bootstrap row: it is
+        # reported as "no throughput figure", never divides by zero,
+        # and never gates.
+        base = by_name([row("a", wall_s=2.5)])
+        fresh = by_name([row("a", ips=50.0)])
+        lines, failures, checked = compare(base, fresh)
+        self.assertEqual((failures, checked), ([], 0))
+        self.assertFalse(any("bootstrap" in l for l in lines))
+        self.assertTrue(any("no throughput figure" in l for l in lines))
+
     def test_unknown_bootstrap_fresh_row_still_fails(self):
         # Even against an all-bootstrap baseline, a fresh-only row is
         # reported: nothing about the baseline's state exempts it.
